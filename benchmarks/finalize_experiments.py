@@ -1,0 +1,118 @@
+"""Inject generated tables + §Perf log into EXPERIMENTS.md."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "benchmarks"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.build_experiments import (load, multipod_table,
+                                          roofline_table)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def perf_log():
+    rows = load("hillclimb.jsonl")
+    by_variant = {r.get("variant"): r for r in rows if "compute_ms" in r}
+    # minitron ctx-layout baseline comes from the sweep table
+    if "baseline_ctx_layout" not in by_variant:
+        for r in load("dryrun_single.jsonl"):
+            if r.get("arch") == "minitron-4b" and r.get("shape") == "train_4k" \
+                    and r.get("status") == "ok":
+                by_variant["baseline_ctx_layout"] = r
+    if "baseline_einsum_dispatch" not in by_variant:
+        for r in load("dryrun_single.jsonl"):
+            if r.get("arch") == "qwen2-moe-a2.7b" and \
+                    r.get("shape") == "train_4k" and r.get("status") == "ok":
+                by_variant["baseline_einsum_dispatch"] = r
+
+    def t(v, k):
+        r = by_variant.get(v)
+        return f"{r[k]:.0f}" if r else "–"
+
+    out = []
+    out.append("""### Cell 2 — qwen3-8b × train_4k (collective-bound)
+
+| iteration | hypothesis | compute ms | HBM ms | ICI ms | verdict |
+|---|---|---|---|---|---|
+| 0 (paper-faithful) | posh ring RS+AG schedules for every collective — the reproduction baseline | """
+               + t("baseline_posh_ring_zero1", "compute_ms") + " | "
+               + t("baseline_posh_ring_zero1", "memory_ms") + " | "
+               + t("baseline_posh_ring_zero1", "collective_ms")
+               + """ | baseline |
+| 1 (beyond-paper) | napkin: ring decomposition moves 2(n−1)/n·B in 30 explicit permute rounds whose chunk buffers all transit HBM; native fused all-reduce should cut ICI bytes ~1.6× and remove the round-trip HBM traffic entirely → switch backend posh→xla | """
+               + t("xla_collectives_zero1", "compute_ms") + " | "
+               + t("xla_collectives_zero1", "memory_ms") + " | "
+               + t("xla_collectives_zero1", "collective_ms")
+               + """ | **confirmed**: ICI 1.6×↓, HBM 5.9×↓ — the paper's software schedules are the right *portability* layer but native collectives are the perf ceiling; both kept selectable |
+| 2 | ZeRO-1 (RS grads + AG params) should cut collective volume vs ZeRO-0 psum | """
+               + t("xla_collectives_zero0", "compute_ms") + " | "
+               + t("xla_collectives_zero0", "memory_ms") + " | "
+               + t("xla_collectives_zero0", "collective_ms")
+               + """ | **refuted**: RS+AG ≡ psum in volume (expected in hindsight: ring psum = RS+AG).  ZeRO-1's win is optimizer-state *memory* (×dp less), not wire bytes — kept for the fit, not the speed |
+
+Post-hillclimb dominant term: HBM (XLA:CPU fusion caveat, EXPERIMENTS
+§caveats); achieved compute/dominant ratio = """
+               + (f"{by_variant['xla_collectives_zero1']['compute_ms'] / by_variant['xla_collectives_zero1']['memory_ms']:.2f}"
+                  if "xla_collectives_zero1" in by_variant else "–")
+               + """ vs baseline """
+               + (f"{by_variant['baseline_posh_ring_zero1']['compute_ms'] / by_variant['baseline_posh_ring_zero1']['memory_ms']:.2f}"
+                  if "baseline_posh_ring_zero1" in by_variant else "–") + ".\n")
+
+    if "padded_heads_32_head_layout" in by_variant:
+        r = by_variant["padded_heads_32_head_layout"]
+        b = by_variant.get("baseline_ctx_layout")
+        brow = (f"| 0 (baseline) | ctx-layout attention (24 heads ∤ TP=16): "
+                f"attention weights replicated per device | "
+                f"{b['compute_ms']:.0f} | {b['memory_ms']:.0f} | "
+                f"{b['collective_ms']:.0f} | baseline |\n") if b else ""
+        out.append(f"""### Cell 1 — minitron-4b × train_4k (worst roofline fraction)
+
+| iteration | hypothesis | compute ms | HBM ms | ICI ms | verdict |
+|---|---|---|---|---|---|
+{brow}| 1 (beyond-paper) | pad 24→32 query heads (zero-padded heads are function-preserving) ⇒ head-parallel layout, attention weights TP-sharded; predicted: HBM term down by the replicated-weight traffic share, compute up ≈ attention-share × 33% | {r['compute_ms']:.0f} | {r['memory_ms']:.0f} | {r['collective_ms']:.0f} | see terms — padding also moves the per-device peak below HBM (head-sharded grads) |
+""")
+    for v, title in [("baseline_einsum_dispatch",
+                      "einsum dispatch + psum combine (baseline)"),
+                     ("posh_alltoall_dispatch",
+                      "posh pairwise alltoall dispatch"),
+                     ("xla_alltoall_dispatch", "native alltoall dispatch"),
+                     ("danube_gathered", "gathered (naive) CE on danube")]:
+        if v in by_variant:
+            r = by_variant[v]
+            out.append(f"- **{title}** ({r['arch']} × {r['shape']}): "
+                       f"compute {r['compute_ms']:.0f} / HBM "
+                       f"{r['memory_ms']:.0f} / ICI {r['collective_ms']:.0f} ms "
+                       f"(dominant: {r['dominant']})")
+    out.append("""
+### Cell 3 — qwen2-moe-a2.7b × train_4k (paper-representative)
+
+The MoE dispatch is the paper's §4.5 thesis made load-bearing: expert
+routing traffic travels over a collective BUILT FROM one-sided put
+rounds (pairwise-exchange alltoall).  einsum dispatch (baseline row in
+§Roofline) computes routing redundantly on every TP rank and pays one
+psum of (tokens × d_model); alltoall dispatch moves only the routed
+tokens (k/tp of the einsum volume at top-4/TP-16).  Numbers above;
+both modes verified bit-equivalent in gradients
+(tests/multipe/run_tp_equiv.py).
+""")
+    return "\n".join(out)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    single = load("dryrun_single.jsonl")
+    multi = load("dryrun_multi.jsonl")
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(single))
+    text = text.replace("<!-- MULTIPOD_TABLE -->", multipod_table(multi))
+    text = text.replace("<!-- PERF_LOG -->", perf_log())
+    open(path, "w").write(text)
+    print(f"EXPERIMENTS.md updated: {len(single)} single-pod rows, "
+          f"{len(multi)} multi-pod rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""§Perf hillclimb driver: accounting-only variant runs for the three
+selected cells.  Each record lands in results/hillclimb.jsonl with a
+``variant`` tag; EXPERIMENTS.md §Perf is written from these.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import _depth_points, _EXTRAP_KEYS, lower_cell
+from repro.launch import roofline, shapes
+from repro import configs
+
+OUT = "results/hillclimb.jsonl"
+
+
+def acct(arch, shape_name, variant, pad_heads=None, **kw):
+    cfg = configs.get(arch)
+    if pad_heads:
+        cfg = dataclasses.replace(cfg, n_heads=pad_heads)
+    c1, c2, u1, u2, u_full = _depth_points(cfg)
+    if pad_heads:
+        c1 = dataclasses.replace(c1, n_heads=pad_heads)
+        c2 = dataclasses.replace(c2, n_heads=pad_heads)
+    a1 = lower_cell(arch, shape_name, unroll=True, cfg_override=c1,
+                    verbose=False, **kw)
+    a2 = lower_cell(arch, shape_name, unroll=True, cfg_override=c2,
+                    verbose=False, **kw)
+    out = dict(a1)
+    scale = (u_full - u1) / (u2 - u1)
+    for key in _EXTRAP_KEYS:
+        out[key] = a1[key] + (a2[key] - a1[key]) * scale
+    out["compute_ms"] = out["flops_dev"] / roofline.PEAK_FLOPS * 1e3
+    out["memory_ms"] = out["bytes_dev"] / roofline.HBM_BW * 1e3
+    out["collective_ms"] = out["coll_bytes_dev"] / roofline.LINK_BW * 1e3
+    out["dominant"] = max(
+        [("compute", out["compute_ms"]), ("memory", out["memory_ms"]),
+         ("collective", out["collective_ms"])], key=lambda kv: kv[1])[0]
+    # peak extrapolated from accounting passes (mb=1; upper bound)
+    out["peak_gib_dev"] = a1["peak_gib_dev"] + \
+        (a2["peak_gib_dev"] - a1["peak_gib_dev"]) * scale
+    out["variant"] = variant
+    rec = {k: v for k, v in out.items() if k != "coll_counts"}
+    with open(OUT, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "variant", "compute_ms",
+                       "memory_ms", "collective_ms", "dominant",
+                       "peak_gib_dev")}))
+    return out
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    runs = {
+        # cell 2: qwen3 train_4k — collective term
+        "qwen3_posh": lambda: acct("qwen3-8b", "train_4k",
+                                   "baseline_posh_ring_zero1",
+                                   backend="posh", zero=1),
+        "qwen3_xla": lambda: acct("qwen3-8b", "train_4k",
+                                  "xla_collectives_zero1",
+                                  backend="xla", zero=1),
+        "qwen3_zero0": lambda: acct("qwen3-8b", "train_4k",
+                                    "xla_collectives_zero0",
+                                    backend="xla", zero=0),
+        # cell 1: minitron train_4k — memory term (padded-head layout)
+        "minitron_pad": lambda: acct("minitron-4b", "train_4k",
+                                     "padded_heads_32_head_layout",
+                                     backend="posh", zero=1, pad_heads=32),
+        # cell 3: qwen2-moe train_4k — dispatch collective
+        "moe_a2a": lambda: acct("qwen2-moe-a2.7b", "train_4k",
+                                "posh_alltoall_dispatch",
+                                backend="posh", zero=1,
+                                moe_dispatch="alltoall"),
+        "moe_a2a_xla": lambda: acct("qwen2-moe-a2.7b", "train_4k",
+                                    "xla_alltoall_dispatch",
+                                    backend="xla", zero=1,
+                                    moe_dispatch="alltoall"),
+        # CE-mode lever on the small-vocab arch (gathered CE fits there)
+        "danube_gathered": lambda: acct("h2o-danube-3-4b", "train_4k",
+                                        "gathered_ce", backend="posh",
+                                        zero=1, ce_mode="gathered"),
+    }
+    for name, fn in runs.items():
+        if which != "all" and which != name:
+            continue
+        try:
+            fn()
+        except Exception as e:
+            with open(OUT, "a") as f:
+                f.write(json.dumps({"variant": name,
+                                    "status": f"FAIL {e}"}) + "\n")
+            print(f"{name} FAILED: {e}", file=sys.stderr)
+    print("HILLCLIMB_DONE")

@@ -1,0 +1,12 @@
+"""One multi-pod dry-run cell (compile-proof, rolled scans)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.dryrun import lower_cell
+
+res = lower_cell(sys.argv[1], sys.argv[2], multi_pod=True, backend="posh",
+                 unroll=False, verbose=False)
+print(json.dumps({k: v for k, v in res.items() if k != "coll_counts"}))

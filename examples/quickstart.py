@@ -1,0 +1,63 @@
+"""Quickstart: train a tiny LM through the POSH communication layer.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs ~40 steps on CPU in about a minute and prints a decreasing loss.
+Every collective in the step (TP completion, DP mean — degenerate at
+1 device but the code path is identical) goes through repro.comm with
+the paper's put/get-based schedules when --backend posh.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm, configs
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx, smap
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.step import make_train_step, train_state_specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b",
+                    help="architecture id (smoke-size config is used)")
+    ap.add_argument("--backend", default="posh", choices=["posh", "xla"])
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
+                      comm=comm.CommConfig(backend=args.backend),
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    opt = AdamWConfig(lr=1e-3)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sspecs = train_state_specs(cfg, ctx, api, opt)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+    opt_state = jax.shard_map(lambda p: adamw_init(p, ctx, opt), mesh=mesh,
+                              in_specs=(api.specs(cfg, ctx),),
+                              out_specs=sspecs["opt"],
+                              check_vma=False)(params)
+    state = {"params": params, "opt": opt_state,
+             "step": jnp.zeros((), jnp.int32)}
+    fn = jax.jit(smap(make_train_step(cfg, ctx, api, opt), mesh,
+                      (sspecs, {"tokens": P("data")}),
+                      (sspecs, {"loss": P(), "grad_norm": P(),
+                                "step": P()})))
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=cfg.max_seq, global_batch=8)
+    print(f"arch={cfg.name} backend={args.backend} "
+          f"params={sum(l.size for l in jax.tree.leaves(params)):,}")
+    for s in range(args.steps):
+        state, m = fn(state, data.batch(s))
+        if s % 5 == 0 or s == args.steps - 1:
+            print(f"step {s:3d}  loss {float(m['loss']):.4f}  "
+                  f"|g| {float(m['grad_norm']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

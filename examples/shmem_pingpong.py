@@ -1,0 +1,53 @@
+"""The paper's own experiment: put/get latency & bandwidth through the
+POSH layer vs a local copy (Tables 1–2), on 8 simulated PEs.
+
+    PYTHONPATH=src python examples/shmem_pingpong.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import core as posh
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("pe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def smap(fn):
+        return jax.shard_map(fn, mesh=mesh, in_specs=P("pe"),
+                             out_specs=P("pe"), check_vma=False)
+
+    print(f"{'elems/PE':>10} {'put us':>9} {'get us':>9} {'copy us':>9} "
+          f"{'put GB/s':>9}")
+    for elems in [64, 1024, 16384, 262144, 1048576]:
+        x = jnp.arange(8 * elems, dtype=jnp.float32).reshape(8, elems)
+        put = jax.jit(smap(lambda v: posh.ring_shift(v, "pe", 1)))
+        get = jax.jit(smap(lambda v: posh.get(
+            v, [((i + 1) % 8, i) for i in range(8)], "pe")))
+        cpy = jax.jit(smap(lambda v: v * 1))
+
+        def t(fn):
+            for _ in range(3):
+                jax.block_until_ready(fn(x))
+            t0 = time.perf_counter()
+            for _ in range(20):
+                out = fn(x)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / 20
+
+        tp, tg, tc = t(put), t(get), t(cpy)
+        print(f"{elems:>10} {tp*1e6:>9.1f} {tg*1e6:>9.1f} {tc*1e6:>9.1f} "
+              f"{elems*4/tp/1e9:>9.3f}")
+    print("\npaper claim (§5.2): put/get ≈ local copy — overhead should be"
+          " small and size-independent at large buffers.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end training driver: a ~100M-param decoder LM trained for a
+few hundred steps with checkpointing, restart safety, and the POSH
+collective backend.
+
+    PYTHONPATH=src python examples/train_lm.py --preset small --steps 200
+
+Presets: small (~10M, CPU-friendly: a few minutes), 100m (~100M — the
+deliverable configuration; sized for a real accelerator, runs on CPU
+but slowly).  Loss on the synthetic bigram corpus falls well below the
+uniform baseline within a few hundred steps.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.ckpt import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx, smap
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.step import make_train_step, train_state_specs
+
+PRESETS = {
+    "small": ArchConfig(name="lm-small", family="dense", n_layers=4,
+                        d_model=256, n_heads=4, n_kv=2, head_dim=64,
+                        d_ff=768, vocab=2048, act="swiglu", max_seq=128),
+    "100m": ArchConfig(name="lm-100m", family="dense", n_layers=12,
+                       d_model=768, n_heads=12, n_kv=4, head_dim=64,
+                       d_ff=2304, vocab=32768, act="swiglu", max_seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--backend", default="posh", choices=["posh", "xla"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
+                      comm=comm.CommConfig(backend=args.backend),
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    opt = AdamWConfig(lr=6e-4, weight_decay=0.01)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sspecs = train_state_specs(cfg, ctx, api, opt)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+    n_params = sum(l.size for l in jax.tree.leaves(params))
+    opt_state = jax.shard_map(lambda p: adamw_init(p, ctx, opt), mesh=mesh,
+                              in_specs=(api.specs(cfg, ctx),),
+                              out_specs=sspecs["opt"],
+                              check_vma=False)(params)
+    state = {"params": params, "opt": opt_state,
+             "step": jnp.zeros((), jnp.int32)}
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume:
+        state, start = ck.restore(state)
+        print(f"resumed from step {start}")
+
+    fn = jax.jit(smap(make_train_step(cfg, ctx, api, opt), mesh,
+                      (sspecs, {"tokens": P("data")}),
+                      (sspecs, {"loss": P(), "grad_norm": P(),
+                                "step": P()})))
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=cfg.max_seq,
+                       global_batch=args.batch)
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, backend={args.backend}, "
+          f"uniform-baseline loss={jnp.log(cfg.vocab):.3f}")
+    t0 = time.time()
+    for s in range(start, args.steps):
+        state, m = fn(state, data.batch(s))
+        if s % 10 == 0 or s == args.steps - 1:
+            toks = args.batch * cfg.max_seq
+            dt = (time.time() - t0) / max(s - start + 1, 1)
+            print(f"step {s:4d}  loss {float(m['loss']):.4f}  "
+                  f"{toks/dt:,.0f} tok/s")
+        if (s + 1) % args.ckpt_every == 0:
+            ck.save_async(s + 1, state)
+    ck.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

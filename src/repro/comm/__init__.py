@@ -1,0 +1,19 @@
+"""repro.comm — framework-facing collective API.
+
+Every collective issued anywhere in the framework (DP gradient
+reduction, TP activation collectives, EP dispatch, SP gathers, vocab-
+parallel cross-entropy) routes through this module, which dispatches to
+either the paper's POSH schedules (``repro.core``) or native XLA
+collectives.  The backend string is trace-time — algorithm selection
+specializes the program, the paper's §4.5.4 compile-time switch.
+"""
+from .api import (CommConfig, all_gather, all_to_all, axis_index, axis_size,
+                  pbroadcast, pmax, psum, psum_scatter)
+from .bucketing import bucketed_allreduce, tree_allreduce
+from .compress import CompressionState, compressed_allreduce
+
+__all__ = [
+    "CommConfig", "psum", "pmax", "all_gather", "psum_scatter", "all_to_all",
+    "pbroadcast", "axis_index", "axis_size", "bucketed_allreduce", "tree_allreduce",
+    "compressed_allreduce", "CompressionState",
+]

@@ -1,0 +1,116 @@
+"""Backend-dispatched collectives (called inside shard_map).
+
+backend = "xla"        native lax collectives — the GASNet/UPC role from
+                       the paper's §5.3 comparison, and the beyond-paper
+                       performance baseline
+backend = "posh"       the paper's algorithms from repro.core, with the
+                       per-op algorithm chosen by this config (§4.5.4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as posh
+
+Axis = Union[str, Sequence[str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    backend: str = "xla"                 # "xla" | "posh"
+    allreduce_algo: str = "ring"         # ring | tree | recursive_doubling
+    allgather_algo: str = "ring"         # ring | ring_pull | recursive_doubling
+    reducescatter_algo: str = "ring"
+    alltoall_algo: str = "pairwise"
+    broadcast_algo: str = "binomial"
+
+    def tag(self) -> str:
+        if self.backend == "xla":
+            return "xla"
+        return (f"posh[ar={self.allreduce_algo},ag={self.allgather_algo},"
+                f"rs={self.reducescatter_algo},a2a={self.alltoall_algo}]")
+
+
+XLA = CommConfig(backend="xla")
+POSH_RING = CommConfig(backend="posh")
+POSH_TREE = CommConfig(backend="posh", allreduce_algo="tree",
+                       allgather_algo="recursive_doubling",
+                       broadcast_algo="binomial")
+
+
+def _axis(axis: Axis):
+    return axis if isinstance(axis, str) else tuple(axis)
+
+
+def psum(x, axis: Axis, cfg: CommConfig = XLA):
+    if cfg.backend == "xla":
+        return jax.lax.psum(x, _axis(axis))
+    return posh.allreduce(x, "sum", _axis(axis), cfg.allreduce_algo)
+
+
+def pmax(x, axis: Axis, cfg: CommConfig = XLA):
+    if cfg.backend == "xla":
+        return jax.lax.pmax(x, _axis(axis))
+    return posh.allreduce(x, "max", _axis(axis), cfg.allreduce_algo)
+
+
+def all_gather(x, axis: Axis, cfg: CommConfig = XLA, *, gather_axis: int = 0,
+               tiled: bool = True):
+    """Gather shards along ``gather_axis``.  tiled=True concatenates
+    (matching lax.all_gather(tiled=True)); else stacks a new axis."""
+    if cfg.backend == "xla":
+        return jax.lax.all_gather(x, _axis(axis), axis=gather_axis, tiled=tiled)
+    moved = jnp.moveaxis(x, gather_axis, 0)
+    out = posh.fcollect(moved, _axis(axis), cfg.allgather_algo)  # (n, ...)
+    if tiled:
+        out = out.reshape((-1,) + moved.shape[1:])
+        return jnp.moveaxis(out, 0, gather_axis)
+    out = jnp.moveaxis(out, 1, 0)  # restore original leading dim first
+    return jnp.moveaxis(out, 0, gather_axis)  # best-effort stack placement
+
+
+def psum_scatter(x, axis: Axis, cfg: CommConfig = XLA, *, scatter_axis: int = 0):
+    if cfg.backend == "xla":
+        return jax.lax.psum_scatter(x, _axis(axis),
+                                    scatter_dimension=scatter_axis, tiled=True)
+    moved = jnp.moveaxis(x, scatter_axis, 0)
+    out = posh.reduce_scatter(moved, "sum", _axis(axis), cfg.reducescatter_algo)
+    return jnp.moveaxis(out, 0, scatter_axis)
+
+
+def all_to_all(x, axis: Axis, cfg: CommConfig = XLA, *, split_axis: int,
+               concat_axis: int):
+    """lax.all_to_all(tiled) semantics: split along ``split_axis`` into n
+    blocks, block j to PE j; received blocks concatenated along
+    ``concat_axis``."""
+    if cfg.backend == "xla":
+        return jax.lax.all_to_all(x, _axis(axis), split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+    n = posh.team_size(_axis(axis))
+    if x.shape[split_axis] % n:
+        raise ValueError(
+            f"all_to_all split axis {split_axis} (len {x.shape[split_axis]}) "
+            f"not divisible by team size {n}")
+    moved = jnp.moveaxis(x, split_axis, 0)
+    blocks = moved.reshape((n, moved.shape[0] // n) + moved.shape[1:])
+    recv = posh.alltoall(blocks, _axis(axis), cfg.alltoall_algo)
+    parts = [jnp.moveaxis(recv[j], 0, split_axis) for j in range(n)]
+    return jnp.concatenate(parts, axis=concat_axis)
+
+
+def pbroadcast(x, root: int, axis: Axis, cfg: CommConfig = XLA):
+    if cfg.backend == "xla":
+        return posh.broadcast(x, root, _axis(axis), "xla")
+    return posh.broadcast(x, root, _axis(axis), cfg.broadcast_algo)
+
+
+def axis_index(axis: Axis):
+    return jax.lax.axis_index(_axis(axis))
+
+
+def axis_size(axis: Axis):
+    return jax.lax.axis_size(_axis(axis))

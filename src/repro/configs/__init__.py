@@ -1,0 +1,49 @@
+"""Architecture configs — one module per assigned architecture.
+
+``get(name)`` returns the exact published config; ``get_smoke(name)``
+returns a reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "minitron_4b",
+    "gemma_2b",
+    "qwen3_8b",
+    "h2o_danube3_4b",
+    "whisper_base",
+    "rwkv6_3b",
+    "qwen2_moe_a2_7b",
+    "qwen3_moe_30b_a3b",
+    "llama32_vision_90b",
+    "zamba2_7b",
+    "posh_micro",
+)
+
+_ALIASES = {
+    "minitron-4b": "minitron_4b",
+    "gemma-2b": "gemma_2b",
+    "qwen3-8b": "qwen3_8b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "whisper-base": "whisper_base",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "zamba2-7b": "zamba2_7b",
+}
+
+
+def canon(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get(name: str):
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.config()
+
+
+def get_smoke(name: str):
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.smoke_config()

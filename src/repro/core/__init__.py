@@ -1,0 +1,34 @@
+"""repro.core — the paper's contribution: POSH (Paris OpenSHMEM) re-built
+as a TPU-native one-sided communication layer.
+
+Public API (mirrors OpenSHMEM 1.0 naming where meaningful):
+
+    SymmetricHeap, SymHandle        symmetric heap + allocator (§3.1, §4.1)
+    put, get, ring_shift            one-sided p2p rounds (§3.2)
+    heap_put, heap_get, heap_p/g    offset-addressed remote access (Cor. 1)
+    barrier_all, broadcast,
+    fcollect, reduce, allreduce,
+    reduce_scatter, alltoall        collectives on p2p (§4.5)
+    atomic_fadd/swap/cswap,
+    TicketLock                      §4.6 adaptation (owner-computes)
+    Team, ActiveSet                 PE addressing (§4.7)
+    safe_mode, debug_mode           _SAFE/_DEBUG compile modes (§4.7)
+"""
+from .atomics import TicketLock, atomic_cswap, atomic_fadd, atomic_swap
+from .collectives import (allreduce, alltoall, barrier_all, broadcast,
+                          fcollect, reduce, reduce_scatter)
+from .heap import HeapState, SymHandle, SymmetricHeap
+from .p2p import get, heap_g, heap_get, heap_p, heap_put, put, ring_shift
+from .safety import (PoshSafetyError, debug_mode, is_debug, is_safe,
+                     safe_mode)
+from .teams import ActiveSet, Team, TeamAxes, my_pe, team_size
+
+__all__ = [
+    "SymmetricHeap", "SymHandle", "HeapState",
+    "put", "get", "ring_shift", "heap_put", "heap_get", "heap_p", "heap_g",
+    "barrier_all", "broadcast", "fcollect", "reduce", "allreduce",
+    "reduce_scatter", "alltoall",
+    "atomic_fadd", "atomic_swap", "atomic_cswap", "TicketLock",
+    "Team", "ActiveSet", "TeamAxes", "my_pe", "team_size",
+    "safe_mode", "debug_mode", "is_safe", "is_debug", "PoshSafetyError",
+]

@@ -1,0 +1,171 @@
+"""Atomics and locks on the symmetric heap (paper §4.6), owner-computes.
+
+POSH gets atomics from Boost's atomic functors and mutual exclusion from
+named mutexes on the shm segment.  TPU ICI exposes no cross-chip CAS, so
+the faithful-by-insight adaptation is **deterministic owner-side
+serialization**: every requesting PE contributes its operand; requests
+are linearized in PE-rank order; each requester receives the value the
+cell held *just before its own operation* (the fetch-&-op return value),
+and the owner's cell ends at the value after all operations.
+
+This preserves exactly the observable semantics of a linearizable
+fetch-&-op sequence with a deterministic order — stronger than POSH's
+mutex (which linearizes in an arbitrary order).  Locks, which exist to
+*create* an order under preemptive scheduling, are meaningless in
+deterministic SPMD; `TicketLock` is provided for API parity and as the
+reference model in tests.
+
+All functions run inside shard_map; `owner` is a static virtual rank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import collectives, safety
+from .heap import HeapState, SymHandle
+from .teams import ActiveSet, Team, TeamAxes
+
+
+def _gather_requests(value, mask, team, aset, algo):
+    """fcollect the (value, participating?) pair from every PE.  Atomic
+    operands are scalars (one heap cell), canonicalized here."""
+    value = jnp.asarray(value).reshape(())
+    mask = jnp.asarray(mask, jnp.bool_).reshape(())
+    vals = collectives.fcollect(value, team, algo, aset)
+    masks = collectives.fcollect(mask, team, algo, aset)
+    return vals, masks
+
+
+def atomic_fadd(state: HeapState, handle: SymHandle, index, value,
+                team: TeamAxes, participate=True, owner: int = 0,
+                active_set: Optional[ActiveSet] = None, algo: str = "ring"):
+    """``shmem_<type>_fadd`` to cell ``handle[index]`` on PE ``owner``.
+
+    Returns (new_state, old_value_seen_by_me).  Linearization order is
+    PE rank; requester i's old value = cell + Σ_{j<i, participating} v_j
+    (an exclusive prefix sum — computed redundantly on every PE, which
+    is cheaper than a second round-trip on TPU).
+    """
+    t = Team.of(team)
+    aset = (active_set or ActiveSet()).resolve(t.size())
+    with safety.collective_guard(t.axes, "atomic_fadd"):
+        member, vr = collectives._member_mask(t, aset)
+        vals, masks = _gather_requests(value, participate & member, t, aset, algo)
+        contrib = jnp.where(masks, vals, 0).astype(vals.dtype)
+        prefix = jnp.cumsum(contrib) - contrib          # exclusive scan
+        total = contrib.sum()
+
+        buf = state[handle.name]
+        cell = jax.lax.dynamic_index_in_dim(buf.ravel(), index, 0, keepdims=False)
+        # every PE knows the owner's cell value must be broadcast first
+        cell0 = collectives.broadcast(cell, owner, t, "binomial", aset)
+        old_mine = cell0 + jax.lax.dynamic_index_in_dim(prefix, vr, 0,
+                                                        keepdims=False)
+        is_owner = member & (vr == owner)
+        newcell = jnp.where(is_owner, cell + total.astype(buf.dtype), cell)
+        flat = buf.ravel()
+        flat = jax.lax.dynamic_update_index_in_dim(flat, newcell.astype(buf.dtype),
+                                                   index, 0)
+        out = dict(state)
+        out[handle.name] = jnp.where(is_owner, flat, buf.ravel()).reshape(buf.shape)
+        return out, jnp.where(participate & member, old_mine, jnp.zeros_like(old_mine))
+
+
+def atomic_swap(state: HeapState, handle: SymHandle, index, value,
+                team: TeamAxes, participate=True, owner: int = 0,
+                active_set: Optional[ActiveSet] = None, algo: str = "ring"):
+    """``shmem_swap``: rank-ordered; requester i sees the value written
+    by the last participating requester before it (or the original)."""
+    t = Team.of(team)
+    aset = (active_set or ActiveSet()).resolve(t.size())
+    with safety.collective_guard(t.axes, "atomic_swap"):
+        member, vr = collectives._member_mask(t, aset)
+        vals, masks = _gather_requests(value, participate & member, t, aset, algo)
+        buf = state[handle.name]
+        cell = jax.lax.dynamic_index_in_dim(buf.ravel(), index, 0, keepdims=False)
+        cell0 = collectives.broadcast(cell, owner, t, "binomial", aset)
+
+        n = aset.size
+        # seq[i] = value of the cell just before requester i acts
+        idxs = jnp.arange(n)
+        def before(i):
+            earlier = (idxs < i) & masks
+            # last participating writer before i, else original
+            last = jnp.where(earlier, idxs, -1).max()
+            return jnp.where(last >= 0, vals[jnp.maximum(last, 0)], cell0)
+        seq = jax.vmap(before)(idxs)
+        old_mine = jax.lax.dynamic_index_in_dim(seq, vr, 0, keepdims=False)
+        any_req = masks.any()
+        last_all = jnp.where(masks, idxs, -1).max()
+        final = jnp.where(any_req, vals[jnp.maximum(last_all, 0)], cell0)
+
+        is_owner = member & (vr == owner)
+        flat = buf.ravel()
+        flat = jax.lax.dynamic_update_index_in_dim(flat, final.astype(buf.dtype),
+                                                   index, 0)
+        out = dict(state)
+        out[handle.name] = jnp.where(is_owner, flat, buf.ravel()).reshape(buf.shape)
+        return out, jnp.where(participate & member, old_mine,
+                              jnp.zeros_like(old_mine))
+
+
+def atomic_cswap(state: HeapState, handle: SymHandle, index, cond, value,
+                 team: TeamAxes, participate=True, owner: int = 0,
+                 active_set: Optional[ActiveSet] = None, algo: str = "ring"):
+    """``shmem_cswap``: rank-ordered compare-and-swap chain.  Requester i
+    succeeds iff the cell (after requesters j<i) equals its ``cond``."""
+    t = Team.of(team)
+    aset = (active_set or ActiveSet()).resolve(t.size())
+    with safety.collective_guard(t.axes, "atomic_cswap"):
+        member, vr = collectives._member_mask(t, aset)
+        vals, masks = _gather_requests(value, participate & member, t, aset, algo)
+        conds = collectives.fcollect(jnp.asarray(cond).reshape(()), t, algo, aset)
+        buf = state[handle.name]
+        cell = jax.lax.dynamic_index_in_dim(buf.ravel(), index, 0, keepdims=False)
+        cur = collectives.broadcast(cell, owner, t, "binomial", aset)
+
+        n = aset.size
+        def step(carry, i):
+            cur = carry
+            ok = masks[i] & (cur == conds[i])
+            old = cur
+            cur = jnp.where(ok, vals[i].astype(cur.dtype), cur)
+            return cur, old
+        final, olds = jax.lax.scan(step, cur, jnp.arange(n))
+        old_mine = jax.lax.dynamic_index_in_dim(olds, vr, 0, keepdims=False)
+
+        is_owner = member & (vr == owner)
+        flat = buf.ravel()
+        flat = jax.lax.dynamic_update_index_in_dim(flat, final.astype(buf.dtype),
+                                                   index, 0)
+        out = dict(state)
+        out[handle.name] = jnp.where(is_owner, flat, buf.ravel()).reshape(buf.shape)
+        return out, jnp.where(participate & member, old_mine,
+                              jnp.zeros_like(old_mine))
+
+
+@dataclasses.dataclass
+class TicketLock:
+    """API-parity lock (paper §4.6 named mutexes).  In deterministic
+    SPMD the 'critical section' is the owner-computes serialization
+    above; the ticket lock exists as the reference linearization model:
+    ``acquire`` returns each PE's ticket (= its turn), which tests
+    compare against the atomics' rank-order semantics."""
+
+    team: TeamAxes
+
+    def acquire_order(self, participate=True,
+                      active_set: Optional[ActiveSet] = None):
+        t = Team.of(self.team)
+        aset = (active_set or ActiveSet()).resolve(t.size())
+        member, vr = collectives._member_mask(t, aset)
+        masks = collectives.fcollect(jnp.asarray(participate & member),
+                                     t, "ring", aset)
+        # ticket = number of participating PEs with smaller rank
+        idxs = jnp.arange(aset.size)
+        tickets = jnp.cumsum(masks.astype(jnp.int32)) - masks.astype(jnp.int32)
+        return jax.lax.dynamic_index_in_dim(tickets, vr, 0, keepdims=False)

@@ -1,0 +1,439 @@
+"""Collective operations built from one-sided put/get rounds (paper §4.5).
+
+Every collective here is composed ONLY of the p2p layer's permute rounds
+plus local combines — the paper's design point ("collective
+communications rely on point-to-point communications that perform the
+actual inter-process data movements").  Each collective offers several
+algorithms, selected by a trace-time string — the exact analogue of
+POSH's compile-time algorithm switching (§4.5.4): the choice specializes
+the jaxpr, so there are zero run-time branches.
+
+Algorithms (put-based = push schedule, get-based = pull schedule):
+
+  barrier_all     dissemination (log n rounds)
+  broadcast       binomial (push tree) | binomial_pull | linear | xla
+  fcollect        ring | ring_pull | recursive_doubling | xla      (allgather)
+  reduce          binomial reduce-to-root (building block)
+  allreduce       ring (RS+AG, bandwidth-optimal) | tree (reduce+bcast,
+                  latency-optimal at small sizes) | recursive_doubling | xla
+  reduce_scatter  ring | xla
+  alltoall        pairwise | xla
+
+All collectives accept an OpenSHMEM 1.0 active set ``(PE_start,
+logPE_stride, PE_size)``; PEs outside the set pass their input through
+untouched.  ``root`` and the active set must be static (trace-time) —
+schedules are baked into collective-permute pairs, mirroring POSH's
+startup-time handle caching.
+
+Functions are called INSIDE shard_map; array args are per-PE shards.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import p2p, safety
+from .heap import SymmetricHeap
+from .teams import ActiveSet, Team, TeamAxes
+
+_OPS: dict[str, Callable] = {
+    "sum": jnp.add,
+    "prod": jnp.multiply,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+_OP_INIT = {"sum": 0.0, "prod": 1.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _resolve(team: TeamAxes, active_set: Optional[ActiveSet]):
+    t = Team.of(team)
+    n_team = t.size()
+    aset = (active_set or ActiveSet()).resolve(n_team)
+    return t, aset
+
+
+def _member_mask(t: Team, aset: ActiveSet):
+    rank = t.my_pe()
+    stride = 1 << aset.log2_stride
+    off = rank - aset.start
+    vr = off // stride
+    member = (off >= 0) & (off % stride == 0) & (vr < aset.size)
+    return member, jnp.where(member, vr, 0)
+
+
+def _vpairs(aset: ActiveSet, pairs_v):
+    """Map virtual-rank pairs to physical PE pairs (static)."""
+    return [(aset.pe(s), aset.pe(d)) for s, d in pairs_v]
+
+
+def _masked(member, new, old):
+    """Select per-PE between collective result and passthrough."""
+    return jnp.where(member, new.ravel(), old.ravel()).reshape(old.shape)
+
+
+# ======================================================================
+# barrier
+# ======================================================================
+def barrier_all(team: TeamAxes, active_set: Optional[ActiveSet] = None):
+    """Dissemination barrier: log2(n) rounds of token pushes.
+
+    Under SPMD a barrier is semantically vacuous (all PEs sit at the
+    same program point), but the schedule is kept faithful for safe-mode
+    auditing and for the §Dry-run collective-schedule accounting.
+    Returns the token count (== 2^ceil(log2 n) for every member).
+    """
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    with safety.collective_guard(t.axes, "barrier_all"):
+        tok = jnp.ones((), jnp.int32)
+        if n == 1:
+            return tok
+        for k in range(math.ceil(math.log2(n))):
+            shift = 1 << k
+            pairs = _vpairs(aset, [(v, (v + shift) % n) for v in range(n)])
+            recv = p2p.put(tok, pairs, t)
+            tok = tok + recv
+        return tok
+
+
+# ======================================================================
+# broadcast (shmem_broadcast, §4.5)
+# ======================================================================
+def broadcast(x: jax.Array, root: int, team: TeamAxes, algo: str = "binomial",
+              active_set: Optional[ActiveSet] = None) -> jax.Array:
+    """Root's value delivered to every member PE.  ``root`` is a virtual
+    rank in the active set and must be static."""
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    if not (0 <= root < n):
+        raise ValueError(f"broadcast root {root} out of range for set size {n}")
+    safety.check_symmetric_arg(x, "broadcast")
+    with safety.collective_guard(t.axes, f"broadcast[{algo}]"):
+        if n == 1:
+            return x
+        if algo == "xla":
+            member, vr = _member_mask(t, aset)
+            sel = jnp.where(member & (vr == root), x, jnp.zeros_like(x))
+            out = jax.lax.psum(sel, t.axis_name)
+            return _masked(member, out.astype(x.dtype), x)
+        if algo in ("binomial", "binomial_pull"):
+            return _bcast_binomial(x, root, t, aset, pull=algo.endswith("pull"))
+        if algo == "linear":
+            return _bcast_linear(x, root, t, aset)
+        raise ValueError(f"unknown broadcast algo '{algo}'")
+
+
+def _bcast_binomial(x, root, t: Team, aset: ActiveSet, pull: bool):
+    """Binomial tree: round k doubles the informed set.  Push and pull
+    build the same pair set; pull reverses who *constructs* the round
+    (receiver-driven), which we record via the schedule builder — the
+    data motion is identical, per the SPMD adaptation in DESIGN.md."""
+    n = aset.size
+    member, vr = _member_mask(t, aset)
+    vrel = (vr - root) % n
+    out = x
+    for k in range(math.ceil(math.log2(n))):
+        shift = 1 << k
+        if pull:
+            # receiver v (in [shift, 2*shift)) pulls from v - shift
+            pv = [((v - shift + root) % n, (v + root) % n)
+                  for v in range(shift, min(2 * shift, n))]
+        else:
+            # sender v (< shift) pushes to v + shift
+            pv = [((v + root) % n, (v + shift + root) % n)
+                  for v in range(shift) if v + shift < n]
+        incoming = p2p.get(out, _vpairs(aset, pv), t) if pull \
+            else p2p.put(out, _vpairs(aset, pv), t)
+        got_now = member & (vrel >= shift) & (vrel < 2 * shift)
+        out = _masked(got_now, incoming.astype(out.dtype), out)
+    return _masked(member, out, x)
+
+
+def _bcast_linear(x, root, t: Team, aset: ActiveSet):
+    """Flat put-based broadcast: root pushes to one PE per round (n-1
+    rounds).  Deliberately latency-poor — exists to make the paper's
+    compile-time algorithm-selection benchmark (§4.5.4) meaningful."""
+    n = aset.size
+    member, vr = _member_mask(t, aset)
+    vrel = (vr - root) % n
+    out = x
+    for s in range(1, n):
+        pv = [(root, (root + s) % n)]
+        incoming = p2p.put(out, _vpairs(aset, pv), t)
+        out = _masked(member & (vrel == s), incoming.astype(out.dtype), out)
+    return _masked(member, out, x)
+
+
+# ======================================================================
+# fcollect (allgather, §4.5)
+# ======================================================================
+def fcollect(x: jax.Array, team: TeamAxes, algo: str = "ring",
+             active_set: Optional[ActiveSet] = None) -> jax.Array:
+    """Concatenate every member's ``x`` along a new leading axis ->
+    (n, *x.shape).  Non-members receive zeros in foreign slots."""
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    safety.check_symmetric_arg(x, "fcollect")
+    with safety.collective_guard(t.axes, f"fcollect[{algo}]"):
+        if n == 1:
+            return x[None]
+        if algo == "xla":
+            return jax.lax.all_gather(x, t.axis_name, axis=0)
+        if algo in ("ring", "ring_pull"):
+            return _fcollect_ring(x, t, aset, pull=algo.endswith("pull"))
+        if algo == "recursive_doubling":
+            if n & (n - 1):
+                # non-power-of-two: documented fallback
+                return _fcollect_ring(x, t, aset, pull=False)
+            return _fcollect_rd(x, t, aset)
+        raise ValueError(f"unknown fcollect algo '{algo}'")
+
+
+def _fcollect_ring(x, t: Team, aset: ActiveSet, pull: bool):
+    """Ring allgather: n-1 rounds, each PE forwards the chunk it
+    received last round.  Push ring moves data +1; pull ring drives the
+    schedule from the reader and moves data -1."""
+    n = aset.size
+    member, vr = _member_mask(t, aset)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, x, vr, 0)
+    cur = x
+    step_dir = 1 if not pull else -1
+    for s in range(1, n):
+        if pull:
+            pv = [((v + 1) % n, v) for v in range(n)]   # reader v pulls from v+1
+        else:
+            pv = [(v, (v + 1) % n) for v in range(n)]   # owner v pushes to v+1
+        cur = (p2p.get if pull else p2p.put)(cur, _vpairs(aset, pv), t)
+        slot = (vr - s * step_dir) % n
+        out = jax.lax.dynamic_update_index_in_dim(out, cur, slot, 0)
+    return _masked(member, out, jnp.broadcast_to(x, out.shape) * 0 + out)
+
+
+def _fcollect_rd(x, t: Team, aset: ActiveSet):
+    """Recursive doubling (power-of-two n): log2 n rounds of doubling
+    exchanges.  Buffer stays ordered by virtual-rank low bits so the
+    final (n, ...) block is rank-ordered."""
+    n = aset.size
+    member, vr = _member_mask(t, aset)
+    buf = x[None]
+    for k in range(int(math.log2(n))):
+        shift = 1 << k
+        pv = [(v, v ^ shift) for v in range(n)]
+        recv = p2p.put(buf, _vpairs(aset, pv), t)
+        bit = (vr >> k) & 1
+        lo = jnp.concatenate([buf, recv], axis=0)
+        hi = jnp.concatenate([recv, buf], axis=0)
+        buf = jnp.where(bit == 0, lo, hi)
+    return _masked(member, buf, jnp.zeros_like(buf) + buf)
+
+
+# ======================================================================
+# reductions (§4.5: shmem_<op>_to_all)
+# ======================================================================
+def reduce(x: jax.Array, root: int, op: str, team: TeamAxes,
+           active_set: Optional[ActiveSet] = None) -> jax.Array:
+    """Binomial reduce-to-root (building block for 'tree' allreduce)."""
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    combine = _OPS[op]
+    with safety.collective_guard(t.axes, f"reduce[{op}]"):
+        if n == 1:
+            return x
+        member, vr = _member_mask(t, aset)
+        vrel = (vr - root) % n
+        acc = x
+        rounds = math.ceil(math.log2(n))
+        for k in range(rounds):
+            shift = 1 << k
+            # senders: vrel with bit k set and lower bits clear
+            pv = [((v + root) % n, (v - shift + root) % n)
+                  for v in range(shift, n, 2 * shift)]
+            incoming = p2p.put(acc, _vpairs(aset, pv), t)
+            receives = member & (vrel % (2 * shift) == 0) & (vrel + shift < n)
+            acc = _masked(receives, combine(acc, incoming.astype(acc.dtype)), acc)
+        return _masked(member & (vrel == 0), acc, x)
+
+
+def allreduce(x: jax.Array, op: str = "sum", team: TeamAxes = "data",
+              algo: str = "ring", active_set: Optional[ActiveSet] = None,
+              heap: Optional[SymmetricHeap] = None) -> jax.Array:
+    """All-members reduction.  ``algo``:
+
+      ring                reduce-scatter + allgather rings; 2(n-1)/n · B
+                          bytes per PE — bandwidth-optimal (put-based)
+      tree                binomial reduce + binomial broadcast; 2·B·log n
+                          but log-latency — wins at tiny sizes
+      recursive_doubling  log n rounds of full-B exchanges (pow2 only,
+                          ring fallback otherwise)
+      xla                 jax.lax.psum — the native-library baseline the
+                          paper compares against (§5.3 UPC/GASNet role)
+    """
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    if op not in _OPS:
+        raise ValueError(f"unknown reduce op '{op}'")
+    safety.check_symmetric_arg(x, "allreduce")
+    with safety.collective_guard(t.axes, f"allreduce[{algo},{op}]"):
+        if n == 1:
+            return x
+        if algo == "xla":
+            if op == "sum":
+                return jax.lax.psum(x, t.axis_name)
+            if op == "max":
+                return jax.lax.pmax(x, t.axis_name)
+            if op == "min":
+                return jax.lax.pmin(x, t.axis_name)
+            # prod via log-sum workaround is lossy; use gather+reduce
+            return _OPS[op].reduce(fcollect(x, t, "xla", aset), axis=0) \
+                if hasattr(_OPS[op], "reduce") else jnp.prod(
+                    fcollect(x, t, "xla", aset), axis=0)
+        if algo == "tree":
+            r = reduce(x, 0, op, t, aset)
+            return broadcast(r, 0, t, "binomial", aset)
+        if algo == "recursive_doubling":
+            if n & (n - 1):
+                return _allreduce_ring(x, op, t, aset, heap)
+            return _allreduce_rd(x, op, t, aset)
+        if algo == "ring":
+            return _allreduce_ring(x, op, t, aset, heap)
+        raise ValueError(f"unknown allreduce algo '{algo}'")
+
+
+def _pad_chunks(x, n):
+    flat = x.ravel()
+    c = -(-flat.size // n)
+    flat = jnp.pad(flat, (0, c * n - flat.size))
+    return flat.reshape(n, c), c
+
+
+def _allreduce_rd(x, op, t: Team, aset: ActiveSet):
+    n = aset.size
+    member, _ = _member_mask(t, aset)
+    combine = _OPS[op]
+    acc = x
+    for k in range(int(math.log2(n))):
+        shift = 1 << k
+        pv = [(v, v ^ shift) for v in range(n)]
+        recv = p2p.put(acc, _vpairs(aset, pv), t)
+        acc = combine(acc, recv.astype(acc.dtype))
+    return _masked(member, acc, x)
+
+
+def _allreduce_ring(x, op, t: Team, aset: ActiveSet,
+                    heap: Optional[SymmetricHeap]):
+    """Ring reduce-scatter followed by ring allgather, both built from
+    put rounds.  When a heap is supplied, the chunk buffer is a Lemma-1
+    temporary symmetric allocation (alloc'd and freed inside the
+    collective; the property test checks registry invariance)."""
+    n = aset.size
+    member, vr = _member_mask(t, aset)
+    combine = _OPS[op]
+    data, c = _pad_chunks(x, n)
+
+    def body(data):
+        # --- reduce-scatter phase: after n-1 rounds PE v owns chunk v
+        d = data
+        for s in range(n - 1):
+            send_idx = (vr - s - 1) % n
+            payload = jax.lax.dynamic_index_in_dim(d, send_idx, 0, keepdims=False)
+            pv = [(v, (v + 1) % n) for v in range(n)]
+            recv = p2p.put(payload, _vpairs(aset, pv), t)
+            acc_idx = (vr - s - 2) % n
+            cur = jax.lax.dynamic_index_in_dim(d, acc_idx, 0, keepdims=False)
+            d = jax.lax.dynamic_update_index_in_dim(
+                d, combine(cur, recv.astype(cur.dtype)), acc_idx, 0)
+        # --- allgather phase: circulate the owned chunk
+        for s in range(n - 1):
+            send_idx = (vr - s) % n
+            payload = jax.lax.dynamic_index_in_dim(d, send_idx, 0, keepdims=False)
+            pv = [(v, (v + 1) % n) for v in range(n)]
+            recv = p2p.put(payload, _vpairs(aset, pv), t)
+            set_idx = (vr - s - 1) % n
+            d = jax.lax.dynamic_update_index_in_dim(d, recv.astype(d.dtype),
+                                                    set_idx, 0)
+        return d
+
+    if heap is not None:
+        with heap.scratch((n, c), x.dtype, tag="ring_allreduce"):
+            data = body(data)
+    else:
+        data = body(data)
+    out = data.ravel()[: x.size].reshape(x.shape)
+    return _masked(member, out, x)
+
+
+def reduce_scatter(x: jax.Array, op: str = "sum", team: TeamAxes = "data",
+                   algo: str = "ring",
+                   active_set: Optional[ActiveSet] = None) -> jax.Array:
+    """PE v receives chunk v of the reduction.  x is split along axis 0
+    into n equal chunks (axis length must be divisible by n)."""
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    if x.shape[0] % n:
+        raise ValueError(f"reduce_scatter axis0 {x.shape[0]} not divisible by {n}")
+    with safety.collective_guard(t.axes, f"reduce_scatter[{algo},{op}]"):
+        if n == 1:
+            return x
+        if algo == "xla":
+            if op != "sum":
+                raise ValueError("xla reduce_scatter supports sum only")
+            return jax.lax.psum_scatter(x, t.axis_name, scatter_dimension=0,
+                                        tiled=True)
+        if algo != "ring":
+            raise ValueError(f"unknown reduce_scatter algo '{algo}'")
+        member, vr = _member_mask(t, aset)
+        combine = _OPS[op]
+        k = x.shape[0] // n
+        d = x.reshape((n, k) + x.shape[1:])
+        for s in range(n - 1):
+            send_idx = (vr - s - 1) % n
+            payload = jax.lax.dynamic_index_in_dim(d, send_idx, 0, keepdims=False)
+            pv = [(v, (v + 1) % n) for v in range(n)]
+            recv = p2p.put(payload, _vpairs(aset, pv), t)
+            acc_idx = (vr - s - 2) % n
+            cur = jax.lax.dynamic_index_in_dim(d, acc_idx, 0, keepdims=False)
+            d = jax.lax.dynamic_update_index_in_dim(
+                d, combine(cur, recv.astype(cur.dtype)), acc_idx, 0)
+        own = jax.lax.dynamic_index_in_dim(d, vr, 0, keepdims=False)
+        return _masked(member, own, x[:k])
+
+
+# ======================================================================
+# alltoall (§4.5)
+# ======================================================================
+def alltoall(x: jax.Array, team: TeamAxes = "model", algo: str = "pairwise",
+             active_set: Optional[ActiveSet] = None) -> jax.Array:
+    """x has shape (n, ...): slot j goes to PE j; output slot j holds
+    what PE j sent here.  ``pairwise``: n-1 rounds of disjoint pair
+    exchanges built from puts."""
+    t, aset = _resolve(team, active_set)
+    n = aset.size
+    if x.shape[0] != n:
+        raise ValueError(f"alltoall leading dim {x.shape[0]} != set size {n}")
+    with safety.collective_guard(t.axes, f"alltoall[{algo}]"):
+        if n == 1:
+            return x
+        if algo == "xla":
+            return jax.lax.all_to_all(x, t.axis_name, split_axis=0,
+                                      concat_axis=0, tiled=False)
+        if algo != "pairwise":
+            raise ValueError(f"unknown alltoall algo '{algo}'")
+        member, vr = _member_mask(t, aset)
+        out = jnp.zeros_like(x)
+        own = jax.lax.dynamic_index_in_dim(x, vr, 0, keepdims=False)
+        out = jax.lax.dynamic_update_index_in_dim(out, own, vr, 0)
+        for s in range(1, n):
+            dst_v = (vr + s) % n
+            payload = jax.lax.dynamic_index_in_dim(x, dst_v, 0, keepdims=False)
+            pv = [(v, (v + s) % n) for v in range(n)]
+            recv = p2p.put(payload, _vpairs(aset, pv), t)
+            src_v = (vr - s) % n
+            out = jax.lax.dynamic_update_index_in_dim(out, recv.astype(x.dtype),
+                                                      src_v, 0)
+        return _masked(member, out, x)

@@ -1,0 +1,224 @@
+"""The symmetric heap (paper §3.1, §4.1) on a TPU mesh.
+
+POSH's central object is the per-PE *symmetric heap*: a shared-memory
+segment in which every allocation is collective, so that any object
+lives at the **same offset on every PE** (Fact 1) and a remote address
+is just ``heap_remote + (addr_local - heap_local)`` (Corollary 1).
+
+On a TPU pod the analogue is a registry of arrays whose *per-device
+shard* has identical shape/dtype on every PE — which SPMD sharding
+guarantees by construction.  What remains worth implementing faithfully
+is the **allocator**: a linear symmetric address space with first-fit
+allocation, alignment (``shmemalign``), coalescing free, and the
+offset-based remote addressing formula.  The allocator runs at trace
+time (allocations must be collective ⇒ in SPMD they are *the same
+Python code on every PE*, so symmetry cannot be violated by a correct
+program — the compiler plays the role of the paper's post-``shmalloc``
+barrier).
+
+Heap *state* (the actual arrays) is a plain dict pytree so it can flow
+through ``jax.jit`` / ``shard_map`` functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .teams import Team, TeamAxes
+
+HeapState = dict  # name -> per-PE array (inside shard_map) or global array
+
+
+def _nbytes(shape, dtype) -> int:
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize if shape else np.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class SymHandle:
+    """A symmetric object: same shape, dtype and *offset* on every PE."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: np.dtype
+    offset: int          # byte offset in the symmetric address space
+    nbytes: int
+
+    @property
+    def addr(self) -> int:
+        """The symmetric 'address' — identical on every PE (Fact 1)."""
+        return self.offset
+
+
+@dataclasses.dataclass
+class _Block:
+    offset: int
+    nbytes: int
+    free: bool
+    name: Optional[str] = None
+
+
+class SymmetricHeap:
+    """Trace-time symmetric allocator + functional heap state factory."""
+
+    DEFAULT_ALIGN = 512  # bytes; TPU-friendly (≥ one (8,128) f32 lane row)
+
+    def __init__(self, team: TeamAxes = ("data", "model"),
+                 capacity_bytes: int = 1 << 40):
+        self.team = Team.of(team)
+        self.capacity = int(capacity_bytes)
+        self._blocks: list[_Block] = [_Block(0, self.capacity, True)]
+        self.registry: dict[str, SymHandle] = {}
+
+    # ------------------------------------------------------------------
+    # allocation — shmalloc / shmemalign / shfree (§4.1.1)
+    # ------------------------------------------------------------------
+    def alloc(self, name: str, shape, dtype, align: int | None = None) -> SymHandle:
+        """Symmetric allocation.  Collective by construction: under SPMD
+        every PE executes this same trace-time call, which is the
+        OpenSHMEM requirement ("all PEs must call with identical args",
+        paper §4.1.1) enforced rather than assumed."""
+        if name in self.registry:
+            raise ValueError(f"symmetric object '{name}' already allocated")
+        align = align or self.DEFAULT_ALIGN
+        if align & (align - 1):
+            raise ValueError(f"alignment must be a power of two, got {align}")
+        shape = tuple(int(d) for d in shape)
+        dtype = np.dtype(dtype)
+        need = max(_nbytes(shape, dtype), 1)
+        for i, blk in enumerate(self._blocks):
+            if not blk.free:
+                continue
+            start = _align_up(blk.offset, align)
+            pad = start - blk.offset
+            if blk.nbytes >= pad + need:
+                self._carve(i, pad, need, name)
+                h = SymHandle(name, shape, dtype, start, need)
+                self.registry[name] = h
+                return h
+        raise MemoryError(
+            f"symmetric heap exhausted: need {need}B aligned {align} "
+            f"(capacity {self.capacity}B)")
+
+    def align_alloc(self, name, shape, dtype, align) -> SymHandle:
+        """``shmemalign`` (§4.1.1)."""
+        return self.alloc(name, shape, dtype, align=align)
+
+    def free(self, handle_or_name) -> None:
+        """``shfree`` — symmetric deallocation with coalescing."""
+        name = handle_or_name.name if isinstance(handle_or_name, SymHandle) else handle_or_name
+        h = self.registry.pop(name, None)
+        if h is None:
+            raise KeyError(f"no symmetric object named '{name}'")
+        for blk in self._blocks:
+            if blk.name == name:
+                blk.free, blk.name = True, None
+                break
+        self._coalesce()
+
+    def _carve(self, i: int, pad: int, need: int, name: str) -> None:
+        blk = self._blocks[i]
+        pieces = []
+        if pad:
+            pieces.append(_Block(blk.offset, pad, True))
+        pieces.append(_Block(blk.offset + pad, need, False, name))
+        rest = blk.nbytes - pad - need
+        if rest:
+            pieces.append(_Block(blk.offset + pad + need, rest, True))
+        self._blocks[i:i + 1] = pieces
+
+    def _coalesce(self) -> None:
+        out: list[_Block] = []
+        for blk in self._blocks:
+            if out and out[-1].free and blk.free:
+                out[-1].nbytes += blk.nbytes
+            else:
+                out.append(blk)
+        self._blocks = out
+
+    # ------------------------------------------------------------------
+    # Corollary 1 — offset-based remote addressing
+    # ------------------------------------------------------------------
+    def addr_of(self, name: str) -> int:
+        """Symmetric address of an object (same on every PE, Fact 1)."""
+        return self.registry[name].offset
+
+    def resolve(self, addr: int) -> tuple[SymHandle, int]:
+        """Inverse mapping: symmetric address -> (object, byte offset).
+
+        ``addr_remote = heap_remote + (addr_local − heap_local)``: since
+        our symmetric address space *is* the offset, resolution is a
+        registry lookup — the constant-time property the paper gets
+        from Corollary 1.
+        """
+        for h in self.registry.values():
+            if h.offset <= addr < h.offset + h.nbytes:
+                return h, addr - h.offset
+        raise KeyError(f"address {addr} not inside any symmetric object")
+
+    # ------------------------------------------------------------------
+    # state — the actual arrays (functional pytree)
+    # ------------------------------------------------------------------
+    def zeros_state(self) -> HeapState:
+        """Per-PE heap contents, to be created inside (or passed into)
+        ``shard_map``.  One array per live symmetric object."""
+        return {h.name: jnp.zeros(h.shape, h.dtype)
+                for h in self.registry.values()}
+
+    def spec_state(self) -> dict:
+        """ShapeDtypeStructs for the per-PE state (dry-run use)."""
+        return {h.name: jax.ShapeDtypeStruct(h.shape, h.dtype)
+                for h in self.registry.values()}
+
+    # ------------------------------------------------------------------
+    # Lemma 1 — temporary scratch inside collectives
+    # ------------------------------------------------------------------
+    @contextmanager
+    def scratch(self, shape, dtype, tag: str = "scratch") -> Iterator[SymHandle]:
+        """Temporary symmetric allocation used inside a collective.
+
+        Lemma 1 (paper §4.5.3): such allocations do not break heap
+        symmetry *provided they are released before the collective
+        returns*.  The context manager enforces exactly that, and the
+        property test drives random collective sequences checking that
+        the registry fingerprint is unchanged afterwards.
+        """
+        name = f"__{tag}_{len(self.registry)}_{self._scratch_counter()}"
+        h = self.alloc(name, shape, dtype)
+        try:
+            yield h
+        finally:
+            self.free(h)
+
+    _scratch_seq = 0
+
+    @classmethod
+    def _scratch_counter(cls) -> int:
+        cls._scratch_seq += 1
+        return cls._scratch_seq
+
+    # ------------------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable digest of the registry — equal across PEs iff the heap
+        is symmetric.  Used by tests for Fact 1 / Lemma 1."""
+        m = hashlib.sha256()
+        for name in sorted(self.registry):
+            h = self.registry[name]
+            m.update(f"{name}:{h.shape}:{h.dtype}:{h.offset}".encode())
+        return m.hexdigest()
+
+    def used_bytes(self) -> int:
+        return sum(b.nbytes for b in self._blocks if not b.free)
+
+    def frag_blocks(self) -> int:
+        return sum(1 for b in self._blocks if b.free)
+
+
+def _align_up(x: int, a: int) -> int:
+    return (x + a - 1) & ~(a - 1)

@@ -1,0 +1,137 @@
+"""One-sided put/get (paper §3.2, §4.4) as collective-permute schedules.
+
+POSH implements ``put``/``get`` as memory copies into a mapped remote
+heap.  On a TPU pod there is no asymmetric one-sided runtime visible
+from XLA — every inter-chip move is a compiler-scheduled ICI DMA.  The
+faithful adaptation keeps the paper's *addressing* (symmetric offsets)
+and *schedule hoisting* (remote handles resolved once, not per call) but
+expresses the data motion as rounds of ``jax.lax.ppermute`` with
+**static (src → dst) pair lists**:
+
+  * put-based ("push"): the source computes the pairs and the payload;
+  * get-based ("pull"): the reader computes the pairs ``(owner, reader)``
+    and the combine happens on the reader side.
+
+Under SPMD both lower to the same collective-permute primitive — the
+distinction is which side's schedule drives the round, which matters for
+the collective algorithms built on top (ring direction, combine side)
+and is preserved there.
+
+All functions here are designed to be called INSIDE ``shard_map`` over
+the team's mesh axes; array arguments are per-PE shards.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import safety
+from .heap import HeapState, SymHandle
+from .teams import Team, TeamAxes
+
+Pairs = Sequence[tuple[int, int]]
+
+
+def _check_pairs(pairs: Pairs, n: int, tag: str) -> list[tuple[int, int]]:
+    pairs = [(int(s), int(d)) for s, d in pairs]
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+        raise ValueError(f"{tag}: sources and destinations must be unique: {pairs}")
+    if any(not (0 <= s < n and 0 <= d < n) for s, d in pairs):
+        raise ValueError(f"{tag}: pair out of range for team size {n}: {pairs}")
+    return pairs
+
+
+def put(x: jax.Array, pairs: Pairs, team: TeamAxes) -> jax.Array:
+    """Push ``x`` along ``pairs``; returns what arrived here (zeros if
+    this PE is not a destination).  One POSH ``put`` round."""
+    t = Team.of(team)
+    safety.check_symmetric_arg(x, "put")
+    pairs = _check_pairs(pairs, t.size(), "put")
+    if not pairs:
+        return jnp.zeros_like(x)
+    return jax.lax.ppermute(x, t.axis_name, pairs)
+
+
+def get(x: jax.Array, pairs: Pairs, team: TeamAxes) -> jax.Array:
+    """Pull: ``pairs`` are (owner, reader).  The reader receives the
+    owner's ``x``.  Same primitive as ``put`` — initiative documented by
+    the caller's schedule, per DESIGN.md hardware-adaptation note."""
+    t = Team.of(team)
+    safety.check_symmetric_arg(x, "get")
+    pairs = _check_pairs(pairs, t.size(), "get")
+    if not pairs:
+        return jnp.zeros_like(x)
+    return jax.lax.ppermute(x, t.axis_name, pairs)
+
+
+def ring_shift(x: jax.Array, team: TeamAxes, delta: int = 1) -> jax.Array:
+    """Uniform shift: PE i's value moves to PE (i+delta) mod n."""
+    t = Team.of(team)
+    n = t.size()
+    d = delta % n
+    if d == 0:
+        return x
+    return jax.lax.ppermute(x, t.axis_name, [(i, (i + d) % n) for i in range(n)])
+
+
+def _dst_mask(pairs: Pairs, team: Team):
+    rank = team.my_pe()
+    dsts = jnp.asarray([d for _, d in pairs], dtype=jnp.int32)
+    return jnp.any(dsts == rank)
+
+
+# ----------------------------------------------------------------------
+# Heap-addressed one-sided ops (Corollary 1 in action)
+# ----------------------------------------------------------------------
+def heap_put(state: HeapState, handle: SymHandle, data: jax.Array,
+             pairs: Pairs, team: TeamAxes, offset=0) -> HeapState:
+    """``shmem_put``: write ``data`` into the *destination* PE's
+    symmetric object at element ``offset`` — the same offset the source
+    would use locally (Corollary 1: the offset IS the remote address).
+
+    ``data`` must be a prefix-contiguous slice along axis 0 of the
+    object.  ``offset`` may be traced (dynamic_update_slice) or static.
+    """
+    t = Team.of(team)
+    safety.check_same_size(data, data, "heap_put")
+    incoming = put(data, pairs, t)
+    buf = state[handle.name]
+    start = (jnp.asarray(offset, jnp.int32),) + (jnp.int32(0),) * (buf.ndim - 1)
+    updated = jax.lax.dynamic_update_slice(buf, incoming.astype(buf.dtype), start)
+    new = jnp.where(_dst_mask(pairs, t), updated.ravel(), buf.ravel()).reshape(buf.shape) \
+        if pairs else buf
+    out = dict(state)
+    out[handle.name] = new
+    return out
+
+
+def heap_get(state: HeapState, handle: SymHandle, pairs: Pairs,
+             team: TeamAxes, offset=0, size: int | None = None) -> jax.Array:
+    """``shmem_get``: fetch ``size`` rows at ``offset`` from the owner's
+    symmetric object.  Pairs are (owner, reader)."""
+    t = Team.of(team)
+    buf = state[handle.name]
+    size = buf.shape[0] if size is None else size
+    start = (jnp.asarray(offset, jnp.int32),) + (jnp.int32(0),) * (buf.ndim - 1)
+    local_slice = jax.lax.dynamic_slice(buf, start, (size,) + buf.shape[1:])
+    return get(local_slice, pairs, t)
+
+
+def heap_p(state: HeapState, handle: SymHandle, value, pairs: Pairs,
+           team: TeamAxes, index=0) -> HeapState:
+    """``shmem_p`` — single-element put (the datatype-specific
+    ``shmem_<type>_p`` family collapses to one polymorphic function; the
+    paper needs C++ templates for this, §4.3 — JAX gives it for free)."""
+    val = jnp.asarray(value)[None] if jnp.asarray(value).ndim == 0 else jnp.asarray(value)
+    data = val.reshape((1,) + state[handle.name].shape[1:])
+    return heap_put(state, handle, data, pairs, team, offset=index)
+
+
+def heap_g(state: HeapState, handle: SymHandle, pairs: Pairs,
+           team: TeamAxes, index=0) -> jax.Array:
+    """``shmem_g`` — single-element get."""
+    return heap_get(state, handle, pairs, team, offset=index, size=1)[0]

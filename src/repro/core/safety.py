@@ -1,0 +1,100 @@
+"""POSH ``_SAFE`` / ``_DEBUG`` compile modes, re-realized as trace-time flags.
+
+The paper compiles safety checks in or out with cpp macros so that the
+release binary has zero branches (§4.7).  The JAX analogue is exact:
+checks guarded by a Python-level flag either appear in the jaxpr or do
+not exist at all.  ``safe_mode(True)`` enables:
+
+  * static shape/dtype symmetry checks on every collective argument
+    (the paper's "buffer size equals data size" check, §4.5.5),
+  * a collective nesting guard — a PE must not start a collective while
+    another is in progress on the same team (§4.7 safe mode),
+  * op-tag matching: all PEs of a team must run the *same* collective
+    (trivially true under SPMD, but the tag is still recorded so that
+    hand-written schedules composed from p2p rounds can be audited).
+
+``debug_mode(True)`` additionally inserts ``jax.debug.print`` progress
+lines (the analogue of POSH's ``_DEBUG`` logging).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+def _flags():
+    if not hasattr(_state, "safe"):
+        _state.safe = False
+        _state.debug = False
+        _state.in_progress = []  # stack of (team_axes, op_tag)
+    return _state
+
+
+def safe_mode(enabled: bool = True) -> None:
+    _flags().safe = enabled
+
+
+def debug_mode(enabled: bool = True) -> None:
+    _flags().debug = enabled
+
+
+def is_safe() -> bool:
+    return _flags().safe
+
+
+def is_debug() -> bool:
+    return _flags().debug
+
+
+class PoshSafetyError(RuntimeError):
+    pass
+
+
+@contextlib.contextmanager
+def collective_guard(team_axes: tuple[str, ...], op_tag: str):
+    """Trace-time re-entrancy guard (paper §4.7: "check that when a process
+    wants to run a collective communication, it is not already
+    participating to another collective communication")."""
+    st = _flags()
+    if st.safe:
+        for axes, tag in st.in_progress:
+            if set(axes) & set(team_axes):
+                raise PoshSafetyError(
+                    f"collective '{op_tag}' on {team_axes} started while "
+                    f"'{tag}' on {axes} is in progress"
+                )
+    st.in_progress.append((team_axes, op_tag))
+    try:
+        if st.debug:
+            jax.debug.print("posh: >> {} on " + str(team_axes), op_tag)
+        yield
+        if st.debug:
+            jax.debug.print("posh: << {} on " + str(team_axes), op_tag)
+    finally:
+        st.in_progress.pop()
+
+
+def check_symmetric_arg(x: Any, op_tag: str) -> None:
+    """Static checks — free at run time, exactly like POSH's ``_SAFE``."""
+    if not is_safe():
+        return
+    if not isinstance(x, (jax.Array, jnp.ndarray)) and not hasattr(x, "shape"):
+        raise PoshSafetyError(f"{op_tag}: argument is not an array: {type(x)}")
+    if any(d <= 0 for d in getattr(x, "shape", ())):
+        raise PoshSafetyError(f"{op_tag}: degenerate buffer shape {x.shape}")
+
+
+def check_same_size(a, b, op_tag: str) -> None:
+    if not is_safe():
+        return
+    if a.size != b.size:
+        raise PoshSafetyError(
+            f"{op_tag}: buffer size mismatch {a.shape} vs {b.shape} "
+            "(paper §4.5.5 run-time error checking)"
+        )

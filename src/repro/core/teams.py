@@ -1,0 +1,95 @@
+"""Teams and active sets — the PE-addressing layer of POSH-on-TPU.
+
+In the paper a PE is an OS process and the "team" is implicitly all PEs
+(OpenSHMEM 1.0 collectives address subsets through ``(PE_start,
+logPE_stride, PE_size)`` active sets).  Here a PE is a mesh device and a
+*team* is an ordered tuple of mesh axis names; the flattened product of
+those axes is the PE numbering, identical on every device (this is the
+SPMD analogue of POSH building segment names from ranks, §4.7 "contact
+information").
+
+Everything in this module is trace-time static except ``my_pe`` — the
+schedules built from a Team are Python data, which is what lets XLA bake
+them into collective-permute ops (the analogue of POSH caching remote
+segment handles at startup, §4.1.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+import jax
+
+TeamAxes = Union[str, Sequence[str]]
+
+
+def _canon(team: TeamAxes) -> tuple[str, ...]:
+    if isinstance(team, str):
+        return (team,)
+    return tuple(team)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveSet:
+    """OpenSHMEM 1.0 active set: PEs ``start + i * 2**log2_stride``.
+
+    ``size == 0`` means "the whole team" (resolved against the team size
+    at schedule-construction time).
+    """
+
+    start: int = 0
+    log2_stride: int = 0
+    size: int = 0
+
+    def resolve(self, team_size: int) -> "ActiveSet":
+        size = self.size
+        stride = 1 << self.log2_stride
+        if size == 0:
+            size = (team_size - self.start + stride - 1) // stride
+        last = self.start + (size - 1) * stride
+        if not (0 <= self.start and last < team_size):
+            raise ValueError(
+                f"active set {self} does not fit in team of {team_size} PEs"
+            )
+        return ActiveSet(self.start, self.log2_stride, size)
+
+    def pe(self, virtual_rank: int) -> int:
+        """Physical PE id of a virtual rank inside the set (static)."""
+        return self.start + virtual_rank * (1 << self.log2_stride)
+
+    def pes(self) -> list[int]:
+        return [self.pe(v) for v in range(self.size)]
+
+
+@dataclasses.dataclass(frozen=True)
+class Team:
+    """An ordered set of mesh axes addressed as one flat PE space."""
+
+    axes: tuple[str, ...]
+
+    @classmethod
+    def of(cls, team: TeamAxes) -> "Team":
+        if isinstance(team, Team):
+            return team
+        return cls(_canon(team))
+
+    # --- trace-time queries (require being inside shard_map over axes) ---
+    def size(self) -> int:
+        """Number of PEs in the team (static int)."""
+        return jax.lax.axis_size(self.axes if len(self.axes) > 1 else self.axes[0])
+
+    def my_pe(self):
+        """This PE's rank in the flattened team (traced scalar)."""
+        return jax.lax.axis_index(self.axes if len(self.axes) > 1 else self.axes[0])
+
+    @property
+    def axis_name(self):
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+
+def team_size(team: TeamAxes) -> int:
+    return Team.of(team).size()
+
+
+def my_pe(team: TeamAxes):
+    return Team.of(team).my_pe()

@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic token pipeline, shard-aware."""
+from .pipeline import SyntheticLM, batch_specs, input_specs_for
+
+__all__ = ["SyntheticLM", "batch_specs", "input_specs_for"]

@@ -1,0 +1,7 @@
+"""repro.ft — fault tolerance: failure detection, restart, elastic
+re-mesh, straggler mitigation."""
+from .runtime import (ElasticPlan, FailureDetector, StragglerPolicy,
+                      plan_elastic_remesh, run_with_restarts)
+
+__all__ = ["FailureDetector", "StragglerPolicy", "ElasticPlan",
+           "plan_elastic_remesh", "run_with_restarts"]

@@ -1,0 +1,149 @@
+"""Blocked (flash) attention kernel — causal / sliding-window, GQA.
+
+This is the compute hot spot of the transformer-family architectures the
+framework serves.  TPU-native design: the KV sequence is the innermost
+*arbitrary* grid dimension, with the online-softmax running statistics
+(m, l) and the f32 accumulator held in VMEM scratch across KV steps;
+Q/K/V blocks are MXU-aligned (block_q × head_dim, block_kv × head_dim).
+
+GQA is handled in the index maps: query head h reads KV head
+h // (H // H_kv) — no KV replication in HBM.
+
+Sliding-window attention (h2o-danube, zamba2 long-context) masks
+per-element and, for fully-out-of-window KV blocks, skips the matmul via
+``pl.when`` — the blocked analogue of never touching those bytes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, window: int | None,
+                  block_q: int, block_kv: int, n_kv: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Block-level relevance: causal ⇒ KV block must not start after the
+    # last query row; window ⇒ KV block must not end before the window;
+    # padded KV blocks (entirely ≥ kv_len) are skipped outright.
+    relevant = k_start < kv_len
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant &= (k_start + block_kv - 1) >= (q_start - window + 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= sm_scale                              # (bq, bk)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < kv_len                       # padded KV columns
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq, 128) lane-replicated
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])           # (bq, 1)
+        p = jnp.exp(s - m_new[:, :1])                           # (bq, bk)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    sm_scale: float | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, H, T, D); k, v: (B, H_kv, S, D) with H % H_kv == 0.
+
+    Returns (B, H, T, D).  T and S are padded to block multiples
+    internally; padded KV columns are masked, padded Q rows sliced off.
+    """
+    b, h, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    if h % hkv:
+        raise ValueError(f"GQA requires H % H_kv == 0, got {h} % {hkv}")
+    group = h // hkv
+    sm_scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+
+    block_q = min(block_q, max(t, 8))
+    block_kv = min(block_kv, max(s, 8))
+    tp = -(-t // block_q) * block_q
+    sp = -(-s // block_kv) * block_kv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+
+    qf = qp.reshape(b * h, tp, d)
+    kf = kp.reshape(b * hkv, sp, d)
+    vf = vp.reshape(b * hkv, sp, d)
+
+    n_q = tp // block_q
+    n_kv = sp // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv, kv_len=s)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b_idx = bh // h
+        kvh = (bh % h) // group
+        return (b_idx * hkv + kvh, ki, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b * h, tp, d), q.dtype),
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, tp, d)[:, :, :t, :]

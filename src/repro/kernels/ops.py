@@ -1,0 +1,43 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True in this container (CPU validation); real
+TPU deployments set ``repro.kernels.ops.INTERPRET = False`` at startup
+(trace-time constant — POSH's compile-time selection, once more).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import flash_attention as _fa
+from . import reduce_combine as _rc
+from . import symm_copy as _sc
+
+INTERPRET = True  # flipped off on real TPU
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def symm_copy(x, variant: str = _sc.DEFAULT_VARIANT):
+    if variant == "stock":
+        return _sc.copy_stock(x)
+    return _sc.copy_blocked(x, variant, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "variant"))
+def combine(a, b, op: str = "sum", variant: str = _rc.DEFAULT_VARIANT):
+    return _rc.combine_blocked(a, b, op, variant, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "sm_scale",
+                                             "block_q", "block_kv"))
+def attention(q, k, v, causal: bool = True, window: int | None = None,
+              sm_scale: float | None = None, block_q: int = 128,
+              block_kv: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               sm_scale=sm_scale, block_q=block_q,
+                               block_kv=block_kv, interpret=INTERPRET)
+
+
+COPY_VARIANTS = tuple(["stock"] + list(_sc.VARIANTS))
+COMBINE_VARIANTS = tuple(_rc.VARIANTS)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_OPS = {
+    "sum": lambda a, b: a + b,
+    "prod": lambda a, b: a * b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def copy_ref(x: jax.Array) -> jax.Array:
+    return jnp.array(x, copy=True)
+
+
+def combine_ref(a: jax.Array, b: jax.Array, op: str = "sum") -> jax.Array:
+    return _OPS[op](a, b)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  sm_scale: float | None = None) -> jax.Array:
+    """Dense softmax attention with GQA broadcast — the oracle for
+    flash_attention.  q: (B,H,T,D); k,v: (B,Hkv,S,D)."""
+    b, h, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    sm_scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * sm_scale
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,78 @@
+"""symm_copy — the POSH memory-copy engine (paper §4.4, Table 1) on TPU.
+
+POSH ships several ``memcpy`` implementations (stock / MMX / MMX2 / SSE)
+and selects one at compile time, because the copy between private and
+symmetric memory is the hot spot of every put/get.  The TPU analogue of
+"which SIMD ISA moves the bytes" is **which VMEM tiling moves the
+bytes**: HBM→VMEM DMA efficiency is set by the block shape (sublane ×
+lane alignment: multiples of (8, 128) for f32, (16, 128) for bf16), and
+the trade-off between few-large-blocks (DMA efficiency, VMEM pressure)
+and many-small-blocks (pipelining) mirrors the paper's per-platform
+memcpy differences.
+
+The variant is chosen by a trace-time string — POSH's compile-time
+``-D`` flag, same mechanism, same reason (§4.4: "in order to minimize
+the number of conditional branches, selecting one particular
+implementation is made at compile-time").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# name -> (sublane rows, lane cols) of the VMEM block
+VARIANTS: dict[str, tuple[int, int]] = {
+    "vmem_8x128": (8, 128),        # minimal aligned tile ("MMX": small regs)
+    "vmem_32x128": (32, 128),      # 16 KiB f32 blocks
+    "vmem_64x256": (64, 256),      # 64 KiB
+    "vmem_256x256": (256, 256),    # 256 KiB ("SSE": wide moves)
+    "vmem_512x512": (512, 512),    # 1 MiB — few, large DMAs
+}
+DEFAULT_VARIANT = "vmem_256x256"
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def copy_blocked(x: jax.Array, variant: str = DEFAULT_VARIANT,
+                 interpret: bool = True) -> jax.Array:
+    """Blocked VMEM copy of an arbitrary array.
+
+    The array is flattened and padded to a (rows, cols) panel that the
+    grid tiles exactly; the pad is stripped afterwards.  On real TPU the
+    pad is at most one block.
+    """
+    r, c = VARIANTS[variant]
+    flat = x.ravel()
+    n = flat.size
+    rows = -(-n // c)
+    rows = -(-rows // r) * r
+    panel = jnp.zeros((rows * c,), x.dtype).at[:n].set(flat).reshape(rows, c)
+    out = pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(panel.shape, panel.dtype),
+        grid=(rows // r,),
+        in_specs=[pl.BlockSpec((r, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, c), lambda i: (i, 0)),
+        interpret=interpret,
+    )(panel)
+    return out.ravel()[:n].reshape(x.shape)
+
+
+def copy_stock(x: jax.Array) -> jax.Array:
+    """The 'stock memcpy': whatever XLA emits for an identity copy."""
+    return jnp.copy(x)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes(variant: str, dtype_str: str = "float32") -> int:
+    """Working-set estimate for a variant: in-block + out-block bytes
+    (double-buffered by the pipeline ⇒ ×2).  Used by the benchmark
+    harness to reason about VMEM pressure without hardware."""
+    r, c = VARIANTS[variant]
+    item = jnp.dtype(dtype_str).itemsize
+    return 2 * 2 * r * c * item

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell
+on the production mesh and extract roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k [--multi-pod] [--backend xla|posh] [--json out]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks
+the device count at first init) — this is the only entry point that
+sees 512 placeholder devices.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import comm, configs
+from repro.launch import roofline, shapes
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models import registry
+from repro.parallel.ctx import smap
+from repro.train.grad import combine_grads
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_state_specs
+from repro.train.step import make_train_step, train_state_specs
+
+
+def _sharded_sds(tree_sds, specs, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        tree_sds, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               backend: str = "xla", ce_mode: str = "vocab_parallel",
+               moe_dispatch: str = "einsum", zero: int = 1,
+               microbatches: int | None = None, verbose: bool = True,
+               unroll: bool = False, attn_block: int | None = None,
+               cfg_override=None):
+    cfg = cfg_override if cfg_override is not None else configs.get(arch)
+    ok, why = shapes.runs_shape(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    comm_cfg = comm.CommConfig(backend=backend)
+    info0 = shapes.SHAPES[shape_name]
+    if attn_block is None:
+        attn_block = 8192 if (unroll and info0["seq"] >= 32768) else 1024
+    ctx = make_ctx(mesh, comm_cfg=comm_cfg, ce_mode=ce_mode,
+                   moe_dispatch=moe_dispatch, unroll=unroll,
+                   attn_block_q=attn_block, attn_block_kv=attn_block,
+                   ce_chunk=16384 if unroll else 4096)
+    api = registry.build(cfg)
+    info = shapes.SHAPES[shape_name]
+    kind = info["kind"]
+    n_dev = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    pspecs = api.specs(cfg, ctx)
+    params_sds = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0),
+                                                 cfg, ctx))
+    params_in = _sharded_sds(params_sds, pspecs, mesh)
+    t0 = time.time()
+
+    if kind == "train":
+        mb = 1 if unroll else (microbatches or shapes.microbatches_for(arch))
+        opt_cfg = AdamWConfig(zero=zero)
+        step = make_train_step(cfg, ctx, api, opt_cfg, microbatches=mb)
+        sspecs = train_state_specs(cfg, ctx, api, opt_cfg)
+        # adamw_init uses collectives (zero-1 chunking) -> eval under smap
+        state_sds = jax.eval_shape(
+            smap(lambda p: {"params": p, "opt": adamw_init(p, ctx, opt_cfg),
+                            "step": jnp.zeros((), jnp.int32)},
+                 mesh, (pspecs,), sspecs), params_in)
+        state_in = _sharded_sds(state_sds, sspecs, mesh)
+        batch_in, bspecs = shapes.train_inputs(cfg, mesh, shape_name)
+        fn = smap(step, mesh, (sspecs, bspecs),
+                  (sspecs, {"loss": P(), "grad_norm": P(), "step": P()}))
+        lowered = jax.jit(fn, donate_argnums=(0,)).lower(state_in, batch_in)
+    elif kind == "prefill":
+        batch_in, bspecs = shapes.prefill_inputs(cfg, mesh, shape_name)
+        dpa = shapes.dp_axes_of(mesh)
+
+        def prefill_fn(params, batch):
+            if cfg.family == "encdec":
+                from repro.models import encdec
+                enc = encdec.encode(params, batch["frames"], ctx, cfg)
+                x = encdec.decode_train(params, batch["tokens"], enc, ctx, cfg)
+                from repro.parallel.ctx import sp_gather
+                return sp_gather(x, ctx, axis=1)[:, -1]
+            return api.prefill(params, batch["tokens"], ctx, cfg,
+                               img_embeds=batch.get("img_embeds"))
+
+        fn = smap(prefill_fn, mesh, (pspecs, bspecs), P(dpa, None))
+        lowered = jax.jit(fn).lower(params_in, batch_in)
+    else:  # decode
+        b_loc, max_len, replicated = shapes.decode_batch_info(
+            cfg, mesh, shape_name)
+        dpa = shapes.dp_axes_of(mesh)
+        bspec = P(None) if replicated else P(dpa)
+
+        state_sds = jax.eval_shape(
+            lambda: api.init_decode_state(cfg, ctx, b_loc, max_len))
+        # decode-state specs: batch dim sharded over dp (or replicated)
+        def dspec(sd):
+            nd = len(sd.shape)
+            return P(*([None] * nd))
+        dstate_specs = jax.tree.map(dspec, state_sds,
+                                    is_leaf=lambda x: isinstance(
+                                        x, jax.ShapeDtypeStruct))
+        state_in = _sharded_sds(state_sds, dstate_specs, mesh)
+        gb = info["global_batch"]
+        tok_global = gb if not replicated else b_loc
+        token_in = jax.ShapeDtypeStruct(
+            (tok_global,), jnp.int32, sharding=NamedSharding(mesh, bspec))
+
+        extra = {}
+        if cfg.family == "vlm":
+            ng = cfg.n_layers // cfg.cross_attn_every
+            kvpr = cfg.kv_per_rank(ctx.tp_size)
+            kv_sds = jax.ShapeDtypeStruct(
+                (ng, b_loc, cfg.img_tokens, kvpr, cfg.head_dim),
+                jnp.bfloat16)
+            img_kv_specs = (P(*([None] * 5)), P(*([None] * 5)))
+            img_kv_in = tuple(
+                jax.ShapeDtypeStruct(kv_sds.shape, kv_sds.dtype,
+                                     sharding=NamedSharding(
+                                         mesh, P(*([None] * 5))))
+                for _ in range(2))
+
+            def dec_fn(params, token, state, img_kv):
+                return api.decode_step(params, token, state, ctx, cfg,
+                                       img_kv=img_kv)
+            fn = smap(dec_fn, mesh,
+                      (pspecs, bspec, dstate_specs, img_kv_specs),
+                      (bspec, dstate_specs))
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                params_in, token_in, state_in, img_kv_in)
+        elif cfg.family == "encdec":
+            kvpr = cfg.n_kv if cfg.attn_layout(ctx.tp_size) == "ctx" \
+                else cfg.kv_per_rank(ctx.tp_size)
+            enc_kv_in = tuple(
+                jax.ShapeDtypeStruct(
+                    (cfg.n_layers, b_loc, cfg.enc_frames, kvpr,
+                     cfg.head_dim), jnp.bfloat16,
+                    sharding=NamedSharding(mesh, P(*([None] * 5))))
+                for _ in range(2))
+            enc_kv_specs = (P(*([None] * 5)), P(*([None] * 5)))
+
+            def dec_fn(params, token, state, enc_kv):
+                from repro.models import encdec
+                return encdec.decode_step(params, token, state, enc_kv,
+                                          ctx, cfg)
+            fn = smap(dec_fn, mesh,
+                      (pspecs, bspec, dstate_specs, enc_kv_specs),
+                      (bspec, dstate_specs))
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                params_in, token_in, state_in, enc_kv_in)
+        else:
+            def dec_fn(params, token, state):
+                return api.decode_step(params, token, state, ctx, cfg)
+            fn = smap(dec_fn, mesh, (pspecs, bspec, dstate_specs),
+                      (bspec, dstate_specs))
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                params_in, token_in, state_in)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rf = roofline.analyse(arch, shape_name, mesh_name, compiled, cfg,
+                          n_dev, kind, info)
+    ma = compiled.memory_analysis()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "backend": backend, "status": "ok", "unroll": unroll,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "flops_dev": rf.flops_dev, "bytes_dev": rf.bytes_dev,
+        "coll_bytes_dev": rf.coll_bytes_dev,
+        "compute_ms": rf.compute_s * 1e3, "memory_ms": rf.memory_s * 1e3,
+        "collective_ms": rf.collective_s * 1e3, "dominant": rf.dominant,
+        "model_flops": rf.model_flops, "useful_ratio": rf.useful_ratio,
+        "peak_gib_dev": rf.peak_bytes_dev / 2**30,
+        "temp_gib_dev": ma.temp_size_in_bytes / 2**30,
+        "arg_gib_dev": ma.argument_size_in_bytes / 2**30,
+        "coll_counts": rf.coll_counts,
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items()
+                          if k != "coll_counts"}))
+        print("  collectives:", dict(rf.coll_counts))
+    return result
+
+
+def _depth_points(cfg):
+    """(cfg_l1, cfg_l2, units_l1, units_l2, units_full): two reduced-
+    depth configs and the unit (layers or groups) counts for linear
+    extrapolation.  Scan guarantees identical bodies, so flops/bytes/
+    collective counts are affine in depth."""
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        return (dataclasses.replace(cfg, n_layers=k),
+                dataclasses.replace(cfg, n_layers=2 * k),
+                1, 2, cfg.n_layers / k)
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        return (dataclasses.replace(cfg, n_layers=k),
+                dataclasses.replace(cfg, n_layers=2 * k),
+                1, 2, cfg.n_layers / k)         # 81/6 = 13.5 groups
+    if cfg.family == "encdec":
+        return (dataclasses.replace(cfg, n_layers=2, enc_layers=2),
+                dataclasses.replace(cfg, n_layers=4, enc_layers=4),
+                2, 4, cfg.n_layers)
+    return (dataclasses.replace(cfg, n_layers=2),
+            dataclasses.replace(cfg, n_layers=4), 2, 4, cfg.n_layers)
+
+
+_EXTRAP_KEYS = ("flops_dev", "bytes_dev", "coll_bytes_dev")
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, backend="xla",
+             ce_mode="vocab_parallel", moe_dispatch="einsum", zero=1,
+             microbatches=None, verbose=False, pad_heads=None):
+    """Triple dry-run:
+      * two reduced-depth ACCOUNTING passes (unrolled scans, mb=1) —
+        XLA cost analysis counts while bodies once, so the depth-affine
+        extrapolation F(L) = F(l1) + (L-l1)·(F(l2)-F(l1))/(l2-l1)
+        recovers full-depth FLOPs / bytes / collective traffic exactly
+        (scan bodies are identical by construction);
+      * one full-depth MEMORY pass (production scans/microbatching) —
+        true peak bytes per device.
+    """
+    cfg = configs.get(arch)
+    if pad_heads:
+        cfg = dataclasses.replace(cfg, n_heads=pad_heads)
+    ok, why = shapes.runs_shape(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skip", "why": why}
+    c1, c2, u1, u2, u_full = _depth_points(cfg)
+    kw = dict(multi_pod=multi_pod, backend=backend, ce_mode=ce_mode,
+              moe_dispatch=moe_dispatch, zero=zero,
+              microbatches=microbatches, verbose=False)
+    if pad_heads:
+        c1 = dataclasses.replace(c1, n_heads=pad_heads)
+        c2 = dataclasses.replace(c2, n_heads=pad_heads)
+    a1 = lower_cell(arch, shape_name, unroll=True, cfg_override=c1, **kw)
+    if a1.get("status") != "ok":
+        return a1
+    a2 = lower_cell(arch, shape_name, unroll=True, cfg_override=c2, **kw)
+    kind0 = shapes.SHAPES[shape_name]["kind"]
+    # memory pass only where the production config differs structurally
+    # from the accounting passes (train: microbatching).  decode/prefill
+    # peaks are depth-affine (params + caches scale with L, transients
+    # constant) and extrapolate from the accounting passes.
+    mem = lower_cell(arch, shape_name, unroll=False, **kw)         if kind0 == "train" else None
+
+    out = dict(a1)
+    scale = (u_full - u1) / (u2 - u1)
+    for key in _EXTRAP_KEYS:
+        out[key] = a1[key] + (a2[key] - a1[key]) * scale
+    cc = {}
+    for k in set(a1["coll_counts"]) | set(a2["coll_counts"]):
+        v1 = a1["coll_counts"].get(k, 0)
+        v2 = a2["coll_counts"].get(k, 0)
+        cc[k] = int(round(v1 + (v2 - v1) * scale))
+    out["coll_counts"] = cc
+    out["compute_ms"] = out["flops_dev"] / roofline.PEAK_FLOPS * 1e3
+    out["memory_ms"] = out["bytes_dev"] / roofline.HBM_BW * 1e3
+    out["collective_ms"] = out["coll_bytes_dev"] / roofline.LINK_BW * 1e3
+    out["dominant"] = max(
+        [("compute", out["compute_ms"]), ("memory", out["memory_ms"]),
+         ("collective", out["collective_ms"])], key=lambda kv: kv[1])[0]
+    # model flops with the FULL config
+    info = shapes.SHAPES[shape_name]
+    gb, t = info["global_batch"], info["seq"]
+    if info["kind"] == "train":
+        mf = roofline.model_flops_train(cfg, gb * t)
+    elif info["kind"] == "prefill":
+        mf = 2.0 * cfg.active_param_count() * gb * t
+    else:
+        mf = roofline.model_flops_decode(cfg, gb, t)
+    n_dev = 512 if multi_pod else 256
+    out["model_flops"] = mf
+    out["useful_ratio"] = mf / max(out["flops_dev"] * n_dev, 1.0)
+    if mem is not None:
+        out["peak_gib_dev"] = mem["peak_gib_dev"]
+        out["temp_gib_dev"] = mem["temp_gib_dev"]
+        out["arg_gib_dev"] = mem["arg_gib_dev"]
+        out["t_compile_mem_s"] = mem["t_compile_s"]
+    else:
+        for key in ("peak_gib_dev", "temp_gib_dev", "arg_gib_dev"):
+            out[key] = a1[key] + (a2[key] - a1[key]) * scale
+        out["t_compile_mem_s"] = 0.0
+    out["extrapolated_from"] = [u1, u2, u_full]
+    if verbose:
+        print(json.dumps({k: v for k, v in out.items()
+                          if k != "coll_counts"}))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True,
+                    choices=list(shapes.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--backend", default="xla", choices=["xla", "posh"])
+    ap.add_argument("--ce-mode", default="vocab_parallel",
+                    choices=["vocab_parallel", "gathered"])
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=["einsum", "alltoall"])
+    ap.add_argument("--zero", type=int, default=1, choices=[0, 1])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--json", default=None, help="append result JSONL here")
+    ap.add_argument("--pad-heads", type=int, default=None,
+                    help="pad query heads to this count (zero-padded heads "
+                         "are function-preserving; switches ctx->head "
+                         "attention layout when divisible by TP)")
+    ap.add_argument("--single", action="store_true",
+                    help="single accounting-only pass (no memory pass)")
+    args = ap.parse_args()
+    if args.single:
+        res = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                         backend=args.backend, ce_mode=args.ce_mode,
+                         moe_dispatch=args.moe_dispatch, zero=args.zero,
+                         microbatches=args.microbatches, unroll=True)
+    else:
+        res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       backend=args.backend, ce_mode=args.ce_mode,
+                       moe_dispatch=args.moe_dispatch, zero=args.zero,
+                       microbatches=args.microbatches, verbose=True,
+                       pad_heads=args.pad_heads)
+    if args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

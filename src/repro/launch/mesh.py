@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16×16 = 256 chips (data, model);
+multi-pod: 2×16×16 = 512 chips (pod, data, model) — the pod axis is the
+outer DP axis (ICI within a pod, DCI across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_ctx(mesh, *, comm_cfg=None, **overrides):
+    """ParallelCtx derived from a mesh built by make_production_mesh
+    (or any mesh whose last axis is 'model')."""
+    import jax.numpy as jnp
+
+    from repro import comm as comm_mod
+    from repro.parallel.ctx import ParallelCtx
+
+    names = mesh.axis_names
+    tp_axis = names[-1]
+    dp_axes = tuple(n for n in names if n != tp_axis)
+    sizes = dict(zip(names, mesh.devices.shape))
+    dp_size = 1
+    for n in dp_axes:
+        dp_size *= sizes[n]
+    kw = dict(dp_axes=dp_axes, tp_axis=tp_axis, dp_size=dp_size,
+              tp_size=sizes[tp_axis],
+              comm=comm_cfg or comm_mod.CommConfig(),
+              sp=True, remat=True,
+              param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+    kw.update(overrides)
+    return ParallelCtx(**kw)

@@ -1,0 +1,141 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Terms (TPU v5e constants; per-device quantities over per-chip rates):
+
+  compute_s    = HLO_FLOPs_per_device / 197e12      (bf16 MXU peak)
+  memory_s     = HLO_bytes_per_device / 819e9       (HBM bw)
+  collective_s = collective_bytes_per_device / 50e9 (per-link ICI bw)
+
+``cost_analysis()`` is per-device (verified empirically in DESIGN.md
+§10).  collective bytes are parsed from the compiled HLO text: the sum
+of OUTPUT buffer bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute op (a per-device received-bytes upper
+bound; ring decompositions make their round traffic explicit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^\s]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> tuple[int, Counter]:
+    """Sum output-buffer bytes of collective ops; also per-op counts."""
+    total = 0
+    counts: Counter = Counter()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        total += b
+        counts[op] += 1
+        counts[op + "_bytes"] += b
+    return total, counts
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float           # MODEL_FLOPS / (flops_dev * n_dev)
+    peak_bytes_dev: float         # memory_analysis temp+args
+    coll_counts: dict
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} | "
+                f"{self.collective_s*1e3:.2f} | **{self.dominant}** | "
+                f"{self.useful_ratio:.2f} | "
+                f"{self.peak_bytes_dev/2**30:.2f} |")
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE)."""
+    n = cfg.active_param_count()
+    return 6.0 * n * tokens
+
+
+def model_flops_decode(cfg, new_tokens: int, context: int) -> float:
+    n = cfg.active_param_count()
+    flops = 2.0 * n * new_tokens
+    # attention against cache
+    if not cfg.rwkv_head_dim and not (cfg.ssm_state and
+                                      not cfg.shared_attn_every):
+        eff_ctx = min(context, cfg.swa_window or context)
+        n_att = cfg.n_layers if not cfg.shared_attn_every else \
+            cfg.n_layers // cfg.shared_attn_every
+        flops += (2.0 * n_att * cfg.n_heads * cfg.head_dim * 2 * eff_ctx
+                  * new_tokens)
+    return flops
+
+
+def analyse(arch, shape, mesh_name, compiled, cfg, n_dev, kind,
+            shape_info) -> Roofline:
+    ca = compiled.cost_analysis()
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll_b, counts = collective_bytes(txt)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_b / LINK_BW
+    dom = max([("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)], key=lambda kv: kv[1])[0]
+    gb, t = shape_info["global_batch"], shape_info["seq"]
+    if kind == "train":
+        mf = model_flops_train(cfg, gb * t)  # 6ND counts fwd+bwd
+    elif kind == "prefill":
+        mf = 2.0 * cfg.active_param_count() * gb * t
+    else:
+        mf = model_flops_decode(cfg, gb, t)
+    ma = compiled.memory_analysis()
+    # donated buffers alias their outputs — don't double count
+    peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                 ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    useful = mf / max(flops_dev * n_dev, 1.0)
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name,
+                    flops_dev=flops_dev, bytes_dev=bytes_dev,
+                    coll_bytes_dev=float(coll_b), compute_s=compute_s,
+                    memory_s=memory_s, collective_s=collective_s,
+                    dominant=dom, model_flops=mf, useful_ratio=useful,
+                    peak_bytes_dev=peak,
+                    coll_counts={k: v for k, v in counts.items()})

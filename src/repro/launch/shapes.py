@@ -1,0 +1,102 @@
+"""Assigned input-shape sets and ShapeDtypeStruct builders for the
+dry-run (weak-type-correct, shardable, no device allocation).
+
+LM shapes:   train_4k (train_step), prefill_32k (prefill),
+             decode_32k (serve_step: 1 new token, 32k cache),
+             long_500k (serve_step, 512k context; sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq=524288, global_batch=1),
+}
+
+# archs with quadratic full attention skip long_500k (DESIGN.md §5)
+LONG_OK = {"h2o-danube-3-4b", "rwkv6-3b", "zamba2-7b"}
+
+# per-(arch, shape) microbatch counts for train_4k (activation memory)
+TRAIN_MICROBATCH = {
+    "llama-3.2-vision-90b": 8,
+    "qwen3-8b": 4,
+    "zamba2-7b": 4,
+    "default": 2,
+}
+
+
+def microbatches_for(arch: str) -> int:
+    return TRAIN_MICROBATCH.get(arch, TRAIN_MICROBATCH["default"])
+
+
+def runs_shape(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "full quadratic attention at 512k — documented skip"
+    return True, ""
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def dp_axes_of(mesh):
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def train_inputs(cfg, mesh, shape_name: str):
+    """(batch_sds, batch_specs) for a training step."""
+    info = SHAPES[shape_name]
+    dpa = dp_axes_of(mesh)
+    gb, t = info["global_batch"], info["seq"]
+    batch = {"tokens": _sds((gb, t + 1), jnp.int32, mesh, P(dpa))}
+    specs = {"tokens": P(dpa)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = _sds((gb, cfg.img_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, P(dpa, None, None))
+        specs["img_embeds"] = P(dpa, None, None)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((gb, cfg.enc_frames, cfg.d_model),
+                               jnp.bfloat16, mesh, P(dpa, None, None))
+        specs["frames"] = P(dpa, None, None)
+    return batch, specs
+
+
+def prefill_inputs(cfg, mesh, shape_name: str):
+    info = SHAPES[shape_name]
+    dpa = dp_axes_of(mesh)
+    gb, t = info["global_batch"], info["seq"]
+    batch = {"tokens": _sds((gb, t), jnp.int32, mesh, P(dpa))}
+    specs = {"tokens": P(dpa)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = _sds((gb, cfg.img_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, P(dpa, None, None))
+        specs["img_embeds"] = P(dpa, None, None)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((gb, cfg.enc_frames, cfg.d_model),
+                               jnp.bfloat16, mesh, P(dpa, None, None))
+        specs["frames"] = P(dpa, None, None)
+    return batch, specs
+
+
+def decode_batch_info(cfg, mesh, shape_name: str):
+    """(b_local, max_len, batch_replicated) for decode state building."""
+    info = SHAPES[shape_name]
+    dpa = dp_axes_of(mesh)
+    dp = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for n in dpa:
+        dp *= sizes[n]
+    gb = info["global_batch"]
+    if gb >= dp:
+        return gb // dp, info["seq"], False
+    return gb, info["seq"], True  # replicate small batches (long_500k b=1)

@@ -1,0 +1,14 @@
+"""repro.models — the assigned architectures, written in manual SPMD.
+
+Every model exposes:
+    init(key, cfg, ctx)    -> global (unsharded-logical) param pytree
+    specs(cfg, ctx)        -> matching PartitionSpec pytree (shard_map)
+    loss_fn(params, batch, ctx) -> scalar loss       (train shapes)
+    prefill / decode_step  (serving shapes; LM-family)
+"""
+__all__ = ["build"]
+
+
+def build(*args, **kwargs):
+    from .registry import build as _build
+    return _build(*args, **kwargs)

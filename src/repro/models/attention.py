@@ -1,0 +1,328 @@
+"""Attention layer — head-parallel and ctx-parallel (sequence) layouts.
+
+layout "head": query heads divide TP ⇒ Megatron column/row parallel with
+    SP activations; KV heads sharded when possible, otherwise each rank
+    computes only the KV head(s) its query group needs (GQA replication).
+layout "ctx": heads do NOT divide TP (minitron 24H, gemma 8H, whisper 8H)
+    ⇒ queries stay sequence-sharded (every rank keeps all heads for its
+    token slice), K/V are projected locally and all-gathered over TP.
+    Decode then holds the KV cache sequence-sharded with a distributed
+    online-softmax combine (flash-combine psum/pmax).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import (ParallelCtx, grad_sync, sp_gather,
+                                sp_scatter)
+
+from .common import apply_rope, ninit, rmsnorm, rmsnorm_init
+from .flash import (blocked_attention, decode_attention,
+                    decode_attention_partial, flash_combine)
+
+
+def _sync(w, ctx, scale=1.0):
+    if ctx.tp_size == 1:
+        return w
+    return grad_sync(w, ctx.tp_axis, scale)
+
+
+def _ctx_varying(ctx):
+    """ctx-layout activations are rank-varying only under SP."""
+    return ctx.sp and ctx.tp_size > 1
+
+
+def _layout(cfg, ctx):
+    return cfg.attn_layout(ctx.tp_size)
+
+
+def attn_init(key, cfg, ctx: ParallelCtx, cross: bool = False):
+    d, dh = cfg.d_model, cfg.head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": ninit(ks[0], (d, h * dh), dtype=ctx.param_dtype),
+        "wk": ninit(ks[1], (d, hkv * dh), dtype=ctx.param_dtype),
+        "wv": ninit(ks[2], (d, hkv * dh), dtype=ctx.param_dtype),
+        "wo": ninit(ks[3], (h * dh, d), dtype=ctx.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, ctx.param_dtype)
+        p["k_norm"] = rmsnorm_init(dh, ctx.param_dtype)
+    return p
+
+
+def attn_specs(cfg, ctx: ParallelCtx, cross: bool = False):
+    tp = ctx.tp_axis
+    layout = _layout(cfg, ctx)
+    if layout == "head":
+        kv_spec = P(None, tp) if cfg.n_kv % ctx.tp_size == 0 else P(None, None)
+        s = {"wq": P(None, tp), "wk": kv_spec, "wv": kv_spec,
+             "wo": P(tp, None)}
+    else:
+        s = {"wq": P(None, None), "wk": P(None, None), "wv": P(None, None),
+             "wo": P(None, None)}
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": P(None)}
+        s["k_norm"] = {"scale": P(None)}
+    return s
+
+
+def _project_kv_head_layout(p, xf, cfg, ctx):
+    """Per-rank K/V in head layout.  When n_kv < tp the weights are
+    replicated and each rank slices the single KV head its query group
+    reads (compute duplicated tp/n_kv ways — projection flops are
+    negligible; KV cache stays 1 head/rank)."""
+    dh, hkv, h = cfg.head_dim, cfg.n_kv, cfg.n_heads
+    tp = ctx.tp_size
+    if hkv % tp == 0:
+        k = xf @ p["wk"].astype(xf.dtype)       # (b,t,kvpr*dh) local shard
+        v = xf @ p["wv"].astype(xf.dtype)
+        kvpr = hkv // tp
+    else:
+        group = h // hkv
+        hpr = h // tp
+        my_kv = (ctx.tp_rank() * hpr) // group   # traced
+        wk = jax.lax.dynamic_slice_in_dim(p["wk"], my_kv * dh, dh, axis=1)
+        wv = jax.lax.dynamic_slice_in_dim(p["wv"], my_kv * dh, dh, axis=1)
+        k = xf @ wk.astype(xf.dtype)
+        v = xf @ wv.astype(xf.dtype)
+        kvpr = 1
+    b, t = xf.shape[0], xf.shape[1]
+    return (k.reshape(b, t, kvpr, dh), v.reshape(b, t, kvpr, dh), kvpr)
+
+
+def self_attention(p, x_sp, ctx: ParallelCtx, cfg, *, causal=True,
+                   window: Optional[int] = None, pos0: int = 0):
+    """x_sp: (b, t_loc, d) sequence-sharded (or full when sp off).
+    Returns same sharding."""
+    layout = _layout(cfg, ctx)
+    dh = cfg.head_dim
+    cd = ctx.compute_dtype
+    if layout == "head":
+        xf = sp_gather(x_sp, ctx, axis=1).astype(cd)      # (b, t, d)
+        b, t, _ = xf.shape
+        hpr = cfg.heads_per_rank(ctx.tp_size)
+        q = (xf @ p["wq"].astype(cd)).reshape(b, t, hpr, dh)
+        k, v, kvpr = _project_kv_head_layout(p, xf, cfg, ctx)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q)
+            k = rmsnorm(p["k_norm"], k)
+        if cfg.use_rope:
+            pos = pos0 + jnp.arange(t)
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        o = blocked_attention(q, k, v, causal=causal, window=window,
+                              block_q=ctx.attn_block_q,
+                              block_kv=ctx.attn_block_kv, unroll=ctx.unroll)
+        o = o.reshape(b, t, hpr * dh)
+        out = o @ p["wo"].astype(cd)                       # partial (b,t,d)
+        return sp_scatter(out, ctx, axis=1)
+    # --- ctx layout: seq-sharded queries, gathered KV ---
+    xl = x_sp.astype(cd)                                   # (b, t_loc, d)
+    b, tl, _ = xl.shape
+    h, hkv = cfg.n_heads, cfg.n_kv
+    q = (xl @ p["wq"].astype(cd)).reshape(b, tl, h, dh)
+    k = (xl @ p["wk"].astype(cd)).reshape(b, tl, hkv, dh)
+    v = (xl @ p["wv"].astype(cd)).reshape(b, tl, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if ctx.sp and ctx.tp_size > 1:
+        off = ctx.tp_rank() * tl
+    else:
+        off = 0
+    if cfg.use_rope:
+        qpos = pos0 + off + jnp.arange(tl)
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+    if ctx.sp and ctx.tp_size > 1:
+        kf = comm.all_gather(k, ctx.tp_axis, ctx.comm, gather_axis=1)
+        vf = comm.all_gather(v, ctx.tp_axis, ctx.comm, gather_axis=1)
+    else:
+        kf, vf = k, v
+    o = blocked_attention(q, kf, vf, causal=causal, window=window,
+                          q_offset=off, block_q=ctx.attn_block_q,
+                          block_kv=ctx.attn_block_kv, unroll=ctx.unroll)
+    out = o.reshape(b, tl, h * dh) @ p["wo"].astype(cd)
+    return out                                             # stays seq-sharded
+
+
+def cross_attention(p, x_sp, enc_kv, ctx: ParallelCtx, cfg):
+    """enc_kv: precomputed (k, v) each (b, S_enc, hkv_eff, dh) — full
+    sequence, replicated (whisper encoder out / vlm patch embeddings).
+    In head layout they carry this rank's KV heads only."""
+    layout = _layout(cfg, ctx)
+    dh = cfg.head_dim
+    cd = ctx.compute_dtype
+    k, v = enc_kv
+    if layout == "head":
+        xf = sp_gather(x_sp, ctx, axis=1).astype(cd)
+        b, t, _ = xf.shape
+        hpr = cfg.heads_per_rank(ctx.tp_size)
+        q = (xf @ p["wq"].astype(cd)).reshape(b, t, hpr, dh)
+        o = blocked_attention(q, k, v, causal=False,
+                              block_q=ctx.attn_block_q,
+                              block_kv=ctx.attn_block_kv, unroll=ctx.unroll)
+        out = o.reshape(b, t, hpr * dh) @ p["wo"].astype(cd)
+        return sp_scatter(out, ctx, axis=1)
+    xl = x_sp.astype(cd)
+    b, tl, _ = xl.shape
+    h = cfg.n_heads
+    q = (xl @ p["wq"].astype(cd)).reshape(b, tl, h, dh)
+    o = blocked_attention(q, k, v, causal=False,
+                          block_q=ctx.attn_block_q,
+                          block_kv=ctx.attn_block_kv, unroll=ctx.unroll)
+    return o.reshape(b, tl, h * dh) @ p["wo"].astype(cd)
+
+
+def cross_kv(p, enc, ctx: ParallelCtx, cfg):
+    """Project encoder output / image embeddings to this rank's KV."""
+    layout = _layout(cfg, ctx)
+    dh, hkv = cfg.head_dim, cfg.n_kv
+    cd = ctx.compute_dtype
+    ef = enc.astype(cd)
+    b, s, _ = ef.shape
+    if layout == "head":
+        k, v, kvpr = _project_kv_head_layout(p, ef, cfg, ctx)
+        return k, v
+    k = (ef @ p["wk"].astype(cd)).reshape(b, s, hkv, dh)
+    v = (ef @ p["wv"].astype(cd)).reshape(b, s, hkv, dh)
+    return k, v
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+def init_cache(cfg, ctx: ParallelCtx, batch_local: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """KV cache per rank.  head layout: (b, S, kvpr, dh) with this
+    rank's KV heads.  ctx layout: (b, S/tp, n_kv, dh) sequence-sharded.
+    SWA ring cache: S is min(max_len, window)."""
+    layout = _layout(cfg, ctx)
+    dh = cfg.head_dim
+    s = max_len if cfg.swa_window is None else min(max_len, cfg.swa_window)
+    if layout == "head":
+        kvpr = cfg.kv_per_rank(ctx.tp_size)
+        shape = (batch_local, s, kvpr, dh)
+    else:
+        sl = -(-s // ctx.tp_size) if ctx.tp_size > 1 else s
+        shape = (batch_local, sl, cfg.n_kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg, ctx: ParallelCtx):
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    return {"k": P(dp, None, None, None), "v": P(dp, None, None, None)}
+
+
+def decode_self_attention(p, x, cache, pos, ctx: ParallelCtx, cfg):
+    """One-token decode.  x: (b, d) replicated over TP; cache per rank;
+    pos: scalar current position (traced).  Returns (out (b, d), cache).
+    """
+    layout = _layout(cfg, ctx)
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    cd = ctx.compute_dtype
+    xf = x.astype(cd)
+    b = xf.shape[0]
+    s_cache = cache["k"].shape[1]
+    win = cfg.swa_window
+    # ring-buffer slot under SWA
+    slot = pos % s_cache if win is not None else pos
+
+    if layout == "head":
+        hpr = cfg.heads_per_rank(ctx.tp_size)
+        q = (xf @ p["wq"].astype(cd)).reshape(b, hpr, dh)
+        k, v, kvpr = _project_kv_head_layout(p, xf[:, None], cfg, ctx)
+        k, v = k[:, 0], v[:, 0]                            # (b, kvpr, dh)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q)
+            k = rmsnorm(p["k_norm"], k)
+        if cfg.use_rope:
+            posv = jnp.full((b,), pos)
+            q = apply_rope(q[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+            k = apply_rope(k[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+        ck = jax.lax.dynamic_update_slice(cache["k"],
+                                          k[:, None].astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"],
+                                          v[:, None].astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        cur = jnp.minimum(pos + 1, s_cache)
+        o = decode_attention(q, ck, cv, cur)
+        out = o.reshape(b, hpr * dh) @ p["wo"].astype(cd)
+        out = comm.psum(out, ctx.tp_axis, ctx.comm) if ctx.tp_size > 1 else out
+        return out, {"k": ck, "v": cv}
+
+    # --- ctx layout: sequence-sharded cache + flash-combine ---
+    q = (xf @ p["wq"].astype(cd)).reshape(b, h, dh)
+    k = (xf @ p["wk"].astype(cd)).reshape(b, hkv, dh)
+    v = (xf @ p["wv"].astype(cd)).reshape(b, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        posv = jnp.full((b,), pos)
+        q = apply_rope(q[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+    sl = cache["k"].shape[1]
+    if ctx.tp_size > 1:
+        rank = ctx.tp_rank()
+        lo = rank * sl
+        mine = (slot >= lo) & (slot < lo + sl)
+        at = jnp.clip(slot - lo, 0, sl - 1)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], jnp.where(mine, k, jax.lax.dynamic_slice(
+                cache["k"], (0, at, 0, 0), (b, 1, hkv, dh))[:, 0]
+            )[:, None].astype(cache["k"].dtype), (0, at, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], jnp.where(mine, v, jax.lax.dynamic_slice(
+                cache["v"], (0, at, 0, 0), (b, 1, hkv, dh))[:, 0]
+            )[:, None].astype(cache["v"].dtype), (0, at, 0, 0))
+        cur = jnp.minimum(pos + 1, s_cache)
+        gpos = lo + jnp.arange(sl)
+        valid = jnp.broadcast_to(gpos[None] < cur, (b, sl))
+        acc, m, l = decode_attention_partial(q, ck, cv, valid)
+        combine = {
+            "pmax": lambda t: comm.pmax(t, ctx.tp_axis, ctx.comm),
+            "psum": lambda t: comm.psum(t, ctx.tp_axis, ctx.comm),
+        }
+        o = flash_combine(acc, m, l, combine).astype(cd)
+        out = o.reshape(b, h * dh) @ p["wo"].astype(cd)
+        return out, {"k": ck, "v": cv}
+    ck = jax.lax.dynamic_update_slice(cache["k"],
+                                      k[:, None].astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"],
+                                      v[:, None].astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cur = jnp.minimum(pos + 1, s_cache)
+    o = decode_attention(q, ck, cv, cur)
+    out = o.reshape(b, h * dh) @ p["wo"].astype(cd)
+    return out, {"k": ck, "v": cv}
+
+
+def decode_cross_attention(p, x, enc_kv, ctx: ParallelCtx, cfg):
+    """Decode-time cross attention (cache = precomputed enc_kv)."""
+    layout = _layout(cfg, ctx)
+    dh = cfg.head_dim
+    cd = ctx.compute_dtype
+    xf = x.astype(cd)
+    b = xf.shape[0]
+    k, v = enc_kv
+    if layout == "head":
+        hpr = cfg.heads_per_rank(ctx.tp_size)
+        q = (xf @ p["wq"].astype(cd)).reshape(b, hpr, dh)
+        o = decode_attention(q, k, v, k.shape[1])
+        out = o.reshape(b, hpr * dh) @ p["wo"].astype(cd)
+        return comm.psum(out, ctx.tp_axis, ctx.comm) if ctx.tp_size > 1 else out
+    h = cfg.n_heads
+    q = (xf @ p["wq"].astype(cd)).reshape(b, h, dh)
+    o = decode_attention(q, k, v, k.shape[1])
+    return o.reshape(b, h * dh) @ p["wo"].astype(cd)

@@ -1,0 +1,95 @@
+"""Shared building blocks: norms, RoPE, initializers, linear helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def ninit(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(kind, d, dtype=jnp.float32):
+    return layernorm_init(d, dtype) if kind == "layer" else rmsnorm_init(d, dtype)
+
+
+def norm_apply(kind, params, x, eps=1e-6):
+    return layernorm(params, x) if kind == "layer" else rmsnorm(params, x, eps)
+
+
+def norm_sp(kind, params, x, ctx, eps=1e-6):
+    """Alias of norm_apply.  Gradient completion for replicated params
+    happens uniformly at the train-step level (single-seed loss +
+    spec-driven TP psum) — see repro/train/step.py."""
+    del ctx
+    return norm_apply(kind, params, x, eps)
+
+
+def norm_specs(kind):
+    if kind == "layer":
+        return {"scale": P(None), "bias": P(None)}
+    return {"scale": P(None)}
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., t, h, dh); positions: (..., t) or (t,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., t, dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                          # (..., t, 1, dh/2)
+    sin = sin[..., :, None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# activations
+# ----------------------------------------------------------------------
+def act_fn(name):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]

@@ -1,0 +1,126 @@
+"""Vocab-parallel embedding and cross-entropy (Megatron-style).
+
+The embedding table is sharded over the TP axis on the vocab dim; both
+lookup and the LM-head cross-entropy never materialize an unsharded
+(tokens × vocab) tensor.  ``ce_mode='gathered'`` keeps the naive path
+(logits over the full padded vocab) for the §Perf before/after.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import ParallelCtx, sp_gather
+
+from .common import ninit
+
+
+def embed_init(key, cfg, ctx: ParallelCtx):
+    vp = cfg.padded_vocab(ctx.tp_size)
+    return {"table": ninit(key, (vp, cfg.d_model), scale=0.02,
+                           dtype=ctx.param_dtype)}
+
+
+def embed_specs(cfg, ctx: ParallelCtx):
+    return {"table": P(ctx.tp_axis, None)}
+
+
+def embed_lookup(params, ids, ctx: ParallelCtx, reduce: bool = True):
+    """ids: (b, t) token ids (identical on every TP rank!); table local
+    shard (V/tp, d).  Masked local gather gives a PARTIAL row (only the
+    ids in this rank's vocab range hit); ``reduce=True`` psums over TP.
+    Sequence-parallel callers pass reduce=False and reduce-scatter the
+    partial over the sequence instead (Megatron embedding pattern)."""
+    table = params["table"]
+    vloc = table.shape[0]
+    start = ctx.tp_rank() * vloc
+    loc = ids - start
+    ok = (loc >= 0) & (loc < vloc)
+    rows = jnp.take(table, jnp.clip(loc, 0, vloc - 1), axis=0)
+    rows = jnp.where(ok[..., None], rows, 0).astype(ctx.compute_dtype)
+    if reduce and ctx.tp_size > 1:
+        rows = comm.psum(rows, ctx.tp_axis, ctx.comm)
+    return rows
+
+
+def _chunk_ce(logits_f32, targets, vloc, rank, ctx):
+    """Vocab-parallel CE over one token chunk.  logits: (n, vloc)."""
+    # stability shift is not a function of x for grad purposes; stop the
+    # gradient BEFORE pmax (pmax has no JVP rule)
+    mx_loc = jax.lax.stop_gradient(logits_f32.max(-1))
+    mx = comm.pmax(mx_loc, ctx.tp_axis, ctx.comm) if ctx.tp_size > 1 else mx_loc
+    ssum = jnp.exp(logits_f32 - mx[:, None]).sum(-1)
+    if ctx.tp_size > 1:
+        ssum = comm.psum(ssum, ctx.tp_axis, ctx.comm)
+    loc = targets - rank * vloc
+    ok = (loc >= 0) & (loc < vloc)
+    tl = jnp.take_along_axis(logits_f32, jnp.clip(loc, 0, vloc - 1)[:, None],
+                             axis=1)[:, 0]
+    tl = jnp.where(ok, tl, 0.0)
+    if ctx.tp_size > 1:
+        tl = comm.psum(tl, ctx.tp_axis, ctx.comm)
+    return -(tl - mx - jnp.log(jnp.maximum(ssum, 1e-30)))
+
+
+def lm_head_loss(params, x_sp, targets, ctx: ParallelCtx, cfg,
+                 chunk: int | None = None):
+    """x_sp: (b, t_loc, d) sequence-sharded activations; targets (b, t)
+    full local-batch targets.  Returns mean CE over local tokens
+    (caller averages over DP).
+
+    vocab_parallel: gather tokens over TP, chunked rematted local-vocab
+    logits + psum stats.  gathered: the naive full-vocab path.
+    """
+    table = params["table"]                      # (V/tp, d) local
+    vloc = table.shape[0]
+    rank = ctx.tp_rank()
+    xg = sp_gather(x_sp, ctx, axis=1)            # (b, t, d)
+    b, t, d = xg.shape
+    xf = xg.reshape(b * t, d)
+    tg = targets.reshape(b * t)
+
+    if ctx.ce_mode == "gathered":
+        wt = comm.all_gather(table, ctx.tp_axis, ctx.comm, gather_axis=0,
+                             tiled=True) if ctx.tp_size > 1 else table
+        logits = (xf @ wt.astype(ctx.compute_dtype).T).astype(jnp.float32)
+        mx = logits.max(-1)
+        lse = mx + jnp.log(jnp.exp(logits - mx[:, None]).sum(-1))
+        tl = jnp.take_along_axis(logits, tg[:, None], axis=1)[:, 0]
+        return (lse - tl).mean()
+
+    wt = table.astype(ctx.compute_dtype)
+
+    def chunk_loss(args):
+        xc, tc = args
+        logits = (xc @ wt.T).astype(jnp.float32)
+        return _chunk_ce(logits, tc, vloc, rank, ctx)
+
+    n = xf.shape[0]
+    chunk = min(chunk or ctx.ce_chunk, n)
+    losses = []
+    for s in range(0, n, chunk):
+        xc, tc = xf[s:s + chunk], tg[s:s + chunk]
+        losses.append(jax.checkpoint(chunk_loss)((xc, tc)))
+    return jnp.concatenate(losses).mean()
+
+
+def lm_head_logits(params, x, ctx: ParallelCtx):
+    """Decode-time logits: (b, d) -> (b, V/tp) local shard (sampling is
+    done with a TP-aware argmax: local top then pmax across ranks)."""
+    wt = params["table"].astype(ctx.compute_dtype)
+    return x @ wt.T
+
+
+def tp_argmax(logits_loc, ctx: ParallelCtx):
+    """Greedy sampling across vocab shards without gathering logits."""
+    vloc = logits_loc.shape[-1]
+    loc_idx = jnp.argmax(logits_loc, axis=-1)
+    loc_val = jnp.take_along_axis(logits_loc, loc_idx[..., None], -1)[..., 0]
+    if ctx.tp_size == 1:
+        return loc_idx
+    glob_val = comm.pmax(loc_val, ctx.tp_axis, ctx.comm)
+    mine = (loc_val >= glob_val)
+    cand = jnp.where(mine, loc_idx + ctx.tp_rank() * vloc, -1)
+    return comm.pmax(cand, ctx.tp_axis, ctx.comm)

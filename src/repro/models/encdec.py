@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a STUB —
+``input_specs`` provides precomputed frame embeddings, per the
+assignment).  Sinusoidal positions on the encoder, learned positions on
+the decoder, LayerNorm, GELU MLPs, no RoPE — matching [arXiv:2212.04356].
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import ParallelCtx, sp_gather, sp_scatter
+
+from . import attention as attn
+from . import embed as emb
+from . import mlp as ff
+from .common import (layernorm, ninit, norm_apply, norm_init,
+                     norm_sp, norm_specs)
+from .lm import _scan, _stack_init, _stack_specs
+
+
+def _sinusoid(length, d):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+def _enc_block_init(cfg, ctx):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "attn": attn.attn_init(k1, cfg, ctx),
+                "ln2": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "mlp": ff.mlp_init(k2, cfg, ctx)}
+    return init
+
+
+def _enc_block_specs(cfg, ctx):
+    return {"ln1": norm_specs("layer"), "attn": attn.attn_specs(cfg, ctx),
+            "ln2": norm_specs("layer"), "mlp": ff.mlp_specs(cfg, ctx)}
+
+
+def _dec_block_init(cfg, ctx):
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"ln1": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "attn": attn.attn_init(k1, cfg, ctx),
+                "lnx": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "xattn": attn.attn_init(k2, cfg, ctx, cross=True),
+                "ln2": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "mlp": ff.mlp_init(k3, cfg, ctx)}
+    return init
+
+
+def _dec_block_specs(cfg, ctx):
+    return {"ln1": norm_specs("layer"), "attn": attn.attn_specs(cfg, ctx),
+            "lnx": norm_specs("layer"),
+            "xattn": attn.attn_specs(cfg, ctx, cross=True),
+            "ln2": norm_specs("layer"), "mlp": ff.mlp_specs(cfg, ctx)}
+
+
+def init(key, cfg, ctx: ParallelCtx):
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": emb.embed_init(ks[0], cfg, ctx),
+        "pos_dec": ninit(ks[1], (cfg.max_seq * 16, cfg.d_model), scale=0.01,
+                         dtype=ctx.param_dtype),
+        "enc_blocks": _stack_init(ks[2], cfg.enc_layers,
+                                  _enc_block_init(cfg, ctx)),
+        "ln_enc": norm_init("layer", cfg.d_model, ctx.param_dtype),
+        "dec_blocks": _stack_init(ks[3], cfg.n_layers,
+                                  _dec_block_init(cfg, ctx)),
+        "ln_f": norm_init("layer", cfg.d_model, ctx.param_dtype),
+    }
+
+
+def specs(cfg, ctx: ParallelCtx):
+    return {
+        "embed": emb.embed_specs(cfg, ctx),
+        "pos_dec": P(None, None),
+        "enc_blocks": _stack_specs(_enc_block_specs(cfg, ctx)),
+        "ln_enc": norm_specs("layer"),
+        "dec_blocks": _stack_specs(_dec_block_specs(cfg, ctx)),
+        "ln_f": norm_specs("layer"),
+    }
+
+
+def encode(params, frames, ctx: ParallelCtx, cfg):
+    """frames: (b, n_frames, d) stub embeddings -> (b, n_frames, d)."""
+    cd = ctx.compute_dtype
+    x = frames.astype(cd) + _sinusoid(frames.shape[1],
+                                      cfg.d_model).astype(cd)
+    # encoder runs with full sequence (no SP: bidirectional, short)
+    ctx_e = ctx.with_(sp=False)
+
+    def block(p, h):
+        a = attn.self_attention(p["attn"], norm_apply("layer", p["ln1"], h),
+                                ctx_e, cfg, causal=False)
+        h = h + a
+        m = ff.mlp_apply(p["mlp"], norm_apply("layer", p["ln2"], h),
+                         ctx_e, cfg)
+        return h + m
+
+    x = _scan(params["enc_blocks"], x, block, ctx_e)
+    return norm_apply("layer", params["ln_enc"], x)
+
+
+def decode_train(params, ids, enc_out, ctx: ParallelCtx, cfg):
+    """Teacher-forced decoder forward -> seq-sharded hidden states."""
+    partial = emb.embed_lookup(params["embed"], ids, ctx, reduce=False)
+    x = sp_scatter(partial, ctx, axis=1) if ctx.tp_size > 1 else partial
+    tl = x.shape[1]
+    if ctx.sp and ctx.tp_size > 1:
+        pos0 = ctx.tp_rank() * tl
+    else:
+        pos0 = 0
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos0, tl,
+                                           axis=0).astype(x.dtype)
+    x = x + pos_emb[None]
+
+    def block(p, h):
+        a = attn.self_attention(p["attn"], norm_sp("layer", p["ln1"], h, ctx),
+                                ctx, cfg, causal=True)
+        h = h + a
+        kv = attn.cross_kv(p["xattn"], enc_out, ctx, cfg)
+        c = attn.cross_attention(p["xattn"],
+                                 norm_sp("layer", p["lnx"], h, ctx),
+                                 kv, ctx, cfg)
+        h = h + c
+        m = ff.mlp_apply(p["mlp"], norm_sp("layer", p["ln2"], h, ctx),
+                         ctx, cfg)
+        return h + m
+
+    x = _scan(params["dec_blocks"], x, block, ctx)
+    return norm_sp("layer", params["ln_f"], x, ctx)
+
+
+def loss_fn(params, batch, ctx: ParallelCtx, cfg, for_grad: bool = False):
+    """batch: {'frames': (b, F, d), 'tokens': (b, t+1)}.  See lm.loss_fn
+    for the single-seed for_grad convention."""
+    tokens = batch["tokens"]
+    ids, targets = tokens[:, :-1], tokens[:, 1:]
+    enc_out = encode(params, batch["frames"], ctx, cfg)
+    x = decode_train(params, ids, enc_out, ctx, cfg)
+    loss = emb.lm_head_loss(params["embed"], x, targets, ctx, cfg)
+    if for_grad:
+        if ctx.tp_size > 1:
+            loss = jnp.where(jax.lax.axis_index(ctx.tp_axis) == 0, loss, 0.0)
+        return loss
+    if ctx.dp_size > 1:
+        loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+    return loss
+
+
+def init_decode_state(cfg, ctx: ParallelCtx, batch_local: int, max_len: int):
+    from .lm import _stack_state
+    return {"cache": _stack_state(
+                lambda: attn.init_cache(cfg, ctx, batch_local, max_len),
+                cfg.n_layers),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, token, state, enc_kv, ctx: ParallelCtx, cfg):
+    """enc_kv: per-decoder-layer stacked cross KV (L, b, F, kv, dh)."""
+    x = emb.embed_lookup(params["embed"], token[:, None], ctx)[:, 0]
+    pos = state["pos"]
+    pe = jax.lax.dynamic_index_in_dim(params["pos_dec"],
+                                      jnp.minimum(pos, params["pos_dec"].shape[0] - 1),
+                                      0, keepdims=False)
+    x = x + pe.astype(x.dtype)[None]
+
+    def body(h, inputs):
+        p, cache, kv = inputs
+        a, nc = attn.decode_self_attention(
+            p["attn"], norm_apply("layer", p["ln1"], h), cache, pos, ctx, cfg)
+        h = h + a
+        c = attn.decode_cross_attention(
+            p["xattn"], norm_apply("layer", p["lnx"], h), kv, ctx, cfg)
+        h = h + c
+        ctx1 = ctx.with_(sp=False)
+        m = ff.mlp_apply(p["mlp"],
+                         norm_apply("layer", p["ln2"], h)[:, None],
+                         ctx1, cfg)[:, 0]
+        return h + m, nc
+
+    x, new_cache = jax.lax.scan(body, x,
+                                (params["dec_blocks"], state["cache"],
+                                 enc_kv),
+                                unroll=True if ctx.unroll else 1)
+    x = norm_apply("layer", params["ln_f"], x)
+    logits_loc = emb.lm_head_logits(params["embed"],
+                                    x.astype(ctx.compute_dtype), ctx)
+    nxt = emb.tp_argmax(logits_loc, ctx)
+    return nxt.astype(jnp.int32), {"cache": new_cache, "pos": pos + 1}
+
+
+def encoder_cross_kv(params, enc_out, ctx, cfg):
+    """Precompute stacked per-layer cross KV for decode."""
+    def one(p):
+        return attn.cross_kv(p["xattn"], enc_out, ctx, cfg)
+    return jax.vmap(one)(params["dec_blocks"])

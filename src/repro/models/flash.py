@@ -1,0 +1,246 @@
+"""Blocked online-softmax attention in pure jnp with a custom VJP.
+
+This is the model-side attention used for training and prefill on every
+transformer-family architecture.  Why not plain softmax(qkᵀ)v: at 32k
+prefill the (t × s) score matrix per head is the memory roofline killer;
+why not plain lax.scan flash: scan saves per-step residuals, so the
+backward would materialize every probability block — the custom VJP
+recomputes them per block instead (FlashAttention-2 backward).
+
+The Pallas kernel in repro.kernels is the TPU-native realization of the
+same algorithm (used when ctx.use_pallas on hardware); this jnp version
+is what the dry-run lowers, keeping cost_analysis faithful to blocked
+attention.
+
+Layout: q (b, tq, hkv, g, dh)   — GQA groups explicit, no KV repetition
+        k, v (b, s, hkv, dh)
+Causal offsets support sequence-parallel (ctx-layout) query shards via
+``q_offset`` (may be traced).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+BIG = 3.0e37  # stand-in for +inf in logsumexp of fully-masked rows
+
+
+def _mask(rows, cols, causal, window, kv_len):
+    m = cols[None, :] < kv_len
+    if causal:
+        m &= cols[None, :] <= rows[:, None]
+    if window is not None:
+        m &= cols[None, :] > rows[:, None] - window
+    return m  # (tq, kvc)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_chunk(q, k, v, scale, causal, window, kv_len, block_kv, unroll,
+                 q_offset=0):
+    out, _ = _flash_chunk_fwd_impl(q, k, v, scale, causal, window, kv_len,
+                                   block_kv, unroll, q_offset)
+    return out
+
+
+def _flash_chunk_fwd_impl(q, k, v, scale, causal, window, kv_len, block_kv,
+                          unroll, q_offset):
+    b, tq, hkv, g, dh = q.shape
+    s = k.shape[1]
+    nblk = -(-s // block_kv)
+    sp = nblk * block_kv
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nblk, block_kv, hkv, dh)
+    vb = vp.reshape(b, nblk, block_kv, hkv, dh)
+
+    rows = q_offset + jnp.arange(tq)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = blk
+        cols = j * block_kv + jnp.arange(block_kv)
+        sc = jnp.einsum("bihgd,bjhd->bhgij", qf, kj.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+        msk = _mask(rows, cols, causal, window, kv_len)
+        sc = jnp.where(msk[None, None, None], sc, NEG)
+        m_cur = sc.max(-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgij,bjhd->bhgid", p, vj.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, tq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, tq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, tq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nblk)),
+        unroll=True if unroll else 1)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.moveaxis(out, -2, 1).astype(q.dtype)    # (b, tq, hkv, g, dh)
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), BIG)
+    return out, lse
+
+
+def _flash_chunk_fwd(q, k, v, scale, causal, window, kv_len, block_kv,
+                     unroll, q_offset=0):
+    out, lse = _flash_chunk_fwd_impl(q, k, v, scale, causal, window, kv_len,
+                                     block_kv, unroll, q_offset)
+    return out, (q, k, v, out, lse, q_offset)
+
+
+def _flash_chunk_bwd(scale, causal, window, kv_len, block_kv, unroll, res,
+                     dout):
+    q, k, v, out, lse, q_offset = res
+    b, tq, hkv, g, dh = q.shape
+    s = k.shape[1]
+    nblk = -(-s // block_kv)
+    sp = nblk * block_kv
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kb = jnp.moveaxis(kp.reshape(b, nblk, block_kv, hkv, dh), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(b, nblk, block_kv, hkv, dh), 1, 0)
+
+    rows = q_offset + jnp.arange(tq)
+    qf = q.astype(jnp.float32)
+    dof = jnp.moveaxis(dout.astype(jnp.float32), 1, -2)   # (b,hkv,g,tq,dh)
+    of = jnp.moveaxis(out.astype(jnp.float32), 1, -2)
+    D = (dof * of).sum(-1)                                 # (b,hkv,g,tq)
+
+    def body(dq, blk):
+        kj, vj, j = blk
+        cols = j * block_kv + jnp.arange(block_kv)
+        sc = jnp.einsum("bihgd,bjhd->bhgij", qf, kj.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+        msk = _mask(rows, cols, causal, window, kv_len)
+        sc = jnp.where(msk[None, None, None], sc, NEG)
+        p = jnp.exp(sc - lse[..., None])                   # (b,hkv,g,i,j)
+        dv_j = jnp.einsum("bhgij,bhgid->bjhd", p, dof,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgid,bjhd->bhgij", dof, vj.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - D[..., None]) * scale
+        dq = dq + jnp.einsum("bhgij,bjhd->bihgd", ds, kj.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bhgij,bihgd->bjhd", ds, qf,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, tq, hkv, g, dh), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0,
+                                    (kb, vb, jnp.arange(nblk)),
+                                    unroll=True if unroll else 1)
+    dk = jnp.moveaxis(dk_b, 0, 1).reshape(b, sp, hkv, dh)[:, :s]
+    dv = jnp.moveaxis(dv_b, 0, 1).reshape(b, sp, hkv, dh)[:, :s]
+    import numpy as _np
+    d_off = _np.zeros(_np.shape(q_offset), dtype=jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), d_off)
+
+
+_flash_chunk.defvjp(_flash_chunk_fwd, _flash_chunk_bwd)
+
+
+def blocked_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                      scale: Optional[float] = None, q_offset=0,
+                      kv_len: Optional[int] = None, block_q: int = 1024,
+                      block_kv: int = 1024, unroll: bool = False):
+    """q: (b, tq, h, dh); k, v: (b, s, hkv, dh) -> (b, tq, h, dh).
+
+    Queries are chunked with a *Python* loop so causal chunks only see
+    the KV prefix they need (flop-exact causal accounting in the HLO);
+    each chunk runs the custom-VJP flash over its KV blocks.
+    ``q_offset`` is the global position of q row 0 (sequence-parallel
+    shards); must be static-or-traced consistently with causal slicing:
+    when traced, the full KV range is used and masking does the work.
+    """
+    b, tq, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    kv_len = s if kv_len is None else kv_len
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, tq, hkv, g, dh)
+
+    block_q = min(block_q, tq)
+    static_off = isinstance(q_offset, int)
+    outs = []
+    for qs in range(0, tq, block_q):
+        qc = qg[:, qs:qs + block_q]
+        off = q_offset + qs
+        if causal and static_off:
+            hi = min(s, off + qc.shape[1])
+            nb = max(1, -(-hi // block_kv))
+            k_use, v_use = k[:, :nb * block_kv], v[:, :nb * block_kv]
+            kl = min(kv_len, k_use.shape[1])
+        else:
+            k_use, v_use, kl = k, v, kv_len
+        o = _flash_chunk(qc, k_use, v_use, scale, causal, window, kl,
+                         block_kv, unroll, off)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, tq, h, dh)
+
+
+def decode_attention(q, kcache, vcache, cur_len, *, scale=None,
+                     window: Optional[int] = None, pos=None):
+    """Single-step attention against a cache.  q: (b, h, dh);
+    kcache/vcache: (b, S, hkv, dh); cur_len: tokens valid (traced ok).
+    Returns (b, h, dh).  Dense row — S × dh per head is decode-sized."""
+    b, h, dh = q.shape
+    s, hkv = kcache.shape[1], kcache.shape[2]
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    kf = kcache.astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg, kf,
+                    preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(s)
+    msk = idx[None] < cur_len if jnp.ndim(cur_len) else idx < cur_len
+    if window is not None and pos is not None:
+        lo = pos - window
+        msk = msk & (idx > lo if jnp.ndim(lo) == 0 else idx[None] > lo)
+    sc = jnp.where(jnp.broadcast_to(msk, sc.shape[:-1] + (s,))
+                   if msk.ndim == 1 else msk[:, None, None, :], sc, NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, vcache.astype(jnp.float32))
+    return o.reshape(b, h, dh).astype(q.dtype)
+
+
+def decode_attention_partial(q, kcache, vcache, valid_mask, *, scale=None):
+    """Distributed decode: this rank holds a slice of the KV sequence;
+    returns unnormalized (acc, m, l) for flash-combining across ranks
+    via pmax/psum.  q: (b, h, dh); caches (b, s_loc, hkv, dh);
+    valid_mask: (b, s_loc) bool."""
+    b, h, dh = q.shape
+    s, hkv = kcache.shape[1], kcache.shape[2]
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg, kcache.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * scale
+    sc = jnp.where(valid_mask[:, None, None, :], sc, NEG)
+    m = sc.max(-1)                                        # (b,hkv,g)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(valid_mask[:, None, None, :], p, 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, vcache.astype(jnp.float32))
+    return acc, m, l
+
+
+def flash_combine(acc, m, l, axis_combine):
+    """Combine partial (acc, m, l) across ranks.  ``axis_combine`` is a
+    callable tree: {'pmax': f, 'psum': f} supplied by the comm layer."""
+    m_glob = axis_combine["pmax"](m)
+    corr = jnp.exp(m - m_glob)
+    l_glob = axis_combine["psum"](l * corr)
+    acc_glob = axis_combine["psum"](acc * corr[..., None])
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]

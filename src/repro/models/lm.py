@@ -1,0 +1,479 @@
+"""Decoder-only LM assembly for every non-enc-dec assigned architecture.
+
+Families:
+  dense   minitron-4b, gemma-2b, qwen3-8b, h2o-danube-3-4b
+  moe     qwen2-moe-a2.7b, qwen3-moe-30b-a3b
+  ssm     rwkv6-3b (time-mix/channel-mix blocks)
+  hybrid  zamba2-7b (mamba groups + weight-shared attention block)
+  vlm     llama-3.2-vision-90b (cross-attn image layers every 5th)
+
+Homogeneous layers are stacked and scanned (HLO size O(1) in depth);
+``ctx.remat`` wraps scan bodies in jax.checkpoint.  All functions run
+INSIDE shard_map; batch dims are per-device local.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import ParallelCtx, sp_gather, sp_scatter
+
+from . import attention as attn
+from . import embed as emb
+from . import mlp as ff
+from . import rwkv as rk
+from . import ssm as sm
+from .common import norm_apply, norm_init, norm_sp, norm_specs
+
+
+def _sync1(w, ctx):
+    """Identity — replicated-param grad completion is spec-driven at the
+    train-step level (see repro/train/step.py)."""
+    del ctx
+    return w
+
+
+def _norm_kind(cfg):
+    return "layer" if cfg.family == "encdec" else "rms"
+
+
+def _stack_init(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _stack_specs(spec_tree):
+    return jax.tree.map(lambda s: P(None, *tuple(s)), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _scan(blocks, x, fn, ctx, length=None):
+    def body(carry, layer_params):
+        return fn(layer_params, carry), None
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, blocks, length=length,
+                        unroll=True if ctx.unroll else 1)
+    return x
+
+
+# ======================================================================
+# block definitions
+# ======================================================================
+def _dense_block_init(cfg, ctx):
+    nk = _norm_kind(cfg)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p = {"ln1": norm_init(nk, cfg.d_model, ctx.param_dtype),
+             "attn": attn.attn_init(k1, cfg, ctx),
+             "ln2": norm_init(nk, cfg.d_model, ctx.param_dtype)}
+        if cfg.moe:
+            p["mlp"] = ff.moe_init(k2, cfg, ctx)
+        else:
+            p["mlp"] = ff.mlp_init(k2, cfg, ctx)
+        return p
+    return init
+
+
+def _dense_block_specs(cfg, ctx):
+    nk = _norm_kind(cfg)
+    return {"ln1": norm_specs(nk), "attn": attn.attn_specs(cfg, ctx),
+            "ln2": norm_specs(nk),
+            "mlp": ff.moe_specs(cfg, ctx) if cfg.moe
+            else ff.mlp_specs(cfg, ctx)}
+
+
+def _dense_block_apply(p, x, ctx, cfg, causal=True):
+    nk = _norm_kind(cfg)
+    h = attn.self_attention(p["attn"], norm_sp(nk, p["ln1"], x, ctx), ctx, cfg,
+                            causal=causal, window=cfg.swa_window)
+    x = x + h
+    m = (ff.moe_apply if cfg.moe else ff.mlp_apply)(
+        p["mlp"], norm_sp(nk, p["ln2"], x, ctx), ctx, cfg)
+    return x + m
+
+
+def _cross_block_init(cfg, ctx):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"xln": norm_init("rms", cfg.d_model, ctx.param_dtype),
+                "xattn": attn.attn_init(k1, cfg, ctx, cross=True),
+                "xgate": jnp.zeros((1,), ctx.param_dtype),
+                "ln2": norm_init("rms", cfg.d_model, ctx.param_dtype),
+                "mlp": ff.mlp_init(k2, cfg, ctx),
+                "mgate": jnp.zeros((1,), ctx.param_dtype)}
+    return init
+
+
+def _cross_block_specs(cfg, ctx):
+    return {"xln": norm_specs("rms"),
+            "xattn": attn.attn_specs(cfg, ctx, cross=True),
+            "xgate": P(None), "ln2": norm_specs("rms"),
+            "mlp": ff.mlp_specs(cfg, ctx), "mgate": P(None)}
+
+
+def _cross_block_apply(p, x, img_kv, ctx, cfg):
+    """llama3.2-style gated cross-attention layer."""
+    h = attn.cross_attention(p["xattn"], norm_sp("rms", p["xln"], x, ctx),
+                             img_kv, ctx, cfg)
+    x = x + jnp.tanh(_sync1(p["xgate"], ctx).astype(h.dtype)) * h
+    m = ff.mlp_apply(p["mlp"], norm_sp("rms", p["ln2"], x, ctx), ctx, cfg)
+    return x + jnp.tanh(_sync1(p["mgate"], ctx).astype(m.dtype)) * m
+
+
+def _rwkv_block_init(cfg, ctx):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "tm": rk.timemix_init(k1, cfg, ctx),
+                "ln2": norm_init("layer", cfg.d_model, ctx.param_dtype),
+                "cm": rk.chanmix_init(k2, cfg, ctx)}
+    return init
+
+
+def _rwkv_block_specs(cfg, ctx):
+    return {"ln1": norm_specs("layer"), "tm": rk.timemix_specs(cfg, ctx),
+            "ln2": norm_specs("layer"), "cm": rk.chanmix_specs(cfg, ctx)}
+
+
+def _rwkv_block_apply(p, x, ctx, cfg):
+    x = x + rk.timemix_apply(p["tm"], norm_sp("layer", p["ln1"], x, ctx),
+                             ctx, cfg)
+    x = x + rk.chanmix_apply(p["cm"], norm_sp("layer", p["ln2"], x, ctx),
+                             ctx, cfg)
+    return x
+
+
+def _mamba_block_init(cfg, ctx):
+    def init(key):
+        return {"ln": norm_init("rms", cfg.d_model, ctx.param_dtype),
+                "mamba": sm.mamba_init(key, cfg, ctx)}
+    return init
+
+
+def _mamba_block_specs(cfg, ctx):
+    return {"ln": norm_specs("rms"), "mamba": sm.mamba_specs(cfg, ctx)}
+
+
+def _mamba_block_apply(p, x, ctx, cfg):
+    return x + sm.mamba_apply(p["mamba"], norm_sp("rms", p["ln"], x, ctx),
+                              ctx, cfg)
+
+
+# ======================================================================
+# model init / specs
+# ======================================================================
+def init(key, cfg, ctx: ParallelCtx):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": emb.embed_init(ks[0], cfg, ctx),
+                              "ln_f": norm_init(_norm_kind(cfg), cfg.d_model,
+                                                ctx.param_dtype)}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        params["blocks"] = _stack_init(ks[1], cfg.n_layers,
+                                       _dense_block_init(cfg, ctx))
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        ng = cfg.n_layers // k
+        params["blocks"] = _stack_init(ks[1], ng * (k - 1),
+                                       _dense_block_init(cfg, ctx))
+        params["cross"] = _stack_init(ks[2], ng, _cross_block_init(cfg, ctx))
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(ks[1], cfg.n_layers,
+                                       _rwkv_block_init(cfg, ctx))
+    elif fam == "hybrid":
+        k = cfg.shared_attn_every
+        ng, rem = divmod(cfg.n_layers, k)
+        params["blocks"] = _stack_init(ks[1], ng * k,
+                                       _mamba_block_init(cfg, ctx))
+        if rem:
+            params["tail"] = _stack_init(ks[3], rem,
+                                         _mamba_block_init(cfg, ctx))
+        params["shared"] = _dense_block_init(cfg, ctx)(ks[2])
+    else:
+        raise ValueError(f"lm.init: unknown family {fam}")
+    if not cfg.tie_embeddings:
+        params["head"] = emb.embed_init(ks[4], cfg, ctx)
+    return params
+
+
+def specs(cfg, ctx: ParallelCtx):
+    s: dict[str, Any] = {"embed": emb.embed_specs(cfg, ctx),
+                         "ln_f": norm_specs(_norm_kind(cfg))}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        s["blocks"] = _stack_specs(_dense_block_specs(cfg, ctx))
+    elif fam == "vlm":
+        s["blocks"] = _stack_specs(_dense_block_specs(cfg, ctx))
+        s["cross"] = _stack_specs(_cross_block_specs(cfg, ctx))
+    elif fam == "ssm":
+        s["blocks"] = _stack_specs(_rwkv_block_specs(cfg, ctx))
+    elif fam == "hybrid":
+        s["blocks"] = _stack_specs(_mamba_block_specs(cfg, ctx))
+        if cfg.n_layers % cfg.shared_attn_every:
+            s["tail"] = _stack_specs(_mamba_block_specs(cfg, ctx))
+        s["shared"] = _dense_block_specs(cfg, ctx)
+    if not cfg.tie_embeddings:
+        s["head"] = emb.embed_specs(cfg, ctx)
+    return s
+
+
+# ======================================================================
+# forward
+# ======================================================================
+def _embed_sp(params, ids, ctx):
+    """ids (b, t) full on every rank -> sequence-sharded (b, t/tp, d).
+    Vocab-parallel lookup gives partial rows for ALL tokens; the TP
+    reduction and the SP sequence-scatter fuse into one reduce-scatter."""
+    partial = emb.embed_lookup(params["embed"], ids, ctx, reduce=False)
+    if ctx.tp_size == 1:
+        return partial
+    return sp_scatter(partial, ctx, axis=1)
+
+
+def forward(params, ids, ctx: ParallelCtx, cfg,
+            img_embeds: Optional[jax.Array] = None):
+    """ids: (b, t) -> sequence-sharded hidden states (b, t/tp, d)."""
+    x = _embed_sp(params, ids, ctx)
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        x = _scan(params["blocks"], x,
+                  lambda p, h: _dense_block_apply(p, h, ctx, cfg), ctx)
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        ng = cfg.n_layers // k
+        for g in range(ng):
+            blocks_g = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, g * (k - 1), k - 1, axis=0), params["blocks"])
+            x = _scan(blocks_g, x,
+                      lambda p, h: _dense_block_apply(p, h, ctx, cfg), ctx)
+            cross_g = jax.tree.map(lambda a: a[g], params["cross"])
+            kv_g = attn.cross_kv(cross_g["xattn"], img_embeds, ctx, cfg)
+            x = _cross_block_apply(cross_g, x, kv_g, ctx, cfg)
+    elif fam == "ssm":
+        x = _scan(params["blocks"], x,
+                  lambda p, h: _rwkv_block_apply(p, h, ctx, cfg), ctx)
+    elif fam == "hybrid":
+        k = cfg.shared_attn_every
+        ng = cfg.n_layers // k
+        for g in range(ng):
+            blocks_g = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, g * k, k, axis=0),
+                params["blocks"])
+            x = _scan(blocks_g, x,
+                      lambda p, h: _mamba_block_apply(p, h, ctx, cfg), ctx)
+            x = _dense_block_apply(params["shared"], x, ctx, cfg)
+        if "tail" in params:
+            x = _scan(params["tail"], x,
+                      lambda p, h: _mamba_block_apply(p, h, ctx, cfg), ctx)
+    return norm_sp(_norm_kind(cfg), params["ln_f"], x, ctx)
+
+
+def loss_fn(params, batch, ctx: ParallelCtx, cfg, for_grad: bool = False):
+    """batch: {'tokens': (b, t+1)} (+ 'img_embeds' for vlm).  Mean CE.
+
+    for_grad=True returns the SINGLE-SEED loss: the replica-local loss
+    masked to TP rank 0.  Inside shard_map a replicated scalar output is
+    seeded with cotangent 1 on EVERY rank, so differentiating the
+    replicated loss multiplies all grads by tp; masking to one rank
+    makes jax.grad produce exactly the replica-local gradient, which the
+    train step then completes per-spec (see repro/train/step.py).
+    """
+    tokens = batch["tokens"]
+    ids, targets = tokens[:, :-1], tokens[:, 1:]
+    x = forward(params, ids, ctx, cfg, img_embeds=batch.get("img_embeds"))
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    loss = emb.lm_head_loss(head, x, targets, ctx, cfg)
+    if for_grad:
+        if ctx.tp_size > 1:
+            loss = jnp.where(jax.lax.axis_index(ctx.tp_axis) == 0, loss, 0.0)
+        return loss
+    # display value: mean over DP replicas
+    if ctx.dp_size > 1:
+        loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+    return loss
+
+
+# ======================================================================
+# serving: prefill + decode
+# ======================================================================
+def init_decode_state(cfg, ctx: ParallelCtx, batch_local: int, max_len: int):
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        mk = lambda: attn.init_cache(cfg, ctx, batch_local, max_len)
+        return {"cache": _stack_state(mk, cfg.n_layers),
+                "pos": jnp.zeros((), jnp.int32)}
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        ng = cfg.n_layers // k
+        return {"cache": _stack_state(
+                    lambda: attn.init_cache(cfg, ctx, batch_local, max_len),
+                    ng * (k - 1)),
+                "cross_cache": _stack_state(
+                    lambda: attn.init_cache(cfg, ctx, batch_local, max_len),
+                    ng),  # replaced by enc kv at prefill
+                "pos": jnp.zeros((), jnp.int32)}
+    if fam == "ssm":
+        d = cfg.d_model
+        hl = ((cfg.rwkv_padded_heads or cfg.n_heads) // ctx.tp_size
+              if ctx.tp_size > 1 else (cfg.rwkv_padded_heads or cfg.n_heads))
+        dh = cfg.rwkv_head_dim
+        mk = lambda: {"S": jnp.zeros((batch_local, hl, dh, dh), jnp.float32),
+                      "x_prev_tm": jnp.zeros((batch_local, d), jnp.float32),
+                      "x_prev_cm": jnp.zeros((batch_local, d), jnp.float32)}
+        return {"cache": _stack_state(mk, cfg.n_layers),
+                "pos": jnp.zeros((), jnp.int32)}
+    if fam == "hybrid":
+        k = cfg.shared_attn_every
+        ng, rem = divmod(cfg.n_layers, k)
+        st = {"cache": _stack_state(
+                  lambda: sm.mamba_init_state(cfg, ctx, batch_local), ng * k),
+              "shared_cache": attn.init_cache(cfg, ctx, batch_local, max_len),
+              "pos": jnp.zeros((), jnp.int32)}
+        if rem:
+            st["tail_cache"] = _stack_state(
+                lambda: sm.mamba_init_state(cfg, ctx, batch_local), rem)
+        return st
+    raise ValueError(fam)
+
+
+def _stack_state(mk, n):
+    one = mk()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
+                        if hasattr(a, "shape") else a, one)
+
+
+def decode_step(params, token, state, ctx: ParallelCtx, cfg,
+                img_kv=None):
+    """token: (b,) int32; returns (next_token (b,), new_state).
+    One serve step: embed -> blocks (cache update) -> head -> greedy."""
+    x = emb.embed_lookup(params["embed"], token[:, None], ctx)[:, 0]
+    pos = state["pos"]
+    fam = cfg.family
+    new_state = dict(state)
+
+    if fam in ("dense", "moe"):
+        def body(h, inputs):
+            p, cache = inputs
+            hh, new_cache = _decode_dense_block(p, h, cache, pos, ctx, cfg)
+            return hh, new_cache
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["blocks"], state["cache"]),
+                                    unroll=True if ctx.unroll else 1)
+        new_state["cache"] = new_cache
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        ng = cfg.n_layers // k
+        caches = state["cache"]
+        new_caches = []
+        for g in range(ng):
+            for i in range(k - 1):
+                li = g * (k - 1) + i
+                p = jax.tree.map(lambda a: a[li], params["blocks"])
+                c = jax.tree.map(lambda a: a[li], caches)
+                x, nc = _decode_dense_block(p, x, c, pos, ctx, cfg)
+                new_caches.append(nc)
+            if img_kv is None:
+                raise ValueError("vlm decode_step requires img_kv "
+                                 "(precomputed per-cross-layer image KV)")
+            cg = jax.tree.map(lambda a: a[g], params["cross"])
+            h = attn.decode_cross_attention(
+                cg["xattn"], norm_apply("rms", cg["xln"], x),
+                jax.tree.map(lambda a: a[g], img_kv), ctx, cfg)
+            x = x + jnp.tanh(cg["xgate"].astype(h.dtype)) * h
+            m = _decode_mlp(cg["mlp"], norm_apply("rms", cg["ln2"], x),
+                            ctx, cfg)
+            x = x + jnp.tanh(cg["mgate"].astype(m.dtype)) * m
+        new_state["cache"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_caches)
+    elif fam == "ssm":
+        def body(h, inputs):
+            p, cache = inputs
+            hin = norm_apply("layer", p["ln1"], h)
+            o, tm_new = rk.timemix_decode(
+                p["tm"], hin, {"S": cache["S"],
+                               "x_prev": cache["x_prev_tm"]}, ctx, cfg)
+            h = h + o
+            hin2 = norm_apply("layer", p["ln2"], h)
+            o2, cm_new = rk.chanmix_decode(
+                p["cm"], hin2, {"x_prev": cache["x_prev_cm"]}, ctx, cfg)
+            h = h + o2
+            return h, {"S": tm_new["S"], "x_prev_tm": tm_new["x_prev"],
+                       "x_prev_cm": cm_new["x_prev"]}
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["blocks"], state["cache"]),
+                                    unroll=True if ctx.unroll else 1)
+        new_state["cache"] = new_cache
+    elif fam == "hybrid":
+        k = cfg.shared_attn_every
+        ng, rem = divmod(cfg.n_layers, k)
+        shared_cache = state["shared_cache"]
+        def mbody(h, inputs):
+            p, cache = inputs
+            o, nc = sm.mamba_decode(p["mamba"],
+                                    norm_apply("rms", p["ln"], h),
+                                    cache, ctx, cfg)
+            return h + o, nc
+        caches = state["cache"]
+        new_caches = []
+        for g in range(ng):
+            grp_p = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, g * k, k, 0),
+                params["blocks"])
+            grp_c = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, g * k, k, 0),
+                caches)
+            x, nc = jax.lax.scan(mbody, x, (grp_p, grp_c),
+                                 unroll=True if ctx.unroll else 1)
+            new_caches.append(nc)
+            x, shared_cache = _decode_dense_block(
+                params["shared"], x, shared_cache, pos, ctx, cfg)
+        new_state["cache"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *new_caches)
+        new_state["shared_cache"] = shared_cache
+        if rem:
+            x, tail_c = jax.lax.scan(mbody, x,
+                                     (params["tail"], state["tail_cache"]),
+                                     unroll=True if ctx.unroll else 1)
+            new_state["tail_cache"] = tail_c
+    x = norm_apply(_norm_kind(cfg), params["ln_f"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits_loc = emb.lm_head_logits(head, x.astype(ctx.compute_dtype), ctx)
+    nxt = emb.tp_argmax(logits_loc, ctx)
+    new_state["pos"] = pos + 1
+    return nxt.astype(jnp.int32), new_state
+
+
+def _decode_dense_block(p, x, cache, pos, ctx, cfg):
+    nk = "rms"
+    h, new_cache = attn.decode_self_attention(
+        p["attn"], norm_apply(nk, p["ln1"], x), cache, pos, ctx, cfg)
+    x = x + h
+    m = _decode_mlp(p["mlp"], norm_apply(nk, p["ln2"], x), ctx, cfg)
+    return x + m, new_cache
+
+
+def _decode_mlp(p, x, ctx, cfg):
+    """Single-token MLP/MoE: reuse the seq functions with t=1, sp off."""
+    ctx1 = ctx.with_(sp=False)
+    if cfg.moe:
+        return ff.moe_apply(p, x[:, None], ctx1, cfg)[:, 0]
+    return ff.mlp_apply(p, x[:, None], ctx1, cfg)[:, 0]
+
+
+def prefill(params, ids, ctx: ParallelCtx, cfg,
+            img_embeds: Optional[jax.Array] = None):
+    """Full-sequence forward for serving: returns last-position hidden
+    state (b, d) — cache construction for the subsequent decode is
+    benchmarked separately via decode_step on a pre-built cache, which
+    is what the decode_* dry-run shapes lower."""
+    x = forward(params, ids, ctx, cfg, img_embeds=img_embeds)
+    xf = sp_gather(x, ctx, axis=1)
+    return xf[:, -1]

@@ -1,0 +1,227 @@
+"""Feed-forward layers: dense (GLU / plain) and MoE (EP over TP axis).
+
+Dense: Megatron column→row parallel with SP boundaries.
+MoE: experts sharded over the TP axis (EP).  Two dispatch modes:
+  "einsum"   router + dispatch computed redundantly on every TP rank
+             from the gathered tokens; each rank scatters only its own
+             experts' tokens (no dispatch collective); combine = the
+             SP reduce-scatter that the dense path needs anyway.
+  "alltoall" tokens stay sequence-sharded; capacity-bucketed all-to-all
+             to expert owners and back (the POSH alltoall is the wire).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import (ParallelCtx, grad_sync, sp_gather,
+                                sp_scatter)
+
+from .common import act_fn, ninit
+
+
+def _is_glu(act: str) -> bool:
+    return act in ("swiglu", "geglu")
+
+
+def _glu_act(act: str):
+    return jax.nn.silu if act == "swiglu" else jax.nn.gelu
+
+
+# ----------------------------------------------------------------------
+# dense MLP
+# ----------------------------------------------------------------------
+def mlp_init(key, cfg, ctx: ParallelCtx, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wu": ninit(ks[0], (d, ff), dtype=ctx.param_dtype),
+         "wd": ninit(ks[1], (ff, d), dtype=ctx.param_dtype)}
+    if _is_glu(cfg.act):
+        p["wg"] = ninit(ks[2], (d, ff), dtype=ctx.param_dtype)
+    return p
+
+
+def mlp_specs(cfg, ctx: ParallelCtx):
+    tp = ctx.tp_axis
+    s = {"wu": P(None, tp), "wd": P(tp, None)}
+    if _is_glu(cfg.act):
+        s["wg"] = P(None, tp)
+    return s
+
+
+def mlp_apply(p, x_sp, ctx: ParallelCtx, cfg):
+    cd = ctx.compute_dtype
+    xf = sp_gather(x_sp, ctx, axis=1).astype(cd)
+    u = xf @ p["wu"].astype(cd)
+    if _is_glu(cfg.act):
+        g = _glu_act(cfg.act)(xf @ p["wg"].astype(cd))
+        hstate = g * u
+    else:
+        hstate = act_fn(cfg.act)(u)
+    out = hstate @ p["wd"].astype(cd)
+    return sp_scatter(out, ctx, axis=1)
+
+
+# ----------------------------------------------------------------------
+# MoE
+# ----------------------------------------------------------------------
+def moe_init(key, cfg, ctx: ParallelCtx):
+    d = cfg.d_model
+    m = cfg.moe
+    ep = m.experts_padded(ctx.tp_size)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": ninit(ks[0], (d, ep), scale=0.02, dtype=ctx.param_dtype),
+        "wu": ninit(ks[1], (ep, d, m.expert_ff), dtype=ctx.param_dtype),
+        "wg": ninit(ks[2], (ep, d, m.expert_ff), dtype=ctx.param_dtype),
+        "wd": ninit(ks[3], (ep, m.expert_ff, d), dtype=ctx.param_dtype),
+    }
+    if m.shared_ff:
+        p["shared"] = {
+            "wu": ninit(ks[4], (d, m.shared_ff), dtype=ctx.param_dtype),
+            "wg": ninit(ks[5], (d, m.shared_ff), dtype=ctx.param_dtype),
+            "wd": ninit(jax.random.fold_in(key, 9), (m.shared_ff, d),
+                        dtype=ctx.param_dtype),
+        }
+    return p
+
+
+def moe_specs(cfg, ctx: ParallelCtx):
+    tp = ctx.tp_axis
+    s = {"router": P(None, None),
+         "wu": P(tp, None, None), "wg": P(tp, None, None),
+         "wd": P(tp, None, None)}
+    if cfg.moe.shared_ff:
+        s["shared"] = {"wu": P(None, tp), "wg": P(None, tp),
+                       "wd": P(tp, None)}
+    return s
+
+
+def _route(router_w, xf, cfg, cd):
+    """Top-k routing.  Padded experts get -inf logits (zero mass)."""
+    m = cfg.moe
+    logits = (xf @ router_w.astype(cd)).astype(jnp.float32)  # (n, ep)
+    if m.padded_experts and m.padded_experts > m.num_experts:
+        pad_mask = jnp.arange(logits.shape[-1]) >= m.num_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates_all, m.top_k)         # (n, k)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = gates_all.mean(0)
+    ce = jnp.zeros_like(me).at[idx_k.reshape(-1)].add(
+        jnp.ones(idx_k.size) / idx_k.size)
+    aux = (me * ce).sum() * logits.shape[-1]
+    return gate_k, idx_k, aux
+
+
+def _positions_in_expert(idx_k, n_experts):
+    """Cumulative slot of each (token, choice) within its expert."""
+    nk = idx_k.size
+    flat = idx_k.reshape(-1)
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (nk, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                       # (nk, E)
+    return jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+
+
+def _expert_ffn(wu, wg, wd, xb, act, cd):
+    """xb: (E_loc, C, d) -> (E_loc, C, d)."""
+    u = jnp.einsum("ecd,edf->ecf", xb, wu.astype(cd))
+    g = _glu_act(act)(jnp.einsum("ecd,edf->ecf", xb, wg.astype(cd)))
+    return jnp.einsum("ecf,efd->ecd", g * u, wd.astype(cd))
+
+
+def moe_apply(p, x_sp, ctx: ParallelCtx, cfg):
+    m = cfg.moe
+    cd = ctx.compute_dtype
+    ep = m.experts_padded(ctx.tp_size)
+    e_loc = ep // ctx.tp_size
+
+    if ctx.moe_dispatch == "alltoall" and ctx.tp_size > 1:
+        out = _moe_alltoall(p, x_sp, ctx, cfg, ep, e_loc)
+    else:
+        out = _moe_einsum(p, x_sp, ctx, cfg, ep, e_loc)
+
+    if m.shared_ff:
+        sh = p["shared"]
+        xf = sp_gather(x_sp, ctx, axis=1).astype(cd)
+        u = xf @ sh["wu"].astype(cd)
+        g = _glu_act(cfg.act)(xf @ sh["wg"].astype(cd))
+        shared_out = sp_scatter((g * u) @ sh["wd"].astype(cd), ctx, axis=1)
+        out = out + shared_out
+    return out
+
+
+def _moe_einsum(p, x_sp, ctx, cfg, ep, e_loc):
+    """Redundant routing, local-expert scatter, psum/RS combine."""
+    m = cfg.moe
+    cd = ctx.compute_dtype
+    xf = sp_gather(x_sp, ctx, axis=1).astype(cd)            # (b, t, d)
+    b, t, d = xf.shape
+    n = b * t
+    xt = xf.reshape(n, d)
+    gate_k, idx_k, aux = _route(p["router"], xt, cfg, cd)
+    cap = int(n * m.top_k * m.capacity_factor / ep) + 1
+
+    flat_e = idx_k.reshape(-1)                              # (n·k,)
+    pos = _positions_in_expert(idx_k, ep)                   # (n·k,)
+    keep = pos < cap
+    rank = ctx.tp_rank()
+    e_lo = rank * e_loc
+    local = (flat_e >= e_lo) & (flat_e < e_lo + e_loc) & keep
+    le = jnp.clip(flat_e - e_lo, 0, e_loc - 1)
+    lp = jnp.clip(pos, 0, cap - 1)
+
+    xtk = jnp.repeat(xt, m.top_k, axis=0)                   # (n·k, d)
+    buf = jnp.zeros((e_loc, cap, d), cd)
+    buf = buf.at[le, lp].add(jnp.where(local[:, None], xtk, 0))
+
+    yb = _expert_ffn(p["wu"], p["wg"], p["wd"], buf, cfg.act, cd)
+
+    gathered = yb[le, lp]                                   # (n·k, d)
+    gathered = jnp.where(local[:, None], gathered, 0)
+    w = gate_k.reshape(-1)[:, None].astype(cd)
+    comb = (gathered * w).reshape(n, m.top_k, d).sum(1)     # partial over TP
+    out = comb.reshape(b, t, d)
+    return sp_scatter(out, ctx, axis=1)
+
+
+def _moe_alltoall(p, x_sp, ctx, cfg, ep, e_loc):
+    """Sequence-sharded tokens; dispatch/return over POSH alltoall."""
+    m = cfg.moe
+    cd = ctx.compute_dtype
+    tp = ctx.tp_size
+    xl = x_sp.astype(cd)                                    # (b, t_loc, d)
+    b, tl, d = xl.shape
+    nloc = b * tl
+    xt = xl.reshape(nloc, d)
+    gate_k, idx_k, aux = _route(p["router"], xt, cfg, cd)
+    cap = int(nloc * m.top_k * m.capacity_factor / ep) + 1
+
+    flat_e = idx_k.reshape(-1)
+    pos = _positions_in_expert(idx_k, ep)
+    keep = pos < cap
+    lp = jnp.clip(pos, 0, cap - 1)
+
+    xtk = jnp.repeat(xt, m.top_k, axis=0)
+    send = jnp.zeros((ep, cap, d), cd)
+    send = send.at[flat_e, lp].add(jnp.where(keep[:, None], xtk, 0))
+    # (ep, cap, d) -> alltoall over expert-owner dim
+    send = send.reshape(tp, e_loc * cap, d)
+    recv = comm.all_to_all(send, ctx.tp_axis, ctx.comm,
+                           split_axis=0, concat_axis=0)     # (tp, e_loc*cap, d)
+    xb = recv.reshape(tp, e_loc, cap, d).transpose(1, 0, 2, 3) \
+             .reshape(e_loc, tp * cap, d)
+    yb = _expert_ffn(p["wu"], p["wg"], p["wd"], xb, cfg.act, cd)
+    back = yb.reshape(e_loc, tp, cap, d).transpose(1, 0, 2, 3) \
+             .reshape(tp, e_loc * cap, d)
+    ret = comm.all_to_all(back, ctx.tp_axis, ctx.comm,
+                          split_axis=0, concat_axis=0)
+    ret = ret.reshape(ep, cap, d)
+    gathered = ret[flat_e, lp]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_k.reshape(-1)[:, None].astype(cd)
+    out = (gathered * w).reshape(nloc, m.top_k, d).sum(1).reshape(b, tl, d)
+    return out

@@ -1,0 +1,29 @@
+"""Model registry: family -> (init, specs, loss_fn, serving fns)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from . import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    specs: Callable
+    loss_fn: Callable
+    prefill: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    init_decode_state: Optional[Callable] = None
+
+
+def build(cfg) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            init=encdec.init, specs=encdec.specs, loss_fn=encdec.loss_fn,
+            decode_step=encdec.decode_step,
+            init_decode_state=encdec.init_decode_state)
+    return ModelAPI(
+        init=lm.init, specs=lm.specs, loss_fn=lm.loss_fn,
+        prefill=lm.prefill, decode_step=lm.decode_step,
+        init_decode_state=lm.init_decode_state)

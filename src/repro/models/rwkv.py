@@ -1,0 +1,258 @@
+"""RWKV6 "Finch" blocks — data-dependent per-channel decay linear
+recurrence [arXiv:2404.05892], chunked-parallel for training, O(1)-state
+for decode.
+
+TP: heads are padded (40→48 for rwkv6-3b) so head blocks divide the TP
+axis; the decay/receptance/key/value/gate projections are column-
+parallel per head, output projection row-parallel.
+
+Numerics: the chunked form needs products of per-channel decays
+Π w_l ∈ (0,1).  We work in log space with a chunk-midpoint normalizer
+and clamp the log-log decay (w_raw ≤ 1.2 ⇒ per-step decay ≥ e^-3.3) so
+the half-chunk exponents stay in f32 range with chunk=16 (documented
+deviation; decays faster than 0.037/step are saturated anyway).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import (ParallelCtx, grad_sync, sp_gather,
+                                sp_scatter)
+
+from .common import ninit
+
+LORA_R = 32
+DECAY_LORA_R = 64
+W_RAW_MAX = 1.2
+CHUNK = 16
+
+
+def _hp(cfg):
+    return cfg.rwkv_padded_heads or cfg.n_heads
+
+
+def timemix_init(key, cfg, ctx: ParallelCtx):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    da = _hp(cfg) * dh
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": jnp.zeros((d,), ctx.param_dtype),
+        "mu5": jnp.zeros((5, d), ctx.param_dtype),
+        "lora_w1": ninit(ks[0], (d, 5 * LORA_R), scale=0.02,
+                         dtype=ctx.param_dtype),
+        "lora_w2": ninit(ks[1], (5, LORA_R, d), scale=0.02,
+                         dtype=ctx.param_dtype),
+        "wr": ninit(ks[2], (d, da), dtype=ctx.param_dtype),
+        "wk": ninit(ks[3], (d, da), dtype=ctx.param_dtype),
+        "wv": ninit(ks[4], (d, da), dtype=ctx.param_dtype),
+        "wg": ninit(ks[5], (d, da), dtype=ctx.param_dtype),
+        "w0": (jnp.linspace(-6.0, 0.0, da)).astype(ctx.param_dtype),
+        "ww1": ninit(ks[6], (d, DECAY_LORA_R), scale=0.02,
+                     dtype=ctx.param_dtype),
+        "ww2": ninit(ks[7], (DECAY_LORA_R, da), scale=0.02,
+                     dtype=ctx.param_dtype),
+        "u": ninit(ks[8], (da,), scale=1.0, dtype=ctx.param_dtype),
+        "gn_scale": jnp.ones((da,), ctx.param_dtype),
+        "gn_bias": jnp.zeros((da,), ctx.param_dtype),
+        "wo": ninit(ks[9], (da, d), dtype=ctx.param_dtype),
+    }
+
+
+def timemix_specs(cfg, ctx: ParallelCtx):
+    tp = ctx.tp_axis
+    return {
+        "mu_x": P(None), "mu5": P(None, None),
+        "lora_w1": P(None, None), "lora_w2": P(None, None, None),
+        "wr": P(None, tp), "wk": P(None, tp), "wv": P(None, tp),
+        "wg": P(None, tp), "w0": P(tp), "ww1": P(None, None),
+        "ww2": P(None, tp), "u": P(tp),
+        "gn_scale": P(tp), "gn_bias": P(tp), "wo": P(tp, None),
+    }
+
+
+def _ddlerp(p, xf, cd):
+    """RWKV6 data-dependent token-shift mixing -> 5 mixed streams."""
+    xprev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx = xprev - xf
+    xxx = xf + dx * p["mu_x"].astype(cd)
+    z = jnp.tanh(xxx @ p["lora_w1"].astype(cd))
+    b, t, _ = xf.shape
+    z = z.reshape(b, t, 5, LORA_R)
+    deltas = jnp.einsum("btfr,frd->btfd", z, p["lora_w2"].astype(cd))
+    mixed = xf[:, :, None] + dx[:, :, None] * (
+        p["mu5"].astype(cd)[None, None] + deltas)
+    return [mixed[:, :, i] for i in range(5)], dx
+
+
+def _group_norm(y, scale, bias, n_heads, eps=64e-5):
+    b, t, da = y.shape
+    dh = da // n_heads
+    yh = y.reshape(b, t, n_heads, dh).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    out = yh.reshape(b, t, da) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def _wkv_chunked(r, k, v, lw, u, hl, dh):
+    """Chunked RWKV6 recurrence.  r,k,v,lw: (b, t, hl, dh) f32 with
+    lw = log decay ≤ 0.  Returns (b, t, hl, dh)."""
+    b, t = r.shape[0], r.shape[1]
+    nc = t // CHUNK
+    shp = (b, nc, CHUNK, hl, dh)
+    rc, kc, vc, lwc = (a.reshape(shp) for a in (r, k, v, lw))
+
+    def body(S, args):
+        rj, kj, vj, lwj = args                       # (b, C, hl, dh)
+        el = jnp.cumsum(lwj, axis=1) - lwj           # exclusive cumsum
+        elc = el[:, -1] + lwj[:, -1]                 # total chunk decay
+        mid = el[:, CHUNK // 2][:, None]             # normalizer
+        a_t = jnp.exp(el - mid) * rj
+        b_i = jnp.exp(mid - el - lwj) * kj
+        s = jnp.einsum("bthc,bihc->bhti", a_t, b_i)  # (b,hl,C,C)
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+        s = jnp.where(tri[None, None], s, 0.0)
+        intra = jnp.einsum("bhti,bihc->bthc", s, vj)
+        bonus = (rj * u * kj).sum(-1, keepdims=True) * vj
+        inter = jnp.einsum("bthc,bhce->bthe",
+                           jnp.exp(el) * rj, S)
+        kdec = jnp.exp(elc[:, None] - el - lwj) * kj
+        S_new = S * jnp.exp(elc)[..., None] + \
+            jnp.einsum("bihc,bihe->bhce", kdec, vj)
+        return S_new, intra + bonus + inter
+
+    S0 = jnp.zeros((b, hl, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(body, S0, tuple(
+        jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lwc)))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, t, hl, dh)
+
+
+def timemix_apply(p, x_sp, ctx: ParallelCtx, cfg):
+    cd = ctx.compute_dtype
+    dh = cfg.rwkv_head_dim
+    hl = (_hp(cfg) // ctx.tp_size) if ctx.tp_size > 1 else _hp(cfg)
+    xf = sp_gather(x_sp, ctx, axis=1).astype(cd)
+    b, t, d = xf.shape
+    pad = (-t) % CHUNK
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+    (mr, mk, mv, mg, mw), _ = _ddlerp(p, xf, cd)
+    r = (mr @ p["wr"].astype(cd)).astype(jnp.float32)
+    k = (mk @ p["wk"].astype(cd)).astype(jnp.float32)
+    v = (mv @ p["wv"].astype(cd)).astype(jnp.float32)
+    g = jax.nn.silu(mg @ p["wg"].astype(cd))
+    w_raw = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(mw @ p["ww1"].astype(cd)).astype(jnp.float32) \
+        @ p["ww2"].astype(jnp.float32)
+    lw = -jnp.exp(jnp.minimum(w_raw, W_RAW_MAX))
+    tt = xf.shape[1]
+    shape4 = (b, tt, hl, dh)
+    y = _wkv_chunked(r.reshape(shape4), k.reshape(shape4),
+                     v.reshape(shape4), lw.reshape(shape4),
+                     p["u"].astype(jnp.float32).reshape(hl, dh), hl, dh)
+    y = y.reshape(b, tt, hl * dh).astype(cd)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], hl)
+    out = (y * g) @ p["wo"].astype(cd)
+    if pad:
+        out = out[:, :t]
+    return sp_scatter(out, ctx, axis=1)
+
+
+def timemix_decode(p, x, state, ctx: ParallelCtx, cfg):
+    """Single-token step.  x: (b, d); state: {'S': (b,hl,dh,dh),
+    'x_prev': (b, d)}.  Returns (out (b,d), new_state)."""
+    cd = ctx.compute_dtype
+    dh = cfg.rwkv_head_dim
+    hl = (_hp(cfg) // ctx.tp_size) if ctx.tp_size > 1 else _hp(cfg)
+    xf = x.astype(cd)[:, None]                       # (b, 1, d)
+    xprev = state["x_prev"].astype(cd)[:, None]
+    dx = xprev - xf
+    xxx = xf + dx * p["mu_x"].astype(cd)
+    z = jnp.tanh(xxx @ p["lora_w1"].astype(cd)).reshape(-1, 1, 5, LORA_R)
+    deltas = jnp.einsum("btfr,frd->btfd", z, p["lora_w2"].astype(cd))
+    mixed = xf[:, :, None] + dx[:, :, None] * (
+        p["mu5"].astype(cd)[None, None] + deltas)
+    mr, mk, mv, mg, mw = (mixed[:, 0, i] for i in range(5))
+    b = x.shape[0]
+    r = (mr @ p["wr"].astype(cd)).astype(jnp.float32).reshape(b, hl, dh)
+    k = (mk @ p["wk"].astype(cd)).astype(jnp.float32).reshape(b, hl, dh)
+    v = (mv @ p["wv"].astype(cd)).astype(jnp.float32).reshape(b, hl, dh)
+    g = jax.nn.silu(mg @ p["wg"].astype(cd))
+    w_raw = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(mw @ p["ww1"].astype(cd)).astype(jnp.float32) \
+        @ p["ww2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.minimum(w_raw, W_RAW_MAX))).reshape(b, hl, dh)
+    u = p["u"].astype(jnp.float32).reshape(hl, dh)
+    S = state["S"]
+    att = S + u[None, :, :, None] * k[..., None] * v[:, :, None, :]
+    y = jnp.einsum("bhc,bhce->bhe", r, att).reshape(b, hl * dh)
+    S_new = S * w[..., None] + k[..., None] * v[:, :, None, :]
+    y = _group_norm(y[:, None].astype(cd), p["gn_scale"], p["gn_bias"],
+                    hl)[:, 0]
+    out = (y * g) @ p["wo"].astype(cd)
+    if ctx.tp_size > 1:
+        out = comm.psum(out, ctx.tp_axis, ctx.comm)
+    return out, {"S": S_new, "x_prev": x}
+
+
+# ----------------------------------------------------------------------
+# channel-mix
+# ----------------------------------------------------------------------
+def chanmix_init(key, cfg, ctx: ParallelCtx):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), ctx.param_dtype),
+        "mu_r": jnp.zeros((d,), ctx.param_dtype),
+        "wk": ninit(ks[0], (d, ff), dtype=ctx.param_dtype),
+        "wv": ninit(ks[1], (ff, d), dtype=ctx.param_dtype),
+        "wr": ninit(ks[2], (d, d), dtype=ctx.param_dtype),
+    }
+
+
+def chanmix_specs(cfg, ctx: ParallelCtx):
+    tp = ctx.tp_axis
+    return {"mu_k": P(None), "mu_r": P(None),
+            "wk": P(None, tp), "wv": P(tp, None), "wr": P(None, None)}
+
+
+def chanmix_apply(p, x_sp, ctx: ParallelCtx, cfg, x_prev=None):
+    cd = ctx.compute_dtype
+    xf = sp_gather(x_sp, ctx, axis=1).astype(cd)
+    xprev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx = xprev - xf
+    mk = xf + dx * p["mu_k"].astype(cd)
+    mr = xf + dx * p["mu_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(mk @ p["wk"].astype(cd)))
+    kv = k @ p["wv"].astype(cd)                      # partial over TP
+    kv = sp_scatter(kv, ctx, axis=1)
+    # receptance on the sequence-sharded slice (wr replicated)
+    if ctx.sp and ctx.tp_size > 1:
+        tl = x_sp.shape[1]
+        off = ctx.tp_rank() * tl
+        mr_loc = jax.lax.dynamic_slice_in_dim(mr, off, tl, axis=1)
+    else:
+        mr_loc = mr
+    r = jax.nn.sigmoid(mr_loc @ p["wr"].astype(cd))
+    return r * kv
+
+
+def chanmix_decode(p, x, state, ctx: ParallelCtx, cfg):
+    cd = ctx.compute_dtype
+    xf = x.astype(cd)
+    xprev = state["x_prev"].astype(cd)
+    dx = xprev - xf
+    mk = xf + dx * p["mu_k"].astype(cd)
+    mr = xf + dx * p["mu_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(mk @ p["wk"].astype(cd)))
+    kv = k @ p["wv"].astype(cd)
+    if ctx.tp_size > 1:
+        kv = comm.psum(kv, ctx.tp_axis, ctx.comm)
+    r = jax.nn.sigmoid(mr @ p["wr"].astype(cd))
+    return r * kv, {"x_prev": x}

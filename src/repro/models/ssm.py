@@ -1,0 +1,213 @@
+"""Mamba2 / SSD blocks [arXiv:2405.21060] — scalar-per-head decay state
+space, chunked-parallel train, O(1)-state decode.  Used by zamba2.
+
+TP: d_inner (= expand·d_model) is head-sharded over the TP axis
+(zamba2-7b: 112 heads of 64 → 7 heads/rank at TP=16); B/C projections
+(ngroups=1, state 64) are replicated — they are tiny and every head
+needs them; output projection is row-parallel.
+
+Chunked SSD is numerically benign: decays are scalar per head and only
+i ≤ t pairs appear, so every exponent is ≤ |single-step decay| — no
+normalizer tricks needed (contrast rwkv.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import ParallelCtx, sp_gather, sp_scatter
+
+from .common import ninit, rmsnorm
+
+CHUNK = 64
+
+
+def _dims(cfg, ctx):
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = 64                                   # SSD head dim
+    nh = d_in // p
+    hl = nh // ctx.tp_size if ctx.tp_size > 1 else nh
+    return d_in, p, nh, hl
+
+
+def mamba_init(key, cfg, ctx: ParallelCtx):
+    d = cfg.d_model
+    d_in, p, nh, _ = _dims(cfg, ctx)
+    ds, k = cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": ninit(ks[0], (d, d_in), dtype=ctx.param_dtype),
+        "wx": ninit(ks[1], (d, d_in), dtype=ctx.param_dtype),
+        "wB": ninit(ks[2], (d, ds), dtype=ctx.param_dtype),
+        "wC": ninit(ks[3], (d, ds), dtype=ctx.param_dtype),
+        "wdt": ninit(ks[4], (d, nh), scale=0.02, dtype=ctx.param_dtype),
+        "dt_bias": jnp.zeros((nh,), ctx.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(ctx.param_dtype),
+        "D": jnp.ones((nh,), ctx.param_dtype),
+        "conv_x": ninit(ks[5], (k, d_in), scale=0.5, dtype=ctx.param_dtype),
+        "conv_B": ninit(ks[6], (k, ds), scale=0.5, dtype=ctx.param_dtype),
+        "conv_C": ninit(ks[7], (k, ds), scale=0.5, dtype=ctx.param_dtype),
+        "norm_scale": jnp.ones((d_in,), ctx.param_dtype),
+        "wo": ninit(jax.random.fold_in(key, 11), (d_in, d),
+                    dtype=ctx.param_dtype),
+    }
+
+
+def mamba_specs(cfg, ctx: ParallelCtx):
+    tp = ctx.tp_axis
+    return {
+        "wz": P(None, tp), "wx": P(None, tp), "wB": P(None, None),
+        "wC": P(None, None), "wdt": P(None, tp), "dt_bias": P(tp),
+        "A_log": P(tp), "D": P(tp),
+        "conv_x": P(None, tp), "conv_B": P(None, None),
+        "conv_C": P(None, None),
+        "norm_scale": P(tp), "wo": P(tp, None),
+    }
+
+
+def _sharded_rmsnorm(scale, y, ctx, d_total, eps=1e-6):
+    """RMSNorm over the channel dim when channels are TP-sharded: the
+    mean of squares is a psum over the axis (matches the unsharded op)."""
+    yf = y.astype(jnp.float32)
+    ssq = jnp.sum(yf * yf, axis=-1, keepdims=True)
+    if ctx.tp_size > 1:
+        ssq = comm.psum(ssq, ctx.tp_axis, ctx.comm)
+    out = yf * jax.lax.rsqrt(ssq / d_total + eps) * \
+        scale.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via k shifted adds.  x: (b,t,c); w: (k,c)."""
+    k = w.shape[0]
+    out = x * w[-1]
+    for j in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[-1 - j]
+    return out
+
+
+def _ssd_chunked(xs, B, C, lw, hl, p, ds):
+    """xs: (b,t,hl,p) dt-scaled inputs; B,C: (b,t,ds); lw: (b,t,hl) ≤ 0.
+    Returns (b,t,hl,p)."""
+    b, t = xs.shape[0], xs.shape[1]
+    nc = t // CHUNK
+    xsc = xs.reshape(b, nc, CHUNK, hl, p)
+    Bc = B.reshape(b, nc, CHUNK, ds)
+    Cc = C.reshape(b, nc, CHUNK, ds)
+    lwc = lw.reshape(b, nc, CHUNK, hl)
+
+    def body(S, args):
+        xj, Bj, Cj, lwj = args
+        il = jnp.cumsum(lwj, axis=1)                  # inclusive (b,C,hl)
+        diff = il[:, :, None] - il[:, None, :]        # (b, t, i, hl)
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        # mask BEFORE exp: upper-triangle diffs are positive and large —
+        # exp would inf and poison the where() gradient
+        diff = jnp.where(tri[None, :, :, None], diff, -jnp.inf)
+        dmat = jnp.exp(diff)
+        cb = jnp.einsum("bts,bis->bti", Cj, Bj)           # (b, t, i)
+        y = jnp.einsum("bti,btih,bihp->bthp", cb, dmat, xj)
+        y = y + jnp.einsum("bth,bhps,bts->bthp",
+                           jnp.exp(il), S, Cj)
+        ilc = il[:, -1]                                   # (b, hl)
+        kdec = jnp.exp(ilc[:, None] - il)                 # (b, C, hl)
+        S_new = S * jnp.exp(ilc)[..., None, None] + \
+            jnp.einsum("bih,bihp,bis->bhps", kdec, xj, Bj)
+        return S_new, y
+
+    S0 = jnp.zeros((b, hl, p, ds), jnp.float32)
+    _, ys = jax.lax.scan(body, S0, tuple(
+        jnp.moveaxis(a, 1, 0) for a in (xsc, Bc, Cc, lwc)))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, t, hl, p)
+
+
+def mamba_apply(prm, x_sp, ctx: ParallelCtx, cfg):
+    cd = ctx.compute_dtype
+    d_in, p, nh, hl = _dims(cfg, ctx)
+    ds = cfg.ssm_state
+    xf = sp_gather(x_sp, ctx, axis=1).astype(cd)
+    b, t, d = xf.shape
+    pad = (-t) % CHUNK
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+    z = xf @ prm["wz"].astype(cd)                       # (b,t,d_in/tp)
+    xx = jax.nn.silu(_causal_conv(xf @ prm["wx"].astype(cd),
+                                  prm["conv_x"].astype(cd)))
+    B = jax.nn.silu(_causal_conv(xf @ prm["wB"].astype(cd),
+                                 prm["conv_B"].astype(cd))).astype(jnp.float32)
+    C = jax.nn.silu(_causal_conv(xf @ prm["wC"].astype(cd),
+                                 prm["conv_C"].astype(cd))).astype(jnp.float32)
+    dt = jax.nn.softplus((xf @ prm["wdt"].astype(cd)).astype(jnp.float32)
+                         + prm["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(prm["A_log"].astype(jnp.float32))      # (hl,) < 0
+    lw = a * dt                                          # (b,t,hl)
+    tt = xf.shape[1]
+    xs = (xx.astype(jnp.float32) * dt[..., None].repeat(p, -1)
+          .reshape(b, tt, hl * p)).reshape(b, tt, hl, p)
+    y = _ssd_chunked(xs, B, C, lw, hl, p, ds)
+    y = y + prm["D"].astype(jnp.float32)[None, None, :, None] * \
+        xx.astype(jnp.float32).reshape(b, tt, hl, p)
+    y = y.reshape(b, tt, hl * p).astype(cd)
+    y = _sharded_rmsnorm(prm["norm_scale"], y, ctx, d_in) * jax.nn.silu(z)
+    out = y @ prm["wo"].astype(cd)
+    if pad:
+        out = out[:, :t]
+    return sp_scatter(out, ctx, axis=1)
+
+
+def mamba_init_state(cfg, ctx: ParallelCtx, batch_local: int):
+    d_in, p, nh, hl = _dims(cfg, ctx)
+    ds, k = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "S": jnp.zeros((batch_local, hl, p, ds), jnp.float32),
+        "conv_x": jnp.zeros((batch_local, k - 1, hl * p), jnp.bfloat16),
+        "conv_B": jnp.zeros((batch_local, k - 1, ds), jnp.bfloat16),
+        "conv_C": jnp.zeros((batch_local, k - 1, ds), jnp.bfloat16),
+    }
+
+
+def _conv_step(xin, buf, w):
+    """xin: (b, c); buf: (b, k-1, c) past inputs; w: (k, c)."""
+    full = jnp.concatenate([buf.astype(xin.dtype), xin[:, None]], axis=1)
+    out = (full * w[None]).sum(1)
+    return out, full[:, 1:]
+
+
+def mamba_decode(prm, x, state, ctx: ParallelCtx, cfg):
+    cd = ctx.compute_dtype
+    d_in, p, nh, hl = _dims(cfg, ctx)
+    ds = cfg.ssm_state
+    xf = x.astype(cd)
+    b = xf.shape[0]
+    z = xf @ prm["wz"].astype(cd)
+    xraw = xf @ prm["wx"].astype(cd)
+    xx, cx = _conv_step(xraw, state["conv_x"], prm["conv_x"].astype(cd))
+    xx = jax.nn.silu(xx)
+    Braw = xf @ prm["wB"].astype(cd)
+    B, cB = _conv_step(Braw, state["conv_B"], prm["conv_B"].astype(cd))
+    B = jax.nn.silu(B).astype(jnp.float32)
+    Craw = xf @ prm["wC"].astype(cd)
+    C, cC = _conv_step(Craw, state["conv_C"], prm["conv_C"].astype(cd))
+    C = jax.nn.silu(C).astype(jnp.float32)
+    dt = jax.nn.softplus((xf @ prm["wdt"].astype(cd)).astype(jnp.float32)
+                         + prm["dt_bias"].astype(jnp.float32))  # (b, hl)
+    a = -jnp.exp(prm["A_log"].astype(jnp.float32))
+    decay = jnp.exp(a * dt)                                     # (b, hl)
+    xsh = (xx.astype(jnp.float32) * dt.repeat(p, -1).reshape(b, hl * p)) \
+        .reshape(b, hl, p)
+    S = state["S"] * decay[..., None, None] + \
+        jnp.einsum("bhp,bs->bhps", xsh, B)
+    y = jnp.einsum("bhps,bs->bhp", S, C) + \
+        prm["D"].astype(jnp.float32)[None, :, None] * \
+        xx.astype(jnp.float32).reshape(b, hl, p)
+    y = y.reshape(b, hl * p).astype(cd)
+    y = _sharded_rmsnorm(prm["norm_scale"], y, ctx, d_in) * jax.nn.silu(z)
+    out = y @ prm["wo"].astype(cd)
+    if ctx.tp_size > 1:
+        out = comm.psum(out, ctx.tp_axis, ctx.comm)
+    return out, {"S": S, "conv_x": cx.astype(jnp.bfloat16),
+                 "conv_B": cB.astype(jnp.bfloat16),
+                 "conv_C": cC.astype(jnp.bfloat16)}

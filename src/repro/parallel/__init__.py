@@ -1,0 +1,13 @@
+"""repro.parallel — sharding rules and the parallel execution context.
+
+The whole framework runs in *manual SPMD* (one shard_map over the full
+mesh), so that every collective is an explicit call into ``repro.comm``
+— which is how the paper's communication layer becomes the first-class
+distribution substrate rather than an afterthought behind XLA's
+auto-partitioner.
+"""
+from .ctx import ParallelCtx, sp_gather, sp_scatter
+from .specs import leading_dim_spec, replicated
+
+__all__ = ["ParallelCtx", "sp_gather", "sp_scatter", "replicated",
+           "leading_dim_spec"]

@@ -1,0 +1,116 @@
+"""ParallelCtx — the static description of how this step is distributed.
+
+Axes:
+  dp_axes  batch ("data",) single-pod, ("pod", "data") multi-pod
+  tp_axis  tensor/expert/sequence parallelism ("model")
+
+Everything here is trace-time static; the ctx is threaded through every
+layer, and every collective the layers issue goes through ``repro.comm``
+with ``ctx.comm`` — the POSH/XLA backend switch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import comm
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    dp_size: int = 1                    # static sizes (mesh-derived)
+    tp_size: int = 1
+    comm: comm.CommConfig = comm.CommConfig()
+    sp: bool = True                     # sequence-parallel activations
+    remat: bool = True                  # per-layer activation ckpt
+    use_pallas: bool = False            # flash kernels (TPU only)
+    ce_mode: str = "vocab_parallel"     # | "gathered" (paper-faithful naive)
+    moe_dispatch: str = "einsum"        # | "alltoall"
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    unroll: bool = False                # dry-run flop accounting: unroll
+                                        # layer scans so cost_analysis
+                                        # counts every trip (XLA counts
+                                        # while bodies once)
+    attn_block_q: int = 1024
+    attn_block_kv: int = 1024
+    ce_chunk: int = 4096
+
+    # --- helpers ---------------------------------------------------
+    def tp_rank(self):
+        if self.tp_size == 1:      # callable outside shard_map too
+            return jnp.zeros((), jnp.int32)
+        return jax.lax.axis_index(self.tp_axis)
+
+    def dp_rank(self):
+        if self.dp_size == 1:
+            return jnp.zeros((), jnp.int32)
+        ax = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        return jax.lax.axis_index(ax)
+
+    def with_(self, **kw) -> "ParallelCtx":
+        return dataclasses.replace(self, **kw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def grad_sync(w, axis, scale=1.0):
+    """Identity in the forward pass; psum (× scale) of the cotangent over
+    ``axis`` in the backward pass.
+
+    Manual-SPMD necessity: a REPLICATED weight applied to RANK-VARYING
+    activations (sequence-parallel attention inputs, sliced receptance,
+    per-rank-sliced KV heads) produces per-rank PARTIAL gradients with no
+    forward collective whose transpose would sum them.  ``scale``
+    corrects over-counting when several ranks compute identical grads
+    for the same slice (KV-head replication: scale = n_kv / tp)."""
+    return w
+
+
+def _grad_sync_fwd(w, axis, scale):
+    return w, None
+
+
+def _grad_sync_bwd(axis, scale, res, ct):
+    from repro import comm as _comm
+    out = jax.lax.psum(ct, axis)
+    if scale != 1.0:
+        out = jax.tree.map(lambda t: t * scale, out)
+    return (out,)
+
+
+grad_sync.defvjp(_grad_sync_fwd, _grad_sync_bwd)
+
+
+def smap(fn, mesh, in_specs, out_specs):
+    """shard_map with VMA (varying-manual-axes) checking disabled: the
+    framework's masked POSH schedules and replicated-redundant compute
+    (MoE routing, vocab-parallel CE) are invisible to the rep tracker.
+    Numerical equivalence DP/TP vs single-device is covered by tests."""
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def sp_gather(x: jax.Array, ctx: ParallelCtx, axis: int = 1) -> jax.Array:
+    """Sequence-parallel gather: (b, t/tp, d) -> (b, t, d).  The Megatron
+    'g' operator; a no-op when SP is off or tp == 1."""
+    if not ctx.sp or ctx.tp_size == 1:
+        return x
+    return comm.all_gather(x, ctx.tp_axis, ctx.comm, gather_axis=axis,
+                           tiled=True)
+
+
+def sp_scatter(x: jax.Array, ctx: ParallelCtx, axis: int = 1) -> jax.Array:
+    """Sequence-parallel reduce-scatter: partial (b, t, d) -> reduced
+    (b, t/tp, d).  The Megatron 'ḡ' operator.  When SP is off, reduces
+    fully (psum) instead."""
+    if ctx.tp_size == 1:
+        return x
+    if not ctx.sp:
+        return comm.psum(x, ctx.tp_axis, ctx.comm)
+    return comm.psum_scatter(x, ctx.tp_axis, ctx.comm, scatter_axis=axis)

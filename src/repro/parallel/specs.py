@@ -1,0 +1,22 @@
+"""PartitionSpec helpers for the manual-SPMD parameter trees."""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+
+def replicated(ndim: int) -> P:
+    return P(*([None] * ndim))
+
+
+def leading_dim_spec(axis_name: str, ndim: int) -> P:
+    return P(axis_name, *([None] * (ndim - 1)))
+
+
+def col_spec(ndim: int, tp_axis: str) -> P:
+    """Column-parallel weight: last dim sharded."""
+    return P(*([None] * (ndim - 1)), tp_axis)
+
+
+def row_spec(ndim: int, tp_axis: str) -> P:
+    """Row-parallel weight: second-to-last dim sharded."""
+    return P(*([None] * (ndim - 2)), tp_axis, None)

@@ -1,0 +1,8 @@
+"""repro.train — optimizer, gradient combine rules, train-step factory."""
+from .grad import combine_grads, loss_and_grad
+from .optimizer import AdamWState, adamw_init, adamw_update
+from .step import TrainState, make_train_step, train_state_specs
+
+__all__ = ["combine_grads", "loss_and_grad", "AdamWState", "adamw_init",
+           "adamw_update", "TrainState", "make_train_step",
+           "train_state_specs"]

@@ -1,0 +1,75 @@
+"""Gradient computation + the spec-driven combine rule.
+
+Convention (see lm.loss_fn for_grad docstring): jax.grad of the
+single-seed loss yields, on every device, the *replica-local partial*
+gradient.  Completion rules, derived purely from each param's
+PartitionSpec:
+
+  * spec mentions the TP axis  -> the param is sharded; each rank's grad
+    is already complete for its shard.  No TP combine.
+  * spec does NOT mention TP   -> the param is replicated; per-rank
+    grads are disjoint partials (each rank saw its share of heads /
+    tokens / vocab).  psum over TP completes them.
+  * every param                -> pmean over DP (classic DDP), optionally
+    bucketed and/or compressed (repro.comm).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import ParallelCtx
+
+
+def _spec_has_axis(spec: P, axis: str) -> bool:
+    for entry in tuple(spec):
+        if entry == axis or (isinstance(entry, tuple) and axis in entry):
+            return True
+    return False
+
+
+def combine_grads(grads: Any, specs: Any, ctx: ParallelCtx, *,
+                  bucket_bytes: int = 0, compress: str = "none",
+                  comp_state=None):
+    """Complete replica-local grads per the spec rule, then DP-mean."""
+    if ctx.tp_size > 1:
+        def tp_fix(g, s):
+            if _spec_has_axis(s, ctx.tp_axis):
+                return g
+            return comm.psum(g, ctx.tp_axis, ctx.comm)
+        grads = jax.tree.map(tp_fix, grads, specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    if ctx.dp_size > 1:
+        if compress != "none":
+            grads, comp_state = comm.compressed_allreduce(
+                grads, ctx.dp_axes, ctx.comm, scheme=compress,
+                state=comp_state, mean=True)
+        elif bucket_bytes:
+            grads = comm.bucketed_allreduce(grads, ctx.dp_axes, ctx.comm,
+                                            bucket_bytes=bucket_bytes)
+            grads = jax.tree.map(lambda g: g / ctx.dp_size, grads)
+        else:
+            grads = jax.tree.map(
+                lambda g: comm.psum(g, ctx.dp_axes, ctx.comm) / ctx.dp_size,
+                grads)
+    return grads, comp_state
+
+
+def loss_and_grad(loss_fn, params, batch, ctx: ParallelCtx, cfg, specs,
+                  **combine_kw):
+    """value_and_grad with the single-seed + spec-combine convention.
+    Returns (display_loss, grads, comp_state)."""
+    lmask, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, ctx, cfg, for_grad=True))(params)
+    # reconstruct the display value from the masked scalar
+    loss = lmask
+    if ctx.tp_size > 1:
+        loss = comm.psum(loss, ctx.tp_axis, ctx.comm)
+    if ctx.dp_size > 1:
+        loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+    grads, comp_state = combine_grads(grads, specs, ctx, **combine_kw)
+    return loss, grads, comp_state

@@ -1,0 +1,122 @@
+"""Train-step factory: loss -> single-seed grad -> spec combine ->
+AdamW (ZeRO-0/1) -> new state.  Microbatching (gradient accumulation)
+via lax.scan over microbatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.parallel.ctx import ParallelCtx
+
+from .grad import combine_grads
+from .optimizer import (AdamWConfig, adamw_init, adamw_state_specs,
+                        adamw_update)
+
+TrainState = dict  # {"params", "opt", "step"}
+
+
+def init_train_state(key, cfg, ctx: ParallelCtx, model_api,
+                     opt_cfg: AdamWConfig):
+    params = model_api.init(key, cfg, ctx)
+    return {"params": params, "opt": adamw_init(params, ctx, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(cfg, ctx: ParallelCtx, model_api,
+                      opt_cfg: AdamWConfig, has_master=None):
+    pspecs = model_api.specs(cfg, ctx)
+    if has_master is None:
+        has_master = ctx.param_dtype == jnp.bfloat16 or opt_cfg.zero == 1
+    return {"params": pspecs,
+            "opt": adamw_state_specs(pspecs, ctx, opt_cfg,
+                                     has_master=has_master),
+            "step": P()}
+
+
+def make_train_step(cfg, ctx: ParallelCtx, model_api,
+                    opt_cfg: AdamWConfig, *, microbatches: int = 1,
+                    bucket_bytes: int = 0, compress: str = "none",
+                    clip_norm: Optional[float] = 1.0):
+    """Returns step(state, batch) -> (new_state, metrics), to be run
+    inside shard_map.  batch leaves have a local batch dim divisible by
+    ``microbatches``."""
+    pspecs = model_api.specs(cfg, ctx)
+
+    def one_grad(params, mb):
+        lmask, grads = jax.value_and_grad(
+            lambda p: model_api.loss_fn(p, mb, ctx, cfg, for_grad=True)
+        )(params)
+        return lmask, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc_l, acc_g = carry
+                lmask, grads = one_grad(params, mb)
+                return (acc_l + lmask,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+            (lmask, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zero_g), mbs)
+            lmask = lmask / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            lmask, grads = one_grad(params, batch)
+
+        # TP completion by spec; DP handling depends on ZeRO mode
+        if ctx.tp_size > 1:
+            grads, _ = combine_grads(grads, pspecs,
+                                     ctx.with_(dp_size=1), )
+        if opt_cfg.zero == 0 and ctx.dp_size > 1:
+            if compress != "none":
+                grads, _ = comm.compressed_allreduce(
+                    grads, ctx.dp_axes, ctx.comm, scheme=compress,
+                    mean=True)
+            elif bucket_bytes:
+                grads = comm.bucketed_allreduce(
+                    grads, ctx.dp_axes, ctx.comm, bucket_bytes=bucket_bytes)
+                grads = jax.tree.map(lambda g: g / ctx.dp_size, grads)
+            else:
+                grads = jax.tree.map(
+                    lambda g: comm.psum(g, ctx.dp_axes, ctx.comm)
+                    / ctx.dp_size, grads)
+        # zero=1: adamw_update reduce-scatters over DP internally
+
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        if opt_cfg.zero == 1 and ctx.dp_size > 1:
+            # per-replica grads: the norm shown is the replica-local one
+            pass
+        if clip_norm is not None:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        new_params, new_opt = adamw_update(params, grads, state["opt"],
+                                           ctx, opt_cfg)
+
+        loss = lmask
+        if ctx.tp_size > 1:
+            loss = comm.psum(loss, ctx.tp_axis, ctx.comm)
+        if ctx.dp_size > 1:
+            loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state["step"] + 1}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return step

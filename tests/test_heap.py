@@ -1,0 +1,114 @@
+"""Symmetric heap: allocator behaviour + the paper's memory-model
+properties (Fact 1, Corollary 1, Lemma 1)."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.heap import SymmetricHeap
+
+
+def make_heap():
+    return SymmetricHeap(("data", "model"), capacity_bytes=1 << 20)
+
+
+def test_alloc_free_roundtrip():
+    h = make_heap()
+    a = h.alloc("a", (16, 4), jnp.float32)
+    b = h.alloc("b", (8,), jnp.int32)
+    assert a.offset % SymmetricHeap.DEFAULT_ALIGN == 0
+    assert b.offset >= a.offset + a.nbytes
+    h.free("a")
+    c = h.alloc("c", (16, 4), jnp.float32)
+    assert c.offset == a.offset  # first-fit reuses the hole
+    h.free("b")
+    h.free("c")
+    assert h.used_bytes() == 0
+    assert h.frag_blocks() == 1  # fully coalesced
+
+
+def test_shmemalign():
+    h = make_heap()
+    a = h.align_alloc("a", (3,), jnp.int8, align=4096)
+    assert a.offset % 4096 == 0
+    with pytest.raises(ValueError):
+        h.align_alloc("b", (3,), jnp.int8, align=100)  # not a power of two
+
+
+def test_double_alloc_rejected():
+    h = make_heap()
+    h.alloc("x", (4,), jnp.float32)
+    with pytest.raises(ValueError):
+        h.alloc("x", (4,), jnp.float32)
+
+
+def test_oom():
+    h = SymmetricHeap(("data",), capacity_bytes=1024)
+    with pytest.raises(MemoryError):
+        h.alloc("big", (10_000,), jnp.float32)
+
+
+def test_corollary1_addressing():
+    """addr -> (object, offset) resolution: the symmetric address IS the
+    offset, so resolution must be exact and total."""
+    h = make_heap()
+    a = h.alloc("a", (16,), jnp.float32)
+    b = h.alloc("b", (4, 4), jnp.int32)
+    for handle in (a, b):
+        for byte in (0, handle.nbytes - 1):
+            got, off = h.resolve(handle.addr + byte)
+            assert got.name == handle.name and off == byte
+    with pytest.raises(KeyError):
+        h.resolve(10**9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                          st.integers(0, 7),
+                          st.integers(1, 64)), max_size=24))
+def test_fact1_registry_symmetry(ops):
+    """Fact 1: the same (trace-time) allocation sequence produces the
+    same offsets — two heaps driven identically have identical
+    fingerprints (the SPMD guarantee the paper's barrier provides)."""
+    h1, h2 = make_heap(), make_heap()
+    for h in (h1, h2):
+        live = set()
+        for op, slot, n in ops:
+            name = f"buf{slot}"
+            try:
+                if op == "alloc" and name not in live:
+                    h.alloc(name, (n,), jnp.float32)
+                    live.add(name)
+                elif op == "free" and name in live:
+                    h.free(name)
+                    live.discard(name)
+            except MemoryError:
+                pass
+    assert h1.fingerprint() == h2.fingerprint()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 128), min_size=1, max_size=8))
+def test_lemma1_scratch_invariance(sizes):
+    """Lemma 1: temporary symmetric allocations inside a collective do
+    not change the heap outside it."""
+    h = make_heap()
+    h.alloc("persistent", (32,), jnp.float32)
+    before = h.fingerprint()
+    used_before = h.used_bytes()
+    import contextlib
+    with contextlib.ExitStack() as stack:
+        for i, n in enumerate(sizes):
+            stack.enter_context(h.scratch((n,), jnp.float32, tag=f"s{i}"))
+        assert h.used_bytes() > used_before  # scratch is really allocated
+    assert h.fingerprint() == before
+    assert h.used_bytes() == used_before
+
+
+def test_state_factories():
+    h = make_heap()
+    h.alloc("a", (4, 2), jnp.bfloat16)
+    st_ = h.zeros_state()
+    assert st_["a"].shape == (4, 2) and st_["a"].dtype == jnp.bfloat16
+    spec = h.spec_state()
+    assert spec["a"].shape == (4, 2)

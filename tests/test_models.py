@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step
+on CPU, output shapes + no NaNs.  (The FULL configs are exercised only
+via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx, smap
+
+ARCHS = ["minitron-4b", "gemma-2b", "qwen3-8b", "h2o-danube-3-4b",
+         "whisper-base", "rwkv6-3b", "qwen2-moe-a2.7b",
+         "qwen3-moe-30b-a3b", "llama-3.2-vision-90b", "zamba2-7b"]
+
+CTX = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _batch(cfg, b=2):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (b, cfg.max_seq + 1), 0,
+                                          cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.img_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.enc_frames, cfg.d_model))
+    return batch
+
+
+def _bspecs(batch):
+    return {k: P("data") if k == "tokens" else P("data", None, None)
+            for k in batch}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_loss_and_grads(arch):
+    cfg = configs.get_smoke(arch)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, CTX)
+    batch = _batch(cfg)
+    mesh = _mesh()
+
+    def run(p, bt):
+        l, g = jax.value_and_grad(
+            lambda pp: api.loss_fn(pp, bt, CTX, cfg))(p)
+        return l, g
+
+    loss, grads = jax.jit(smap(run, mesh,
+                               (api.specs(cfg, CTX), _bspecs(batch)),
+                               (P(), api.specs(cfg, CTX))))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss {loss}"
+    assert 3.0 < float(loss) < 7.0, f"{arch}: implausible init loss {loss}"
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf)).all(), f"{arch}: NaN grads"
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-3b", "zamba2-7b",
+                                  "h2o-danube-3-4b", "gemma-2b"])
+def test_smoke_decode(arch):
+    """decode_step: shapes, finite outputs, cache updates advance."""
+    cfg = configs.get_smoke(arch)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, CTX)
+    b = 2
+    state = api.init_decode_state(cfg, CTX, b, max_len=16)
+    tok = jnp.zeros((b,), jnp.int32)
+    for i in range(3):
+        tok, state = api.decode_step(params, tok, state, CTX, cfg)
+        assert tok.shape == (b,)
+        assert int(state["pos"]) == i + 1
+        assert ((0 <= np.asarray(tok)) &
+                (np.asarray(tok) < cfg.padded_vocab(1))).all()
+
+
+def test_smoke_decode_whisper():
+    from repro.models import encdec
+    cfg = configs.get_smoke("whisper-base")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, CTX)
+    b = 2
+    frames = 0.1 * jax.random.normal(jax.random.PRNGKey(2),
+                                     (b, cfg.enc_frames, cfg.d_model))
+    enc = encdec.encode(params, frames, CTX, cfg)
+    enc_kv = encdec.encoder_cross_kv(params, enc, CTX, cfg)
+    state = api.init_decode_state(cfg, CTX, b, max_len=16)
+    tok = jnp.zeros((b,), jnp.int32)
+    tok, state = api.decode_step(params, tok, state, enc_kv, CTX, cfg)
+    assert tok.shape == (b,)
+
+
+def test_prefill_matches_forward_last_token():
+    cfg = configs.get_smoke("qwen3-8b")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, CTX)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.max_seq),
+                             0, cfg.vocab)
+    out = api.prefill(params, ids, CTX, cfg)
+    assert out.shape == (2, cfg.d_model)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_param_count_sanity():
+    """Exact configs: derived param counts in the published ballpark."""
+    expect = {"minitron-4b": (4.0e9, 0.4), "gemma-2b": (2.5e9, 0.45),
+              "qwen3-8b": (8.2e9, 0.3), "llama-3.2-vision-90b": (9.0e10, 0.3),
+              "rwkv6-3b": (3.1e9, 0.4)}
+    for arch, (target, tol) in expect.items():
+        cfg = configs.get(arch)
+        n = cfg.param_count()
+        assert abs(n - target) / target < tol, \
+            f"{arch}: {n/1e9:.2f}B vs expected {target/1e9:.1f}B"
