@@ -18,18 +18,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro import core as posh
 
-mesh = jax.make_mesh((8,), ("pe",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("pe",))
 N = 8
 REPEATS = 20   # paper: 20 reps after warm-up
 WARMUP = 3
 
 
 def smap(fn, out_specs=P("pe")):
-    return jax.shard_map(fn, mesh=mesh, in_specs=P("pe"),
-                         out_specs=out_specs, check_vma=False)
+    return compat.shard_map(fn, mesh=mesh, in_specs=P("pe"),
+                            out_specs=out_specs, check_vma=False)
 
 
 def timeit(fn, x):

@@ -1,0 +1,167 @@
+"""Communicator microbenchmark — the numbers behind the dispatch table.
+
+Sweeps message sizes per collective op across the available algorithms
+(posh eager, posh chunked, native xla) on 8 fake CPU PEs and writes
+``BENCH_comm.json`` next to this file:
+
+    {"meta": {...},
+     "results": [{"op", "algo", "nbytes", "elems", "us_per_call",
+                  "bytes_per_s"}, ...],
+     "chosen": [{"op", "nbytes", "algo"}, ...],          # dispatch table
+     "tuned_thresholds": {"allreduce_small_bytes": ...}} # measured
+
+``DispatchTable``'s default thresholds cite this file: re-run after
+touching the schedules and feed the result back with
+``DispatchTable.tuned_from_bench(json.load(open("BENCH_comm.json")))``.
+
+    PYTHONPATH=src python benchmarks/comm_microbench.py [--quick]
+
+The sweep re-execs itself in a subprocess so the parent process (and
+any test harness importing this module) never locks jax to 8 devices.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+OUT = os.path.join(HERE, "BENCH_comm.json")
+
+SIZES_FULL = [256, 4096, 65536, 1048576]       # bytes per PE
+SIZES_QUICK = [4096, 262144]
+
+N = 8
+
+
+def _worker(sizes):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import comm as C
+    from repro import compat
+    from repro import core as posh
+
+    mesh = compat.make_mesh((N,), ("pe",))
+
+    def smap(fn, out_specs=P("pe")):
+        return compat.shard_map(fn, mesh=mesh, in_specs=P("pe"),
+                                out_specs=out_specs, check_vma=False)
+
+    def timeit(fn, x, warmup=2, reps=10):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(x))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(x)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps
+
+    # op -> (algos, body(algo), out_specs, wire-bytes factor per PE)
+    def ar(algo):
+        return lambda v: posh.allreduce(v, "sum", "pe", algo)
+
+    def ag(algo):
+        return lambda v: posh.fcollect(v, "pe", algo)
+
+    def rs(algo):
+        return lambda v: posh.reduce_scatter(v.reshape(N, -1), "sum",
+                                             "pe", algo)
+
+    def a2a(algo):
+        return lambda v: posh.alltoall(v.reshape(N, -1), "pe", algo)
+
+    def bc(algo):
+        return lambda v: posh.broadcast(v, 0, "pe", algo)
+
+    OPS = [
+        ("psum", ["tree", "recursive_doubling", "ring", "xla"], ar, P("pe")),
+        ("all_gather", ["recursive_doubling", "ring", "xla"], ag,
+         P("pe", None)),
+        ("psum_scatter", ["ring", "xla"], rs, P("pe")),
+        ("all_to_all", ["pairwise", "xla"], a2a, P("pe", None)),
+        ("pbroadcast", ["binomial", "linear", "xla"], bc, P("pe")),
+    ]
+
+    results = []
+    for op, algos, mkbody, ospec in OPS:
+        for nbytes in sizes:
+            elems = max(nbytes // 4, N)
+            elems = (elems // N) * N or N           # divisible for rs/a2a
+            x = jnp.arange(N * elems, dtype=jnp.float32).reshape(N, elems)
+            for algo in algos:
+                fn = jax.jit(smap(mkbody(algo), out_specs=ospec))
+                dt = timeit(fn, x)
+                row = {"op": op, "algo": algo, "nbytes": elems * 4,
+                       "elems": elems, "us_per_call": round(dt * 1e6, 2),
+                       "bytes_per_s": round(elems * 4 / dt, 0)}
+                results.append(row)
+                print(f"  {op:<13} {algo:<19} {elems*4:>9}B "
+                      f"{dt*1e6:>10.1f}us", flush=True)
+
+    # what the default dispatch table picks at each size
+    table = C.DispatchTable()
+    chosen = [{"op": op, "nbytes": nb, "algo": table.choose(op, nb, N)}
+              for op in ("psum", "all_gather", "psum_scatter", "all_to_all",
+                         "pbroadcast")
+              for nb in sizes]
+
+    bench = {"results": results, "chosen": chosen}
+    tuned = C.DispatchTable.tuned_from_bench(bench)
+    bench["tuned_thresholds"] = {
+        "allreduce_small_bytes": tuned.allreduce_small_bytes,
+        "allgather_small_bytes": tuned.allgather_small_bytes,
+    }
+    bench["meta"] = {"n_pe": N, "device": "cpu-sim",
+                     "defaults": {
+                         "allreduce_small_bytes":
+                             C.DispatchTable().allreduce_small_bytes,
+                         "allgather_small_bytes":
+                             C.DispatchTable().allgather_small_bytes}}
+    print("WORKER_JSON_BEGIN")
+    print(json.dumps(bench))
+    print("WORKER_JSON_END")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 sizes instead of 4 (fast CI sweep)")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    sizes = SIZES_QUICK if args.quick else SIZES_FULL
+
+    if args.worker:
+        _worker(sizes)
+        return
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    cmd = [sys.executable, os.path.abspath(__file__), "--worker"]
+    if args.quick:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=3600)
+    sys.stdout.write(r.stdout[:r.stdout.find("WORKER_JSON_BEGIN")]
+                     if "WORKER_JSON_BEGIN" in r.stdout else r.stdout)
+    if r.returncode != 0 or "WORKER_JSON_END" not in r.stdout:
+        print("comm microbench worker FAILED", file=sys.stderr)
+        print(r.stdout[-3000:], file=sys.stderr)
+        print(r.stderr[-3000:], file=sys.stderr)
+        raise SystemExit(1)
+    payload = r.stdout.split("WORKER_JSON_BEGIN")[1] \
+                      .split("WORKER_JSON_END")[0].strip()
+    bench = json.loads(payload)
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"wrote {args.out}: {len(bench['results'])} rows; measured "
+          f"thresholds {bench['tuned_thresholds']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,7 +68,7 @@ def bench_train_throughput():
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
-    from repro import configs
+    from repro import compat, configs
     from repro.data import SyntheticLM
     from repro.models import registry
     from repro.parallel.ctx import ParallelCtx, smap
@@ -80,14 +80,11 @@ def bench_train_throughput():
     cfg = configs.get_smoke("qwen3-8b")
     api = registry.build(cfg)
     opt = AdamWConfig(lr=1e-3)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     sspecs = train_state_specs(cfg, ctx, api, opt)
     params = api.init(jax.random.PRNGKey(0), cfg, ctx)
-    opt_state = jax.shard_map(lambda p: adamw_init(p, ctx, opt), mesh=mesh,
-                              in_specs=(api.specs(cfg, ctx),),
-                              out_specs=sspecs["opt"],
-                              check_vma=False)(params)
+    opt_state = smap(lambda p: adamw_init(p, ctx, opt), mesh,
+                     (api.specs(cfg, ctx),), sspecs["opt"])(params)
     state = {"params": params, "opt": opt_state,
              "step": jnp.zeros((), jnp.int32)}
     fn = jax.jit(smap(make_train_step(cfg, ctx, api, opt), mesh,

@@ -4,8 +4,31 @@
 
 Runs ~40 steps on CPU in about a minute and prints a decreasing loss.
 Every collective in the step (TP completion, DP mean — degenerate at
-1 device but the code path is identical) goes through repro.comm with
-the paper's put/get-based schedules when --backend posh.
+1 device but the code path is identical) goes through a first-class
+``Communicator`` bound to each mesh axis, with the paper's put/get-based
+schedules when --backend posh.
+
+MIGRATION NOTE (free functions -> Communicator methods)
+-------------------------------------------------------
+The old API was free functions taking an axis and a run-wide config::
+
+    cfg = comm.CommConfig(backend="posh")          # fixed algorithms
+    y = comm.psum(x, "model", cfg)
+    g = comm.all_gather(x, "model", cfg, gather_axis=1)
+
+The new API binds the team once and dispatches the algorithm per call
+from payload size and team size (POSH §4.5.4)::
+
+    tp = comm.make_communicator("model", size=8, backend="posh")
+    y = tp.psum(x)                   # small x -> tree, large x -> ring
+    g = tp.all_gather(x, axis=1)
+    tp.stats()                       # {"psum": {"calls", "bytes", "algos"}}
+
+Model code gets the communicators from the parallel context, built once
+from the mesh: ``ctx.tp_comm`` / ``ctx.dp_comm`` (construct the ctx
+with ``backend="posh"`` — or ``ParallelCtx.from_mesh(mesh, ...)``).
+The free functions still work for one release as deprecated shims that
+delegate to a per-call communicator.
 """
 import argparse
 
@@ -13,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm, configs
+from repro import compat, configs
 from repro.data import SyntheticLM
 from repro.models import registry
 from repro.parallel.ctx import ParallelCtx, smap
@@ -30,19 +53,17 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
-    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
-                      comm=comm.CommConfig(backend=args.backend),
-                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    ctx = ParallelCtx.from_mesh(mesh, sp=False, remat=True,
+                                backend=args.backend,
+                                param_dtype=jnp.float32,
+                                compute_dtype=jnp.float32)
     api = registry.build(cfg)
     opt = AdamWConfig(lr=1e-3)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
     sspecs = train_state_specs(cfg, ctx, api, opt)
     params = api.init(jax.random.PRNGKey(0), cfg, ctx)
-    opt_state = jax.shard_map(lambda p: adamw_init(p, ctx, opt), mesh=mesh,
-                              in_specs=(api.specs(cfg, ctx),),
-                              out_specs=sspecs["opt"],
-                              check_vma=False)(params)
+    opt_state = smap(lambda p: adamw_init(p, ctx, opt), mesh,
+                     (api.specs(cfg, ctx),), sspecs["opt"])(params)
     state = {"params": params, "opt": opt_state,
              "step": jnp.zeros((), jnp.int32)}
     fn = jax.jit(smap(make_train_step(cfg, ctx, api, opt), mesh,
@@ -57,6 +78,9 @@ def main():
         if s % 5 == 0 or s == args.steps - 1:
             print(f"step {s:3d}  loss {float(m['loss']):.4f}  "
                   f"|g| {float(m['grad_norm']):.3f}")
+    # what the communicators did (trace-time op accounting)
+    for name, c in [("tp", ctx.tp_comm), ("dp", ctx.dp_comm)]:
+        print(f"{name}_comm stats: {c.stats()}")
 
 
 if __name__ == "__main__":

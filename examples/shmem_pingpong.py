@@ -13,16 +13,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro import core as posh
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("pe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("pe",))
 
     def smap(fn):
-        return jax.shard_map(fn, mesh=mesh, in_specs=P("pe"),
-                             out_specs=P("pe"), check_vma=False)
+        return compat.shard_map(fn, mesh=mesh, in_specs=P("pe"),
+                                out_specs=P("pe"), check_vma=False)
 
     print(f"{'elems/PE':>10} {'put us':>9} {'get us':>9} {'copy us':>9} "
           f"{'put GB/s':>9}")

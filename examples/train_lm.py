@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
+from repro import compat
 from repro.ckpt import Checkpointer
 from repro.configs.base import ArchConfig
 from repro.data import SyntheticLM
@@ -49,19 +49,16 @@ def main():
 
     cfg = PRESETS[args.preset]
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
-                      comm=comm.CommConfig(backend=args.backend),
+                      backend=args.backend,
                       param_dtype=jnp.float32, compute_dtype=jnp.float32)
     api = registry.build(cfg)
     opt = AdamWConfig(lr=6e-4, weight_decay=0.01)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     sspecs = train_state_specs(cfg, ctx, api, opt)
     params = api.init(jax.random.PRNGKey(0), cfg, ctx)
     n_params = sum(l.size for l in jax.tree.leaves(params))
-    opt_state = jax.shard_map(lambda p: adamw_init(p, ctx, opt), mesh=mesh,
-                              in_specs=(api.specs(cfg, ctx),),
-                              out_specs=sspecs["opt"],
-                              check_vma=False)(params)
+    opt_state = smap(lambda p: adamw_init(p, ctx, opt), mesh,
+                     (api.specs(cfg, ctx),), sspecs["opt"])(params)
     state = {"params": params, "opt": opt_state,
              "step": jnp.zeros((), jnp.int32)}
     ck = Checkpointer(args.ckpt_dir, keep=2)

@@ -1,19 +1,49 @@
-"""repro.comm — framework-facing collective API.
+"""repro.comm — framework-facing collective API, organised around the
+first-class ``Communicator``.
+
+A ``Communicator`` is a team-bound collective endpoint: it binds an
+ordered set of mesh axes (the team), a backend from the registry
+("xla" native collectives | "posh" the paper's put/get schedules |
+anything added via ``register_backend``), a ``DispatchTable`` that
+picks each call's algorithm from (op, payload bytes, team size) — the
+paper's §4.5.4 tuned selection, per call instead of per run — and
+per-op instrumentation (calls, bytes, chosen algorithms) readable as a
+stats pytree.
 
 Every collective issued anywhere in the framework (DP gradient
 reduction, TP activation collectives, EP dispatch, SP gathers, vocab-
-parallel cross-entropy) routes through this module, which dispatches to
-either the paper's POSH schedules (``repro.core``) or native XLA
-collectives.  The backend string is trace-time — algorithm selection
-specializes the program, the paper's §4.5.4 compile-time switch.
+parallel cross-entropy) goes through a communicator method::
+
+    comm = make_communicator("model", size=8, backend="posh")
+    y = comm.psum(x)                    # algorithm chosen by size
+    g = comm.all_gather(x, axis=1)      # tiled concat, lax semantics
+    comm.stats()                        # {"psum": {"calls": 1, ...}, ...}
+
+Model/training code holds them on the parallel context as
+``ctx.tp_comm`` / ``ctx.dp_comm`` (see ``repro.parallel.ctx``).
+Selection is trace-time — the chosen algorithm specializes the program,
+so there are zero run-time branches.
+
+The pre-Communicator free functions (``psum(x, axis, cfg)``, ...) and
+``CommConfig`` remain as deprecated shims for one release; they build a
+pinned-dispatch communicator per call and delegate.
 """
 from .api import (CommConfig, all_gather, all_to_all, axis_index, axis_size,
                   pbroadcast, pmax, psum, psum_scatter)
-from .bucketing import bucketed_allreduce, tree_allreduce
+from .bucketing import as_communicator, bucketed_allreduce, tree_allreduce
+from .communicator import (CommBackend, Communicator, DispatchTable,
+                           available_backends, get_backend,
+                           make_communicator, register_backend)
 from .compress import CompressionState, compressed_allreduce
 
 __all__ = [
-    "CommConfig", "psum", "pmax", "all_gather", "psum_scatter", "all_to_all",
-    "pbroadcast", "axis_index", "axis_size", "bucketed_allreduce", "tree_allreduce",
+    # first-class API
+    "Communicator", "DispatchTable", "make_communicator", "as_communicator",
+    "CommBackend", "register_backend", "get_backend", "available_backends",
+    # tree-level reductions
+    "bucketed_allreduce", "tree_allreduce",
     "compressed_allreduce", "CompressionState",
+    # deprecated free-function shims
+    "CommConfig", "psum", "pmax", "all_gather", "psum_scatter", "all_to_all",
+    "pbroadcast", "axis_index", "axis_size",
 ]

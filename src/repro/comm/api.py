@@ -1,26 +1,36 @@
-"""Backend-dispatched collectives (called inside shard_map).
+"""DEPRECATED free-function collectives — thin shims over Communicator.
 
-backend = "xla"        native lax collectives — the GASNet/UPC role from
-                       the paper's §5.3 comparison, and the beyond-paper
-                       performance baseline
-backend = "posh"       the paper's algorithms from repro.core, with the
-                       per-op algorithm chosen by this config (§4.5.4)
+This was the framework's collective surface before the first-class
+``Communicator`` API (see ``repro.comm.communicator``); it is kept for
+one release so external examples that do ``comm.psum(x, axis, cfg)``
+keep working.  Each call builds a team-bound communicator for
+``(axis, cfg)`` (team size read from the enclosing shard_map) and
+delegates to the corresponding method.  New code should hold a
+``Communicator`` — e.g. ``ctx.tp_comm`` / ``ctx.dp_comm`` — and call
+``comm.psum(x)`` directly.
+
+``CommConfig`` survives as the shim's description of the old fixed
+per-run algorithm choice; it converts to a pinned ``DispatchTable``
+(``DispatchTable.fixed``), i.e. the old behaviour of one algorithm for
+all sizes.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence, Union
 
-import jax
-import jax.numpy as jnp
+from repro import compat
 
-from repro import core as posh
+from .communicator import Communicator, DispatchTable
 
 Axis = Union[str, Sequence[str]]
 
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
+    """DEPRECATED run-wide backend + fixed algorithm strings.  Use a
+    ``Communicator`` with a ``DispatchTable`` instead."""
+
     backend: str = "xla"                 # "xla" | "posh"
     allreduce_algo: str = "ring"         # ring | tree | recursive_doubling
     allgather_algo: str = "ring"         # ring | ring_pull | recursive_doubling
@@ -34,6 +44,13 @@ class CommConfig:
         return (f"posh[ar={self.allreduce_algo},ag={self.allgather_algo},"
                 f"rs={self.reducescatter_algo},a2a={self.alltoall_algo}]")
 
+    def dispatch_table(self) -> DispatchTable:
+        """The old fixed-algorithm behaviour as a pinned table."""
+        return DispatchTable.fixed(
+            allreduce=self.allreduce_algo, allgather=self.allgather_algo,
+            reducescatter=self.reducescatter_algo,
+            alltoall=self.alltoall_algo, broadcast=self.broadcast_algo)
+
 
 XLA = CommConfig(backend="xla")
 POSH_RING = CommConfig(backend="posh")
@@ -46,40 +63,32 @@ def _axis(axis: Axis):
     return axis if isinstance(axis, str) else tuple(axis)
 
 
+def _shim_comm(axis: Axis, cfg: CommConfig) -> Communicator:
+    """Per-call communicator for the deprecated path.  Must run inside
+    shard_map (team size is read from the mesh axis)."""
+    return Communicator(_axis(axis), size=compat.axis_size(_axis(axis)),
+                        backend=cfg.backend, dispatch=cfg.dispatch_table(),
+                        name=f"shim:{cfg.tag()}")
+
+
 def psum(x, axis: Axis, cfg: CommConfig = XLA):
-    if cfg.backend == "xla":
-        return jax.lax.psum(x, _axis(axis))
-    return posh.allreduce(x, "sum", _axis(axis), cfg.allreduce_algo)
+    return _shim_comm(axis, cfg).psum(x)
 
 
 def pmax(x, axis: Axis, cfg: CommConfig = XLA):
-    if cfg.backend == "xla":
-        return jax.lax.pmax(x, _axis(axis))
-    return posh.allreduce(x, "max", _axis(axis), cfg.allreduce_algo)
+    return _shim_comm(axis, cfg).pmax(x)
 
 
 def all_gather(x, axis: Axis, cfg: CommConfig = XLA, *, gather_axis: int = 0,
                tiled: bool = True):
-    """Gather shards along ``gather_axis``.  tiled=True concatenates
-    (matching lax.all_gather(tiled=True)); else stacks a new axis."""
-    if cfg.backend == "xla":
-        return jax.lax.all_gather(x, _axis(axis), axis=gather_axis, tiled=tiled)
-    moved = jnp.moveaxis(x, gather_axis, 0)
-    out = posh.fcollect(moved, _axis(axis), cfg.allgather_algo)  # (n, ...)
-    if tiled:
-        out = out.reshape((-1,) + moved.shape[1:])
-        return jnp.moveaxis(out, 0, gather_axis)
-    out = jnp.moveaxis(out, 1, 0)  # restore original leading dim first
-    return jnp.moveaxis(out, 0, gather_axis)  # best-effort stack placement
+    """Gather shards along ``gather_axis``.  tiled=True concatenates;
+    tiled=False inserts a new stacked axis at ``gather_axis`` — both
+    exactly matching ``lax.all_gather``."""
+    return _shim_comm(axis, cfg).all_gather(x, axis=gather_axis, tiled=tiled)
 
 
 def psum_scatter(x, axis: Axis, cfg: CommConfig = XLA, *, scatter_axis: int = 0):
-    if cfg.backend == "xla":
-        return jax.lax.psum_scatter(x, _axis(axis),
-                                    scatter_dimension=scatter_axis, tiled=True)
-    moved = jnp.moveaxis(x, scatter_axis, 0)
-    out = posh.reduce_scatter(moved, "sum", _axis(axis), cfg.reducescatter_algo)
-    return jnp.moveaxis(out, 0, scatter_axis)
+    return _shim_comm(axis, cfg).psum_scatter(x, axis=scatter_axis)
 
 
 def all_to_all(x, axis: Axis, cfg: CommConfig = XLA, *, split_axis: int,
@@ -87,30 +96,17 @@ def all_to_all(x, axis: Axis, cfg: CommConfig = XLA, *, split_axis: int,
     """lax.all_to_all(tiled) semantics: split along ``split_axis`` into n
     blocks, block j to PE j; received blocks concatenated along
     ``concat_axis``."""
-    if cfg.backend == "xla":
-        return jax.lax.all_to_all(x, _axis(axis), split_axis=split_axis,
-                                  concat_axis=concat_axis, tiled=True)
-    n = posh.team_size(_axis(axis))
-    if x.shape[split_axis] % n:
-        raise ValueError(
-            f"all_to_all split axis {split_axis} (len {x.shape[split_axis]}) "
-            f"not divisible by team size {n}")
-    moved = jnp.moveaxis(x, split_axis, 0)
-    blocks = moved.reshape((n, moved.shape[0] // n) + moved.shape[1:])
-    recv = posh.alltoall(blocks, _axis(axis), cfg.alltoall_algo)
-    parts = [jnp.moveaxis(recv[j], 0, split_axis) for j in range(n)]
-    return jnp.concatenate(parts, axis=concat_axis)
+    return _shim_comm(axis, cfg).all_to_all(x, split_axis=split_axis,
+                                            concat_axis=concat_axis)
 
 
 def pbroadcast(x, root: int, axis: Axis, cfg: CommConfig = XLA):
-    if cfg.backend == "xla":
-        return posh.broadcast(x, root, _axis(axis), "xla")
-    return posh.broadcast(x, root, _axis(axis), cfg.broadcast_algo)
+    return _shim_comm(axis, cfg).pbroadcast(x, root)
 
 
 def axis_index(axis: Axis):
-    return jax.lax.axis_index(_axis(axis))
+    return compat.axis_index(_axis(axis))
 
 
 def axis_size(axis: Axis):
-    return jax.lax.axis_size(_axis(axis))
+    return compat.axis_size(_axis(axis))

@@ -8,20 +8,40 @@ collective launch latency and gives XLA independent collectives it can
 overlap with the backward computation (compute/comm overlap happens at
 the XLA scheduling level; bucket granularity is what makes it possible).
 
+Bucketing composes with the communicator's size-aware dispatch: packing
+turns many small (eager-regime) reductions into few large ones, which
+the dispatch table then routes to the chunked ring — so the two layers
+tune the same knob from opposite ends.
+
+Reductions route through a ``Communicator`` (``comm.psum``).  The old
+``(tree, axis, cfg)`` calling convention is still accepted and builds a
+shim communicator, like ``repro.comm.api``.
+
 The bucket buffers are symmetric-heap allocations — same shape on every
 PE — so the paper's Fact 1 is what guarantees the flat offsets used for
 pack/unpack agree across PEs.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro import core as posh
 
-from .api import CommConfig, psum
+from .api import CommConfig, _shim_comm
+from .communicator import Communicator
+
+CommLike = Union[Communicator, str, tuple]
+
+
+def as_communicator(comm_or_axis: CommLike,
+                    cfg: Optional[CommConfig] = None) -> Communicator:
+    """Accept either a Communicator (new API) or (axis, cfg) (deprecated)."""
+    if isinstance(comm_or_axis, Communicator):
+        return comm_or_axis
+    return _shim_comm(comm_or_axis, cfg or CommConfig())
 
 
 def _flatten_with_meta(tree):
@@ -30,16 +50,21 @@ def _flatten_with_meta(tree):
     return leaves, treedef, metas
 
 
-def tree_allreduce(tree: Any, axis, cfg: CommConfig):
+def tree_allreduce(tree: Any, comm_or_axis: CommLike,
+                   cfg: Optional[CommConfig] = None):
     """Naive per-leaf allreduce (the unbucketed baseline)."""
-    return jax.tree.map(lambda g: psum(g, axis, cfg), tree)
+    comm = as_communicator(comm_or_axis, cfg)
+    return jax.tree.map(comm.psum, tree)
 
 
-def bucketed_allreduce(tree: Any, axis, cfg: CommConfig,
+def bucketed_allreduce(tree: Any, comm_or_axis: CommLike,
+                       cfg: Optional[CommConfig] = None, *,
                        bucket_bytes: int = 4 << 20,
                        heap: posh.SymmetricHeap | None = None) -> Any:
     """Pack leaves into ≤bucket_bytes flat buffers (per dtype), allreduce
-    each bucket, unpack.  Returns a tree of the same structure."""
+    each bucket through the communicator, unpack.  Returns a tree of the
+    same structure."""
+    comm = as_communicator(comm_or_axis, cfg)
     leaves, treedef, metas = _flatten_with_meta(tree)
     if not leaves:
         return tree
@@ -62,9 +87,9 @@ def bucketed_allreduce(tree: Any, axis, cfg: CommConfig,
             flat = jnp.concatenate([leaves[i].ravel() for i in bucket])
             if heap is not None:
                 with heap.scratch(flat.shape, flat.dtype, tag="grad_bucket"):
-                    out = psum(flat, axis, cfg)
+                    out = comm.psum(flat)
             else:
-                out = psum(flat, axis, cfg)
+                out = comm.psum(flat)
             off = 0
             for i in bucket:
                 shape, dt, size = metas[i]

@@ -1,0 +1,534 @@
+"""First-class communicators: team-bound collective objects with
+size-aware algorithm dispatch and per-op instrumentation.
+
+This is the POSH §4.5 story made explicit in the API: a
+``Communicator`` binds a *team* (an ordered set of mesh axes, flattened
+to one PE space), a *backend* (how collectives are realized), and a
+*dispatch table* (which algorithm each call uses, chosen per call from
+payload bytes and team size — the paper's tuned algorithm selection,
+§4.5.4, promoted from a compile-flag to a first-class object).  Every
+call records what it did, so tests and benchmarks can read back call
+counts, bytes moved, and chosen algorithms as a plain-dict pytree.
+
+Backends are pluggable through a registry::
+
+    register_backend("my_backend", MyBackendClass)
+    comm = Communicator("model", size=8, backend="my_backend")
+
+Two ship in-tree:
+
+    "xla"    native lax collectives — the GASNet/UPC role from the
+             paper's §5.3 comparison and the beyond-paper baseline.
+             Dispatch always resolves to the single "xla" algorithm.
+    "posh"   the paper's put/get-based schedules from ``repro.core``,
+             with the algorithm chosen per call by the dispatch table
+             (eager/latency-optimal below the size threshold,
+             chunked-ring/bandwidth-optimal above it).
+
+A third slot is reserved for a Pallas ``symm_copy``-based backend once
+the kernels in ``repro.kernels.symm_copy`` grow a remote-DMA path; it
+will plug in through ``register_backend`` with no changes here.
+
+Construction is trace-time-static: ``size`` must be the static team
+size (mesh-derived).  Methods are called *inside* ``shard_map`` like
+the free functions they replace.  Instrumentation is trace-time too —
+counts reflect collectives baked into the traced program (the quantity
+that matters for schedule accounting), not per-step executions.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro import core as posh
+from repro.core.teams import Team, TeamAxes
+
+# ======================================================================
+# dispatch table — (op, payload bytes, team size) -> algorithm
+# ======================================================================
+
+# Default size thresholds.  benchmarks/comm_microbench.py sweeps every
+# (op, algo, size) cell and writes the measured crossovers to
+# BENCH_comm.json; on the 8-fake-PE CPU sim the latest sweep measured
+# the eager/chunked crossover at 256 KiB (allreduce) and 4 KiB
+# (allgather) — but fake-device links are not bandwidth-limited, which
+# flatters the O(log n · B) eager schedules.  The defaults below keep
+# the paper's bandwidth-model crossover (§4.5.4: ring wins once the
+# 2(n-1)/n·B wire term dominates the per-round latency, i.e. tens of
+# KiB on real links); deployments tune with
+# DispatchTable.tuned_from_bench(json.load(open("BENCH_comm.json"))).
+_ALLREDUCE_SMALL_BYTES = 16 << 10     # ≤ 16 KiB/PE -> eager (tree/rd)
+_ALLGATHER_SMALL_BYTES = 32 << 10     # ≤ 32 KiB/PE -> recursive doubling
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchTable:
+    """Maps (op, payload nbytes, team size) to a schedule name.
+
+    Two regimes per sized op, the paper's §4.5.4 split:
+
+      eager    latency-optimal: O(log n) rounds of full payloads
+               (binomial tree / recursive doubling).  Wins when the
+               per-round launch latency dominates, i.e. small payloads
+               or tiny teams.
+      chunked  bandwidth-optimal: ring schedules moving 2(n-1)/n of the
+               payload per PE in 1/n-size chunks.  Wins at large
+               payloads.
+
+    ``small_team_max`` short-circuits to eager for teams at or below
+    that size regardless of bytes (a 2-PE "ring" is just a worse tree).
+    Thresholds are payload bytes *per PE* at the call site.
+    """
+
+    allreduce_small_bytes: int = _ALLREDUCE_SMALL_BYTES
+    allgather_small_bytes: int = _ALLGATHER_SMALL_BYTES
+    small_team_max: int = 2
+    allreduce_eager: str = "tree"
+    allreduce_chunked: str = "ring"
+    allgather_eager: str = "recursive_doubling"
+    allgather_chunked: str = "ring"
+    reducescatter_algo: str = "ring"
+    alltoall_algo: str = "pairwise"
+    broadcast_algo: str = "binomial"
+
+    def choose(self, op: str, nbytes: int, team_size: int) -> str:
+        """Schedule for one call.  Static (trace-time) decision."""
+        pow2 = team_size & (team_size - 1) == 0
+        if op in ("psum", "pmax"):
+            eager = (team_size <= self.small_team_max
+                     or nbytes <= self.allreduce_small_bytes)
+            algo = self.allreduce_eager if eager else self.allreduce_chunked
+            if algo == "recursive_doubling" and not pow2:
+                # rd needs a power-of-two team; fall back to the chunked
+                # ring like repro.core itself does, so stats stay honest
+                algo = self.allreduce_chunked
+                if algo == "recursive_doubling":   # chunked pinned to rd
+                    algo = "ring"
+            return algo
+        if op == "all_gather":
+            eager = (team_size <= self.small_team_max
+                     or nbytes <= self.allgather_small_bytes)
+            algo = self.allgather_eager if eager else self.allgather_chunked
+            if algo == "recursive_doubling" and not pow2:
+                algo = self.allgather_chunked   # rd fallback, honestly
+                if algo == "recursive_doubling":
+                    algo = "ring"
+            return algo
+        if op == "psum_scatter":
+            return self.reducescatter_algo
+        if op == "all_to_all":
+            return self.alltoall_algo
+        if op == "pbroadcast":
+            return self.broadcast_algo
+        raise KeyError(f"no dispatch rule for op '{op}'")
+
+    @classmethod
+    def fixed(cls, allreduce: str = "ring", allgather: str = "ring",
+              reducescatter: str = "ring", alltoall: str = "pairwise",
+              broadcast: str = "binomial") -> "DispatchTable":
+        """A table pinned to one algorithm per op regardless of size —
+        the old ``CommConfig`` behaviour, kept for the shim layer."""
+        return cls(allreduce_eager=allreduce, allreduce_chunked=allreduce,
+                   allgather_eager=allgather, allgather_chunked=allgather,
+                   reducescatter_algo=reducescatter, alltoall_algo=alltoall,
+                   broadcast_algo=broadcast)
+
+    @classmethod
+    def tuned_from_bench(cls, bench: dict) -> "DispatchTable":
+        """Build a table whose thresholds are the measured eager/chunked
+        crossover from a ``BENCH_comm.json`` dict (as written by
+        benchmarks/comm_microbench.py): the largest measured size at
+        which the eager schedule still wins, 0 if it never wins (all
+        sizes go chunked), and the op's default when the bench has no
+        row with both algorithms."""
+        def crossover(op, eager, chunked, default):
+            rows = [r for r in bench.get("results", [])
+                    if r["op"] == op and r["algo"] in (eager, chunked)]
+            by_size: dict[int, dict[str, float]] = {}
+            for r in rows:
+                by_size.setdefault(r["nbytes"], {})[r["algo"]] = r["us_per_call"]
+            measured = [nb for nb, t in by_size.items()
+                        if eager in t and chunked in t]
+            if not measured:
+                return default
+            best = 0                       # eager never wins -> all chunked
+            for nb in sorted(measured):
+                t = by_size[nb]
+                if t[eager] <= t[chunked]:
+                    best = nb              # largest size where eager wins
+            return best
+        return cls(
+            allreduce_small_bytes=crossover(
+                "psum", "tree", "ring", _ALLREDUCE_SMALL_BYTES),
+            allgather_small_bytes=crossover(
+                "all_gather", "recursive_doubling", "ring",
+                _ALLGATHER_SMALL_BYTES))
+
+
+# ======================================================================
+# backend registry
+# ======================================================================
+class CommBackend:
+    """Interface a communicator backend implements.
+
+    All array arguments are per-PE shards inside ``shard_map``; ``team``
+    is a ``repro.core.Team``; ``algo`` is the dispatch table's choice
+    (backends may interpret or ignore it).  Implementations must match
+    the lax collective semantics documented on ``Communicator``.
+    """
+
+    name: str = "?"
+
+    def select(self, op: str, nbytes: int, team_size: int,
+               table: DispatchTable) -> str:
+        return table.choose(op, nbytes, team_size)
+
+    # -- collectives ---------------------------------------------------
+    def psum(self, x, team: Team, algo: str, heap=None):
+        raise NotImplementedError
+
+    def pmax(self, x, team: Team, algo: str):
+        raise NotImplementedError
+
+    def all_gather(self, x, team: Team, algo: str, *, gather_axis: int,
+                   tiled: bool):
+        raise NotImplementedError
+
+    def psum_scatter(self, x, team: Team, algo: str, *, scatter_axis: int):
+        raise NotImplementedError
+
+    def all_to_all(self, x, team: Team, algo: str, *, split_axis: int,
+                   concat_axis: int, team_size: int):
+        raise NotImplementedError
+
+    def pbroadcast(self, x, root: int, team: Team, algo: str):
+        raise NotImplementedError
+
+
+class XlaBackend(CommBackend):
+    """Native lax collectives — the §5.3 'vendor library' role."""
+
+    name = "xla"
+
+    def select(self, op, nbytes, team_size, table):
+        return "xla"
+
+    def psum(self, x, team, algo, heap=None):
+        return jax.lax.psum(x, team.axis_name)
+
+    def pmax(self, x, team, algo):
+        return jax.lax.pmax(x, team.axis_name)
+
+    def all_gather(self, x, team, algo, *, gather_axis, tiled):
+        return jax.lax.all_gather(x, team.axis_name, axis=gather_axis,
+                                  tiled=tiled)
+
+    def psum_scatter(self, x, team, algo, *, scatter_axis):
+        return jax.lax.psum_scatter(x, team.axis_name,
+                                    scatter_dimension=scatter_axis,
+                                    tiled=True)
+
+    def all_to_all(self, x, team, algo, *, split_axis, concat_axis,
+                   team_size):
+        return jax.lax.all_to_all(x, team.axis_name, split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+
+    def pbroadcast(self, x, root, team, algo):
+        return posh.broadcast(x, root, team.axes, "xla")
+
+
+class PoshBackend(CommBackend):
+    """The paper's put/get schedules (repro.core), algorithm per call."""
+
+    name = "posh"
+
+    def psum(self, x, team, algo, heap=None):
+        return posh.allreduce(x, "sum", team.axes, algo, heap=heap)
+
+    def pmax(self, x, team, algo):
+        return posh.allreduce(x, "max", team.axes, algo)
+
+    def all_gather(self, x, team, algo, *, gather_axis, tiled):
+        if not tiled:
+            out = posh.fcollect(x, team.axes, algo)       # (n, *x.shape)
+            return jnp.moveaxis(out, 0, gather_axis)
+        moved = jnp.moveaxis(x, gather_axis, 0)
+        out = posh.fcollect(moved, team.axes, algo)
+        out = out.reshape((-1,) + moved.shape[1:])
+        return jnp.moveaxis(out, 0, gather_axis)
+
+    def psum_scatter(self, x, team, algo, *, scatter_axis):
+        moved = jnp.moveaxis(x, scatter_axis, 0)
+        out = posh.reduce_scatter(moved, "sum", team.axes, algo)
+        return jnp.moveaxis(out, 0, scatter_axis)
+
+    def all_to_all(self, x, team, algo, *, split_axis, concat_axis,
+                   team_size):
+        n = team_size
+        moved = jnp.moveaxis(x, split_axis, 0)
+        blocks = moved.reshape((n, moved.shape[0] // n) + moved.shape[1:])
+        recv = posh.alltoall(blocks, team.axes, algo)
+        parts = [jnp.moveaxis(recv[j], 0, split_axis) for j in range(n)]
+        return jnp.concatenate(parts, axis=concat_axis)
+
+    def pbroadcast(self, x, root, team, algo):
+        return posh.broadcast(x, root, team.axes, algo)
+
+
+_REGISTRY: Dict[str, Type[CommBackend]] = {}
+
+
+def register_backend(name: str, backend_cls: Type[CommBackend], *,
+                     overwrite: bool = False) -> None:
+    """Register a communicator backend class under ``name`` — the hook a
+    future pallas ``symm_copy`` backend (or any out-of-tree transport)
+    uses to become constructible via ``Communicator(..., backend=name)``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"comm backend '{name}' already registered")
+    _REGISTRY[name] = backend_cls
+
+
+def get_backend(name: str) -> CommBackend:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown comm backend '{name}' "
+            f"(registered: {sorted(_REGISTRY)})") from None
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend("xla", XlaBackend)
+register_backend("posh", PoshBackend)
+
+
+# ======================================================================
+# the communicator
+# ======================================================================
+def _nbytes(x) -> int:
+    return int(np.prod(jnp.shape(x), dtype=np.int64)
+               * jnp.dtype(jnp.result_type(x)).itemsize)
+
+
+_LEAF_DEF = jax.tree.structure(0)
+
+
+def _is_single(x) -> bool:
+    """True when ``x`` is one array/scalar, not a pytree of them."""
+    return jax.tree.structure(x) == _LEAF_DEF
+
+
+class Communicator:
+    """A team-bound collective endpoint.
+
+    Method semantics match the lax collectives they replace:
+
+        psum(x) / pmax(x)                 full allreduce over the team
+        pmean(x)                          psum / team size
+        all_gather(x, axis=0, tiled)      tiled concatenates along
+                                          ``axis``; tiled=False inserts
+                                          a new stacked axis at ``axis``
+                                          (exactly lax.all_gather)
+        psum_scatter(x, axis=0)           reduce + scatter chunks of
+                                          ``axis`` (lax tiled semantics)
+        all_to_all(x, split_axis, concat_axis)
+                                          lax.all_to_all(tiled=True)
+        pbroadcast(x, root)               root's value to all members
+        rank() / size                     traced rank / static team size
+
+    A team of one PE short-circuits every op to the identity (recorded
+    in stats under the "identity" algorithm), so unconditional calls are
+    free on degenerate axes — call sites need no ``if tp > 1`` guards.
+
+    Mutable state is instrumentation only; everything the traced program
+    depends on (team, size, backend, dispatch) is frozen, and equality/
+    hashing covers exactly that static part so communicators can ride in
+    ``jax.custom_vjp`` nondiff arguments.
+    """
+
+    def __init__(self, team: TeamAxes, *, size: int, backend: str = "xla",
+                 dispatch: Optional[DispatchTable] = None,
+                 heap: Optional[posh.SymmetricHeap] = None,
+                 name: Optional[str] = None):
+        self.team = Team.of(team)
+        self.size = int(size)
+        if self.size < 1:
+            raise ValueError(f"communicator team size must be ≥1, got {size}")
+        self.backend_name = backend
+        self.backend = get_backend(backend)
+        self.dispatch = dispatch or DispatchTable()
+        self.heap = heap
+        self.name = name or f"{backend}:{'x'.join(self.team.axes)}"
+        self._stats: dict = {}
+
+    # -- identity / hashing (static part only; the heap participates by
+    #    identity because its allocations are baked into the trace) ----
+    def _key(self):
+        return (self.backend_name, self.team.axes, self.size, self.dispatch,
+                id(self.heap) if self.heap is not None else None)
+
+    def __eq__(self, other):
+        return isinstance(other, Communicator) and self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __repr__(self):
+        return (f"Communicator({self.name!r}, axes={self.team.axes}, "
+                f"size={self.size}, backend={self.backend_name!r})")
+
+    # -- instrumentation ----------------------------------------------
+    def _record(self, op: str, nbytes: int, algo: str) -> None:
+        s = self._stats.setdefault(
+            op, {"calls": 0, "bytes": 0, "algos": {}})
+        s["calls"] += 1
+        s["bytes"] += nbytes
+        s["algos"][algo] = s["algos"].get(algo, 0) + 1
+
+    def stats(self) -> dict:
+        """Per-op instrumentation as a plain-dict pytree:
+        ``{op: {"calls": int, "bytes": int, "algos": {algo: count}}}``."""
+        return copy.deepcopy(self._stats)
+
+    def reset_stats(self) -> None:
+        self._stats.clear()
+
+    def _begin(self, op: str, x) -> Optional[str]:
+        """Dispatch + record; returns the algorithm, or None for the
+        1-PE identity short-circuit."""
+        nbytes = _nbytes(x)
+        if self.size == 1:
+            self._record(op, nbytes, "identity")
+            return None
+        algo = self.backend.select(op, nbytes, self.size, self.dispatch)
+        self._record(op, nbytes, algo)
+        return algo
+
+    # -- collectives ---------------------------------------------------
+    def psum(self, x):
+        if not _is_single(x):            # pytree: reduce (and record)
+            return jax.tree.map(self.psum, x)   # each leaf by its size
+        algo = self._begin("psum", x)
+        if algo is None:
+            return x
+        return self.backend.psum(x, self.team, algo, heap=self.heap)
+
+    def pmax(self, x):
+        if not _is_single(x):
+            return jax.tree.map(self.pmax, x)
+        algo = self._begin("pmax", x)
+        if algo is None:
+            return x
+        return self.backend.pmax(x, self.team, algo)
+
+    def pmean(self, x):
+        out = self.psum(x)
+        if self.size == 1:
+            return out
+        return jax.tree.map(lambda t: t / self.size, out)
+
+    def all_gather(self, x, axis: int = 0, *, tiled: bool = True):
+        if not _is_single(x):
+            return jax.tree.map(
+                lambda t: self.all_gather(t, axis, tiled=tiled), x)
+        algo = self._begin("all_gather", x)
+        if algo is None:
+            return x if tiled else jnp.expand_dims(x, axis)
+        return self.backend.all_gather(x, self.team, algo,
+                                       gather_axis=axis, tiled=tiled)
+
+    def psum_scatter(self, x, axis: int = 0):
+        if not _is_single(x):
+            return jax.tree.map(lambda t: self.psum_scatter(t, axis), x)
+        if jnp.shape(x)[axis] % self.size:
+            raise ValueError(
+                f"psum_scatter axis {axis} (len {jnp.shape(x)[axis]}) not "
+                f"divisible by team size {self.size}")
+        algo = self._begin("psum_scatter", x)
+        if algo is None:
+            return x
+        return self.backend.psum_scatter(x, self.team, algo,
+                                         scatter_axis=axis)
+
+    def all_to_all(self, x, *, split_axis: int, concat_axis: int):
+        if not _is_single(x):
+            return jax.tree.map(
+                lambda t: self.all_to_all(t, split_axis=split_axis,
+                                          concat_axis=concat_axis), x)
+        if jnp.shape(x)[split_axis] % self.size:
+            raise ValueError(
+                f"all_to_all split axis {split_axis} "
+                f"(len {jnp.shape(x)[split_axis]}) not divisible by team "
+                f"size {self.size}")
+        algo = self._begin("all_to_all", x)
+        if algo is None:
+            return x
+        return self.backend.all_to_all(x, self.team, algo,
+                                       split_axis=split_axis,
+                                       concat_axis=concat_axis,
+                                       team_size=self.size)
+
+    def pbroadcast(self, x, root: int = 0):
+        if not _is_single(x):
+            return jax.tree.map(lambda t: self.pbroadcast(t, root), x)
+        if not (0 <= root < self.size):
+            raise ValueError(f"broadcast root {root} out of range "
+                             f"for team of {self.size}")
+        algo = self._begin("pbroadcast", x)
+        if algo is None:
+            return x
+        return self.backend.pbroadcast(x, root, self.team, algo)
+
+    # -- topology ------------------------------------------------------
+    def rank(self):
+        """Traced rank in the flattened team (0 on degenerate teams)."""
+        if self.size == 1:
+            return jnp.zeros((), jnp.int32)
+        return self.team.my_pe()
+
+    @property
+    def axis_name(self):
+        return self.team.axis_name
+
+    # -- tree-level reductions (delegates; kept as methods so call
+    #    sites stay on the communicator surface) -----------------------
+    def tree_psum(self, tree):
+        return jax.tree.map(self.psum, tree)
+
+    def tree_pmean(self, tree):
+        return jax.tree.map(self.pmean, tree)
+
+    def bucketed_psum(self, tree, *, bucket_bytes: int = 4 << 20,
+                      heap: Optional[posh.SymmetricHeap] = None):
+        from .bucketing import bucketed_allreduce
+        return bucketed_allreduce(tree, self, bucket_bytes=bucket_bytes,
+                                  heap=heap if heap is not None else self.heap)
+
+    def compressed_psum(self, tree, *, scheme: str = "bf16", state=None,
+                        mean: bool = True):
+        from .compress import compressed_allreduce
+        return compressed_allreduce(tree, self, scheme=scheme, state=state,
+                                    mean=mean)
+
+
+def make_communicator(team: TeamAxes, *, size: Optional[int] = None,
+                      backend: str = "xla",
+                      dispatch: Optional[DispatchTable] = None,
+                      heap: Optional[posh.SymmetricHeap] = None,
+                      name: Optional[str] = None) -> Communicator:
+    """Build a communicator for a team.  ``size`` is the static team
+    size; omit it only when calling from inside ``shard_map``, where it
+    is derived from the mesh axes."""
+    if size is None:
+        size = compat.axis_size(Team.of(team).axis_name)
+    return Communicator(team, size=size, backend=backend, dispatch=dispatch,
+                        heap=heap, name=name)

@@ -11,7 +11,10 @@ accumulation so compression error does not bias the optimizer):
               gather for small team sizes and falls back to bf16 for
               large ones — the tradeoff is documented in EXPERIMENTS.md).
 
-State is a pytree of residuals matching the gradient tree.
+All wire traffic routes through a ``Communicator`` (``comm.psum`` /
+``comm.all_gather``); the old ``(grads, axis, cfg)`` convention is still
+accepted via the shim layer.  State is a pytree of residuals matching
+the gradient tree.
 """
 from __future__ import annotations
 
@@ -21,7 +24,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from .api import CommConfig, all_gather, psum
+from .api import CommConfig
+from .bucketing import CommLike, as_communicator
 
 
 @dataclasses.dataclass
@@ -35,23 +39,19 @@ class CompressionState:
         return cls(residual=jax.tree.map(jnp.zeros_like, grads_like))
 
 
-def compressed_allreduce(grads: Any, axis, cfg: CommConfig,
+def compressed_allreduce(grads: Any, comm_or_axis: CommLike,
+                         cfg: Optional[CommConfig] = None, *,
                          scheme: str = "bf16",
                          state: Optional[CompressionState] = None,
                          mean: bool = True):
     """Returns (reduced_grads, new_state)."""
-    n = None
+    comm = as_communicator(comm_or_axis, cfg)
 
     def _mean(x):
-        nonlocal n
-        if not mean:
-            return x
-        if n is None:
-            n = jax.lax.axis_size(axis if isinstance(axis, str) else tuple(axis))
-        return x / n
+        return x / comm.size if mean else x
 
     if scheme == "none":
-        out = jax.tree.map(lambda g: _mean(psum(g, axis, cfg)), grads)
+        out = jax.tree.map(lambda g: _mean(comm.psum(g)), grads)
         return out, state
 
     use_ef = state is not None and state.residual is not None
@@ -61,7 +61,7 @@ def compressed_allreduce(grads: Any, axis, cfg: CommConfig,
         if scheme == "bf16":
             wire = gin.astype(jnp.bfloat16)
             err = gin - wire.astype(gin.dtype)
-            red = psum(wire, axis, cfg).astype(gin.dtype)
+            red = comm.psum(wire).astype(gin.dtype)
             return _mean(red), err
         if scheme == "int8":
             scale = jnp.maximum(jnp.abs(gin).max(), 1e-30) / 127.0
@@ -69,8 +69,8 @@ def compressed_allreduce(grads: Any, axis, cfg: CommConfig,
             deq = q.astype(gin.dtype) * scale
             err = gin - deq
             # gather int8 payloads + scales, combine locally
-            qs = all_gather(q[None], axis, cfg, gather_axis=0, tiled=True)
-            ss = all_gather(scale[None], axis, cfg, gather_axis=0, tiled=True)
+            qs = comm.all_gather(q[None], axis=0, tiled=True)
+            ss = comm.all_gather(scale[None], axis=0, tiled=True)
             red = jnp.einsum("n...,n->...", qs.astype(gin.dtype), ss)
             return _mean(red), err
         raise ValueError(f"unknown compression scheme '{scheme}'")

@@ -75,6 +75,7 @@ class SymmetricHeap:
         self.capacity = int(capacity_bytes)
         self._blocks: list[_Block] = [_Block(0, self.capacity, True)]
         self.registry: dict[str, SymHandle] = {}
+        self._scratch_seq = 0
 
     # ------------------------------------------------------------------
     # allocation — shmalloc / shmemalign / shfree (§4.1.1)
@@ -196,12 +197,12 @@ class SymmetricHeap:
         finally:
             self.free(h)
 
-    _scratch_seq = 0
-
-    @classmethod
-    def _scratch_counter(cls) -> int:
-        cls._scratch_seq += 1
-        return cls._scratch_seq
+    def _scratch_counter(self) -> int:
+        """Per-instance sequence so two heaps (or repeated test runs)
+        produce identical scratch names — class-level state would leak
+        counts across instances and break name determinism."""
+        self._scratch_seq += 1
+        return self._scratch_seq
 
     # ------------------------------------------------------------------
     def fingerprint(self) -> str:

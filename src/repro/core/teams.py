@@ -76,7 +76,8 @@ class Team:
     # --- trace-time queries (require being inside shard_map over axes) ---
     def size(self) -> int:
         """Number of PEs in the team (static int)."""
-        return jax.lax.axis_size(self.axes if len(self.axes) > 1 else self.axes[0])
+        from repro import compat
+        return compat.axis_size(self.axes if len(self.axes) > 1 else self.axes[0])
 
     def my_pe(self):
         """This PE's rank in the flattened team (traced scalar)."""

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro import comm, configs
+from repro import configs
 from repro.launch import roofline, shapes
 from repro.launch.mesh import make_ctx, make_production_mesh
 from repro.models import registry
@@ -54,11 +54,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "status": "skip", "why": why}
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    comm_cfg = comm.CommConfig(backend=backend)
     info0 = shapes.SHAPES[shape_name]
     if attn_block is None:
         attn_block = 8192 if (unroll and info0["seq"] >= 32768) else 1024
-    ctx = make_ctx(mesh, comm_cfg=comm_cfg, ce_mode=ce_mode,
+    ctx = make_ctx(mesh, backend=backend, ce_mode=ce_mode,
                    moe_dispatch=moe_dispatch, unroll=unroll,
                    attn_block_q=attn_block, attn_block_kv=attn_block,
                    ce_chunk=16384 if unroll else 4096)

@@ -9,33 +9,30 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
-def make_ctx(mesh, *, comm_cfg=None, **overrides):
-    """ParallelCtx derived from a mesh built by make_production_mesh
-    (or any mesh whose last axis is 'model')."""
+def make_ctx(mesh, *, backend: str = "xla", comm_cfg=None, **overrides):
+    """ParallelCtx (and its tp/dp communicators) derived from a mesh
+    built by make_production_mesh (or any mesh whose last axis is
+    'model').  ``backend`` selects the communicator transport; the
+    deprecated ``comm_cfg`` (a CommConfig) is still honoured."""
     import jax.numpy as jnp
 
-    from repro import comm as comm_mod
     from repro.parallel.ctx import ParallelCtx
 
     names = mesh.axis_names
-    tp_axis = names[-1]
-    dp_axes = tuple(n for n in names if n != tp_axis)
-    sizes = dict(zip(names, mesh.devices.shape))
-    dp_size = 1
-    for n in dp_axes:
-        dp_size *= sizes[n]
-    kw = dict(dp_axes=dp_axes, tp_axis=tp_axis, dp_size=dp_size,
-              tp_size=sizes[tp_axis],
-              comm=comm_cfg or comm_mod.CommConfig(),
-              sp=True, remat=True,
+    tp_axis = overrides.pop("tp_axis", names[-1])
+    dp_axes = overrides.pop("dp_axes",
+                            tuple(n for n in names if n != tp_axis))
+    kw = dict(backend=backend, comm=comm_cfg, sp=True, remat=True,
               param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
     kw.update(overrides)
-    return ParallelCtx(**kw)
+    return ParallelCtx.from_mesh(mesh, dp_axes=dp_axes, tp_axis=tp_axis,
+                                 **kw)

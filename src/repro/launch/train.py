@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm, configs
+from repro import compat, configs
 from repro.ckpt import Checkpointer
 from repro.data import SyntheticLM, batch_specs
 from repro.ft import StragglerPolicy
@@ -34,8 +34,7 @@ def build_mesh():
     for m in range(1, int(n ** 0.5) + 1):
         if n % m == 0:
             best = (n // m, m)
-    return jax.make_mesh(best, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh(best, ("data", "model"))
 
 
 def main():
@@ -58,19 +57,17 @@ def main():
         else configs.get(args.arch)
     mesh = build_mesh()
     dp, tp = mesh.devices.shape
-    ctx = ParallelCtx(dp_axes=("data",), tp_axis="model", dp_size=dp,
-                      tp_size=tp, sp=tp > 1, remat=True,
-                      comm=comm.CommConfig(backend=args.backend),
-                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    ctx = ParallelCtx.from_mesh(mesh, sp=tp > 1, remat=True,
+                                backend=args.backend,
+                                param_dtype=jnp.float32,
+                                compute_dtype=jnp.float32)
     api = registry.build(cfg)
     opt = AdamWConfig(lr=args.lr, zero=args.zero)
     sspecs = train_state_specs(cfg, ctx, api, opt)
 
     params = api.init(jax.random.PRNGKey(0), cfg, ctx)
-    opt_state = jax.shard_map(lambda p: adamw_init(p, ctx, opt), mesh=mesh,
-                              in_specs=(api.specs(cfg, ctx),),
-                              out_specs=sspecs["opt"],
-                              check_vma=False)(params)
+    opt_state = smap(lambda p: adamw_init(p, ctx, opt), mesh,
+                     (api.specs(cfg, ctx),), sspecs["opt"])(params)
     state = {"params": params, "opt": opt_state,
              "step": jnp.zeros((), jnp.int32)}
     ck = Checkpointer(args.ckpt_dir, keep=3)

@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import (ParallelCtx, grad_sync, sp_gather,
                                 sp_scatter)
 
@@ -30,7 +29,7 @@ from .flash import (blocked_attention, decode_attention,
 def _sync(w, ctx, scale=1.0):
     if ctx.tp_size == 1:
         return w
-    return grad_sync(w, ctx.tp_axis, scale)
+    return grad_sync(w, ctx.tp_comm, scale)
 
 
 def _ctx_varying(ctx):
@@ -143,8 +142,8 @@ def self_attention(p, x_sp, ctx: ParallelCtx, cfg, *, causal=True,
         q = apply_rope(q, qpos, cfg.rope_theta)
         k = apply_rope(k, qpos, cfg.rope_theta)
     if ctx.sp and ctx.tp_size > 1:
-        kf = comm.all_gather(k, ctx.tp_axis, ctx.comm, gather_axis=1)
-        vf = comm.all_gather(v, ctx.tp_axis, ctx.comm, gather_axis=1)
+        kf = ctx.tp_comm.all_gather(k, axis=1)
+        vf = ctx.tp_comm.all_gather(v, axis=1)
     else:
         kf, vf = k, v
     o = blocked_attention(q, kf, vf, causal=causal, window=window,
@@ -257,7 +256,7 @@ def decode_self_attention(p, x, cache, pos, ctx: ParallelCtx, cfg):
         cur = jnp.minimum(pos + 1, s_cache)
         o = decode_attention(q, ck, cv, cur)
         out = o.reshape(b, hpr * dh) @ p["wo"].astype(cd)
-        out = comm.psum(out, ctx.tp_axis, ctx.comm) if ctx.tp_size > 1 else out
+        out = ctx.tp_comm.psum(out)
         return out, {"k": ck, "v": cv}
 
     # --- ctx layout: sequence-sharded cache + flash-combine ---
@@ -290,8 +289,8 @@ def decode_self_attention(p, x, cache, pos, ctx: ParallelCtx, cfg):
         valid = jnp.broadcast_to(gpos[None] < cur, (b, sl))
         acc, m, l = decode_attention_partial(q, ck, cv, valid)
         combine = {
-            "pmax": lambda t: comm.pmax(t, ctx.tp_axis, ctx.comm),
-            "psum": lambda t: comm.psum(t, ctx.tp_axis, ctx.comm),
+            "pmax": ctx.tp_comm.pmax,
+            "psum": ctx.tp_comm.psum,
         }
         o = flash_combine(acc, m, l, combine).astype(cd)
         out = o.reshape(b, h * dh) @ p["wo"].astype(cd)
@@ -321,7 +320,7 @@ def decode_cross_attention(p, x, enc_kv, ctx: ParallelCtx, cfg):
         q = (xf @ p["wq"].astype(cd)).reshape(b, hpr, dh)
         o = decode_attention(q, k, v, k.shape[1])
         out = o.reshape(b, hpr * dh) @ p["wo"].astype(cd)
-        return comm.psum(out, ctx.tp_axis, ctx.comm) if ctx.tp_size > 1 else out
+        return ctx.tp_comm.psum(out)
     h = cfg.n_heads
     q = (xf @ p["wq"].astype(cd)).reshape(b, h, dh)
     o = decode_attention(q, k, v, k.shape[1])

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import ParallelCtx, sp_gather
 
 from .common import ninit
@@ -41,7 +40,7 @@ def embed_lookup(params, ids, ctx: ParallelCtx, reduce: bool = True):
     rows = jnp.take(table, jnp.clip(loc, 0, vloc - 1), axis=0)
     rows = jnp.where(ok[..., None], rows, 0).astype(ctx.compute_dtype)
     if reduce and ctx.tp_size > 1:
-        rows = comm.psum(rows, ctx.tp_axis, ctx.comm)
+        rows = ctx.tp_comm.psum(rows)
     return rows
 
 
@@ -50,17 +49,17 @@ def _chunk_ce(logits_f32, targets, vloc, rank, ctx):
     # stability shift is not a function of x for grad purposes; stop the
     # gradient BEFORE pmax (pmax has no JVP rule)
     mx_loc = jax.lax.stop_gradient(logits_f32.max(-1))
-    mx = comm.pmax(mx_loc, ctx.tp_axis, ctx.comm) if ctx.tp_size > 1 else mx_loc
+    mx = ctx.tp_comm.pmax(mx_loc)
     ssum = jnp.exp(logits_f32 - mx[:, None]).sum(-1)
     if ctx.tp_size > 1:
-        ssum = comm.psum(ssum, ctx.tp_axis, ctx.comm)
+        ssum = ctx.tp_comm.psum(ssum)
     loc = targets - rank * vloc
     ok = (loc >= 0) & (loc < vloc)
     tl = jnp.take_along_axis(logits_f32, jnp.clip(loc, 0, vloc - 1)[:, None],
                              axis=1)[:, 0]
     tl = jnp.where(ok, tl, 0.0)
     if ctx.tp_size > 1:
-        tl = comm.psum(tl, ctx.tp_axis, ctx.comm)
+        tl = ctx.tp_comm.psum(tl)
     return -(tl - mx - jnp.log(jnp.maximum(ssum, 1e-30)))
 
 
@@ -82,8 +81,7 @@ def lm_head_loss(params, x_sp, targets, ctx: ParallelCtx, cfg,
     tg = targets.reshape(b * t)
 
     if ctx.ce_mode == "gathered":
-        wt = comm.all_gather(table, ctx.tp_axis, ctx.comm, gather_axis=0,
-                             tiled=True) if ctx.tp_size > 1 else table
+        wt = ctx.tp_comm.all_gather(table, axis=0, tiled=True)
         logits = (xf @ wt.astype(ctx.compute_dtype).T).astype(jnp.float32)
         mx = logits.max(-1)
         lse = mx + jnp.log(jnp.exp(logits - mx[:, None]).sum(-1))
@@ -120,7 +118,7 @@ def tp_argmax(logits_loc, ctx: ParallelCtx):
     loc_val = jnp.take_along_axis(logits_loc, loc_idx[..., None], -1)[..., 0]
     if ctx.tp_size == 1:
         return loc_idx
-    glob_val = comm.pmax(loc_val, ctx.tp_axis, ctx.comm)
+    glob_val = ctx.tp_comm.pmax(loc_val)
     mine = (loc_val >= glob_val)
     cand = jnp.where(mine, loc_idx + ctx.tp_rank() * vloc, -1)
-    return comm.pmax(cand, ctx.tp_axis, ctx.comm)
+    return ctx.tp_comm.pmax(cand)

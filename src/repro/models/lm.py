@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import ParallelCtx, sp_gather, sp_scatter
 
 from . import attention as attn
@@ -296,8 +295,7 @@ def loss_fn(params, batch, ctx: ParallelCtx, cfg, for_grad: bool = False):
             loss = jnp.where(jax.lax.axis_index(ctx.tp_axis) == 0, loss, 0.0)
         return loss
     # display value: mean over DP replicas
-    if ctx.dp_size > 1:
-        loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+    loss = ctx.dp_comm.pmean(loss)
     return loss
 
 

@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import (ParallelCtx, grad_sync, sp_gather,
                                 sp_scatter)
 
@@ -210,15 +209,14 @@ def _moe_alltoall(p, x_sp, ctx, cfg, ep, e_loc):
     send = send.at[flat_e, lp].add(jnp.where(keep[:, None], xtk, 0))
     # (ep, cap, d) -> alltoall over expert-owner dim
     send = send.reshape(tp, e_loc * cap, d)
-    recv = comm.all_to_all(send, ctx.tp_axis, ctx.comm,
-                           split_axis=0, concat_axis=0)     # (tp, e_loc*cap, d)
+    recv = ctx.tp_comm.all_to_all(send, split_axis=0,
+                                  concat_axis=0)             # (tp, e_loc*cap, d)
     xb = recv.reshape(tp, e_loc, cap, d).transpose(1, 0, 2, 3) \
              .reshape(e_loc, tp * cap, d)
     yb = _expert_ffn(p["wu"], p["wg"], p["wd"], xb, cfg.act, cd)
     back = yb.reshape(e_loc, tp, cap, d).transpose(1, 0, 2, 3) \
              .reshape(tp, e_loc * cap, d)
-    ret = comm.all_to_all(back, ctx.tp_axis, ctx.comm,
-                          split_axis=0, concat_axis=0)
+    ret = ctx.tp_comm.all_to_all(back, split_axis=0, concat_axis=0)
     ret = ret.reshape(ep, cap, d)
     gathered = ret[flat_e, lp]
     gathered = jnp.where(keep[:, None], gathered, 0)

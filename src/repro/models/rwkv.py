@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import (ParallelCtx, grad_sync, sp_gather,
                                 sp_scatter)
 
@@ -196,8 +195,7 @@ def timemix_decode(p, x, state, ctx: ParallelCtx, cfg):
     y = _group_norm(y[:, None].astype(cd), p["gn_scale"], p["gn_bias"],
                     hl)[:, 0]
     out = (y * g) @ p["wo"].astype(cd)
-    if ctx.tp_size > 1:
-        out = comm.psum(out, ctx.tp_axis, ctx.comm)
+    out = ctx.tp_comm.psum(out)
     return out, {"S": S_new, "x_prev": x}
 
 
@@ -252,7 +250,6 @@ def chanmix_decode(p, x, state, ctx: ParallelCtx, cfg):
     mr = xf + dx * p["mu_r"].astype(cd)
     k = jnp.square(jax.nn.relu(mk @ p["wk"].astype(cd)))
     kv = k @ p["wv"].astype(cd)
-    if ctx.tp_size > 1:
-        kv = comm.psum(kv, ctx.tp_axis, ctx.comm)
+    kv = ctx.tp_comm.psum(kv)
     r = jax.nn.sigmoid(mr @ p["wr"].astype(cd))
     return r * kv, {"x_prev": x}

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import ParallelCtx, sp_gather, sp_scatter
 
 from .common import ninit, rmsnorm
@@ -72,8 +71,7 @@ def _sharded_rmsnorm(scale, y, ctx, d_total, eps=1e-6):
     mean of squares is a psum over the axis (matches the unsharded op)."""
     yf = y.astype(jnp.float32)
     ssq = jnp.sum(yf * yf, axis=-1, keepdims=True)
-    if ctx.tp_size > 1:
-        ssq = comm.psum(ssq, ctx.tp_axis, ctx.comm)
+    ssq = ctx.tp_comm.psum(ssq)
     out = yf * jax.lax.rsqrt(ssq / d_total + eps) * \
         scale.astype(jnp.float32)
     return out.astype(y.dtype)
@@ -206,8 +204,7 @@ def mamba_decode(prm, x, state, ctx: ParallelCtx, cfg):
     y = y.reshape(b, hl * p).astype(cd)
     y = _sharded_rmsnorm(prm["norm_scale"], y, ctx, d_in) * jax.nn.silu(z)
     out = y @ prm["wo"].astype(cd)
-    if ctx.tp_size > 1:
-        out = comm.psum(out, ctx.tp_axis, ctx.comm)
+    out = ctx.tp_comm.psum(out)
     return out, {"S": S, "conv_x": cx.astype(jnp.bfloat16),
                  "conv_B": cB.astype(jnp.bfloat16),
                  "conv_C": cC.astype(jnp.bfloat16)}

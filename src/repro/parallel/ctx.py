@@ -4,9 +4,22 @@ Axes:
   dp_axes  batch ("data",) single-pod, ("pod", "data") multi-pod
   tp_axis  tensor/expert/sequence parallelism ("model")
 
-Everything here is trace-time static; the ctx is threaded through every
-layer, and every collective the layers issue goes through ``repro.comm``
-with ``ctx.comm`` — the POSH/XLA backend switch.
+Everything here is trace-time static.  The ctx is threaded through every
+layer, and every collective the layers issue goes through one of two
+first-class communicators built once at construction:
+
+  ctx.tp_comm   team-bound to ``tp_axis``  — TP/SP/EP collectives
+  ctx.dp_comm   team-bound to ``dp_axes``  — gradient/loss reductions
+
+A communicator (``repro.comm.Communicator``) carries the backend
+("xla" native collectives | "posh" paper schedules), a size-aware
+dispatch table choosing each call's algorithm from payload bytes and
+team size (POSH §4.5.4), and per-op instrumentation — so layers just
+call ``ctx.tp_comm.psum(x)`` and the policy lives in one object.
+``backend=`` selects the transport for both; pass explicit ``tp_comm``/
+``dp_comm`` objects to mix transports or tune dispatch per team.  The
+deprecated ``comm=CommConfig(...)`` field is still accepted and sets
+the backend + a pinned dispatch table for one release.
 """
 from __future__ import annotations
 
@@ -17,7 +30,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro import comm
+from repro import comm, compat
+from repro.comm import Communicator, DispatchTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,7 +40,11 @@ class ParallelCtx:
     tp_axis: str = "model"
     dp_size: int = 1                    # static sizes (mesh-derived)
     tp_size: int = 1
-    comm: comm.CommConfig = comm.CommConfig()
+    backend: str = "xla"                # "xla" | "posh" | any registered
+    dispatch: DispatchTable = DispatchTable()
+    tp_comm: Optional[Communicator] = None   # built from the fields above
+    dp_comm: Optional[Communicator] = None   # when not given explicitly
+    comm: Optional[comm.CommConfig] = None   # DEPRECATED: sets backend
     sp: bool = True                     # sequence-parallel activations
     remat: bool = True                  # per-layer activation ckpt
     use_pallas: bool = False            # flash kernels (TPU only)
@@ -42,43 +60,103 @@ class ParallelCtx:
     attn_block_kv: int = 1024
     ce_chunk: int = 4096
 
+    def __post_init__(self):
+        backend, dispatch = self.backend, self.dispatch
+        if self.comm is not None:       # deprecated CommConfig path
+            if backend != "xla" and backend != self.comm.backend:
+                raise ValueError(
+                    f"conflicting backend={backend!r} and deprecated "
+                    f"comm=CommConfig(backend={self.comm.backend!r}); "
+                    f"pass one or the other")
+            backend = self.comm.backend
+            dispatch = self.comm.dispatch_table()
+            object.__setattr__(self, "backend", backend)
+            object.__setattr__(self, "dispatch", dispatch)
+            # consumed: clear so dataclasses.replace/with_ does not
+            # re-apply the stale config over later explicit overrides
+            object.__setattr__(self, "comm", None)
+        if self.tp_comm is None:
+            object.__setattr__(self, "tp_comm", comm.make_communicator(
+                self.tp_axis, size=self.tp_size, backend=backend,
+                dispatch=dispatch, name=f"tp:{backend}"))
+        if self.dp_comm is None:
+            object.__setattr__(self, "dp_comm", comm.make_communicator(
+                self.dp_axes, size=self.dp_size, backend=backend,
+                dispatch=dispatch, name=f"dp:{backend}"))
+
     # --- helpers ---------------------------------------------------
     def tp_rank(self):
-        if self.tp_size == 1:      # callable outside shard_map too
-            return jnp.zeros((), jnp.int32)
-        return jax.lax.axis_index(self.tp_axis)
+        return self.tp_comm.rank()
 
     def dp_rank(self):
-        if self.dp_size == 1:
-            return jnp.zeros((), jnp.int32)
-        ax = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
-        return jax.lax.axis_index(ax)
+        return self.dp_comm.rank()
+
+    # fields whose change invalidates each auto-built communicator —
+    # kept separate so e.g. with_(dp_size=1) preserves the tp_comm
+    # object (and the instrumentation already recorded on it)
+    _TP_COMM_FIELDS = frozenset({"tp_axis", "tp_size", "backend",
+                                 "dispatch", "comm"})
+    _DP_COMM_FIELDS = frozenset({"dp_axes", "dp_size", "backend",
+                                 "dispatch", "comm"})
 
     def with_(self, **kw) -> "ParallelCtx":
+        """dataclasses.replace that rebuilds a communicator when any
+        field it derives from changes (unless caller passes its own)."""
+        if kw.get("comm") is not None and "backend" not in kw:
+            # a fresh deprecated config should win like it does at
+            # construction, not conflict with the previously resolved
+            # backend riding through replace
+            kw["backend"] = kw["comm"].backend
+        if self._TP_COMM_FIELDS & kw.keys():
+            kw.setdefault("tp_comm", None)
+        if self._DP_COMM_FIELDS & kw.keys():
+            kw.setdefault("dp_comm", None)
         return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_mesh(cls, mesh, *, dp_axes=("data",), tp_axis="model",
+                  **kw) -> "ParallelCtx":
+        """Build a ctx (and its communicators) once from a mesh — sizes
+        are read from the mesh shape; explicit dp_size/tp_size (or any
+        other field) in ``kw`` still win."""
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_axes = (dp_axes,) if isinstance(dp_axes, str) else tuple(dp_axes)
+        dp = 1
+        for a in dp_axes:
+            dp *= shape[a]
+        derived = dict(dp_axes=dp_axes, tp_axis=tp_axis, dp_size=dp,
+                       tp_size=shape.get(tp_axis, 1))
+        derived.update(kw)
+        return cls(**derived)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def grad_sync(w, axis, scale=1.0):
-    """Identity in the forward pass; psum (× scale) of the cotangent over
-    ``axis`` in the backward pass.
+def grad_sync(w, sync_comm, scale=1.0):
+    """Identity in the forward pass; psum (× scale) of the cotangent
+    through ``sync_comm`` (a Communicator, e.g. ``ctx.tp_comm``) in the
+    backward pass.
 
     Manual-SPMD necessity: a REPLICATED weight applied to RANK-VARYING
     activations (sequence-parallel attention inputs, sliced receptance,
     per-rank-sliced KV heads) produces per-rank PARTIAL gradients with no
     forward collective whose transpose would sum them.  ``scale``
     corrects over-counting when several ranks compute identical grads
-    for the same slice (KV-head replication: scale = n_kv / tp)."""
+    for the same slice (KV-head replication: scale = n_kv / tp).
+
+    A bare axis name is still accepted (deprecated) and reduces with the
+    native psum."""
     return w
 
 
-def _grad_sync_fwd(w, axis, scale):
+def _grad_sync_fwd(w, sync_comm, scale):
     return w, None
 
 
-def _grad_sync_bwd(axis, scale, res, ct):
-    from repro import comm as _comm
-    out = jax.lax.psum(ct, axis)
+def _grad_sync_bwd(sync_comm, scale, res, ct):
+    if isinstance(sync_comm, Communicator):
+        out = jax.tree.map(sync_comm.psum, ct)
+    else:                               # deprecated: raw axis name
+        out = jax.lax.psum(ct, sync_comm)
     if scale != 1.0:
         out = jax.tree.map(lambda t: t * scale, out)
     return (out,)
@@ -92,8 +170,8 @@ def smap(fn, mesh, in_specs, out_specs):
     framework's masked POSH schedules and replicated-redundant compute
     (MoE routing, vocab-parallel CE) are invisible to the rep tracker.
     Numerical equivalence DP/TP vs single-device is covered by tests."""
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)
 
 
 def sp_gather(x: jax.Array, ctx: ParallelCtx, axis: int = 1) -> jax.Array:
@@ -101,8 +179,7 @@ def sp_gather(x: jax.Array, ctx: ParallelCtx, axis: int = 1) -> jax.Array:
     'g' operator; a no-op when SP is off or tp == 1."""
     if not ctx.sp or ctx.tp_size == 1:
         return x
-    return comm.all_gather(x, ctx.tp_axis, ctx.comm, gather_axis=axis,
-                           tiled=True)
+    return ctx.tp_comm.all_gather(x, axis=axis, tiled=True)
 
 
 def sp_scatter(x: jax.Array, ctx: ParallelCtx, axis: int = 1) -> jax.Array:
@@ -112,5 +189,5 @@ def sp_scatter(x: jax.Array, ctx: ParallelCtx, axis: int = 1) -> jax.Array:
     if ctx.tp_size == 1:
         return x
     if not ctx.sp:
-        return comm.psum(x, ctx.tp_axis, ctx.comm)
-    return comm.psum_scatter(x, ctx.tp_axis, ctx.comm, scatter_axis=axis)
+        return ctx.tp_comm.psum(x)
+    return ctx.tp_comm.psum_scatter(x, axis=axis)

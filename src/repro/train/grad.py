@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import ParallelCtx
 
 
@@ -40,22 +39,19 @@ def combine_grads(grads: Any, specs: Any, ctx: ParallelCtx, *,
         def tp_fix(g, s):
             if _spec_has_axis(s, ctx.tp_axis):
                 return g
-            return comm.psum(g, ctx.tp_axis, ctx.comm)
+            return ctx.tp_comm.psum(g)
         grads = jax.tree.map(tp_fix, grads, specs,
                              is_leaf=lambda x: isinstance(x, P))
     if ctx.dp_size > 1:
         if compress != "none":
-            grads, comp_state = comm.compressed_allreduce(
-                grads, ctx.dp_axes, ctx.comm, scheme=compress,
-                state=comp_state, mean=True)
+            grads, comp_state = ctx.dp_comm.compressed_psum(
+                grads, scheme=compress, state=comp_state, mean=True)
         elif bucket_bytes:
-            grads = comm.bucketed_allreduce(grads, ctx.dp_axes, ctx.comm,
-                                            bucket_bytes=bucket_bytes)
+            grads = ctx.dp_comm.bucketed_psum(grads,
+                                              bucket_bytes=bucket_bytes)
             grads = jax.tree.map(lambda g: g / ctx.dp_size, grads)
         else:
-            grads = jax.tree.map(
-                lambda g: comm.psum(g, ctx.dp_axes, ctx.comm) / ctx.dp_size,
-                grads)
+            grads = ctx.dp_comm.tree_pmean(grads)
     return grads, comp_state
 
 
@@ -66,10 +62,6 @@ def loss_and_grad(loss_fn, params, batch, ctx: ParallelCtx, cfg, specs,
     lmask, grads = jax.value_and_grad(
         lambda p: loss_fn(p, batch, ctx, cfg, for_grad=True))(params)
     # reconstruct the display value from the masked scalar
-    loss = lmask
-    if ctx.tp_size > 1:
-        loss = comm.psum(loss, ctx.tp_axis, ctx.comm)
-    if ctx.dp_size > 1:
-        loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+    loss = ctx.dp_comm.pmean(ctx.tp_comm.psum(lmask))
     grads, comp_state = combine_grads(grads, specs, ctx, **combine_kw)
     return loss, grads, comp_state

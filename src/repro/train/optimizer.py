@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import ParallelCtx
 
 
@@ -141,8 +140,7 @@ def adamw_update(params: Any, grads: Any, state: AdamWState,
     def upd1(p, g, m, v, master):
         gch = _chunk(g.astype(jnp.float32), dp)          # (dp, c)
         if dp > 1:
-            gmine = comm.psum_scatter(gch, ctx.dp_axes, ctx.comm,
-                                      scatter_axis=0)
+            gmine = ctx.dp_comm.psum_scatter(gch, axis=0)
             gmine = gmine.reshape(-1) / dp               # mean
         else:
             gmine = gch[0]
@@ -154,8 +152,7 @@ def adamw_update(params: Any, grads: Any, state: AdamWState,
                              + opt_cfg.weight_decay * master)
         new_master = master - step
         if dp > 1:
-            full = comm.all_gather(new_master, ctx.dp_axes, ctx.comm,
-                                   gather_axis=0, tiled=True)
+            full = ctx.dp_comm.all_gather(new_master, axis=0, tiled=True)
         else:
             full = new_master
         newp = full[: p.size].reshape(p.shape).astype(p.dtype)

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import comm
 from repro.parallel.ctx import ParallelCtx
 
 from .grad import combine_grads
@@ -84,17 +83,14 @@ def make_train_step(cfg, ctx: ParallelCtx, model_api,
                                      ctx.with_(dp_size=1), )
         if opt_cfg.zero == 0 and ctx.dp_size > 1:
             if compress != "none":
-                grads, _ = comm.compressed_allreduce(
-                    grads, ctx.dp_axes, ctx.comm, scheme=compress,
-                    mean=True)
+                grads, _ = ctx.dp_comm.compressed_psum(
+                    grads, scheme=compress, mean=True)
             elif bucket_bytes:
-                grads = comm.bucketed_allreduce(
-                    grads, ctx.dp_axes, ctx.comm, bucket_bytes=bucket_bytes)
+                grads = ctx.dp_comm.bucketed_psum(
+                    grads, bucket_bytes=bucket_bytes)
                 grads = jax.tree.map(lambda g: g / ctx.dp_size, grads)
             else:
-                grads = jax.tree.map(
-                    lambda g: comm.psum(g, ctx.dp_axes, ctx.comm)
-                    / ctx.dp_size, grads)
+                grads = ctx.dp_comm.tree_pmean(grads)
         # zero=1: adamw_update reduce-scatters over DP internally
 
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -109,11 +105,7 @@ def make_train_step(cfg, ctx: ParallelCtx, model_api,
         new_params, new_opt = adamw_update(params, grads, state["opt"],
                                            ctx, opt_cfg)
 
-        loss = lmask
-        if ctx.tp_size > 1:
-            loss = comm.psum(loss, ctx.tp_axis, ctx.comm)
-        if ctx.dp_size > 1:
-            loss = comm.psum(loss, ctx.dp_axes, ctx.comm) / ctx.dp_size
+        loss = ctx.dp_comm.pmean(ctx.tp_comm.psum(lmask))
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "step": state["step"] + 1}
         return ({"params": new_params, "opt": new_opt,

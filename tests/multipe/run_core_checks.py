@@ -12,17 +12,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro import core as posh
 
-mesh = jax.make_mesh((8,), ("pe",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("pe",))
 n = 8
 xs = jnp.arange(n, dtype=jnp.float32).reshape(n, 1) + 1.0
 
 
 def smap(fn, in_specs=P("pe"), out_specs=P("pe")):
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)
 
 
 def main():

@@ -15,15 +15,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import comm, configs
+from repro import compat, configs
 from repro.models import registry
 from repro.parallel.ctx import ParallelCtx, smap
 from repro.train.grad import loss_and_grad
 
-AX2 = (jax.sharding.AxisType.Auto,) * 2
-mesh1 = jax.make_mesh((1, 1), ("data", "model"), axis_types=AX2,
-                      devices=jax.devices()[:1])
-mesh4 = jax.make_mesh((2, 4), ("data", "model"), axis_types=AX2)
+mesh1 = compat.make_mesh((1, 1), ("data", "model"),
+                        devices=jax.devices()[:1])
+mesh4 = compat.make_mesh((2, 4), ("data", "model"))
 
 
 def batch_specs(batch):
@@ -37,7 +36,7 @@ def check(arch, backend, moe_dispatch="einsum"):
     ctx1 = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
                        param_dtype=jnp.float32, compute_dtype=jnp.float32)
     ctx4 = ParallelCtx(dp_size=2, tp_size=4, sp=True, remat=True,
-                       comm=comm.CommConfig(backend=backend),
+                       backend=backend,
                        param_dtype=jnp.float32, compute_dtype=jnp.float32,
                        moe_dispatch=moe_dispatch)
     params = api.init(jax.random.PRNGKey(0), cfg, ctx1)

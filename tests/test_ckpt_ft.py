@@ -123,8 +123,8 @@ def test_elastic_restore_across_mesh(tmp_path):
     save_checkpoint(str(tmp_path), 3, t)
     loaded, _ = load_checkpoint(str(tmp_path), t)
     # re-shard onto a different mesh layout
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((1,), ("model",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     arr = jax.device_put(loaded["w"], NamedSharding(mesh, P("model")))
     np.testing.assert_array_equal(np.asarray(arr), np.asarray(t["w"]))

@@ -41,10 +41,10 @@ def test_single_pe_degenerate():
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
     from repro import core as posh
 
-    mesh = jax.make_mesh((1,), ("pe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("pe",))
     x = jnp.arange(6.0).reshape(1, 6)
 
     def f(x):
@@ -53,8 +53,8 @@ def test_single_pe_degenerate():
         g = posh.fcollect(y, "pe", "ring")
         return g[0]
 
-    out = jax.shard_map(f, mesh=mesh, in_specs=P("pe"), out_specs=P("pe"),
-                        check_vma=False)(x)
+    out = compat.shard_map(f, mesh=mesh, in_specs=P("pe"),
+                           out_specs=P("pe"), check_vma=False)(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x))
 
 

@@ -1,0 +1,360 @@
+"""Communicator API: dispatch-table selection, instrumentation,
+registry, error paths (in-process), and xla/posh numerical parity over
+a real 8-PE mesh (subprocess, like the other multi-PE suites)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.comm import Communicator, DispatchTable, make_communicator
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ----------------------------------------------------------------------
+# multi-PE parity (subprocess: main process must keep 1 device)
+# ----------------------------------------------------------------------
+def test_comm_parity_8pe():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "multipe", "run_comm_parity.py")],
+        capture_output=True, text=True, env=env, timeout=2400)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "COMM_PARITY_PASS" in r.stdout
+
+
+# ----------------------------------------------------------------------
+# dispatch table: size thresholds at the documented boundaries
+# ----------------------------------------------------------------------
+def test_dispatch_thresholds():
+    t = DispatchTable()
+    n = 8
+    # at the boundary -> eager; one byte over -> chunked
+    assert t.choose("psum", t.allreduce_small_bytes, n) == t.allreduce_eager
+    assert t.choose("psum", t.allreduce_small_bytes + 1, n) \
+        == t.allreduce_chunked
+    assert t.choose("all_gather", t.allgather_small_bytes, n) \
+        == t.allgather_eager
+    assert t.choose("all_gather", t.allgather_small_bytes + 1, n) \
+        == t.allgather_chunked
+    # pmax shares the allreduce rule
+    assert t.choose("pmax", 1, n) == t.allreduce_eager
+    # tiny teams are always eager, regardless of bytes
+    huge = t.allreduce_small_bytes * 100
+    assert t.choose("psum", huge, 2) == t.allreduce_eager
+    assert t.choose("all_gather", huge, 2) == t.allgather_eager
+    # recursive doubling degrades honestly on non-power-of-two teams —
+    # to the chunked ring (what repro.core itself falls back to), even
+    # when the table pins rd everywhere
+    assert t.choose("all_gather", 1, 6) == t.allgather_chunked
+    assert t.choose("all_gather", 1, 8) == "recursive_doubling"
+    pinned = DispatchTable.fixed(allreduce="recursive_doubling",
+                                 allgather="recursive_doubling")
+    assert pinned.choose("psum", 1 << 20, 6) == "ring"
+    assert pinned.choose("all_gather", 1 << 20, 6) == "ring"
+    assert pinned.choose("psum", 1 << 20, 8) == "recursive_doubling"
+    # un-sized ops are fixed
+    assert t.choose("psum_scatter", 1, n) == "ring"
+    assert t.choose("all_to_all", 1, n) == "pairwise"
+    assert t.choose("pbroadcast", 1, n) == "binomial"
+    with pytest.raises(KeyError):
+        t.choose("not_an_op", 1, n)
+
+
+def test_dispatch_fixed_ignores_size():
+    t = DispatchTable.fixed(allreduce="ring", allgather="ring")
+    assert t.choose("psum", 1, 8) == "ring"
+    assert t.choose("psum", 1 << 30, 8) == "ring"
+    assert t.choose("all_gather", 1, 8) == "ring"
+
+
+def test_commconfig_dispatch_table_roundtrip():
+    cfg = comm.CommConfig(backend="posh", allreduce_algo="tree",
+                          allgather_algo="recursive_doubling")
+    t = cfg.dispatch_table()
+    assert t.choose("psum", 1 << 30, 8) == "tree"
+    assert t.choose("all_gather", 1 << 30, 8) == "recursive_doubling"
+
+
+def test_tuned_from_bench():
+    bench = {"results": [
+        {"op": "psum", "algo": "tree", "nbytes": 1024, "us_per_call": 10.0},
+        {"op": "psum", "algo": "ring", "nbytes": 1024, "us_per_call": 20.0},
+        {"op": "psum", "algo": "tree", "nbytes": 1 << 20,
+         "us_per_call": 900.0},
+        {"op": "psum", "algo": "ring", "nbytes": 1 << 20,
+         "us_per_call": 300.0},
+    ]}
+    t = DispatchTable.tuned_from_bench(bench)
+    assert t.allreduce_small_bytes == 1024
+    assert t.choose("psum", 1024, 8) == "tree"
+    assert t.choose("psum", 1 << 20, 8) == "ring"
+    # no psum rows with both algos -> default kept
+    assert t.allgather_small_bytes == DispatchTable().allgather_small_bytes
+
+
+def test_tuned_from_bench_eager_never_wins():
+    bench = {"results": [
+        {"op": "psum", "algo": "tree", "nbytes": 256, "us_per_call": 50.0},
+        {"op": "psum", "algo": "ring", "nbytes": 256, "us_per_call": 10.0},
+        {"op": "psum", "algo": "tree", "nbytes": 65536,
+         "us_per_call": 500.0},
+        {"op": "psum", "algo": "ring", "nbytes": 65536,
+         "us_per_call": 100.0},
+    ]}
+    t = DispatchTable.tuned_from_bench(bench)
+    assert t.allreduce_small_bytes == 0       # measurements say: always ring
+    assert t.choose("psum", 1, 8) == "ring"
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+def test_backend_registry():
+    assert set(comm.available_backends()) >= {"xla", "posh"}
+    with pytest.raises(ValueError):
+        comm.get_backend("no_such_backend")
+    with pytest.raises(ValueError):
+        Communicator("model", size=2, backend="no_such_backend")
+
+    class EchoBackend(comm.CommBackend):
+        name = "echo"
+
+        def psum(self, x, team, algo, heap=None):
+            return x
+
+    comm.register_backend("echo", EchoBackend, overwrite=True)
+    c = Communicator("model", size=4, backend="echo")
+    # direct backend dispatch (no mesh needed: never touches lax)
+    assert c.backend.psum(1.5, c.team, "whatever") == 1.5
+    with pytest.raises(ValueError):
+        comm.register_backend("echo", EchoBackend)   # duplicate, no overwrite
+
+
+# ----------------------------------------------------------------------
+# error paths (static checks run before any collective is traced)
+# ----------------------------------------------------------------------
+def test_all_to_all_non_divisible_raises():
+    c = Communicator("model", size=4, backend="posh")
+    with pytest.raises(ValueError, match="not divisible"):
+        c.all_to_all(jnp.ones((6, 3)), split_axis=0, concat_axis=0)
+    cx = Communicator("model", size=4, backend="xla")
+    with pytest.raises(ValueError, match="not divisible"):
+        cx.all_to_all(jnp.ones((7, 2)), split_axis=0, concat_axis=1)
+
+
+def test_psum_scatter_non_divisible_raises():
+    c = Communicator("model", size=4, backend="posh")
+    with pytest.raises(ValueError, match="not divisible"):
+        c.psum_scatter(jnp.ones((6, 3)), axis=0)
+
+
+def test_broadcast_root_range():
+    c = Communicator("model", size=4, backend="posh")
+    with pytest.raises(ValueError, match="out of range"):
+        c.pbroadcast(jnp.ones(3), root=4)
+
+
+def test_bad_team_size():
+    with pytest.raises(ValueError):
+        Communicator("model", size=0)
+
+
+# ----------------------------------------------------------------------
+# degenerate (1-PE) semantics + instrumentation
+# ----------------------------------------------------------------------
+def test_identity_shortcut_shapes_and_stats():
+    c = make_communicator("model", size=1, backend="posh")
+    x = jnp.arange(12.0).reshape(3, 4)
+    np.testing.assert_array_equal(np.asarray(c.psum(x)), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(c.pmean(x)), np.asarray(x))
+    assert c.all_gather(x, axis=0, tiled=True).shape == (3, 4)
+    assert c.all_gather(x, axis=0, tiled=False).shape == (1, 3, 4)
+    assert c.all_gather(x, axis=1, tiled=False).shape == (3, 1, 4)
+    assert c.psum_scatter(x, axis=0).shape == (3, 4)
+    assert c.all_to_all(x, split_axis=0, concat_axis=1).shape == (3, 4)
+    st = c.stats()
+    assert st["psum"]["calls"] == 2          # psum + pmean
+    assert st["all_gather"]["calls"] == 3
+    assert st["psum"]["algos"] == {"identity": 2}
+    assert st["psum"]["bytes"] == 2 * x.size * 4
+    c.reset_stats()
+    assert c.stats() == {}
+
+
+def test_stats_is_isolated_copy():
+    c = make_communicator("model", size=1)
+    c.psum(jnp.ones(3))
+    st = c.stats()
+    st["psum"]["calls"] = 999
+    assert c.stats()["psum"]["calls"] == 1
+
+
+# ----------------------------------------------------------------------
+# hashing / equality (static part only -> usable as nondiff_argnums)
+# ----------------------------------------------------------------------
+def test_communicator_hash_eq():
+    a = Communicator("model", size=4, backend="posh")
+    b = Communicator("model", size=4, backend="posh")
+    assert a == b and hash(a) == hash(b)
+    a._record("psum", 4, "tree")   # stats divergence must not affect eq
+    assert a == b and hash(a) == hash(b)
+    assert a != Communicator("model", size=8, backend="posh")
+    assert a != Communicator("model", size=4, backend="xla")
+    assert a != Communicator("data", size=4, backend="posh")
+    # the heap participates by identity: its allocations are baked into
+    # the traced program, so heap-distinct communicators must not share
+    # a jit/custom_vjp cache entry
+    from repro.core import SymmetricHeap
+    h1 = SymmetricHeap(("model",))
+    h2 = SymmetricHeap(("model",))
+    ah1 = Communicator("model", size=4, backend="posh", heap=h1)
+    assert ah1 != Communicator("model", size=4, backend="posh", heap=h2)
+    assert ah1 == Communicator("model", size=4, backend="posh", heap=h1)
+    assert ah1 != a
+
+
+def test_pbroadcast_accepts_pytrees():
+    c = make_communicator("model", size=1, backend="posh")
+    tree = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2))}
+    out = c.pbroadcast(tree, root=0)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+
+
+# ----------------------------------------------------------------------
+# ParallelCtx threading
+# ----------------------------------------------------------------------
+def test_ctx_builds_communicators():
+    from repro.parallel.ctx import ParallelCtx
+    ctx = ParallelCtx(dp_size=1, tp_size=1, backend="posh")
+    assert ctx.tp_comm.backend_name == "posh"
+    assert ctx.dp_comm.team.axes == ("data",)
+    # with_ rebuilds communicators when their inputs change
+    ctx2 = ctx.with_(tp_size=4, backend="xla")
+    assert ctx2.tp_comm.size == 4 and ctx2.tp_comm.backend_name == "xla"
+    # ...and keeps them when unrelated fields change
+    ctx3 = ctx.with_(remat=False)
+    assert ctx3.tp_comm is ctx.tp_comm
+    # per-team invalidation: changing dp_size keeps the SAME tp_comm
+    # object (so instrumentation recorded on it is not lost) but
+    # rebuilds dp_comm
+    ctx5 = ctx.with_(dp_size=1)
+    assert ctx5.tp_comm is ctx.tp_comm
+    assert ctx5.dp_comm is not ctx.dp_comm
+    # deprecated CommConfig path still works and pins the dispatch
+    ctx4 = ParallelCtx(comm=comm.CommConfig(backend="posh"))
+    assert ctx4.backend == "posh"
+    assert ctx4.dispatch is ctx4.tp_comm.dispatch
+    assert ctx4.tp_comm.dispatch.choose("psum", 1 << 30, 8) == "ring"
+    # conflicting explicit backend + CommConfig is an error, not silent
+    with pytest.raises(ValueError, match="conflicting"):
+        ParallelCtx(backend="posh", comm=comm.CommConfig(backend="xla"))
+
+
+def test_ctx_from_mesh_overrides(monkeypatch):
+    from repro.parallel.ctx import ParallelCtx
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (2, 4)
+
+    ctx = ParallelCtx.from_mesh(FakeMesh, backend="posh")
+    assert (ctx.dp_size, ctx.tp_size) == (2, 4)
+    # explicit sizes still win over the mesh-derived ones
+    ctx = ParallelCtx.from_mesh(FakeMesh, dp_size=1, tp_size=1)
+    assert (ctx.dp_size, ctx.tp_size) == (1, 1)
+
+
+def test_ctx_deprecated_comm_is_consumed_not_sticky():
+    """comm=CommConfig is converted at construction and cleared, so
+    later with_() overrides take effect instead of the stale config
+    winning (or spuriously conflicting) through dataclasses.replace."""
+    from repro.parallel.ctx import ParallelCtx
+    ctx = ParallelCtx(comm=comm.CommConfig(backend="posh"))
+    assert ctx.backend == "posh" and ctx.comm is None
+    ctx2 = ctx.with_(backend="xla")
+    assert ctx2.backend == "xla" and ctx2.tp_comm.backend_name == "xla"
+    ctx3 = ctx.with_(comm=comm.CommConfig(backend="xla"))
+    assert ctx3.backend == "xla" and ctx3.tp_comm.backend_name == "xla"
+
+
+def test_pmean_and_layout_ops_accept_pytrees():
+    """pmean/all_gather/psum_scatter/all_to_all are pytree-polymorphic
+    like the lax collectives the shims replaced (pmean's division used
+    to TypeError on a dict once size > 1)."""
+    c = Communicator("model", size=4, backend="posh")
+    tree = {"a": jnp.ones((8, 2)), "b": jnp.ones((4,))}
+    # static-shape checks run per leaf, before any collective traces
+    with pytest.raises(ValueError, match="not divisible"):
+        c.psum_scatter({"bad": jnp.ones((6, 2))}, axis=0)
+    with pytest.raises(ValueError, match="not divisible"):
+        c.all_to_all({"bad": jnp.ones((6, 2))}, split_axis=0, concat_axis=0)
+    c1 = Communicator("model", size=1, backend="posh")
+    out = c1.pmean(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert c1.all_gather(tree, axis=0, tiled=False)["a"].shape == (1, 8, 2)
+    assert c1.psum_scatter(tree, axis=0)["b"].shape == (4,)
+    assert c1.all_to_all(tree, split_axis=0, concat_axis=0)["a"].shape \
+        == (8, 2)
+
+
+def test_make_ctx_overrides():
+    """make_ctx honours dp_size/tp_size/dp_axes/tp_axis overrides
+    (used to TypeError with 'multiple values for keyword')."""
+    from repro.launch.mesh import make_ctx
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (2, 4)
+
+    ctx = make_ctx(FakeMesh, dp_size=8, tp_axis="model")
+    assert ctx.dp_size == 8 and ctx.tp_size == 4
+    ctx = make_ctx(FakeMesh, dp_axes=("data",))
+    assert ctx.dp_axes == ("data",)
+
+
+def test_psum_pmax_accept_pytrees():
+    c = make_communicator("model", size=1, backend="xla")
+    tree = {"a": jnp.ones((3,)), "b": (jnp.ones((2, 2)), jnp.ones(()))}
+    out = c.psum(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert c.stats()["psum"]["calls"] == 3    # one record per leaf
+    assert c.pmax(tree)["a"].shape == (3,)
+    # the deprecated free functions accepted pytrees (lax.psum does) —
+    # the shim must keep doing so
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    mesh = compat.make_mesh((1,), ("data",))
+    specs = jax.tree.map(lambda _: P(), tree)
+    out = compat.shard_map(lambda t: comm.psum(t, "data", comm.CommConfig()),
+                           mesh=mesh, in_specs=(specs,), out_specs=specs,
+                           check_vma=False)(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+
+
+def test_heap_scratch_deterministic_across_instances():
+    """Per-instance scratch counters: two heaps built the same way hand
+    out identical scratch names (class-level state used to leak)."""
+    from repro.core.heap import SymmetricHeap
+    names = []
+    for _ in range(2):
+        h = SymmetricHeap(("data", "model"), capacity_bytes=1 << 20)
+        with h.scratch((4, 4), jnp.float32) as s1:
+            with h.scratch((2,), jnp.float32) as s2:
+                names.append((s1.name, s2.name))
+        assert h.fingerprint() == SymmetricHeap(
+            ("data", "model"), capacity_bytes=1 << 20).fingerprint()
+    assert names[0] == names[1]

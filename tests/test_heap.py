@@ -2,6 +2,8 @@
 properties (Fact 1, Corollary 1, Lemma 1)."""
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.models import registry
 from repro.parallel.ctx import ParallelCtx, smap
 
@@ -20,8 +20,7 @@ CTX = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def _batch(cfg, b=2):

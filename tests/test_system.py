@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import comm, configs
+from repro import compat, configs
 from repro.ckpt import Checkpointer
 from repro.data import SyntheticLM
 from repro.ft import run_with_restarts
@@ -16,12 +16,11 @@ from repro.train.step import make_train_step, train_state_specs
 
 CTX = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
                   param_dtype=jnp.float32, compute_dtype=jnp.float32,
-                  comm=comm.CommConfig(backend="posh"))
+                  backend="posh")
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def test_e2e_train_posh_backend_with_restart(tmp_path):
@@ -41,10 +40,9 @@ def test_e2e_train_posh_backend_with_restart(tmp_path):
 
     def init_state(attempt):
         params = api.init(jax.random.PRNGKey(0), cfg, CTX)
-        opt_state = jax.shard_map(
-            lambda p: adamw_init(p, CTX, opt), mesh=mesh,
-            in_specs=(api.specs(cfg, CTX),), out_specs=sspecs["opt"],
-            check_vma=False)(params)
+        opt_state = smap(
+            lambda p: adamw_init(p, CTX, opt), mesh,
+            (api.specs(cfg, CTX),), sspecs["opt"])(params)
         return {"params": params, "opt": opt_state,
                 "step": jnp.zeros((), jnp.int32)}
 

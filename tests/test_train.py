@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro import comm, configs
+from repro import comm, compat, configs
 from repro.data import SyntheticLM
 from repro.models import registry
 from repro.parallel.ctx import ParallelCtx, smap
@@ -18,8 +18,7 @@ CTX = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=True,
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def _setup(arch="qwen3-8b", zero=0, microbatches=1):
@@ -30,11 +29,10 @@ def _setup(arch="qwen3-8b", zero=0, microbatches=1):
     from repro.train.optimizer import adamw_init
     mesh = _mesh()
     state = {"params": params,
-             "opt": jax.shard_map(
-                 lambda p: adamw_init(p, CTX, opt), mesh=mesh,
-                 in_specs=(api.specs(cfg, CTX),),
-                 out_specs=train_state_specs(cfg, CTX, api, opt)["opt"],
-                 check_vma=False)(params),
+             "opt": smap(
+                 lambda p: adamw_init(p, CTX, opt), mesh,
+                 (api.specs(cfg, CTX),),
+                 train_state_specs(cfg, CTX, api, opt)["opt"])(params),
              "step": jnp.zeros((), jnp.int32)}
     step = make_train_step(cfg, CTX, api, opt, microbatches=microbatches)
     sspecs = train_state_specs(cfg, CTX, api, opt)
@@ -96,10 +94,10 @@ def test_bucketed_allreduce_identity_on_1dev():
         return comm.bucketed_allreduce(t, "data", comm.CommConfig(),
                                        bucket_bytes=128)
 
-    out = jax.shard_map(run, mesh=mesh,
-                        in_specs=(jax.tree.map(lambda _: P(), tree),),
-                        out_specs=jax.tree.map(lambda _: P(), tree),
-                        check_vma=False)(tree)
+    out = compat.shard_map(run, mesh=mesh,
+                           in_specs=(jax.tree.map(lambda _: P(), tree),),
+                           out_specs=jax.tree.map(lambda _: P(), tree),
+                           check_vma=False)(tree)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
@@ -113,7 +111,7 @@ def test_compression_bf16_and_ef():
                                             scheme="bf16", mean=True)
         return out
 
-    out = jax.shard_map(run, mesh=mesh, in_specs=(
+    out = compat.shard_map(run, mesh=mesh, in_specs=(
         {"w": P()},), out_specs={"w": P()}, check_vma=False)(g)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),
                                atol=4e-3)
@@ -129,9 +127,9 @@ def test_compression_bf16_and_ef():
                                              mean=True)
         return out, st2.residual
 
-    f = jax.shard_map(run_ef, mesh=mesh,
-                      in_specs=({"w": P()}, {"w": P()}),
-                      out_specs=({"w": P()}, {"w": P()}), check_vma=False)
+    f = compat.shard_map(run_ef, mesh=mesh,
+                         in_specs=({"w": P()}, {"w": P()}),
+                         out_specs=({"w": P()}, {"w": P()}), check_vma=False)
     res = st.residual
     for _ in range(20):
         out, res = f(g, res)
