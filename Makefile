@@ -1,0 +1,23 @@
+# Single gate for every PR: `make verify` (tier-1 pytest + the
+# tests/multipe/ workers under 8 fake CPU PEs — see scripts/verify.sh).
+.PHONY: verify verify-fast test multipe bench
+
+verify:
+	scripts/verify.sh
+
+# tier-1 only (the multipe suites still run via their pytest wrappers)
+verify-fast:
+	scripts/verify.sh --fast
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+multipe:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	sh -c 'for s in tests/multipe/run_*.py; do echo "== $$s =="; python "$$s" || exit 1; done'
+
+# refresh the repo-root BENCH_comm.json (quick sweep)
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	python benchmarks/comm_microbench.py --quick

@@ -2,13 +2,23 @@
 
 Sweeps message sizes per collective op across the available algorithms
 (posh eager, posh chunked, native xla) on 8 fake CPU PEs and writes
-``BENCH_comm.json`` next to this file:
+``BENCH_comm.json`` at the REPO ROOT (the bench trajectory the driver
+tracks):
 
     {"meta": {...},
      "results": [{"op", "algo", "nbytes", "elems", "us_per_call",
                   "bytes_per_s"}, ...],
      "chosen": [{"op", "nbytes", "algo"}, ...],          # dispatch table
      "tuned_thresholds": {"allreduce_small_bytes": ...}} # measured
+
+Beyond the schedule sweep it also covers the transport matrix:
+
+  * backend rows (``algo = "backend:<name>"``): the same collective
+    issued through each registered Communicator backend — xla, posh,
+    and the Pallas symm_copy transport — so backend overhead is a
+    measured quantity, not folklore;
+  * copy-engine rows (``op = "symm_copy"``, ``algo = <variant>``): the
+    §4.4 memcpy-variant sweep (stock / auto / each VMEM tiling).
 
 ``DispatchTable``'s default thresholds cite this file: re-run after
 touching the schedules and feed the result back with
@@ -18,6 +28,9 @@ touching the schedules and feed the result back with
 
 The sweep re-execs itself in a subprocess so the parent process (and
 any test harness importing this module) never locks jax to 8 devices.
+On CPU the Pallas rows run the interpreter, so backend/copy sweeps are
+capped at 64 KiB — interpret timings measure the staging structure, not
+kernel throughput (meta records the cap).
 """
 import argparse
 import json
@@ -28,10 +41,11 @@ import time
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 ROOT = os.path.dirname(HERE)
-OUT = os.path.join(HERE, "BENCH_comm.json")
+OUT = os.path.join(ROOT, "BENCH_comm.json")
 
 SIZES_FULL = [256, 4096, 65536, 1048576]       # bytes per PE
 SIZES_QUICK = [4096, 262144]
+PALLAS_CAP = 65536        # interpret-mode ceiling for backend/copy rows
 
 N = 8
 
@@ -102,6 +116,48 @@ def _worker(sizes):
                 print(f"  {op:<13} {algo:<19} {elems*4:>9}B "
                       f"{dt*1e6:>10.1f}us", flush=True)
 
+    # --- transport matrix: each registered backend on the hot ops ----
+    backend_sizes = [nb for nb in sizes if nb <= PALLAS_CAP] or [sizes[0]]
+    for backend in C.available_backends():
+        comm = C.make_communicator("pe", size=N, backend=backend)
+        bodies = {
+            "psum": (lambda v: comm.psum(v), P("pe")),
+            "all_gather": (lambda v: comm.all_gather(v, axis=0),
+                           P("pe", None)),
+            "psum_scatter": (lambda v: comm.psum_scatter(
+                v.reshape(N, -1), axis=0), P("pe")),
+        }
+        for op, (body, ospec) in bodies.items():
+            for nbytes in backend_sizes:
+                elems = max(nbytes // 4, N)
+                elems = (elems // N) * N or N
+                x = jnp.arange(N * elems, dtype=jnp.float32).reshape(N, elems)
+                fn = jax.jit(smap(body, out_specs=ospec))
+                dt = timeit(fn, x)
+                results.append(
+                    {"op": op, "algo": f"backend:{backend}",
+                     "nbytes": elems * 4, "elems": elems,
+                     "us_per_call": round(dt * 1e6, 2),
+                     "bytes_per_s": round(elems * 4 / dt, 0)})
+                print(f"  {op:<13} backend:{backend:<11} {elems*4:>9}B "
+                      f"{dt*1e6:>10.1f}us", flush=True)
+
+    # --- the §4.4 copy-engine variant sweep (single device) ----------
+    from repro.kernels import ops as kops
+    copy_sizes = [nb for nb in sizes if nb <= PALLAS_CAP] or [sizes[0]]
+    for variant in kops.COPY_VARIANTS:
+        for nbytes in copy_sizes:
+            elems = max(nbytes // 4, 8)
+            x = jnp.arange(elems, dtype=jnp.float32)
+            fn = lambda v: kops.symm_copy(v, variant)
+            dt = timeit(fn, x)
+            results.append(
+                {"op": "symm_copy", "algo": variant, "nbytes": elems * 4,
+                 "elems": elems, "us_per_call": round(dt * 1e6, 2),
+                 "bytes_per_s": round(elems * 4 / dt, 0)})
+            print(f"  {'symm_copy':<13} {variant:<19} {elems*4:>9}B "
+                  f"{dt*1e6:>10.1f}us", flush=True)
+
     # what the default dispatch table picks at each size
     table = C.DispatchTable()
     chosen = [{"op": op, "nbytes": nb, "algo": table.choose(op, nb, N)}
@@ -116,6 +172,9 @@ def _worker(sizes):
         "allgather_small_bytes": tuned.allgather_small_bytes,
     }
     bench["meta"] = {"n_pe": N, "device": "cpu-sim",
+                     "backends": list(C.available_backends()),
+                     "copy_variants": list(kops.COPY_VARIANTS),
+                     "pallas_interpret_cap_bytes": PALLAS_CAP,
                      "defaults": {
                          "allreduce_small_bytes":
                              C.DispatchTable().allreduce_small_bytes,

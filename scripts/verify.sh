@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# The PR gate: every change runs this exact sequence (also `make verify`).
+#
+#   1. tier-1 pytest (the suite the driver enforces), then
+#   2. each tests/multipe/run_*.py worker under 8 fake CPU PEs, run
+#      directly so their full stdout is visible.  During phase 1 the
+#      pytest subprocess wrappers for those same workers are skipped
+#      (REPRO_MULTIPE_EXPLICIT) so each suite runs exactly once.
+#
+# Usage: scripts/verify.sh [--fast]
+#   --fast: tier-1 only; the multipe workers then run through their
+#   normal pytest wrappers instead of the explicit loop.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+[[ ${FAST} == 0 ]] && export REPRO_MULTIPE_EXPLICIT=1
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ ${FAST} == 0 ]]; then
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8"
+    for script in tests/multipe/run_*.py; do
+        echo "== multipe: ${script} =="
+        python "${script}"
+    done
+fi
+
+echo "VERIFY_PASS"

@@ -4,6 +4,7 @@ first-class ``Communicator``.
 A ``Communicator`` is a team-bound collective endpoint: it binds an
 ordered set of mesh axes (the team), a backend from the registry
 ("xla" native collectives | "posh" the paper's put/get schedules |
+"pallas" posh schedules over the Pallas symm_copy payload transport |
 anything added via ``register_backend``), a ``DispatchTable`` that
 picks each call's algorithm from (op, payload bytes, team size) — the
 paper's §4.5.4 tuned selection, per call instead of per run — and
@@ -25,8 +26,11 @@ Selection is trace-time — the chosen algorithm specializes the program,
 so there are zero run-time branches.
 
 The pre-Communicator free functions (``psum(x, axis, cfg)``, ...) and
-``CommConfig`` remain as deprecated shims for one release; they build a
-pinned-dispatch communicator per call and delegate.
+``CommConfig`` remain as deprecated shims; they build a pinned-dispatch
+communicator per call and delegate.  Removal timeline: the shims were
+deprecated when the Communicator landed (PR 1) and are scheduled for
+deletion two PRs after the ordered pipeline (PR 2), i.e. once external
+examples have migrated — grep for ``CommConfig`` before deleting.
 """
 from .api import (CommConfig, all_gather, all_to_all, axis_index, axis_size,
                   pbroadcast, pmax, psum, psum_scatter)
@@ -35,11 +39,15 @@ from .communicator import (CommBackend, Communicator, DispatchTable,
                            available_backends, get_backend,
                            make_communicator, register_backend)
 from .compress import CompressionState, compressed_allreduce
+from .pallas_backend import PallasBackend
+
+register_backend("pallas", PallasBackend, overwrite=True)
 
 __all__ = [
     # first-class API
     "Communicator", "DispatchTable", "make_communicator", "as_communicator",
-    "CommBackend", "register_backend", "get_backend", "available_backends",
+    "CommBackend", "PallasBackend",
+    "register_backend", "get_backend", "available_backends",
     # tree-level reductions
     "bucketed_allreduce", "tree_allreduce",
     "compressed_allreduce", "CompressionState",

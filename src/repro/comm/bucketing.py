@@ -44,10 +44,53 @@ def as_communicator(comm_or_axis: CommLike,
     return _shim_comm(comm_or_axis, cfg or CommConfig())
 
 
+def leaf_metas(leaves):
+    """(shape, dtype, size) per leaf — the packing metadata both the
+    blocking and overlapped reduction paths derive buckets from."""
+    return [(l.shape, l.dtype, l.size) for l in leaves]
+
+
 def _flatten_with_meta(tree):
     leaves, treedef = jax.tree.flatten(tree)
-    metas = [(l.shape, l.dtype, l.size) for l in leaves]
-    return leaves, treedef, metas
+    return leaves, treedef, leaf_metas(leaves)
+
+
+def unpack_bucket(out, bucket, metas, reduced) -> None:
+    """Split a reduced flat bucket back into its leaves (into
+    ``reduced`` at the bucket's indices).  Shared by the blocking and
+    overlapped paths so their pack/unpack cannot drift — the
+    bit-identity the ordering suite asserts depends on it."""
+    off = 0
+    for i in bucket:
+        shape, _, size = metas[i]
+        reduced[i] = out[off:off + size].reshape(shape)
+        off += size
+
+
+def plan_buckets(metas, bucket_bytes: int) -> list[list[int]]:
+    """The bucket plan: leaf indices grouped by dtype (order-preserving)
+    and packed greedily up to ``bucket_bytes`` per bucket.  Shared by
+    the blocking path below and the overlapped nonblocking path
+    (``repro.train.grad.overlapped_grad_sync``) so the two issue
+    byte-identical reductions — the bit-identity the ordering suite
+    asserts depends on both walking this exact plan."""
+    by_dtype: dict = {}
+    for i, (_, dtype, _) in enumerate(metas):
+        by_dtype.setdefault(jnp.dtype(dtype), []).append(i)
+    plan: list[list[int]] = []
+    for dtype, idxs in by_dtype.items():
+        cap = max(bucket_bytes // dtype.itemsize, 1)
+        bucket: list[int] = []
+        cur = 0
+        for i in idxs:
+            if cur + metas[i][2] > cap and bucket:
+                plan.append(bucket)
+                bucket, cur = [], 0
+            bucket.append(i)
+            cur += metas[i][2]
+        if bucket:
+            plan.append(bucket)
+    return plan
 
 
 def tree_allreduce(tree: Any, comm_or_axis: CommLike,
@@ -69,39 +112,14 @@ def bucketed_allreduce(tree: Any, comm_or_axis: CommLike,
     if not leaves:
         return tree
 
-    # group leaf indices by dtype, preserving order
-    by_dtype: dict = {}
-    for i, l in enumerate(leaves):
-        by_dtype.setdefault(jnp.dtype(l.dtype), []).append(i)
-
     reduced = [None] * len(leaves)
-    for dtype, idxs in by_dtype.items():
-        itemsize = dtype.itemsize
-        cap = max(bucket_bytes // itemsize, 1)
-        bucket: list[int] = []
-        cur = 0
-
-        def flush(bucket):
-            if not bucket:
-                return
-            flat = jnp.concatenate([leaves[i].ravel() for i in bucket])
-            if heap is not None:
-                with heap.scratch(flat.shape, flat.dtype, tag="grad_bucket"):
-                    out = comm.psum(flat)
-            else:
+    for bucket in plan_buckets(metas, bucket_bytes):
+        flat = jnp.concatenate([leaves[i].ravel() for i in bucket])
+        if heap is not None:
+            with heap.scratch(flat.shape, flat.dtype, tag="grad_bucket"):
                 out = comm.psum(flat)
-            off = 0
-            for i in bucket:
-                shape, dt, size = metas[i]
-                reduced[i] = out[off:off + size].reshape(shape)
-                off += size
-
-        for i in idxs:
-            if cur + metas[i][2] > cap and bucket:
-                flush(bucket)
-                bucket, cur = [], 0
-            bucket.append(i)
-            cur += metas[i][2]
-        flush(bucket)
+        else:
+            out = comm.psum(flat)
+        unpack_bucket(out, bucket, metas, reduced)
 
     return jax.tree.unflatten(treedef, reduced)

@@ -15,7 +15,7 @@ Backends are pluggable through a registry::
     register_backend("my_backend", MyBackendClass)
     comm = Communicator("model", size=8, backend="my_backend")
 
-Two ship in-tree:
+Three ship in-tree (the backend matrix; see ROADMAP.md):
 
     "xla"    native lax collectives — the GASNet/UPC role from the
              paper's §5.3 comparison and the beyond-paper baseline.
@@ -24,10 +24,12 @@ Two ship in-tree:
              with the algorithm chosen per call by the dispatch table
              (eager/latency-optimal below the size threshold,
              chunked-ring/bandwidth-optimal above it).
-
-A third slot is reserved for a Pallas ``symm_copy``-based backend once
-the kernels in ``repro.kernels.symm_copy`` grow a remote-DMA path; it
-will plug in through ``register_backend`` with no changes here.
+    "pallas" the posh schedules with the Pallas ``symm_copy`` engine as
+             the payload transport: every p2p round's payload moves
+             through a grid-pipelined tiled kernel copy; with a bound
+             heap the staged chunks belong to the schedules' Lemma-1
+             symmetric scratch (``repro.comm.pallas_backend``,
+             registered on package import).
 
 Construction is trace-time-static: ``size`` must be the static team
 size (mesh-derived).  Methods are called *inside* ``shard_map`` like
@@ -487,6 +489,20 @@ class Communicator:
         if algo is None:
             return x
         return self.backend.pbroadcast(x, root, self.team, algo)
+
+    # -- ordered nonblocking pipeline ----------------------------------
+    def queue(self, state=None, *, delivery_seed=None, transport=None):
+        """A :class:`repro.core.CommQueue` bound to this communicator's
+        team: the entry point to the paper's §3.2 nonblocking model —
+        ``put_nbi``/``get_nbi``/``allreduce_nbi`` enqueue,
+        ``fence``/``quiet`` drain.  Pass the heap ``state`` dict
+        explicitly when using ``put_nbi``/``get_nbi`` (the queue does
+        not pull state off ``self.heap``); ``allreduce_nbi`` needs no
+        state.  Used by the overlapped gradient path
+        (``repro.train.grad.overlapped_grad_sync``)."""
+        from repro.core.ordering import CommQueue
+        return CommQueue(self.team, state, transport=transport,
+                         delivery_seed=delivery_seed)
 
     # -- topology ------------------------------------------------------
     def rank(self):

@@ -1,0 +1,92 @@
+"""The Pallas ``symm_copy`` communicator backend — the registry's third
+slot, filled.
+
+POSH's collectives bottom out in its memcpy engine: every put/get copies
+the payload between private and symmetric memory through the variant
+selected at compile time (§4.4).  This backend reproduces that layering
+on the kernel side: it reuses the posh put/get *schedules* (ring, tree,
+recursive doubling — ``repro.core.collectives``) unchanged, but installs
+the grid-pipelined Pallas copy engine (``repro.kernels.symm_copy``) as
+the payload stager for the duration of each collective, so **every
+payload move of every p2p round goes HBM→VMEM→HBM through a tiled
+kernel copy** rather than an anonymous XLA move.  The variant is chosen
+per round from the round's actual payload bytes and dtype tiling
+(``choose_variant``) — the paper's compile-time selection, applied at
+the granularity the schedule actually moves data.
+
+Symmetric-heap addressing rides along unchanged: when the communicator
+carries a :class:`~repro.core.SymmetricHeap`, the posh ring schedule
+allocates its chunk buffer as a Lemma-1 temporary symmetric allocation
+(``_allreduce_ring``), so the staged payloads are chunks *of a real
+symmetric object* and the registry fingerprint is unchanged after the
+collective — the property the parity suite pins down.  (An actual
+kernel write to the symmetric offset needs the TPU remote-DMA path;
+that is the ROADMAP item, not this CPU-verifiable layer.)
+
+Numerically the stager is an identity copy, so this backend is
+bit-exact with "posh" (and parity-checked against "xla" in
+``tests/multipe/run_comm_parity.py``).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.core import p2p
+
+from .communicator import PoshBackend
+
+
+class PallasBackend(PoshBackend):
+    """posh schedules + Pallas symm_copy payload transport."""
+
+    name = "pallas"
+
+    def __init__(self, variant: str = "auto"):
+        # "auto": per-round size/dtype dispatch; a named variant pins
+        # the block shape for every round (POSH's -D flag)
+        self.variant = variant
+
+    # -- the memcpy seam ----------------------------------------------
+    def _stager(self):
+        from repro.kernels import ops  # deferred: pallas import is heavy
+        variant = self.variant
+        # "auto" resolves per payload inside the engine (size + dtype)
+        return lambda payload: ops.symm_copy(payload, variant)
+
+    @contextlib.contextmanager
+    def _staged(self):
+        """Scope a collective: every p2p payload through the copy
+        engine (heap addressing, when a heap is bound, comes from the
+        schedules' own Lemma-1 scratch — see module docstring)."""
+        with p2p.staged_payloads(self._stager()):
+            yield
+
+    # -- collectives: schedules inherited, transport swapped ----------
+    def psum(self, x, team, algo, heap=None):
+        with self._staged():
+            return super().psum(x, team, algo, heap=heap)
+
+    def pmax(self, x, team, algo):
+        with self._staged():
+            return super().pmax(x, team, algo)
+
+    def all_gather(self, x, team, algo, *, gather_axis, tiled):
+        with self._staged():
+            return super().all_gather(x, team, algo, gather_axis=gather_axis,
+                                      tiled=tiled)
+
+    def psum_scatter(self, x, team, algo, *, scatter_axis):
+        with self._staged():
+            return super().psum_scatter(x, team, algo,
+                                        scatter_axis=scatter_axis)
+
+    def all_to_all(self, x, team, algo, *, split_axis, concat_axis,
+                   team_size):
+        with self._staged():
+            return super().all_to_all(x, team, algo, split_axis=split_axis,
+                                      concat_axis=concat_axis,
+                                      team_size=team_size)
+
+    def pbroadcast(self, x, root, team, algo):
+        with self._staged():
+            return super().pbroadcast(x, root, team, algo)

@@ -6,6 +6,12 @@ Public API (mirrors OpenSHMEM 1.0 naming where meaningful):
     SymmetricHeap, SymHandle        symmetric heap + allocator (§3.1, §4.1)
     put, get, ring_shift            one-sided p2p rounds (§3.2)
     heap_put, heap_get, heap_p/g    offset-addressed remote access (Cor. 1)
+    CommQueue, put_nbi, get_nbi,
+    fence, quiet                    ordered nonblocking pipeline (§3.2
+                                    completion model: puts complete
+                                    locally at issue; delivery is
+                                    unordered until fence — per-dst —
+                                    or quiet — full barrier)
     barrier_all, broadcast,
     fcollect, reduce, allreduce,
     reduce_scatter, alltoall        collectives on p2p (§4.5)
@@ -18,6 +24,8 @@ from .atomics import TicketLock, atomic_cswap, atomic_fadd, atomic_swap
 from .collectives import (allreduce, alltoall, barrier_all, broadcast,
                           fcollect, reduce, reduce_scatter)
 from .heap import HeapState, SymHandle, SymmetricHeap
+from .ordering import (CommQueue, LocalTransport, NbiValue, PermuteTransport,
+                       Transport, fence, get_nbi, put_nbi, quiet)
 from .p2p import get, heap_g, heap_get, heap_p, heap_put, put, ring_shift
 from .safety import (PoshSafetyError, debug_mode, is_debug, is_safe,
                      safe_mode)
@@ -26,6 +34,8 @@ from .teams import ActiveSet, Team, TeamAxes, my_pe, team_size
 __all__ = [
     "SymmetricHeap", "SymHandle", "HeapState",
     "put", "get", "ring_shift", "heap_put", "heap_get", "heap_p", "heap_g",
+    "CommQueue", "NbiValue", "Transport", "PermuteTransport",
+    "LocalTransport", "put_nbi", "get_nbi", "fence", "quiet",
     "barrier_all", "broadcast", "fcollect", "reduce", "allreduce",
     "reduce_scatter", "alltoall",
     "atomic_fadd", "atomic_swap", "atomic_cswap", "TicketLock",

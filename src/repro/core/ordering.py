@@ -1,0 +1,402 @@
+"""The ordered one-sided pipeline: nonblocking put/get with fence/quiet.
+
+This module puts the paper's *formal* contribution — its communication
+and memory model (§3.2) — into code.  POSH proves that
+
+  * ``put`` completes **locally** as soon as the call returns: the
+    source buffer may be reused immediately, the payload is a snapshot
+    taken at issue time;
+  * remote **delivery** is unordered until an ordering point: two puts
+    to the same destination may land in either order;
+  * ``shmem_fence`` orders delivery *per destination*: every put issued
+    before the fence is delivered before any put issued after it;
+  * ``shmem_quiet`` is the full completion barrier: on return, every
+    outstanding put is delivered and every outstanding get has its
+    value.
+
+The pipeline here realizes exactly that model.  ``put_nbi``/``get_nbi``
+enqueue :class:`PendingPut`/:class:`PendingGet` records onto a
+:class:`CommQueue`; nothing moves until a drain point.  ``fence(dst)``
+drains the puts targeting ``dst`` (all destinations when ``dst`` is
+None) — delivering them *now* is the strongest valid implementation of
+the ordering guarantee.  ``quiet()`` drains everything.  Within one
+drain the delivery order is deliberately **not** program order: it is a
+deterministic shuffle keyed by ``delivery_seed``, so tests can replay
+the same issue sequence under many legal delivery interleavings and
+check that only the orderings the paper actually promises hold (see
+``tests/test_ordering.py`` — the property test enumerates the model's
+maximal-write candidate sets and asserts the implementation always
+lands inside them).
+
+Local completion is automatic in JAX: traced arrays are immutable, so
+the value captured at ``put_nbi`` time *is* the snapshot — later writes
+produce new arrays and cannot retroactively change the payload.  What
+the queue adds on top is the scheduling freedom: between issue and
+drain the ppermutes do not exist yet, and at the drain they materialize
+as a batch of independent collective-permutes with no serializing data
+dependencies between different destinations — which is what lets XLA
+overlap them with compute (the training loop exploits this through
+``allreduce_nbi``; see ``repro.train.grad.overlapped_grad_sync``).
+
+Data motion is pluggable through a :class:`Transport`:
+
+  PermuteTransport   the real thing — ``p2p.heap_put``/``heap_get``
+                     collective-permute rounds, for use inside
+                     ``shard_map`` (default).
+  LocalTransport     a whole-system numpy simulation (state arrays
+                     carry a leading PE axis) used by the property
+                     tests and by single-process reasoning about the
+                     model — the oracle the permute transport is
+                     checked against in ``tests/multipe/run_ordering.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from . import p2p
+from .heap import HeapState, SymHandle
+from .teams import Team, TeamAxes
+
+Pairs = Sequence[tuple[int, int]]
+
+
+# ======================================================================
+# pending-op records
+# ======================================================================
+@dataclasses.dataclass
+class PendingPut:
+    """One issued-but-undelivered put.  ``data`` is the issue-time
+    snapshot (local completion); ``seq`` is the global issue index."""
+
+    seq: int
+    handle: SymHandle
+    data: Any
+    pairs: list[tuple[int, int]]
+    offset: Any
+
+    def dsts(self) -> set[int]:
+        return {d for _, d in self.pairs}
+
+
+@dataclasses.dataclass
+class PendingGet:
+    seq: int
+    handle: SymHandle
+    pairs: list[tuple[int, int]]
+    offset: Any
+    size: Optional[int]
+    result: "NbiValue"
+
+
+@dataclasses.dataclass
+class PendingReduce:
+    """A nonblocking collective reduction (the train-loop user of the
+    queue).  Delivered at ``quiet()`` in issue order — reductions are
+    collectives, not one-sided writes, so the paper's unordered-delivery
+    freedom does not apply to them; issue order keeps the float
+    reduction bit-identical to the blocking path."""
+
+    seq: int
+    data: Any
+    deliver: Callable[[Any], Any]
+    result: "NbiValue"
+
+
+class NbiValue:
+    """Deferred result of a nonblocking get/reduction.  ``value()`` is
+    legal only after the owning queue's ``quiet()`` — reading earlier is
+    the programming error the paper's model forbids, and raising is the
+    safe-mode analogue of the undefined behaviour you would get from a
+    real NIC."""
+
+    __slots__ = ("_value", "_ready", "_tag")
+
+    def __init__(self, tag: str = "nbi"):
+        self._value = None
+        self._ready = False
+        self._tag = tag
+
+    def _deliver(self, value) -> None:
+        self._value = value
+        self._ready = True
+
+    @property
+    def ready(self) -> bool:
+        return self._ready
+
+    def value(self):
+        if not self._ready:
+            raise RuntimeError(
+                f"{self._tag}: nonblocking result read before quiet() — "
+                "the paper's model leaves this undefined; call "
+                "CommQueue.quiet() first")
+        return self._value
+
+
+# ======================================================================
+# transports — who actually moves the bytes at a drain point
+# ======================================================================
+class Transport:
+    """Delivery mechanism for drained ops.  ``state`` is a HeapState;
+    array layout is transport-defined (per-PE shard for the permute
+    transport, full (n_pe, ...) system state for the local one)."""
+
+    def put(self, state: HeapState, handle: SymHandle, data, pairs: Pairs,
+            team: Team, offset) -> HeapState:
+        raise NotImplementedError
+
+    def get(self, state: HeapState, handle: SymHandle, pairs: Pairs,
+            team: Team, offset, size: Optional[int]):
+        raise NotImplementedError
+
+
+class PermuteTransport(Transport):
+    """The real data path: one collective-permute round per delivery,
+    addressed through the symmetric heap (Corollary 1).  Must run
+    inside ``shard_map`` over the team's axes."""
+
+    def put(self, state, handle, data, pairs, team, offset):
+        return p2p.heap_put(state, handle, data, pairs, team, offset=offset)
+
+    def get(self, state, handle, pairs, team, offset, size):
+        return p2p.heap_get(state, handle, pairs, team, offset=offset,
+                            size=size)
+
+
+class LocalTransport(Transport):
+    """Whole-system simulation: every state array carries a leading PE
+    axis, so one process sees all ``n_pe`` heaps at once.  This is the
+    oracle the property tests replay interleavings against — numpy,
+    no tracing, hundreds of examples per second."""
+
+    def __init__(self, n_pe: int):
+        self.n_pe = int(n_pe)
+
+    def put(self, state, handle, data, pairs, team, offset):
+        out = dict(state)
+        out[handle.name] = buf = np.array(state[handle.name])
+        data = np.asarray(data)
+        rows = data.shape[1] if data.ndim > 1 else 1
+        for s, d in pairs:
+            buf[d, offset:offset + rows] = data[s]
+        return out
+
+    def get(self, state, handle, pairs, team, offset, size):
+        buf = np.asarray(state[handle.name])
+        size = buf.shape[1] - offset if size is None else size
+        out = np.zeros((self.n_pe, size) + buf.shape[2:], buf.dtype)
+        for owner, reader in pairs:
+            out[reader] = buf[owner, offset:offset + size]
+        return out
+
+
+# ======================================================================
+# the queue
+# ======================================================================
+class CommQueue:
+    """Ordered communication pipeline over a team.
+
+    ``put_nbi``/``get_nbi`` enqueue; ``fence``/``quiet`` are the ONLY
+    drain points (the paper's §3.2 ordering model).  The queue owns the
+    heap state between drains::
+
+        q = CommQueue(team, heap.zeros_state())
+        q.put_nbi(h, x, pairs)            # returns immediately
+        q.put_nbi(h, y, pairs2)           # unordered wrt the first ...
+        q.fence()                         # ... until here
+        q.put_nbi(h, z, pairs)            # ordered after x and y
+        state = q.quiet()                 # everything delivered
+
+    ``delivery_seed`` keys the intra-drain delivery shuffle: every seed
+    is a legal execution under the model; ``None`` means issue order.
+    Tests sweep seeds to check that programs relying only on fence/quiet
+    ordering are seed-invariant and that anything stronger is not
+    accidentally guaranteed.
+    """
+
+    def __init__(self, team: TeamAxes, state: Optional[HeapState] = None,
+                 *, transport: Optional[Transport] = None,
+                 delivery_seed: Optional[int] = None):
+        self.team = Team.of(team)
+        self._state: HeapState = dict(state or {})
+        self.transport = transport or PermuteTransport()
+        self.delivery_seed = delivery_seed
+        self._puts: list[PendingPut] = []
+        self._gets: list[PendingGet] = []
+        self._reduces: list[PendingReduce] = []
+        self._seq = 0
+        self._stats = {"puts": 0, "gets": 0, "reduces": 0, "fences": 0,
+                       "quiets": 0, "drained": 0, "max_pending": 0}
+
+    # ------------------------------------------------------------------
+    # issue side — returns immediately (local completion)
+    # ------------------------------------------------------------------
+    def put_nbi(self, handle: SymHandle, data, pairs: Pairs,
+                offset=0) -> int:
+        """``shmem_put_nbi``: enqueue a put.  Completes locally now —
+        ``data`` is snapshotted by value; remote delivery waits for the
+        next ``fence``/``quiet`` covering its destinations.  Returns the
+        issue sequence number (for debugging/stats)."""
+        pairs = [(int(s), int(d)) for s, d in pairs]
+        if isinstance(data, np.ndarray):
+            # numpy is mutable: snapshot now so the caller may reuse the
+            # buffer immediately (traced jax arrays are immutable and
+            # already have snapshot semantics by construction)
+            data = data.copy()
+        op = PendingPut(self._next_seq(), handle, data, pairs, offset)
+        self._puts.append(op)
+        self._stats["puts"] += 1
+        self._track_pending()
+        return op.seq
+
+    def get_nbi(self, handle: SymHandle, pairs: Pairs, offset=0,
+                size: Optional[int] = None) -> NbiValue:
+        """``shmem_get_nbi``: enqueue a get.  The returned
+        :class:`NbiValue` becomes readable after ``quiet()``; it
+        observes every put delivered by that quiet (gets are satisfied
+        after the put drain, the conservative reading of the model).
+
+        ``size=None`` means "the rest of the object from ``offset``" —
+        resolved here (statically) so both transports see the same
+        concrete extent; a traced offset therefore needs an explicit
+        size."""
+        pairs = [(int(s), int(d)) for s, d in pairs]
+        if size is None:
+            if not isinstance(offset, (int, np.integer)):
+                raise ValueError(
+                    f"get_nbi[{handle.name}]: explicit size required "
+                    "when offset is traced")
+            size = int(handle.shape[0]) - int(offset)
+            if size <= 0:
+                raise ValueError(
+                    f"get_nbi[{handle.name}]: offset {offset} leaves no "
+                    f"rows in object of {handle.shape[0]}")
+        res = NbiValue(f"get_nbi[{handle.name}]")
+        op = PendingGet(self._next_seq(), handle, pairs, offset, size, res)
+        self._gets.append(op)
+        self._stats["gets"] += 1
+        self._track_pending()
+        return res
+
+    def allreduce_nbi(self, x, deliver: Callable[[Any], Any]) -> NbiValue:
+        """Nonblocking collective reduction: ``deliver`` (e.g. a bound
+        ``Communicator.psum``) runs at ``quiet()``.  Issue order is
+        preserved across reductions so the drained program is
+        bit-identical to the blocking sequence of the same calls —
+        the property the overlapped training path is tested for."""
+        res = NbiValue("allreduce_nbi")
+        op = PendingReduce(self._next_seq(), x, deliver, res)
+        self._reduces.append(op)
+        self._stats["reduces"] += 1
+        self._track_pending()
+        return res
+
+    # ------------------------------------------------------------------
+    # drain side — fence / quiet, the only ordering points
+    # ------------------------------------------------------------------
+    def fence(self, dst: Optional[int] = None) -> None:
+        """``shmem_fence``: order puts per destination.  Every pending
+        put targeting ``dst`` (every destination when None) is delivered
+        before this call returns, hence before anything issued later —
+        delivery-at-fence is the strongest legal implementation of the
+        paper's ordering-only guarantee."""
+        self._stats["fences"] += 1
+        if dst is None:
+            todo, keep = self._puts, []
+        else:
+            todo = [p for p in self._puts if dst in p.dsts()]
+            keep = [p for p in self._puts if dst not in p.dsts()]
+        self._puts = keep
+        self._deliver_puts(todo)
+
+    def quiet(self) -> HeapState:
+        """``shmem_quiet``: the full completion barrier.  Delivers every
+        pending put (shuffled within the drain — they are mutually
+        unordered), then satisfies gets against the settled state, then
+        runs nonblocking reductions in issue order.  Returns the heap
+        state; afterwards the queue is empty and every NbiValue is
+        readable."""
+        self._stats["quiets"] += 1
+        todo, self._puts = self._puts, []
+        self._deliver_puts(todo)
+        gets, self._gets = self._gets, []
+        for g in gets:
+            val = self.transport.get(self._state, g.handle, g.pairs,
+                                     self.team, g.offset, g.size)
+            g.result._deliver(val)
+            self._stats["drained"] += 1
+        reduces, self._reduces = self._reduces, []
+        for r in sorted(reduces, key=lambda r: r.seq):
+            r.result._deliver(r.deliver(r.data))
+            self._stats["drained"] += 1
+        return self._state
+
+    # ------------------------------------------------------------------
+    def _deliver_puts(self, ops: list[PendingPut]) -> None:
+        for op in self._drain_order(ops):
+            self._state = self.transport.put(
+                self._state, op.handle, op.data, op.pairs, self.team,
+                op.offset)
+            self._stats["drained"] += 1
+
+    def _drain_order(self, ops: list[PendingPut]) -> list[PendingPut]:
+        """Intra-drain delivery order: mutually unordered by the model,
+        so any permutation is legal.  ``delivery_seed`` picks one
+        deterministically; None keeps issue order (also legal)."""
+        if self.delivery_seed is None or len(ops) < 2:
+            return ops
+        ops = list(ops)
+        random.Random(self.delivery_seed).shuffle(ops)
+        return ops
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _track_pending(self) -> None:
+        self._stats["max_pending"] = max(self._stats["max_pending"],
+                                         self.pending_ops())
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> HeapState:
+        """The heap state as of the last drain.  Pending (undelivered)
+        ops are NOT visible here — that is the point."""
+        return self._state
+
+    def pending_ops(self) -> int:
+        return len(self._puts) + len(self._gets) + len(self._reduces)
+
+    def stats(self) -> dict:
+        return dict(self._stats)
+
+
+# ======================================================================
+# free-function OpenSHMEM spellings
+# ======================================================================
+def put_nbi(queue: CommQueue, handle: SymHandle, data, pairs: Pairs,
+            offset=0) -> int:
+    """``shmem_put_nbi`` — nonblocking put onto ``queue``."""
+    return queue.put_nbi(handle, data, pairs, offset=offset)
+
+
+def get_nbi(queue: CommQueue, handle: SymHandle, pairs: Pairs, offset=0,
+            size: Optional[int] = None) -> NbiValue:
+    """``shmem_get_nbi`` — nonblocking get from ``queue``."""
+    return queue.get_nbi(handle, pairs, offset=offset, size=size)
+
+
+def fence(queue: CommQueue, dst: Optional[int] = None) -> None:
+    """``shmem_fence`` — per-destination ordering point."""
+    queue.fence(dst)
+
+
+def quiet(queue: CommQueue) -> HeapState:
+    """``shmem_quiet`` — full completion barrier."""
+    return queue.quiet()

@@ -22,16 +22,53 @@ the team's mesh axes; array arguments are per-PE shards.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import contextlib
+import threading
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import safety
 from .heap import HeapState, SymHandle
 from .teams import Team, TeamAxes
 
 Pairs = Sequence[tuple[int, int]]
+
+# ----------------------------------------------------------------------
+# payload staging hook — the §4.4 memcpy seam
+# ----------------------------------------------------------------------
+# POSH's put/get copy between private and symmetric memory through a
+# selected memcpy engine.  Here the seam is explicit: a transport
+# backend (e.g. the Pallas symm_copy backend in repro.comm) installs a
+# stager for the duration of a collective, and EVERY payload moved by a
+# put/get round inside that scope passes through it.  Thread-local,
+# trace-time — the staged copy is baked into the jaxpr, zero run-time
+# branches, exactly like the paper's compile-time memcpy selection.
+_stage_state = threading.local()
+
+
+def _current_stager() -> Optional[Callable]:
+    return getattr(_stage_state, "stager", None)
+
+
+@contextlib.contextmanager
+def staged_payloads(stager: Callable[[jax.Array], jax.Array]):
+    """Route every put/get payload inside this scope through ``stager``
+    (which must be a value-preserving copy, e.g. the Pallas symm_copy
+    engine).  Nests: the innermost stager wins."""
+    prev = _current_stager()
+    _stage_state.stager = stager
+    try:
+        yield
+    finally:
+        _stage_state.stager = prev
+
+
+def _stage(x: jax.Array) -> jax.Array:
+    s = _current_stager()
+    return x if s is None else s(x)
 
 
 def _check_pairs(pairs: Pairs, n: int, tag: str) -> list[tuple[int, int]]:
@@ -53,7 +90,7 @@ def put(x: jax.Array, pairs: Pairs, team: TeamAxes) -> jax.Array:
     pairs = _check_pairs(pairs, t.size(), "put")
     if not pairs:
         return jnp.zeros_like(x)
-    return jax.lax.ppermute(x, t.axis_name, pairs)
+    return jax.lax.ppermute(_stage(x), t.axis_name, pairs)
 
 
 def get(x: jax.Array, pairs: Pairs, team: TeamAxes) -> jax.Array:
@@ -65,7 +102,7 @@ def get(x: jax.Array, pairs: Pairs, team: TeamAxes) -> jax.Array:
     pairs = _check_pairs(pairs, t.size(), "get")
     if not pairs:
         return jnp.zeros_like(x)
-    return jax.lax.ppermute(x, t.axis_name, pairs)
+    return jax.lax.ppermute(_stage(x), t.axis_name, pairs)
 
 
 def ring_shift(x: jax.Array, team: TeamAxes, delta: int = 1) -> jax.Array:
@@ -112,10 +149,19 @@ def heap_put(state: HeapState, handle: SymHandle, data: jax.Array,
 def heap_get(state: HeapState, handle: SymHandle, pairs: Pairs,
              team: TeamAxes, offset=0, size: int | None = None) -> jax.Array:
     """``shmem_get``: fetch ``size`` rows at ``offset`` from the owner's
-    symmetric object.  Pairs are (owner, reader)."""
+    symmetric object.  Pairs are (owner, reader).  ``size=None`` reads
+    the rest of the object from ``offset``; a traced offset cannot
+    shape the slice, so it requires an explicit ``size`` (matching
+    ``CommQueue.get_nbi`` — silent dynamic_slice clamping would return
+    rows from the wrong offset)."""
     t = Team.of(team)
     buf = state[handle.name]
-    size = buf.shape[0] if size is None else size
+    if size is None:
+        if not isinstance(offset, (int, np.integer)):
+            raise ValueError(
+                f"heap_get[{handle.name}]: explicit size required when "
+                "offset is traced")
+        size = buf.shape[0] - int(offset)
     start = (jnp.asarray(offset, jnp.int32),) + (jnp.int32(0),) * (buf.ndim - 1)
     local_slice = jax.lax.dynamic_slice(buf, start, (size,) + buf.shape[1:])
     return get(local_slice, pairs, t)

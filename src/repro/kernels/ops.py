@@ -1,8 +1,10 @@
 """jit'd public wrappers over the Pallas kernels.
 
-``interpret`` defaults to True in this container (CPU validation); real
-TPU deployments set ``repro.kernels.ops.INTERPRET = False`` at startup
-(trace-time constant — POSH's compile-time selection, once more).
+``INTERPRET = None`` (the default) resolves per call from the actual
+platform — compiled kernels on TPU, the interpreter everywhere else
+(``symm_copy.default_interpret``).  Deployments can still pin it either
+way at startup (trace-time constant — POSH's compile-time selection,
+once more).
 """
 from __future__ import annotations
 
@@ -14,19 +16,23 @@ from . import flash_attention as _fa
 from . import reduce_combine as _rc
 from . import symm_copy as _sc
 
-INTERPRET = True  # flipped off on real TPU
+INTERPRET: bool | None = None   # None -> platform default (TPU: compiled)
+
+
+def _interpret() -> bool:
+    return _sc.default_interpret() if INTERPRET is None else INTERPRET
 
 
 @functools.partial(jax.jit, static_argnames=("variant",))
 def symm_copy(x, variant: str = _sc.DEFAULT_VARIANT):
-    if variant == "stock":
-        return _sc.copy_stock(x)
-    return _sc.copy_blocked(x, variant, interpret=INTERPRET)
+    """The copy engine: ``variant`` may be a VMEM block name, "stock"
+    (bare XLA copy) or "auto" (size/dtype dispatch)."""
+    return _sc.copy(x, variant, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("op", "variant"))
 def combine(a, b, op: str = "sum", variant: str = _rc.DEFAULT_VARIANT):
-    return _rc.combine_blocked(a, b, op, variant, interpret=INTERPRET)
+    return _rc.combine_blocked(a, b, op, variant, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "sm_scale",
@@ -36,8 +42,8 @@ def attention(q, k, v, causal: bool = True, window: int | None = None,
               block_kv: int = 128):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                sm_scale=sm_scale, block_q=block_q,
-                               block_kv=block_kv, interpret=INTERPRET)
+                               block_kv=block_kv, interpret=_interpret())
 
 
-COPY_VARIANTS = tuple(["stock"] + list(_sc.VARIANTS))
+COPY_VARIANTS = tuple(["stock", "auto"] + list(_sc.VARIANTS))
 COMBINE_VARIANTS = tuple(_rc.VARIANTS)

@@ -5,15 +5,27 @@ and selects one at compile time, because the copy between private and
 symmetric memory is the hot spot of every put/get.  The TPU analogue of
 "which SIMD ISA moves the bytes" is **which VMEM tiling moves the
 bytes**: HBM→VMEM DMA efficiency is set by the block shape (sublane ×
-lane alignment: multiples of (8, 128) for f32, (16, 128) for bf16), and
-the trade-off between few-large-blocks (DMA efficiency, VMEM pressure)
-and many-small-blocks (pipelining) mirrors the paper's per-platform
-memcpy differences.
+lane alignment: multiples of (8, 128) for f32, (16, 128) for bf16,
+(32, 128) for int8), and the trade-off between few-large-blocks (DMA
+efficiency, VMEM pressure) and many-small-blocks (pipelining) mirrors
+the paper's per-platform memcpy differences.
 
-The variant is chosen by a trace-time string — POSH's compile-time
-``-D`` flag, same mechanism, same reason (§4.4: "in order to minimize
-the number of conditional branches, selecting one particular
-implementation is made at compile-time").
+The engine is grid-pipelined: the flat payload is panelized into a
+(rows, cols) tile matrix and the copy runs over a 2-D grid of VMEM
+blocks, so the Pallas pipeline double-buffers the HBM↔VMEM DMAs of
+consecutive blocks — the "overlap the loads of copy i+1 with the
+stores of copy i" structure the paper gets from wide SIMD moves.
+
+Selection is trace-time, POSH's compile-time ``-D`` flag, at two
+levels:
+
+  * ``choose_variant(nbytes, dtype)`` picks the block shape from the
+    payload size (§4.4: "selecting one particular implementation is
+    made at compile-time") — small payloads take small blocks (launch
+    latency), large payloads take 1 MiB blocks (DMA bandwidth).
+  * ``default_interpret()`` resolves the interpret flag from the
+    actual platform: compiled kernels on TPU, the interpreter
+    everywhere else — so the same call site runs in CI and on a pod.
 """
 from __future__ import annotations
 
@@ -23,7 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# name -> (sublane rows, lane cols) of the VMEM block
+# name -> (sublane rows, lane cols) of the VMEM block (f32 baseline;
+# narrower dtypes round rows up to their sublane multiple, below)
 VARIANTS: dict[str, tuple[int, int]] = {
     "vmem_8x128": (8, 128),        # minimal aligned tile ("MMX": small regs)
     "vmem_32x128": (32, 128),      # 16 KiB f32 blocks
@@ -33,31 +46,89 @@ VARIANTS: dict[str, tuple[int, int]] = {
 }
 DEFAULT_VARIANT = "vmem_256x256"
 
+# dtype itemsize -> minimum sublane multiple of a VMEM tile
+_SUBLANE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+# payload-size ladder for choose_variant: largest block whose working
+# set the payload can actually fill (paper Table 1: the best memcpy
+# depends on the buffer size, not just the ISA)
+_SIZE_LADDER = (
+    (32 << 10, "vmem_8x128"),      # ≤ 32 KiB
+    (256 << 10, "vmem_32x128"),    # ≤ 256 KiB
+    (1 << 20, "vmem_64x256"),      # ≤ 1 MiB
+    (8 << 20, "vmem_256x256"),     # ≤ 8 MiB
+)
+_LADDER_TOP = "vmem_512x512"
+
+# column panels per grid row for large payloads — widens the grid to
+# 2-D so the pipeline has independent DMAs in both dimensions
+_MAX_COL_PANELS = 8
+
+
+def default_interpret() -> bool:
+    """Platform-aware interpret default: compiled on TPU, interpreter
+    elsewhere (CPU CI, GPU hosts).  Trace-time constant."""
+    return jax.default_backend() != "tpu"
+
+
+def block_shape(variant: str, dtype) -> tuple[int, int]:
+    """The (rows, cols) VMEM block for ``variant`` under ``dtype``'s
+    tiling constraint — rows rounded up to the dtype's sublane
+    multiple (f32 8, bf16 16, int8 32)."""
+    r, c = VARIANTS[variant]
+    sub = _SUBLANE.get(jnp.dtype(dtype).itemsize, 8)
+    r = -(-r // sub) * sub
+    return r, c
+
+
+def choose_variant(nbytes: int, dtype=jnp.float32) -> str:
+    """Size/dtype dispatch: the variant whose block ladder the payload
+    fills.  Tiny payloads (< one minimal tile) short-circuit to
+    "stock" — a bare XLA copy beats a kernel launch."""
+    sub = _SUBLANE.get(jnp.dtype(dtype).itemsize, 8)
+    if nbytes < sub * 128 * jnp.dtype(dtype).itemsize:
+        return "stock"
+    for cap, name in _SIZE_LADDER:
+        if nbytes <= cap:
+            return name
+    return _LADDER_TOP
+
 
 def _copy_kernel(src_ref, dst_ref):
     dst_ref[...] = src_ref[...]
 
 
 def copy_blocked(x: jax.Array, variant: str = DEFAULT_VARIANT,
-                 interpret: bool = True) -> jax.Array:
-    """Blocked VMEM copy of an arbitrary array.
+                 interpret: bool | None = None) -> jax.Array:
+    """Grid-pipelined VMEM copy of an arbitrary array.
 
-    The array is flattened and padded to a (rows, cols) panel that the
-    grid tiles exactly; the pad is stripped afterwards.  On real TPU the
-    pad is at most one block.
+    The array is flattened and padded (``jnp.pad`` — the pad is
+    materialized once by XLA's pad op, not by rewriting a zero panel)
+    to a (rows, cols) panel tiled exactly by the variant's block; the
+    grid is 2-D for payloads wide enough to fill several column panels.
+    On real TPU the pad is at most one block.  ``interpret=None``
+    resolves from the platform (``default_interpret``).
     """
-    r, c = VARIANTS[variant]
+    if interpret is None:
+        interpret = default_interpret()
+    r, c = block_shape(variant, x.dtype)
     flat = x.ravel()
     n = flat.size
-    rows = -(-n // c)
+
+    # 2-D panelization: enough column panels to keep the grid square-ish
+    # for big payloads, one panel otherwise
+    row_blocks = -(-n // (r * c))
+    col_panels = min(_MAX_COL_PANELS, max(1, row_blocks // _MAX_COL_PANELS))
+    cols = c * col_panels
+    rows = -(-n // cols)
     rows = -(-rows // r) * r
-    panel = jnp.zeros((rows * c,), x.dtype).at[:n].set(flat).reshape(rows, c)
+    panel = jnp.pad(flat, (0, rows * cols - n)).reshape(rows, cols)
     out = pl.pallas_call(
         _copy_kernel,
         out_shape=jax.ShapeDtypeStruct(panel.shape, panel.dtype),
-        grid=(rows // r,),
-        in_specs=[pl.BlockSpec((r, c), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((r, c), lambda i: (i, 0)),
+        grid=(rows // r, col_panels),
+        in_specs=[pl.BlockSpec((r, c), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((r, c), lambda i, j: (i, j)),
         interpret=interpret,
     )(panel)
     return out.ravel()[:n].reshape(x.shape)
@@ -68,11 +139,24 @@ def copy_stock(x: jax.Array) -> jax.Array:
     return jnp.copy(x)
 
 
+def copy(x: jax.Array, variant: str = "auto",
+         interpret: bool | None = None) -> jax.Array:
+    """The engine's front door: ``variant="auto"`` dispatches by payload
+    size and dtype tiling (``choose_variant``); explicit variants pin
+    the block shape like POSH's ``-D`` flag pins the ISA."""
+    if variant == "auto":
+        variant = choose_variant(x.size * jnp.dtype(x.dtype).itemsize,
+                                 x.dtype)
+    if variant == "stock":
+        return copy_stock(x)
+    return copy_blocked(x, variant, interpret=interpret)
+
+
 @functools.lru_cache(maxsize=None)
 def vmem_bytes(variant: str, dtype_str: str = "float32") -> int:
     """Working-set estimate for a variant: in-block + out-block bytes
     (double-buffered by the pipeline ⇒ ×2).  Used by the benchmark
     harness to reason about VMEM pressure without hardware."""
-    r, c = VARIANTS[variant]
+    r, c = block_shape(variant, dtype_str)
     item = jnp.dtype(dtype_str).itemsize
     return 2 * 2 * r * c * item

@@ -47,6 +47,12 @@ def main():
     ap.add_argument("--backend", default="posh", choices=["posh", "xla"])
     ap.add_argument("--zero", type=int, default=0, choices=[0, 1])
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="DP grad bucketing (0 = per-leaf reductions)")
+    ap.add_argument("--overlap-grad-sync", action="store_true",
+                    help="issue DP reductions nonblocking and drain "
+                         "with one quiet() before the optimizer "
+                         "(paper §3.2 overlap; bit-identical losses)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
@@ -77,7 +83,9 @@ def main():
         print(f"resumed at step {start}")
 
     step_fn = jax.jit(smap(
-        make_train_step(cfg, ctx, api, opt, microbatches=args.microbatches),
+        make_train_step(cfg, ctx, api, opt, microbatches=args.microbatches,
+                        bucket_bytes=args.bucket_bytes,
+                        overlap_grad_sync=args.overlap_grad_sync),
         mesh, (sspecs, {"tokens": P("data")}),
         (sspecs, {"loss": P(), "grad_norm": P(), "step": P()})))
     data = SyntheticLM(vocab=cfg.vocab, seq_len=cfg.max_seq,

@@ -11,7 +11,9 @@ PartitionSpec:
     grads are disjoint partials (each rank saw its share of heads /
     tokens / vocab).  psum over TP completes them.
   * every param                -> pmean over DP (classic DDP), optionally
-    bucketed and/or compressed (repro.comm).
+    bucketed and/or compressed (repro.comm), and optionally OVERLAPPED:
+    reductions issued nonblocking during the backward walk and drained
+    by one ``quiet()`` (paper §3.2 — see ``overlapped_grad_sync``).
 """
 from __future__ import annotations
 
@@ -21,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.bucketing import leaf_metas, plan_buckets, unpack_bucket
+from repro.comm.communicator import Communicator
 from repro.parallel.ctx import ParallelCtx
 
 
@@ -31,10 +35,60 @@ def _spec_has_axis(spec: P, axis: str) -> bool:
     return False
 
 
+def overlapped_grad_sync(grads: Any, comm: Communicator, *,
+                         bucket_bytes: int = 0, mean: bool = True) -> Any:
+    """DP gradient reduction through the paper's nonblocking pipeline.
+
+    The reductions are issued ``allreduce_nbi`` onto a ``CommQueue`` in
+    **reverse leaf order** — the order the backward walk produces
+    gradients (output layer first) — and nothing completes until the
+    single ``quiet()`` right before the caller applies the optimizer.
+    Between issue and drain the reductions are pending, mutually
+    independent ops; at the drain they materialize as a batch of
+    collectives with no serializing dependencies between buckets, which
+    is the freedom XLA's scheduler needs to overlap them with the
+    remaining backward compute (under jax.grad the whole cotangent tree
+    exists before the first issue, so the interleaving is expressed at
+    the schedule level — the honest SPMD reading of the paper's
+    put-completes-locally overlap).
+
+    Bucketing follows the SAME plan as the blocking
+    ``bucketed_allreduce`` (``repro.comm.bucketing.plan_buckets``) and
+    reductions deliver in issue order at the drain, so the result is
+    bit-identical to the blocking path with equal ``bucket_bytes`` —
+    asserted by ``tests/multipe/run_ordering.py``.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if not leaves or comm.size == 1:
+        return grads
+    q = comm.queue()
+    reduced = [None] * len(leaves)
+    if bucket_bytes:
+        metas = leaf_metas(leaves)
+        plan = plan_buckets(metas, bucket_bytes)
+        pending = []
+        for bucket in reversed(plan):            # backward-walk order
+            flat = jnp.concatenate([leaves[i].ravel() for i in bucket])
+            pending.append((bucket, q.allreduce_nbi(flat, comm.psum)))
+        q.quiet()                                # the single drain point
+        for bucket, res in pending:
+            unpack_bucket(res.value(), bucket, metas, reduced)
+    else:
+        pending = [q.allreduce_nbi(l, comm.psum) for l in reversed(leaves)]
+        q.quiet()                                # the single drain point
+        for i, res in zip(reversed(range(len(leaves))), pending):
+            reduced[i] = res.value()
+    out = jax.tree.unflatten(treedef, reduced)
+    if mean:
+        out = jax.tree.map(lambda g: g / comm.size, out)
+    return out
+
+
 def combine_grads(grads: Any, specs: Any, ctx: ParallelCtx, *,
                   bucket_bytes: int = 0, compress: str = "none",
-                  comp_state=None):
-    """Complete replica-local grads per the spec rule, then DP-mean."""
+                  comp_state=None, overlap: bool = False):
+    """Complete replica-local grads per the spec rule, then DP-mean
+    (overlapped through the nonblocking pipeline when ``overlap``)."""
     if ctx.tp_size > 1:
         def tp_fix(g, s):
             if _spec_has_axis(s, ctx.tp_axis):
@@ -46,6 +100,10 @@ def combine_grads(grads: Any, specs: Any, ctx: ParallelCtx, *,
         if compress != "none":
             grads, comp_state = ctx.dp_comm.compressed_psum(
                 grads, scheme=compress, state=comp_state, mean=True)
+        elif overlap:
+            grads = overlapped_grad_sync(grads, ctx.dp_comm,
+                                         bucket_bytes=bucket_bytes,
+                                         mean=True)
         elif bucket_bytes:
             grads = ctx.dp_comm.bucketed_psum(grads,
                                               bucket_bytes=bucket_bytes)

@@ -1,6 +1,19 @@
 """Train-step factory: loss -> single-seed grad -> spec combine ->
 AdamW (ZeRO-0/1) -> new state.  Microbatching (gradient accumulation)
 via lax.scan over microbatches.
+
+DP gradient reduction has two equivalent schedules:
+
+  blocking    tree_pmean / bucketed_psum — each reduction completes
+              where it is issued;
+  overlapped  ``overlap_grad_sync=True`` — reductions are issued
+              nonblocking (``allreduce_nbi`` on a ``CommQueue``) in
+              backward-walk order and drained by a single ``quiet()``
+              immediately before the optimizer apply, the paper's §3.2
+              compute/comm-overlap pattern.  Bit-identical loss
+              trajectory to the blocking path (same bucket plan, same
+              reduction order at the drain) — asserted by
+              ``tests/multipe/run_ordering.py``.
 """
 from __future__ import annotations
 
@@ -13,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.ctx import ParallelCtx
 
-from .grad import combine_grads
+from .grad import combine_grads, overlapped_grad_sync
 from .optimizer import (AdamWConfig, adamw_init, adamw_state_specs,
                         adamw_update)
 
@@ -41,6 +54,7 @@ def train_state_specs(cfg, ctx: ParallelCtx, model_api,
 def make_train_step(cfg, ctx: ParallelCtx, model_api,
                     opt_cfg: AdamWConfig, *, microbatches: int = 1,
                     bucket_bytes: int = 0, compress: str = "none",
+                    overlap_grad_sync: bool = False,
                     clip_norm: Optional[float] = 1.0):
     """Returns step(state, batch) -> (new_state, metrics), to be run
     inside shard_map.  batch leaves have a local batch dim divisible by
@@ -85,6 +99,13 @@ def make_train_step(cfg, ctx: ParallelCtx, model_api,
             if compress != "none":
                 grads, _ = ctx.dp_comm.compressed_psum(
                     grads, scheme=compress, mean=True)
+            elif overlap_grad_sync:
+                # nonblocking bucketed reductions, issued in backward-
+                # walk order; ONE quiet() drains them all right here —
+                # before the optimizer apply, nothing earlier blocks
+                grads = overlapped_grad_sync(grads, ctx.dp_comm,
+                                             bucket_bytes=bucket_bytes,
+                                             mean=True)
             elif bucket_bytes:
                 grads = ctx.dp_comm.bucketed_psum(
                     grads, bucket_bytes=bucket_bytes)

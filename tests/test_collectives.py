@@ -13,6 +13,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(script):
+    if os.environ.get("REPRO_MULTIPE_EXPLICIT"):
+        pytest.skip("multipe workers run explicitly (scripts/verify.sh)")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)

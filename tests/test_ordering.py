@@ -1,0 +1,347 @@
+"""The ordered pipeline's memory model (paper §3.2), property-tested.
+
+Random nbi-op interleavings are replayed through the CommQueue (over
+the whole-system LocalTransport) and checked against an oracle that
+computes, for every (destination, element), the *maximal-write
+candidate set* the paper's model allows:
+
+  * puts complete locally at issue (snapshot semantics),
+  * delivery is unordered between ordering points,
+  * ``fence`` orders delivery per destination,
+  * ``quiet`` completes everything.
+
+The implementation must always land inside the candidate set, for
+EVERY delivery interleaving (``delivery_seed`` sweeps legal shuffles),
+and locations whose writes the model totally orders must be
+seed-invariant.  With hypothesis installed the driver generates 200+
+examples; without it a seeded fallback loop covers the same count, so
+the suite is meaningful in both environments.
+
+The same sequences replayed on a real 8-PE mesh (PermuteTransport vs
+this oracle) live in ``tests/multipe/run_ordering.py``.
+"""
+import os
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import CommQueue, LocalTransport, SymmetricHeap
+from repro.core.heap import SymHandle
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_PE = 3
+OBJ_LEN = 6
+HANDLE = SymHandle("buf", (OBJ_LEN,), np.dtype(np.float32), 0,
+                   OBJ_LEN * 4)
+SEEDS = (None, 0, 1, 7)
+
+
+# ======================================================================
+# random-sequence generator + the paper-model oracle
+# ======================================================================
+def gen_sequence(rng: random.Random):
+    """A random issue sequence: puts (random partial permutations,
+    random offsets/extents, unique payload values), per-destination and
+    global fences.  A final quiet is implicit in the checker."""
+    events = []
+    val = 0
+    for _ in range(rng.randint(1, 14)):
+        kind = rng.choices(["put", "fence", "fence_all"],
+                           weights=[6, 2, 1])[0]
+        if kind == "put":
+            k = rng.randint(1, N_PE)
+            srcs = rng.sample(range(N_PE), k)
+            dsts = rng.sample(range(N_PE), k)
+            pairs = list(zip(srcs, dsts))
+            offset = rng.randint(0, OBJ_LEN - 1)
+            rows = rng.randint(1, OBJ_LEN - offset)
+            val += 1
+            # unique value per (put, source): payload row s = 100*val+s
+            values = {s: 100.0 * val + s for s, _ in pairs}
+            events.append(("put", pairs, offset, rows, values))
+        elif kind == "fence":
+            events.append(("fence", rng.randrange(N_PE)))
+        else:
+            events.append(("fence", None))
+    return events
+
+
+def oracle_candidates(events):
+    """For each (dst, elem): the set of payload values the model allows
+    as the final memory contents — the maximal elements of the
+    fence-induced partial order over the writes to that location."""
+    # the implicit final quiet orders like a fence covering every dst
+    evs = list(events) + [("fence", None)]
+    cands = {}
+    for d in range(N_PE):
+        fpos = [i for i, e in enumerate(evs)
+                if e[0] == "fence" and (e[1] is None or e[1] == d)]
+        for elem in range(OBJ_LEN):
+            writes = []                       # (issue index, value)
+            for i, e in enumerate(evs):
+                if e[0] != "put":
+                    continue
+                _, pairs, off, rows, values = e
+                if not (off <= elem < off + rows):
+                    continue
+                for s, dd in pairs:
+                    if dd == d:
+                        writes.append((i, values[s] + (elem - off) / 16.0))
+            if not writes:
+                continue
+            maximal = set()
+            for i, v in writes:
+                later_fences = [f for f in fpos if f > i]
+                first_f = min(later_fences) if later_fences else None
+                if first_f is None or not any(j > first_f
+                                              for j, _ in writes):
+                    maximal.add(v)
+            cands[(d, elem)] = maximal
+    return cands
+
+
+def run_impl(events, seed):
+    """Replay a sequence through the CommQueue + LocalTransport;
+    returns the final (n_pe, OBJ_LEN) system state."""
+    state = {"buf": np.zeros((N_PE, OBJ_LEN), np.float32)}
+    q = CommQueue("pe", state, transport=LocalTransport(N_PE),
+                  delivery_seed=seed)
+    for e in events:
+        if e[0] == "put":
+            _, pairs, offset, rows, values = e
+            data = np.zeros((N_PE, rows), np.float32)
+            for s, _ in pairs:
+                data[s] = values[s] + np.arange(rows, dtype=np.float32) / 16.0
+            q.put_nbi(HANDLE, data, pairs, offset=offset)
+            # local completion: the source buffer is reusable the moment
+            # put_nbi returns — scribbling on it must not alter delivery
+            data.fill(-999.0)
+        else:
+            q.fence(e[1])
+    out = q.quiet()
+    assert q.pending_ops() == 0
+    return np.asarray(out["buf"])
+
+
+def check_sequence(events):
+    cands = oracle_candidates(events)
+    finals = {}
+    for seed in SEEDS:
+        buf = run_impl(events, seed)
+        finals[seed] = buf
+        for d in range(N_PE):
+            for elem in range(OBJ_LEN):
+                got = float(buf[d, elem])
+                allowed = cands.get((d, elem))
+                if allowed is None:
+                    assert got == 0.0, (d, elem, got)   # never written
+                else:
+                    assert got in allowed, \
+                        f"dst {d} elem {elem}: {got} not in {allowed} " \
+                        f"(seed {seed})"
+    # totally-ordered locations are delivery-interleaving invariant
+    for (d, elem), allowed in cands.items():
+        if len(allowed) == 1:
+            vals = {float(finals[s][d, elem]) for s in SEEDS}
+            assert len(vals) == 1, (d, elem, vals)
+
+
+# ======================================================================
+# the property test — 200+ examples with or without hypothesis
+# ======================================================================
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=220, deadline=None)
+    @given(st.integers(0, 2 ** 32 - 1))
+    def test_ordering_model_property(seed):
+        check_sequence(gen_sequence(random.Random(seed)))
+else:
+    @pytest.mark.parametrize("chunk", range(11))
+    def test_ordering_model_property(chunk):
+        # 11 chunks x 20 sequences = 220 examples, hypothesis-free
+        for i in range(20):
+            check_sequence(gen_sequence(random.Random(chunk * 20 + i)))
+
+
+# ======================================================================
+# directed unit tests for the documented guarantees
+# ======================================================================
+def _queue(seed=None):
+    state = {"buf": np.zeros((N_PE, OBJ_LEN), np.float32)}
+    return CommQueue("pe", state, transport=LocalTransport(N_PE),
+                     delivery_seed=seed)
+
+
+def _payload(src, value, rows=1):
+    data = np.zeros((N_PE, rows), np.float32)
+    data[src] = value
+    return data
+
+
+def test_fence_orders_same_destination():
+    """put A ; fence ; put B (same dst, same loc) -> B wins, every
+    interleaving (the §3.2 fence guarantee)."""
+    for seed in SEEDS:
+        q = _queue(seed)
+        q.put_nbi(HANDLE, _payload(0, 1.0), [(0, 2)])
+        q.fence()
+        q.put_nbi(HANDLE, _payload(1, 2.0), [(1, 2)])
+        buf = np.asarray(q.quiet()["buf"])
+        assert buf[2, 0] == 2.0
+
+
+def test_per_destination_fence_only_orders_that_destination():
+    q = _queue(0)
+    q.put_nbi(HANDLE, _payload(0, 1.0), [(0, 2)])
+    q.put_nbi(HANDLE, _payload(0, 5.0), [(0, 1)])
+    q.fence(dst=2)                      # drains only the dst-2 put
+    assert q.pending_ops() == 1
+    assert np.asarray(q.state["buf"])[2, 0] == 1.0
+    assert np.asarray(q.state["buf"])[1, 0] == 0.0   # still pending
+    q.quiet()
+    assert np.asarray(q.state["buf"])[1, 0] == 5.0
+
+
+def test_pending_invisible_until_drain():
+    """Delivery does not happen at issue: state is unchanged until a
+    drain point covers the destination."""
+    q = _queue()
+    q.put_nbi(HANDLE, _payload(0, 3.0), [(0, 1)])
+    assert q.pending_ops() == 1
+    assert np.asarray(q.state["buf"]).sum() == 0.0
+    q.quiet()
+    assert np.asarray(q.state["buf"])[1, 0] == 3.0
+
+
+def test_get_nbi_reads_post_drain_state():
+    q = _queue()
+    q.put_nbi(HANDLE, _payload(0, 7.0, rows=2), [(0, 1)], offset=2)
+    res = q.get_nbi(HANDLE, [(1, 0)], offset=2, size=2)   # PE0 reads PE1
+    with pytest.raises(RuntimeError, match="before quiet"):
+        res.value()                     # undefined before the barrier
+    assert not res.ready
+    q.quiet()
+    assert res.ready
+    np.testing.assert_allclose(np.asarray(res.value())[0], [7.0, 7.0])
+
+
+def test_get_nbi_default_size_is_rest_of_object():
+    """size=None with a static offset reads offset..end — resolved at
+    issue time so both transports agree on the extent."""
+    q = _queue()
+    q.put_nbi(HANDLE, _payload(0, 9.0, rows=OBJ_LEN), [(0, 1)])
+    res = q.get_nbi(HANDLE, [(1, 2)], offset=2)           # rest: 4 rows
+    q.quiet()
+    got = np.asarray(res.value())
+    assert got.shape == (N_PE, OBJ_LEN - 2)
+    np.testing.assert_allclose(got[2], 9.0)
+    with pytest.raises(ValueError, match="leaves no rows"):
+        q.get_nbi(HANDLE, [(1, 2)], offset=OBJ_LEN)
+
+
+def test_queue_stats_and_free_functions():
+    from repro.core import fence, get_nbi, put_nbi, quiet
+    q = _queue()
+    put_nbi(q, HANDLE, _payload(0, 1.0), [(0, 1)])
+    r = get_nbi(q, HANDLE, [(1, 0)], size=1)
+    fence(q)
+    quiet(q)
+    st = q.stats()
+    assert st["puts"] == 1 and st["gets"] == 1
+    assert st["fences"] == 1 and st["quiets"] == 1
+    assert st["drained"] == 2 and st["max_pending"] == 2
+    assert r.ready
+
+
+def test_allreduce_nbi_issue_order_and_barrier():
+    log = []
+
+    def deliver(tag):
+        def f(x):
+            log.append(tag)
+            return x * 2
+        return f
+
+    q = CommQueue("pe", {}, transport=LocalTransport(N_PE),
+                  delivery_seed=3)     # seed shuffles puts, never reduces
+    ra = q.allreduce_nbi(np.full(3, 1.0), deliver("a"))
+    rb = q.allreduce_nbi(np.full(3, 2.0), deliver("b"))
+    with pytest.raises(RuntimeError):
+        ra.value()
+    q.quiet()
+    assert log == ["a", "b"]            # issue order at the drain
+    np.testing.assert_allclose(ra.value(), 2.0)
+    np.testing.assert_allclose(rb.value(), 4.0)
+
+
+# ======================================================================
+# heap addressing used by the queue: O(log n) resolve, boundary-exact
+# ======================================================================
+def test_resolve_bisect_boundaries():
+    h = SymmetricHeap(("data",), capacity_bytes=1 << 20)
+    a = h.alloc("a", (16,), np.float32)          # 64 B
+    b = h.alloc("b", (8, 2), np.int32)           # 64 B, aligned later
+    c = h.alloc("c", (3,), np.int8)              # 3 B
+    for handle in (a, b, c):
+        first, last = handle.offset, handle.offset + handle.nbytes - 1
+        for addr, off in ((first, 0), (last, handle.nbytes - 1)):
+            got, goff = h.resolve(addr)
+            assert got.name == handle.name and goff == off
+    # one past the end of an object falls into padding or the next
+    # object — never resolves to the previous one
+    for handle in (a, b, c):
+        try:
+            got, _ = h.resolve(handle.offset + handle.nbytes)
+            assert got.name != handle.name
+        except KeyError:
+            pass
+    with pytest.raises(KeyError):
+        h.resolve(10 ** 9)
+    # freeing resyncs the bisect index: the hole stops resolving,
+    # a re-alloc in the hole resolves to the new object
+    h.free("b")
+    with pytest.raises(KeyError):
+        h.resolve(b.offset)
+    d = h.alloc("d", (8, 2), np.int32)
+    assert d.offset == b.offset                   # first-fit reuse
+    got, off = h.resolve(d.offset + 5)
+    assert got.name == "d" and off == 5
+
+
+def test_resolve_many_objects_logn_consistent():
+    h = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    handles = [h.alloc(f"o{i}", (i % 7 + 1,), np.float32)
+               for i in range(200)]
+    rng = random.Random(0)
+    for _ in range(300):
+        hd = rng.choice(handles)
+        byte = rng.randrange(hd.nbytes)
+        got, off = h.resolve(hd.offset + byte)
+        assert got.name == hd.name and off == byte
+
+
+# ======================================================================
+# the multi-PE suite (PermuteTransport vs oracle + overlapped training)
+# ======================================================================
+def test_ordering_8pe():
+    if os.environ.get("REPRO_MULTIPE_EXPLICIT"):
+        pytest.skip("multipe workers run explicitly (scripts/verify.sh)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "multipe", "run_ordering.py")],
+        capture_output=True, text=True, env=env, timeout=2400)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ORDERING_PASS" in r.stdout
