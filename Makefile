@@ -1,6 +1,6 @@
 # Single gate for every PR: `make verify` (tier-1 pytest + the
 # tests/multipe/ workers under 8 fake CPU PEs — see scripts/verify.sh).
-.PHONY: verify verify-fast test multipe bench
+.PHONY: verify verify-fast test multipe bench bench-serve
 
 verify:
 	scripts/verify.sh
@@ -21,3 +21,9 @@ multipe:
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	python benchmarks/comm_microbench.py --quick
+
+# refresh the repo-root BENCH_serve.json (full serving sweep; `make
+# verify` already refreshes the --smoke row)
+bench-serve:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	python benchmarks/serve_bench.py

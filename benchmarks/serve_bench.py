@@ -1,0 +1,111 @@
+"""Serving benchmark — throughput / latency percentiles for the paged
+continuous-batching engine, written to ``BENCH_serve.json`` at the REPO
+ROOT (the bench trajectory the driver tracks):
+
+    {"meta": {...},
+     "results": [{"case", "arch", "backend", "attn_impl", "page_tokens",
+                  "n_pages", "max_batch", "requests", "tokens_out",
+                  "throughput_tok_s", "latency_p50_s", "latency_p99_s",
+                  "ttft_p50_s", "ttft_p99_s", "preempted",
+                  "migrations"}, ...]}
+
+Default sweep: page size x batch size x attention impl on the smoke
+qwen3 config under the same seeded Poisson trace.  ``--smoke`` runs the
+single smallest case (the `make verify` freshness gate — BENCH_serve
+must exist and parse, not be a full sweep).
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
+
+On CPU the numbers measure the engine/scheduler structure, not
+accelerator decode throughput (meta records the platform).
+"""
+import argparse
+import json
+import os
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+OUT = os.path.join(ROOT, "BENCH_serve.json")
+
+
+def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
+             max_batch, n_requests, rate, seed):
+    import jax
+
+    from repro import serve
+    from repro.launch.serve import build_engine
+
+    eng, cfg = build_engine(arch, backend=backend,
+                            page_tokens=page_tokens, n_pages=n_pages,
+                            max_batch=max_batch, attn_impl=attn_impl,
+                            seed=seed)
+    tcfg = serve.TrafficConfig(n_requests=n_requests, rate=rate,
+                               vocab=cfg.vocab, seed=seed)
+    t0 = time.perf_counter()
+    eng.run(serve.make_requests(tcfg))
+    wall = time.perf_counter() - t0
+    m = eng.metrics()
+    return {
+        "case": case, "arch": cfg.name, "backend": backend,
+        "attn_impl": attn_impl, "page_tokens": page_tokens,
+        "n_pages": n_pages, "max_batch": max_batch,
+        "requests": m["requests"], "tokens_out": m["tokens_out"],
+        "wall_s": round(wall, 4),
+        "throughput_tok_s": round(m["throughput_tok_s"], 2),
+        "latency_p50_s": round(m["latency_p50_s"], 4),
+        "latency_p99_s": round(m["latency_p99_s"], 4),
+        "ttft_p50_s": round(m["ttft_p50_s"], 4),
+        "ttft_p99_s": round(m["ttft_p99_s"], 4),
+        "preempted": m["sched"]["preempted"],
+        "migrations": m["kv"]["migrations"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single tiny case (verify-gate freshness)")
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=16.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    if args.smoke:
+        cases = [("smoke", "xla", "ref", 4, 32, 3, 6)]
+    else:
+        cases = [
+            ("p4_b2_ref", "xla", "ref", 4, 48, 2, args.requests),
+            ("p4_b4_ref", "xla", "ref", 4, 48, 4, args.requests),
+            ("p8_b4_ref", "xla", "ref", 8, 32, 4, args.requests),
+            ("p8_b4_kernel", "xla", "kernel", 8, 32, 4, args.requests),
+            ("p8_b4_posh", "posh", "ref", 8, 32, 4, args.requests),
+        ]
+    results = []
+    for case, backend, impl, pt, np_, mb, nreq in cases:
+        row = run_case(case, args.arch, backend, impl, pt, np_, mb, nreq,
+                       args.rate, args.seed)
+        results.append(row)
+        print(f"{case:>14}: {row['throughput_tok_s']:8.1f} tok/s  "
+              f"p50 {row['latency_p50_s']*1e3:7.1f} ms  "
+              f"p99 {row['latency_p99_s']*1e3:7.1f} ms  "
+              f"preempt {row['preempted']}")
+
+    payload = {
+        "meta": {"platform": jax.default_backend(),
+                 "smoke": bool(args.smoke), "rate_req_s": args.rate,
+                 "seed": args.seed,
+                 "note": "CPU rows measure engine/scheduler structure, "
+                         "not accelerator decode throughput"},
+        "results": results,
+    }
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {OUT} ({len(results)} rows)")
+
+
+if __name__ == "__main__":
+    main()

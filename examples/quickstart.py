@@ -10,14 +10,11 @@ schedules when --backend posh.
 
 MIGRATION NOTE (free functions -> Communicator methods)
 -------------------------------------------------------
-The old API was free functions taking an axis and a run-wide config::
-
-    cfg = comm.CommConfig(backend="posh")          # fixed algorithms
-    y = comm.psum(x, "model", cfg)
-    g = comm.all_gather(x, "model", cfg, gather_axis=1)
-
-The new API binds the team once and dispatches the algorithm per call
-from payload size and team size (POSH §4.5.4)::
+The pre-PR-1 API was free functions taking an axis and a run-wide
+``CommConfig``; those shims are now REMOVED (deprecated in PR 1,
+deleted on schedule two PRs after the ordered pipeline).  The API binds
+the team once and dispatches the algorithm per call from payload size
+and team size (POSH §4.5.4)::
 
     tp = comm.make_communicator("model", size=8, backend="posh")
     y = tp.psum(x)                   # small x -> tree, large x -> ring
@@ -27,8 +24,9 @@ from payload size and team size (POSH §4.5.4)::
 Model code gets the communicators from the parallel context, built once
 from the mesh: ``ctx.tp_comm`` / ``ctx.dp_comm`` (construct the ctx
 with ``backend="posh"`` — or ``ParallelCtx.from_mesh(mesh, ...)``).
-The free functions still work for one release as deprecated shims that
-delegate to a per-call communicator.
+The old fixed-algorithm behaviour is ``DispatchTable.fixed(...)``; a
+bare axis name is still accepted by ``comm.as_communicator`` and the
+tree reductions inside shard_map.
 """
 import argparse
 

@@ -27,6 +27,11 @@ if [[ ${FAST} == 0 ]]; then
         echo "== multipe: ${script} =="
         python "${script}"
     done
+    unset XLA_FLAGS
+
+    # keep repo-root BENCH_serve.json fresh without a full sweep
+    echo "== serve bench (smoke) =="
+    python benchmarks/serve_bench.py --smoke
 fi
 
 echo "VERIFY_PASS"

@@ -13,7 +13,8 @@ stats pytree.
 
 Every collective issued anywhere in the framework (DP gradient
 reduction, TP activation collectives, EP dispatch, SP gathers, vocab-
-parallel cross-entropy) goes through a communicator method::
+parallel cross-entropy, serving decode) goes through a communicator
+method::
 
     comm = make_communicator("model", size=8, backend="posh")
     y = comm.psum(x)                    # algorithm chosen by size
@@ -26,14 +27,12 @@ Selection is trace-time — the chosen algorithm specializes the program,
 so there are zero run-time branches.
 
 The pre-Communicator free functions (``psum(x, axis, cfg)``, ...) and
-``CommConfig`` remain as deprecated shims; they build a pinned-dispatch
-communicator per call and delegate.  Removal timeline: the shims were
-deprecated when the Communicator landed (PR 1) and are scheduled for
-deletion two PRs after the ordered pipeline (PR 2), i.e. once external
-examples have migrated — grep for ``CommConfig`` before deleting.
+``CommConfig`` were deprecated when the Communicator landed (PR 1) and
+DELETED two PRs later as scheduled: hold a communicator (or pass a bare
+axis name to ``as_communicator``/``bucketed_allreduce``, which builds a
+default-dispatch one inside shard_map).  A pinned-algorithm run is
+``DispatchTable.fixed(...)``, the old ``CommConfig`` semantics.
 """
-from .api import (CommConfig, all_gather, all_to_all, axis_index, axis_size,
-                  pbroadcast, pmax, psum, psum_scatter)
 from .bucketing import as_communicator, bucketed_allreduce, tree_allreduce
 from .communicator import (CommBackend, Communicator, DispatchTable,
                            available_backends, get_backend,
@@ -51,7 +50,4 @@ __all__ = [
     # tree-level reductions
     "bucketed_allreduce", "tree_allreduce",
     "compressed_allreduce", "CompressionState",
-    # deprecated free-function shims
-    "CommConfig", "psum", "pmax", "all_gather", "psum_scatter", "all_to_all",
-    "pbroadcast", "axis_index", "axis_size",
 ]

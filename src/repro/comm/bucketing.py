@@ -13,9 +13,10 @@ turns many small (eager-regime) reductions into few large ones, which
 the dispatch table then routes to the chunked ring — so the two layers
 tune the same knob from opposite ends.
 
-Reductions route through a ``Communicator`` (``comm.psum``).  The old
-``(tree, axis, cfg)`` calling convention is still accepted and builds a
-shim communicator, like ``repro.comm.api``.
+Reductions route through a ``Communicator`` (``comm.psum``).  A bare
+axis name (or axis tuple) is also accepted and builds a default-dispatch
+communicator for that team — the team size is read from the enclosing
+shard_map, so the bare-axis form is only valid inside one.
 
 The bucket buffers are symmetric-heap allocations — same shape on every
 PE — so the paper's Fact 1 is what guarantees the flat offsets used for
@@ -28,20 +29,24 @@ from typing import Any, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro import core as posh
 
-from .api import CommConfig, _shim_comm
-from .communicator import Communicator
+from .communicator import Communicator, DispatchTable
 
 CommLike = Union[Communicator, str, tuple]
 
 
 def as_communicator(comm_or_axis: CommLike,
-                    cfg: Optional[CommConfig] = None) -> Communicator:
-    """Accept either a Communicator (new API) or (axis, cfg) (deprecated)."""
+                    dispatch: Optional[DispatchTable] = None) -> Communicator:
+    """Accept either a Communicator or a bare team-axis spec (the
+    latter builds one per call; must run inside shard_map)."""
     if isinstance(comm_or_axis, Communicator):
         return comm_or_axis
-    return _shim_comm(comm_or_axis, cfg or CommConfig())
+    axis = comm_or_axis if isinstance(comm_or_axis, str) \
+        else tuple(comm_or_axis)
+    return Communicator(axis, size=compat.axis_size(axis),
+                        dispatch=dispatch, name=f"axis:{axis}")
 
 
 def leaf_metas(leaves):
@@ -93,21 +98,19 @@ def plan_buckets(metas, bucket_bytes: int) -> list[list[int]]:
     return plan
 
 
-def tree_allreduce(tree: Any, comm_or_axis: CommLike,
-                   cfg: Optional[CommConfig] = None):
+def tree_allreduce(tree: Any, comm_or_axis: CommLike):
     """Naive per-leaf allreduce (the unbucketed baseline)."""
-    comm = as_communicator(comm_or_axis, cfg)
+    comm = as_communicator(comm_or_axis)
     return jax.tree.map(comm.psum, tree)
 
 
-def bucketed_allreduce(tree: Any, comm_or_axis: CommLike,
-                       cfg: Optional[CommConfig] = None, *,
+def bucketed_allreduce(tree: Any, comm_or_axis: CommLike, *,
                        bucket_bytes: int = 4 << 20,
                        heap: posh.SymmetricHeap | None = None) -> Any:
     """Pack leaves into ≤bucket_bytes flat buffers (per dtype), allreduce
     each bucket through the communicator, unpack.  Returns a tree of the
     same structure."""
-    comm = as_communicator(comm_or_axis, cfg)
+    comm = as_communicator(comm_or_axis)
     leaves, treedef, metas = _flatten_with_meta(tree)
     if not leaves:
         return tree

@@ -135,7 +135,8 @@ class DispatchTable:
               reducescatter: str = "ring", alltoall: str = "pairwise",
               broadcast: str = "binomial") -> "DispatchTable":
         """A table pinned to one algorithm per op regardless of size —
-        the old ``CommConfig`` behaviour, kept for the shim layer."""
+        the old run-wide ``CommConfig`` semantics, for callers that
+        want to pin a schedule (benchmarks, ablations)."""
         return cls(allreduce_eager=allreduce, allreduce_chunked=allreduce,
                    allgather_eager=allgather, allgather_chunked=allgather,
                    reducescatter_algo=reducescatter, alltoall_algo=alltoall,

@@ -12,9 +12,9 @@ accumulation so compression error does not bias the optimizer):
               large ones — the tradeoff is documented in EXPERIMENTS.md).
 
 All wire traffic routes through a ``Communicator`` (``comm.psum`` /
-``comm.all_gather``); the old ``(grads, axis, cfg)`` convention is still
-accepted via the shim layer.  State is a pytree of residuals matching
-the gradient tree.
+``comm.all_gather``); a bare axis name is accepted and builds a
+default-dispatch communicator (inside shard_map only).  State is a
+pytree of residuals matching the gradient tree.
 """
 from __future__ import annotations
 
@@ -24,7 +24,6 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from .api import CommConfig
 from .bucketing import CommLike, as_communicator
 
 
@@ -39,13 +38,12 @@ class CompressionState:
         return cls(residual=jax.tree.map(jnp.zeros_like, grads_like))
 
 
-def compressed_allreduce(grads: Any, comm_or_axis: CommLike,
-                         cfg: Optional[CommConfig] = None, *,
+def compressed_allreduce(grads: Any, comm_or_axis: CommLike, *,
                          scheme: str = "bf16",
                          state: Optional[CompressionState] = None,
                          mean: bool = True):
     """Returns (reduced_grads, new_state)."""
-    comm = as_communicator(comm_or_axis, cfg)
+    comm = as_communicator(comm_or_axis)
 
     def _mean(x):
         return x / comm.size if mean else x

@@ -50,6 +50,9 @@ class SymHandle:
     dtype: np.dtype
     offset: int          # byte offset in the symmetric address space
     nbytes: int
+    align: int = 0       # alignment the object was allocated with
+                         # (0 = heap default); realloc's move path
+                         # re-places with the same guarantee
 
     @property
     def addr(self) -> int:
@@ -106,7 +109,7 @@ class SymmetricHeap:
             pad = start - blk.offset
             if blk.nbytes >= pad + need:
                 self._carve(i, pad, need, name)
-                h = SymHandle(name, shape, dtype, start, need)
+                h = SymHandle(name, shape, dtype, start, need, align)
                 self.registry[name] = h
                 j = bisect.bisect_left(self._sorted_offsets, start)
                 self._sorted_offsets.insert(j, start)
@@ -134,6 +137,108 @@ class SymmetricHeap:
                 blk.free, blk.name = True, None
                 break
         self._coalesce()
+
+    def realloc(self, handle_or_name, shape, dtype=None,
+                align: int | None = None) -> SymHandle:
+        """``shrealloc`` (§4.1.1): resize a live symmetric object.
+
+        Like the paper's realloc this is collective (all PEs call with
+        identical args — enforced by SPMD, like ``alloc``) and keeps the
+        offset whenever the resize fits in place:
+
+          * shrink: the block is split and the tail returned to the
+            free list (offset preserved);
+          * grow into an adjacent free block: the block absorbs as much
+            of its right neighbour as it needs (offset preserved);
+          * otherwise: free + first-fit alloc — the object MAY move, and
+            since the move is the same deterministic decision on every
+            PE the new offset is still symmetric (Fact 1).
+
+        Content preservation is the *state* layer's job (heap state is a
+        functional pytree): callers carry rows over themselves, e.g.
+        ``repro.serve.kv_cache.PagedKVCache.grow``.
+        """
+        name = handle_or_name.name if isinstance(handle_or_name, SymHandle) else handle_or_name
+        old = self.registry.get(name)
+        if old is None:
+            raise KeyError(f"no symmetric object named '{name}'")
+        shape = tuple(int(d) for d in shape)
+        dtype = old.dtype if dtype is None else np.dtype(dtype)
+        # validate BEFORE any mutation: once the block is freed, a bad
+        # argument must not be able to lose the object
+        align = align or old.align or None   # keep the original guarantee
+        if align is not None and align & (align - 1):
+            raise ValueError(f"alignment must be a power of two, got {align}")
+        need = max(_nbytes(shape, dtype), 1)
+        i = next(k for k, blk in enumerate(self._blocks) if blk.name == name)
+        blk = self._blocks[i]
+
+        # a STRONGER explicit align than the current offset satisfies
+        # rules out resizing in place — fall through to the move path
+        in_place_ok = old.offset % (align or self.DEFAULT_ALIGN) == 0
+
+        if in_place_ok and need <= blk.nbytes:       # in place (shrink/equal)
+            rest = blk.nbytes - need
+            blk.nbytes = need
+            if rest:
+                self._blocks.insert(i + 1,
+                                    _Block(blk.offset + need, rest, True))
+                self._coalesce()
+            return self._replace_handle(old, shape, dtype, old.offset, need,
+                                        align)
+
+        nxt = self._blocks[i + 1] if i + 1 < len(self._blocks) else None
+        grow = need - blk.nbytes
+        if in_place_ok and grow > 0 and nxt is not None and nxt.free \
+                and nxt.nbytes >= grow:              # absorb neighbour
+            blk.nbytes = need
+            nxt.offset += grow
+            nxt.nbytes -= grow
+            if nxt.nbytes == 0:
+                del self._blocks[i + 1]
+            return self._replace_handle(old, shape, dtype, old.offset, need,
+                                        align)
+
+        # move: free then first-fit alloc under the same name.  Freeing
+        # first lets the new allocation reuse (part of) the old extent.
+        self.free(name)
+        try:
+            return self.alloc(name, shape, dtype, align=align)
+        except MemoryError:
+            # failed realloc must not lose OR move the object
+            # (shrealloc's unchanged-on-failure contract): carve the
+            # exact old extent back out — it was just freed, so it is
+            # inside a free block — and re-raise
+            self._alloc_at(old)
+            raise
+
+    def _alloc_at(self, h: SymHandle) -> None:
+        """Re-carve a just-freed extent at its original offset."""
+        for i, blk in enumerate(self._blocks):
+            if (blk.free and blk.offset <= h.offset
+                    and h.offset + h.nbytes <= blk.offset + blk.nbytes):
+                self._carve(i, h.offset - blk.offset, h.nbytes, h.name)
+                self.registry[h.name] = h
+                j = bisect.bisect_left(self._sorted_offsets, h.offset)
+                self._sorted_offsets.insert(j, h.offset)
+                self._sorted_handles.insert(j, h)
+                return
+        raise AssertionError(
+            f"extent of '{h.name}' not free during realloc restore")
+
+    def _replace_handle(self, old: SymHandle, shape, dtype, offset: int,
+                        nbytes: int, align) -> SymHandle:
+        """Swap the registry/index entry for a resized-in-place object."""
+        j = bisect.bisect_left(self._sorted_offsets, old.offset)
+        del self._sorted_offsets[j]
+        del self._sorted_handles[j]
+        h = SymHandle(old.name, shape, np.dtype(dtype), offset, nbytes,
+                      align or 0)
+        self.registry[old.name] = h
+        j = bisect.bisect_left(self._sorted_offsets, offset)
+        self._sorted_offsets.insert(j, offset)
+        self._sorted_handles.insert(j, h)
+        return h
 
     def _carve(self, i: int, pad: int, need: int, name: str) -> None:
         blk = self._blocks[i]

@@ -143,7 +143,12 @@ class NbiValue:
 class Transport:
     """Delivery mechanism for drained ops.  ``state`` is a HeapState;
     array layout is transport-defined (per-PE shard for the permute
-    transport, full (n_pe, ...) system state for the local one)."""
+    transport, full (n_pe, ...) system state for the local one).
+
+    ``put_rows``/``concat_puts`` describe the transport's payload layout
+    to the queue's drain-time coalescer: how many object rows one put
+    covers, and how two payloads concatenate into one.  A transport that
+    returns ``None`` from ``concat_puts`` opts out of coalescing."""
 
     def put(self, state: HeapState, handle: SymHandle, data, pairs: Pairs,
             team: Team, offset) -> HeapState:
@@ -152,6 +157,12 @@ class Transport:
     def get(self, state: HeapState, handle: SymHandle, pairs: Pairs,
             team: Team, offset, size: Optional[int]):
         raise NotImplementedError
+
+    def put_rows(self, data) -> Optional[int]:
+        return None                       # unknown layout: no coalescing
+
+    def concat_puts(self, datas):
+        return None
 
 
 class PermuteTransport(Transport):
@@ -165,6 +176,14 @@ class PermuteTransport(Transport):
     def get(self, state, handle, pairs, team, offset, size):
         return p2p.heap_get(state, handle, pairs, team, offset=offset,
                             size=size)
+
+    def put_rows(self, data):
+        shape = getattr(data, "shape", None)
+        return int(shape[0]) if shape else 1
+
+    def concat_puts(self, datas):
+        import jax.numpy as jnp
+        return jnp.concatenate([jnp.asarray(d) for d in datas], axis=0)
 
 
 class LocalTransport(Transport):
@@ -192,6 +211,15 @@ class LocalTransport(Transport):
         for owner, reader in pairs:
             out[reader] = buf[owner, offset:offset + size]
         return out
+
+    def put_rows(self, data):
+        data = np.asarray(data)
+        return int(data.shape[1]) if data.ndim > 1 else 1
+
+    def concat_puts(self, datas):
+        datas = [np.asarray(d) for d in datas]
+        datas = [d[:, None] if d.ndim == 1 else d for d in datas]
+        return np.concatenate(datas, axis=1)
 
 
 # ======================================================================
@@ -230,7 +258,8 @@ class CommQueue:
         self._reduces: list[PendingReduce] = []
         self._seq = 0
         self._stats = {"puts": 0, "gets": 0, "reduces": 0, "fences": 0,
-                       "quiets": 0, "drained": 0, "max_pending": 0}
+                       "quiets": 0, "drained": 0, "max_pending": 0,
+                       "coalesced": 0}
 
     # ------------------------------------------------------------------
     # issue side — returns immediately (local completion)
@@ -337,11 +366,58 @@ class CommQueue:
 
     # ------------------------------------------------------------------
     def _deliver_puts(self, ops: list[PendingPut]) -> None:
-        for op in self._drain_order(ops):
+        for op in self._coalesce(self._drain_order(ops)):
             self._state = self.transport.put(
                 self._state, op.handle, op.data, op.pairs, self.team,
                 op.offset)
             self._stats["drained"] += 1
+
+    def _coalesce(self, ops: list[PendingPut]) -> list[PendingPut]:
+        """Drain-time coalescing: merge runs of *adjacent-in-delivery-
+        order* puts that target the same object through the same pair
+        list and cover contiguous row ranges into ONE transport round.
+        Merging only adjacent ops is semantics-preserving under any
+        delivery order (nothing can interleave inside a run), so the
+        fence/quiet model is untouched — the drain just issues fewer,
+        larger permute rounds (the batch is already in hand here).
+        Traced offsets opt out (contiguity is not statically known)."""
+        if len(ops) < 2:
+            return ops
+        out: list[PendingPut] = []
+        run: list[PendingPut] = []
+        run_rows = 0
+
+        def flush():
+            nonlocal run, run_rows
+            if len(run) > 1:
+                merged = self.transport.concat_puts([o.data for o in run])
+                if merged is not None:
+                    self._stats["coalesced"] += len(run) - 1
+                    out.append(PendingPut(run[0].seq, run[0].handle, merged,
+                                          run[0].pairs, run[0].offset))
+                else:
+                    out.extend(run)
+            else:
+                out.extend(run)
+            run, run_rows = [], 0
+
+        for op in ops:
+            rows = (self.transport.put_rows(op.data)
+                    if isinstance(op.offset, (int, np.integer)) else None)
+            if rows is None:
+                flush()
+                out.append(op)
+                continue
+            if (run and op.handle.name == run[0].handle.name
+                    and op.pairs == run[0].pairs
+                    and int(op.offset) == int(run[0].offset) + run_rows):
+                run.append(op)
+                run_rows += rows
+            else:
+                flush()
+                run, run_rows = [op], rows
+        flush()
+        return out
 
     def _drain_order(self, ops: list[PendingPut]) -> list[PendingPut]:
         """Intra-drain delivery order: mutually unordered by the model,

@@ -13,6 +13,7 @@ import functools
 import jax
 
 from . import flash_attention as _fa
+from . import paged_attention as _pa
 from . import reduce_combine as _rc
 from . import symm_copy as _sc
 
@@ -45,5 +46,22 @@ def attention(q, k, v, causal: bool = True, window: int | None = None,
                                block_kv=block_kv, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("sm_scale", "impl"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    sm_scale: float | None = None, impl: str = "kernel"):
+    """Paged decode attention (serving hot path): K/V gathered through a
+    block table of symmetric-heap pages.  ``impl="kernel"`` runs the
+    Pallas kernel (compiled on TPU, interpret elsewhere); ``"ref"`` the
+    jnp oracle — numerically interchangeable (tier-1 parity test)."""
+    if impl == "ref":
+        return _pa.paged_decode_attention_ref(q, k_pages, v_pages,
+                                              block_tables, lengths,
+                                              sm_scale=sm_scale)
+    return _pa.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                      lengths, sm_scale=sm_scale,
+                                      interpret=_interpret())
+
+
 COPY_VARIANTS = tuple(["stock", "auto"] + list(_sc.VARIANTS))
 COMBINE_VARIANTS = tuple(_rc.VARIANTS)
+PAGED_ATTN_IMPLS = ("kernel", "ref")

@@ -1,0 +1,182 @@
+"""Paged decode attention — K/V gathered through a block table.
+
+The serving engine (``repro.serve``) keeps the KV cache as fixed-size
+pages carved from the symmetric heap; a sequence's cache is a *block
+table* of page ids, not a contiguous buffer.  This kernel computes one
+decode step of attention directly against that layout: the grid walks
+(sequence, table slot) and the KV block for slot ``j`` of sequence ``i``
+is DMA'd from page ``block_table[i, j]`` — the gather happens in the
+BlockSpec index map via scalar prefetch (the block table is available
+before the kernel body runs, so the page id drives the HBM→VMEM DMA
+itself; no gather materializes in HBM).
+
+Online softmax runs exactly like the contiguous flash kernel
+(``flash_attention._flash_kernel``): per-sequence running (m, l) and an
+f32 accumulator live in VMEM scratch across table slots, so a paged
+sequence produces the same reduction tree as a contiguous one with
+``block_kv == page_tokens`` — the parity the tier-1 test pins against
+``ops.attention``.
+
+GQA is handled by a static loop over KV heads (query rows grouped by
+the KV head they read), matching the cache layout: pages store
+``kv_per_rank`` heads, queries ``heads_per_rank``.
+
+``interpret=None`` resolves from the platform like every other kernel
+here: compiled on TPU, interpreter elsewhere (``ops.INTERPRET``).
+``paged_decode_attention_ref`` is the jnp oracle (dense masked softmax
+over the gathered pages) used by tests and as the fast CPU path in the
+engine.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import symm_copy as _sc
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, sm_scale: float,
+                  page_tokens: int, n_slots: int, hkv: int, group: int):
+    i = pl.program_id(0)          # sequence
+    j = pl.program_id(1)          # block-table slot
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[i]
+    base = j * page_tokens
+
+    @pl.when(base < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (H, D)
+        cols = base + jax.lax.broadcasted_iota(jnp.int32,
+                                               (group, page_tokens), 1)
+        valid = cols < length
+        for h in range(hkv):                          # static GQA loop
+            qh = q[h * group:(h + 1) * group]         # (g, D)
+            kh = k_ref[0, :, h, :].astype(jnp.float32)   # (P, D)
+            vh = v_ref[0, :, h, :].astype(jnp.float32)
+            s = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            s = jnp.where(valid, s * sm_scale, NEG_INF)   # (g, P)
+            rows = slice(h * group, (h + 1) * group)
+            m_prev = m_ref[rows, :]                   # (g, 128) lane-repl
+            m_cur = jnp.max(s, axis=1, keepdims=True)
+            m_new = jnp.maximum(m_prev,
+                                jnp.broadcast_to(m_cur, m_prev.shape))
+            alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+            p = jnp.exp(s - m_new[:, :1])
+            l_new = alpha * l_ref[rows, :1] + jnp.sum(p, axis=1,
+                                                      keepdims=True)
+            acc_ref[rows, :] = acc_ref[rows, :] * alpha + jax.lax.dot_general(
+                p, vh, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[rows, :] = m_new
+            l_ref[rows, :] = jnp.broadcast_to(l_new, (group, 128))
+
+    @pl.when(j == n_slots - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           sm_scale: float | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """One decode step of attention through a block table.
+
+    q:            (B, H, D) this step's queries
+    k/v_pages:    (n_pages, P, H_kv, D) the page pool (H % H_kv == 0)
+    block_tables: (B, n_slots) int32 page ids (unused slots: any valid id)
+    lengths:      (B,) int32 tokens valid per sequence (0 = inactive ->
+                  zero output)
+
+    Returns (B, H, D).  Token t of sequence b lives in page
+    ``block_tables[b, t // P]`` at slot ``t % P``.
+    """
+    if interpret is None:
+        interpret = _sc.default_interpret()
+    b, h, d = q.shape
+    n_pages, page_tokens, hkv, _ = k_pages.shape
+    if h % hkv:
+        raise ValueError(f"GQA requires H % H_kv == 0, got {h} % {hkv}")
+    group = h // hkv
+    n_slots = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+
+    kernel = functools.partial(
+        _paged_kernel, sm_scale=sm_scale, page_tokens=page_tokens,
+        n_slots=n_slots, hkv=hkv, group=group)
+
+    bt_flat = block_tables.reshape(-1).astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    def q_map(i, j, bt, ln):
+        return (i, 0, 0)
+
+    def kv_map(i, j, bt, ln):
+        return (bt[i * n_slots + j], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, h, d), q_map),
+            pl.BlockSpec((1, page_tokens, hkv, d), kv_map),
+            pl.BlockSpec((1, page_tokens, hkv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h, 128), jnp.float32),
+            pltpu.VMEM((h, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(bt_flat, lens, q, k_pages, v_pages)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               *, sm_scale: float | None = None):
+    """jnp oracle: gather the pages, dense masked softmax in f32.
+    Mathematically identical to the kernel (same mask, same scale);
+    the fast path off-TPU."""
+    b, h, d = q.shape
+    _, page_tokens, hkv, _ = k_pages.shape
+    group = h // hkv
+    n_slots = block_tables.shape[1]
+    s_max = n_slots * page_tokens
+    sm_scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+
+    # (B, n_slots, P, hkv, d) -> (B, S, hkv, d)
+    kc = k_pages[block_tables].reshape(b, s_max, hkv, d)
+    vc = v_pages[block_tables].reshape(b, s_max, hkv, d)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg, kc.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * sm_scale
+    valid = jnp.arange(s_max)[None, :] < lengths[:, None]      # (B, S)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = sc.max(-1)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, vc.astype(jnp.float32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -18,11 +18,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
-def make_ctx(mesh, *, backend: str = "xla", comm_cfg=None, **overrides):
+def make_ctx(mesh, *, backend: str = "xla", **overrides):
     """ParallelCtx (and its tp/dp communicators) derived from a mesh
     built by make_production_mesh (or any mesh whose last axis is
-    'model').  ``backend`` selects the communicator transport; the
-    deprecated ``comm_cfg`` (a CommConfig) is still honoured."""
+    'model').  ``backend`` selects the communicator transport; pin
+    algorithms with ``dispatch=DispatchTable.fixed(...)``."""
     import jax.numpy as jnp
 
     from repro.parallel.ctx import ParallelCtx
@@ -31,7 +31,7 @@ def make_ctx(mesh, *, backend: str = "xla", comm_cfg=None, **overrides):
     tp_axis = overrides.pop("tp_axis", names[-1])
     dp_axes = overrides.pop("dp_axes",
                             tuple(n for n in names if n != tp_axis))
-    kw = dict(backend=backend, comm=comm_cfg, sp=True, remat=True,
+    kw = dict(backend=backend, sp=True, remat=True,
               param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
     kw.update(overrides)
     return ParallelCtx.from_mesh(mesh, dp_axes=dp_axes, tp_axis=tp_axis,

@@ -97,6 +97,27 @@ def _project_kv_head_layout(p, xf, cfg, ctx):
     return (k.reshape(b, t, kvpr, dh), v.reshape(b, t, kvpr, dh), kvpr)
 
 
+def project_qkv(p, xf, pos, cfg, ctx: ParallelCtx):
+    """Head-layout q/k/v projection with qk-norm and rope at ``pos``
+    ((t,) or (b, t) positions).  The single definition of the
+    projection convention, shared by training/prefill attention below
+    and the serving engine (``repro.serve.engine``) — so the two paths
+    cannot drift numerically (their token-stream parity is asserted in
+    tests/test_serve.py)."""
+    dh = cfg.head_dim
+    b, t, _ = xf.shape
+    hpr = cfg.heads_per_rank(ctx.tp_size)
+    q = (xf @ p["wq"].astype(xf.dtype)).reshape(b, t, hpr, dh)
+    k, v, _ = _project_kv_head_layout(p, xf, cfg, ctx)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
 def self_attention(p, x_sp, ctx: ParallelCtx, cfg, *, causal=True,
                    window: Optional[int] = None, pos0: int = 0):
     """x_sp: (b, t_loc, d) sequence-sharded (or full when sp off).
@@ -107,20 +128,11 @@ def self_attention(p, x_sp, ctx: ParallelCtx, cfg, *, causal=True,
     if layout == "head":
         xf = sp_gather(x_sp, ctx, axis=1).astype(cd)      # (b, t, d)
         b, t, _ = xf.shape
-        hpr = cfg.heads_per_rank(ctx.tp_size)
-        q = (xf @ p["wq"].astype(cd)).reshape(b, t, hpr, dh)
-        k, v, kvpr = _project_kv_head_layout(p, xf, cfg, ctx)
-        if cfg.qk_norm:
-            q = rmsnorm(p["q_norm"], q)
-            k = rmsnorm(p["k_norm"], k)
-        if cfg.use_rope:
-            pos = pos0 + jnp.arange(t)
-            q = apply_rope(q, pos, cfg.rope_theta)
-            k = apply_rope(k, pos, cfg.rope_theta)
+        q, k, v = project_qkv(p, xf, pos0 + jnp.arange(t), cfg, ctx)
         o = blocked_attention(q, k, v, causal=causal, window=window,
                               block_q=ctx.attn_block_q,
                               block_kv=ctx.attn_block_kv, unroll=ctx.unroll)
-        o = o.reshape(b, t, hpr * dh)
+        o = o.reshape(b, t, -1)
         out = o @ p["wo"].astype(cd)                       # partial (b,t,d)
         return sp_scatter(out, ctx, axis=1)
     # --- ctx layout: seq-sharded queries, gathered KV ---

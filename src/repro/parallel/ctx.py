@@ -17,9 +17,9 @@ dispatch table choosing each call's algorithm from payload bytes and
 team size (POSH §4.5.4), and per-op instrumentation — so layers just
 call ``ctx.tp_comm.psum(x)`` and the policy lives in one object.
 ``backend=`` selects the transport for both; pass explicit ``tp_comm``/
-``dp_comm`` objects to mix transports or tune dispatch per team.  The
-deprecated ``comm=CommConfig(...)`` field is still accepted and sets
-the backend + a pinned dispatch table for one release.
+``dp_comm`` objects to mix transports or tune dispatch per team.  (The
+deprecated ``comm=CommConfig(...)`` field was removed with the shim
+layer; pin algorithms with ``dispatch=DispatchTable.fixed(...)``.)
 """
 from __future__ import annotations
 
@@ -44,7 +44,6 @@ class ParallelCtx:
     dispatch: DispatchTable = DispatchTable()
     tp_comm: Optional[Communicator] = None   # built from the fields above
     dp_comm: Optional[Communicator] = None   # when not given explicitly
-    comm: Optional[comm.CommConfig] = None   # DEPRECATED: sets backend
     sp: bool = True                     # sequence-parallel activations
     remat: bool = True                  # per-layer activation ckpt
     use_pallas: bool = False            # flash kernels (TPU only)
@@ -62,19 +61,6 @@ class ParallelCtx:
 
     def __post_init__(self):
         backend, dispatch = self.backend, self.dispatch
-        if self.comm is not None:       # deprecated CommConfig path
-            if backend != "xla" and backend != self.comm.backend:
-                raise ValueError(
-                    f"conflicting backend={backend!r} and deprecated "
-                    f"comm=CommConfig(backend={self.comm.backend!r}); "
-                    f"pass one or the other")
-            backend = self.comm.backend
-            dispatch = self.comm.dispatch_table()
-            object.__setattr__(self, "backend", backend)
-            object.__setattr__(self, "dispatch", dispatch)
-            # consumed: clear so dataclasses.replace/with_ does not
-            # re-apply the stale config over later explicit overrides
-            object.__setattr__(self, "comm", None)
         if self.tp_comm is None:
             object.__setattr__(self, "tp_comm", comm.make_communicator(
                 self.tp_axis, size=self.tp_size, backend=backend,
@@ -95,18 +81,13 @@ class ParallelCtx:
     # kept separate so e.g. with_(dp_size=1) preserves the tp_comm
     # object (and the instrumentation already recorded on it)
     _TP_COMM_FIELDS = frozenset({"tp_axis", "tp_size", "backend",
-                                 "dispatch", "comm"})
+                                 "dispatch"})
     _DP_COMM_FIELDS = frozenset({"dp_axes", "dp_size", "backend",
-                                 "dispatch", "comm"})
+                                 "dispatch"})
 
     def with_(self, **kw) -> "ParallelCtx":
         """dataclasses.replace that rebuilds a communicator when any
         field it derives from changes (unless caller passes its own)."""
-        if kw.get("comm") is not None and "backend" not in kw:
-            # a fresh deprecated config should win like it does at
-            # construction, not conflict with the previously resolved
-            # backend riding through replace
-            kw["backend"] = kw["comm"].backend
         if self._TP_COMM_FIELDS & kw.keys():
             kw.setdefault("tp_comm", None)
         if self._DP_COMM_FIELDS & kw.keys():

@@ -1,0 +1,30 @@
+"""repro.serve — continuous-batching inference on the symmetric heap.
+
+The first end-to-end serving workload on top of the framework's POSH
+substrate: a paged KV cache whose pages are fixed-size blocks carved
+from the ``SymmetricHeap`` (so block tables are plain offset arrays
+valid on every PE — Fact 1 applied to serving), FCFS continuous
+batching with preempt-by-eviction, prefill/decode step functions that
+issue every collective through ``ctx.tp_comm`` (any registered backend:
+xla / posh / pallas), paged decode attention via the Pallas block-table
+kernel, and cross-PE KV page migration as ``put_nbi`` one-sided writes
+drained by one ``quiet()`` per scheduler tick.
+
+    from repro import serve
+    eng = serve.ServeEngine(params, cfg, ctx, serve.ServeConfig())
+    done = eng.run(serve.make_requests(serve.TrafficConfig()))
+    eng.metrics()
+"""
+from .engine import LocalExec, ServeConfig, ServeEngine, make_decode_step, \
+    make_prefill
+from .kv_cache import NULL_PAGE, PagedKVCache, PageMigration
+from .scheduler import FCFSScheduler, Request, TickPlan
+from .traffic import TrafficConfig, make_requests
+
+__all__ = [
+    "ServeConfig", "ServeEngine", "LocalExec",
+    "make_decode_step", "make_prefill",
+    "PagedKVCache", "PageMigration", "NULL_PAGE",
+    "FCFSScheduler", "Request", "TickPlan",
+    "TrafficConfig", "make_requests",
+]

@@ -1,0 +1,391 @@
+"""Continuous-batching inference engine over the paged symmetric-heap
+KV cache.
+
+The engine is split in two layers:
+
+  * **pure step functions** (``make_prefill`` / ``make_decode_step``) —
+    trace-friendly, built from the same model weights AND the same
+    projection convention the registry's train/decode paths use
+    (``attention.project_qkv``, ``embed``, ``mlp``), tensor-parallel
+    through ``ctx.tp_comm`` so all
+    registered communicator backends (xla / posh / pallas) serve
+    traffic.  Attention in the decode step is the paged kernel
+    (``ops.paged_attention``) reading K/V through the block table.
+
+  * a **host-side driver** (``ServeEngine``) — owns the
+    ``FCFSScheduler`` + ``PagedKVCache``, runs one token per running
+    sequence per tick, and drains every tick's planned page migrations
+    with ``put_nbi`` + ONE ``quiet()`` on a ``CommQueue`` before the
+    decode step runs.  The execution substrate is pluggable
+    (``LocalExec`` jits on one device; the mesh suite supplies a
+    shard_map-wrapped equivalent), so the same scheduler drives a
+    single CPU process and an 8-PE TP mesh.
+
+Batch slots are fixed (``ServeConfig.max_batch``): empty slots carry
+the null page table and length 0, which zeroes their attention output
+and routes their KV writes to the null page — no branches in the traced
+step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heap import SymmetricHeap
+from repro.core.ordering import CommQueue, LocalTransport
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import embed as emb
+from repro.models import lm
+from repro.models import mlp as ff
+from repro.models.common import norm_apply
+from repro.parallel.ctx import ParallelCtx
+
+from .kv_cache import PagedKVCache
+from .scheduler import FCFSScheduler, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Trace-time serving shape: page geometry, batch and sequence
+    bounds, attention implementation, KV precision."""
+
+    page_tokens: int = 8
+    n_pages: int = 64
+    max_batch: int = 4
+    max_seq: int = 64                 # prompt + decode budget per seq
+    max_prompt: int = 32              # prefill pad length
+    attn_impl: str = "kernel"         # "kernel" (Pallas) | "ref" (jnp)
+    kv_dtype: jnp.dtype = jnp.float32
+    prefix_keep: bool = False         # pin finished prompts' full pages
+                                      # as migratable prefix cache
+
+    @property
+    def table_slots(self) -> int:
+        return -(-self.max_seq // self.page_tokens)
+
+
+def _check_supported(cfg, ctx: ParallelCtx) -> None:
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"repro.serve drives dense/moe decoders; got {cfg.family}")
+    if cfg.attn_layout(ctx.tp_size) != "head":
+        raise NotImplementedError(
+            "repro.serve requires the head-parallel attention layout "
+            f"({cfg.n_heads} heads, tp={ctx.tp_size})")
+    if cfg.swa_window is not None:
+        raise NotImplementedError("sliding-window + paged cache: not yet")
+
+
+# ======================================================================
+# pure step functions
+# ======================================================================
+def _write_pages(pool, li, k, v, bt, pos, page_tokens):
+    """Scatter one-token-per-sequence K/V into the page pool.
+    pool: (n_pages, 2, L, P, kvh, dh); k/v: (b, kvh, dh); pos: (b,).
+    Inactive slots carry the null block table -> rows land in page 0."""
+    page = jnp.take_along_axis(bt, (pos // page_tokens)[:, None],
+                               axis=1)[:, 0]
+    slot = pos % page_tokens
+    dt = pool.dtype
+    pool = pool.at[page, 0, li, slot].set(k.astype(dt))
+    pool = pool.at[page, 1, li, slot].set(v.astype(dt))
+    return pool
+
+
+def make_decode_step(cfg, ctx: ParallelCtx, scfg: ServeConfig):
+    """One serving tick: (params, pool, tokens, pos, bt, lens) ->
+    (next_tokens, pool).
+
+    tokens (b,) int32 input token per slot; pos (b,) its position;
+    bt (b, table_slots) int32 block tables; lens (b,) valid tokens
+    AFTER this write (pos+1 for live slots, 0 for empty ones).
+    """
+    _check_supported(cfg, ctx)
+    P = scfg.page_tokens
+
+    def step(params, pool, tokens, pos, bt, lens):
+        cd = ctx.compute_dtype
+        x = emb.embed_lookup(params["embed"], tokens[:, None], ctx)[:, 0]
+        b = x.shape[0]
+
+        def body(carry, inputs):
+            x, pool = carry
+            p, li = inputs
+            h = norm_apply("rms", p["ln1"], x).astype(cd)
+            q, k, v = attn.project_qkv(p["attn"], h[:, None],
+                                       pos[:, None], cfg, ctx)
+            q, k, v = q[:, 0], k[:, 0], v[:, 0]
+            pool = _write_pages(pool, li, k, v, bt, pos, P)
+            kp = jax.lax.dynamic_index_in_dim(pool[:, 0], li, axis=1,
+                                              keepdims=False)
+            vp = jax.lax.dynamic_index_in_dim(pool[:, 1], li, axis=1,
+                                              keepdims=False)
+            o = ops.paged_attention(q, kp, vp, bt, lens,
+                                    impl=scfg.attn_impl)
+            out = o.reshape(b, -1).astype(cd) @ p["attn"]["wo"].astype(cd)
+            out = ctx.tp_comm.psum(out)
+            x = x + out
+            m = lm._decode_mlp(p["mlp"], norm_apply("rms", p["ln2"], x),
+                               ctx, cfg)
+            return (x + m, pool), None
+
+        (x, pool), _ = jax.lax.scan(
+            body, (x, pool),
+            (params["blocks"], jnp.arange(cfg.n_layers)))
+        x = norm_apply("rms" if cfg.family != "encdec" else "layer",
+                       params["ln_f"], x)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = emb.lm_head_logits(head, x.astype(cd), ctx)
+        nxt = emb.tp_argmax(logits, ctx)
+        return nxt.astype(jnp.int32), pool
+
+    return step
+
+
+def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
+    """Batched full-prompt prefill: (params, pool, ids, lens, bt) ->
+    (first_tokens, pool).
+
+    ids (b, t) right-padded prompts; lens (b,) true lengths (0 = empty
+    slot).  Writes every prompt position's K/V into the pages and
+    returns the greedy token following each prompt.  Attention is the
+    contiguous blocked flash (prompt K/V are in registers anyway); the
+    pages are written for the decode steps that follow.
+    """
+    _check_supported(cfg, ctx)
+    P = scfg.page_tokens
+    from repro.models.flash import blocked_attention
+
+    def prefill(params, pool, ids, lens, bt):
+        cd = ctx.compute_dtype
+        x = emb.embed_lookup(params["embed"], ids, ctx)
+        b, t = ids.shape
+        pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+        def body(carry, inputs):
+            x, pool = carry
+            p, li = inputs
+            h = norm_apply("rms", p["ln1"], x).astype(cd)
+            q, k, v = attn.project_qkv(p["attn"], h, pos, cfg, ctx)
+            # page writes: token (b, j) -> page bt[b, j//P] slot j%P
+            page = jnp.take_along_axis(bt, pos // P, axis=1)     # (b, t)
+            slot = pos % P
+            dt = pool.dtype
+            pool = pool.at[page, 0, li, slot].set(k.astype(dt))
+            pool = pool.at[page, 1, li, slot].set(v.astype(dt))
+            o = blocked_attention(q, k, v, causal=True,
+                                  block_q=ctx.attn_block_q,
+                                  block_kv=ctx.attn_block_kv,
+                                  unroll=ctx.unroll)
+            out = o.reshape(b, t, -1).astype(cd) @ p["attn"]["wo"].astype(cd)
+            out = ctx.tp_comm.psum(out)
+            x = x + out
+            ctx1 = ctx.with_(sp=False)
+            mlp = (ff.moe_apply if cfg.moe else ff.mlp_apply)(
+                p["mlp"], norm_apply("rms", p["ln2"], x), ctx1, cfg)
+            return (x + mlp, pool), None
+
+        (x, pool), _ = jax.lax.scan(
+            body, (x, pool),
+            (params["blocks"], jnp.arange(cfg.n_layers)))
+        x = norm_apply("rms", params["ln_f"], x)
+        last = jnp.clip(lens - 1, 0, t - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = emb.lm_head_logits(head, xl.astype(cd), ctx)
+        nxt = emb.tp_argmax(logits, ctx)
+        return nxt.astype(jnp.int32), pool
+
+    return prefill
+
+
+# ======================================================================
+# execution substrates
+# ======================================================================
+class LocalExec:
+    """Single-device execution: jitted step functions over the per-PE
+    pool, a loopback CommQueue (LocalTransport, 1 PE) for the migration
+    drain — the same ``put_nbi`` + one ``quiet()`` path the mesh runs,
+    minus the wire."""
+
+    def __init__(self, params, cfg, ctx, scfg: ServeConfig,
+                 kv: PagedKVCache):
+        self.params = params
+        self.kv = kv
+        self._prefill = jax.jit(make_prefill(cfg, ctx, scfg))
+        self._decode = jax.jit(make_decode_step(cfg, ctx, scfg))
+        self._team = ctx.tp_comm.team
+
+    def init_pool(self):
+        return self.kv.zeros()
+
+    def prefill(self, pool, ids, lens, bt):
+        return self._prefill(self.params, pool, jnp.asarray(ids),
+                             jnp.asarray(lens), jnp.asarray(bt))
+
+    def decode(self, pool, tokens, pos, bt, lens):
+        return self._decode(self.params, pool, jnp.asarray(tokens),
+                            jnp.asarray(pos), jnp.asarray(bt),
+                            jnp.asarray(lens))
+
+    def migrate(self, pool, migrations):
+        # whole-system view with one PE: state rows carry the PE axis
+        state = {self.kv.handle.name: np.asarray(pool)[None]}
+        q = CommQueue(self._team, state, transport=LocalTransport(1))
+        out = self.kv.issue_migrations(q, state[self.kv.handle.name],
+                                       migrations, system=True)
+        return jnp.asarray(out[self.kv.handle.name][0])
+
+
+# ======================================================================
+# the driver
+# ======================================================================
+class ServeEngine:
+    """Continuous-batching driver: one token per running sequence per
+    tick, FCFS admission, preempt-by-eviction, migration drain first."""
+
+    def __init__(self, params, cfg, ctx: ParallelCtx, scfg: ServeConfig,
+                 *, heap: Optional[SymmetricHeap] = None,
+                 kv: Optional[PagedKVCache] = None, exec_=None,
+                 my_pe: int = 0):
+        self.cfg, self.ctx, self.scfg = cfg, ctx, scfg
+        if kv is None:
+            heap = heap or SymmetricHeap(
+                (ctx.tp_axis,) if ctx.tp_size > 1 else ("data",))
+            kv = PagedKVCache(
+                heap, n_layers=cfg.n_layers,
+                kv_heads=cfg.kv_per_rank(ctx.tp_size),
+                head_dim=cfg.head_dim, n_pages=scfg.n_pages,
+                page_tokens=scfg.page_tokens, dtype=scfg.kv_dtype)
+        self.kv = kv
+        self.sched = FCFSScheduler(kv, max_batch=scfg.max_batch,
+                                   max_seq=scfg.max_seq, my_pe=my_pe)
+        self.exec = exec_ or LocalExec(params, cfg, ctx, scfg, kv)
+        self.pool = self.exec.init_pool()
+        self.finished: list = []
+        self.ticks = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.n_prompt > self.scfg.max_prompt:
+            raise ValueError(
+                f"request {req.rid}: prompt of {req.n_prompt} exceeds "
+                f"max_prompt {self.scfg.max_prompt}")
+        self.sched.submit(req)
+
+    def tick(self, now: float = 0.0) -> None:
+        """One engine tick: schedule -> migrate (one quiet) -> batched
+        prefill for fresh admissions -> one decode token for every
+        other running sequence -> retire finished."""
+        self.ticks += 1
+        plan = self.sched.tick()
+        if plan.migrations:
+            self.pool = self.exec.migrate(self.pool,
+                                          tuple(plan.migrations))
+        fresh = []
+        if plan.admitted:
+            fresh = self._batch_prefill(plan.admitted, now)
+        self._decode_tick(skip=fresh, now=now)
+
+    def _batch_prefill(self, reqs, now):
+        B, T = self.scfg.max_batch, self.scfg.max_prompt
+        reqs = list(reqs)
+        ids = np.zeros((B, T), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(reqs):
+            if r.n_prompt > T:
+                raise ValueError(f"prompt {r.n_prompt} > max_prompt {T}")
+            ids[i, :r.n_prompt] = r.prompt
+            lens[i] = r.n_prompt
+        bt = self.kv.block_table(
+            [r.rid for r in reqs] + [None] * (B - len(reqs)),
+            self.scfg.table_slots)
+        toks, self.pool = self.exec.prefill(self.pool, ids, lens, bt)
+        toks = np.asarray(toks)
+        for i, r in enumerate(reqs):
+            self.sched.note_prefilled(r, int(toks[i]), now)
+            self._maybe_finish(r, now)
+        return reqs
+
+    def _decode_tick(self, skip, now):
+        batch = [r for r in self.sched.running if r not in skip]
+        if not batch:
+            return
+        B = self.scfg.max_batch
+        tokens = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(batch):
+            tokens[i] = r.next_input()
+            p = r.n_done if r.is_prefilling() \
+                else r.n_prompt + len(r.out) - 1
+            pos[i] = p
+            lens[i] = p + 1
+        bt = self.kv.block_table(
+            [r.rid for r in batch] + [None] * (B - len(batch)),
+            self.scfg.table_slots)
+        toks, self.pool = self.exec.decode(self.pool, tokens, pos, bt,
+                                           lens)
+        toks = np.asarray(toks)
+        for i, r in enumerate(batch):
+            self.sched.advance(r, int(toks[i]), now)
+            self._maybe_finish(r, now)
+
+    def _maybe_finish(self, r, now):
+        if not r.is_prefilling() and r.finished():
+            self.sched.finish(r, now,
+                              register_prefix=self.scfg.prefix_keep)
+            self.finished.append(r)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], *, clock: str = "wall",
+            max_ticks: int = 100_000) -> list:
+        """Replay an arrival trace to completion.  ``clock="wall"``
+        admits by elapsed wall time (benchmarking); ``"tick"`` admits by
+        tick count (deterministic, what the parity suites use)."""
+        pending = sorted(requests, key=lambda r: r.t_arrive)
+        t0 = time.monotonic()
+        skipped = 0.0          # idle time fast-forwarded past
+        for _ in range(max_ticks):
+            now = (self.ticks if clock == "tick"
+                   else time.monotonic() - t0 + skipped)
+            while pending and pending[0].t_arrive <= now:
+                self.submit(pending.pop(0))
+            if not self.sched.has_work():
+                if not pending:
+                    return self.finished
+                if clock == "wall":      # fast-forward idle gaps
+                    skipped += pending[0].t_arrive - now
+                    now = time.monotonic() - t0 + skipped
+                self.submit(pending.pop(0))
+            self.tick(now)
+        raise RuntimeError(f"serve loop did not converge in {max_ticks} "
+                           f"ticks ({len(self.finished)} finished)")
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Throughput/latency summary over finished requests."""
+        lat = np.array([r.t_finish - r.t_arrive for r in self.finished])
+        ttft = np.array([r.t_first - r.t_arrive for r in self.finished
+                         if r.t_first is not None])
+        toks = sum(len(r.out) for r in self.finished)
+        span = max((r.t_finish for r in self.finished), default=0.0) \
+            - min((r.t_arrive for r in self.finished), default=0.0)
+        pct = (lambda a, p: float(np.percentile(a, p)) if a.size else 0.0)
+        return {
+            "requests": len(self.finished),
+            "tokens_out": int(toks),
+            "span_s": float(span),
+            "throughput_tok_s": toks / span if span > 0 else 0.0,
+            "latency_p50_s": pct(lat, 50), "latency_p99_s": pct(lat, 99),
+            "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+            "ticks": self.ticks,
+            "sched": dict(self.sched.stats),
+            "kv": dict(self.kv.stats),
+        }

@@ -1,0 +1,256 @@
+"""Paged KV cache on the symmetric heap (the serving analogue of Fact 1).
+
+The page pool is ONE symmetric allocation: a ``(n_pages, 2, n_layers,
+page_tokens, kv_heads, head_dim)`` array carved from ``SymmetricHeap``,
+so every PE holds the pool at the same offset with the same page
+geometry.  That is what makes a *block table* — a plain array of page
+ids — valid on every PE: page ``p`` of any sequence is rows
+``[p:p+1]`` of the pool object on whichever PE you address (Corollary
+1: the page id IS the remote address).  Cross-PE page migration is
+therefore a one-sided ``put_nbi`` of one pool row — no handshake, no
+collective — drained by the engine's single ``quiet()`` per scheduler
+tick.
+
+Page 0 is reserved as the *null page*: block tables are padded with it,
+and writes for masked-out batch slots land there.  Real allocations
+hand out ids 1..n_pages-1 from a free list (LIFO, so freshly freed
+pages are reused while still warm in cache).
+
+Host-side bookkeeping (free list, per-sequence tables, prefix index) is
+plain Python — trace-time in the same sense as the heap allocator.  The
+page *contents* live in the functional heap state dict and flow through
+jit/shard_map like any other symmetric object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heap import SymHandle, SymmetricHeap
+from repro.core.ordering import CommQueue
+
+NULL_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PageMigration:
+    """One planned cross-PE page move: pool row ``src_page`` on PE
+    ``src_pe`` -> pool row ``dst_page`` on PE ``dst_pe``."""
+
+    src_pe: int
+    dst_pe: int
+    src_page: int
+    dst_page: int
+
+
+class PagedKVCache:
+    """Fixed-size KV pages carved from the symmetric heap.
+
+    ``kv_heads`` is the per-PE KV head count (``cfg.kv_per_rank(tp)``
+    under tensor parallelism) — the pool is the per-PE shard, identical
+    in shape on every PE like any symmetric object.
+    """
+
+    def __init__(self, heap: SymmetricHeap, *, n_layers: int,
+                 kv_heads: int, head_dim: int, n_pages: int,
+                 page_tokens: int, dtype=jnp.float32,
+                 name: str = "kv_pages"):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        self.heap = heap
+        self.page_tokens = int(page_tokens)
+        self.n_layers = int(n_layers)
+        self.kv_heads = int(kv_heads)
+        self.head_dim = int(head_dim)
+        self.dtype = jnp.dtype(dtype)
+        self.handle: SymHandle = heap.alloc(
+            name, (n_pages, 2, n_layers, page_tokens, kv_heads, head_dim),
+            dtype)
+        # LIFO free list over real pages (1..n-1); page 0 stays null
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))
+        self.tables: dict = {}            # seq id -> list[int] page ids
+        # prefix index: tuple(prompt tokens of k full pages) ->
+        # (owner_pe, [page ids on the owner]) — the migration source.
+        # Registered pages are PINNED (out of circulation) so they stay
+        # migratable; pinning is capped at a quarter of the pool so the
+        # cache cannot starve admissions.
+        self._prefix: dict = {}
+        self.pin_budget = max((n_pages - 1) // 4, 2)
+        self.pinned_pages = 0
+        self.stats = {"page_allocs": 0, "page_frees": 0, "migrations": 0,
+                      "prefix_hits": 0}
+
+    # ------------------------------------------------------------------
+    # geometry
+    # ------------------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return self.handle.shape[0]
+
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_tokens)
+
+    # ------------------------------------------------------------------
+    # allocation — trace-time, host side
+    # ------------------------------------------------------------------
+    def alloc_seq(self, seq_id, n_tokens: int) -> bool:
+        """Reserve pages covering ``n_tokens`` for a new sequence.
+        All-or-nothing; False when the pool cannot cover it."""
+        need = max(self.pages_for(n_tokens), 1)
+        if seq_id in self.tables:
+            raise ValueError(f"sequence {seq_id!r} already has pages")
+        if need > len(self._free):
+            return False
+        self.tables[seq_id] = [self._free.pop() for _ in range(need)]
+        self.stats["page_allocs"] += need
+        return True
+
+    def ensure(self, seq_id, n_tokens: int) -> bool:
+        """Grow a live sequence's table to cover ``n_tokens`` (decode
+        crossing a page boundary).  False when out of pages — the
+        scheduler then preempts someone."""
+        table = self.tables[seq_id]
+        while len(table) * self.page_tokens < n_tokens:
+            if not self._free:
+                return False
+            table.append(self._free.pop())
+            self.stats["page_allocs"] += 1
+        return True
+
+    def free_seq(self, seq_id) -> None:
+        pages = self.tables.pop(seq_id)
+        self.stats["page_frees"] += len(pages)
+        # LIFO, most-recently-used first
+        self._free.extend(reversed(pages))
+
+    def attach_seq(self, seq_id, pages: Sequence[int]) -> None:
+        """Adopt already-filled pages (e.g. migrated prefix pages) as
+        the head of a new sequence's block table."""
+        if seq_id in self.tables:
+            raise ValueError(f"sequence {seq_id!r} already has pages")
+        self.tables[seq_id] = list(pages)
+
+    def take_pages(self, n: int) -> Optional[list[int]]:
+        """Pop ``n`` pages ownerless (migration landing zone)."""
+        if n > len(self._free):
+            return None
+        self.stats["page_allocs"] += n
+        return [self._free.pop() for _ in range(n)]
+
+    def release_pages(self, pages: Sequence[int]) -> None:
+        self.stats["page_frees"] += len(pages)
+        self._free.extend(reversed(list(pages)))
+
+    # ------------------------------------------------------------------
+    # block tables as arrays (what the step functions consume)
+    # ------------------------------------------------------------------
+    def block_table(self, seq_ids, n_slots: int) -> np.ndarray:
+        """(B, n_slots) int32, padded with the null page.  ``None``
+        entries in ``seq_ids`` (empty batch slots) become all-null."""
+        out = np.full((len(seq_ids), n_slots), NULL_PAGE, np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is None:
+                continue
+            pages = self.tables[sid]
+            if len(pages) > n_slots:
+                raise ValueError(
+                    f"sequence {sid!r} has {len(pages)} pages > "
+                    f"{n_slots} table slots")
+            out[i, :len(pages)] = pages
+        return out
+
+    # ------------------------------------------------------------------
+    # prefix cache (the migration source)
+    # ------------------------------------------------------------------
+    def register_prefix(self, tokens, owner_pe: int,
+                        pages: Sequence[int]) -> bool:
+        """Publish ``len(pages)`` FULL pages holding the KV of
+        ``tokens[:len(pages)*page_tokens]`` as migratable from
+        ``owner_pe``.  Block-table offsets are symmetric, so the entry
+        is meaningful on every PE without translation (Fact 1).
+        Returns False (caller keeps page ownership) when the prefix is
+        already published — pinned pages must have exactly one owner —
+        or when pinning would exceed the pin budget (the cache must
+        never starve admissions)."""
+        k = len(pages)
+        key = tuple(int(t) for t in tokens[:k * self.page_tokens])
+        if not key or key in self._prefix \
+                or self.pinned_pages + k > self.pin_budget:
+            return False
+        self._prefix[key] = (int(owner_pe), list(pages))
+        self.pinned_pages += k
+        return True
+
+    def lookup_prefix(self, tokens):
+        """Longest registered full-page prefix of ``tokens``.  Returns
+        (owner_pe, pages) or None.  (The ``prefix_hits`` stat counts
+        successful RESUMES, not lookups — a blocked head-of-line
+        request re-looks-up every tick; the scheduler records the hit
+        once admission actually succeeds.)"""
+        n_full = len(tokens) // self.page_tokens
+        for k in range(n_full, 0, -1):
+            hit = self._prefix.get(tuple(int(t)
+                                         for t in tokens[:k * self.page_tokens]))
+            if hit is not None:
+                return hit
+        return None
+
+    # ------------------------------------------------------------------
+    # migration — put_nbi per page, ONE quiet() per call (per tick)
+    # ------------------------------------------------------------------
+    def issue_migrations(self, queue: CommQueue, pool,
+                         migrations: Sequence[PageMigration], *,
+                         system: bool = False, pairs_of=None):
+        """Issue every planned page move as a nonblocking one-sided put
+        and drain with a single ``quiet()`` — the engine calls this once
+        per scheduler tick, so however many pages move, the tick pays
+        one completion barrier (§3.2's whole point).
+
+        ``pool`` is the pool array the payload rows are sliced from:
+        the per-PE shard under ``PermuteTransport`` (inside shard_map),
+        or the whole (n_pe, n_pages, ...) system state under
+        ``LocalTransport`` (``system=True``).  ``pairs_of`` maps one
+        migration to its (src, dst) pair list — defaults to the single
+        ``(src_pe, dst_pe)`` pair; a tensor-parallel serving cell
+        expands it to one pair per TP rank (each rank's page shard
+        moves to its counterpart in one permute round).  Returns the
+        drained heap state.
+        """
+        for m in migrations:
+            if system:
+                data = pool[:, m.src_page:m.src_page + 1]
+            else:
+                data = jax.lax.dynamic_slice_in_dim(pool, m.src_page, 1,
+                                                    axis=0)
+            pairs = pairs_of(m) if pairs_of else [(m.src_pe, m.dst_pe)]
+            queue.put_nbi(self.handle, data, pairs, offset=m.dst_page)
+        self.stats["migrations"] += len(migrations)
+        return queue.quiet()
+
+    # ------------------------------------------------------------------
+    # pool state + growth
+    # ------------------------------------------------------------------
+    def zeros(self) -> jax.Array:
+        return jnp.zeros(self.handle.shape, self.handle.dtype)
+
+    def grow(self, extra_pages: int, pool: Optional[jax.Array] = None):
+        """Extend the pool by ``extra_pages`` via ``heap.realloc`` —
+        in place when the heap has room next door, moved otherwise (the
+        offset stays symmetric either way).  Returns the new pool array
+        with existing page contents carried over (when given)."""
+        old_shape = self.handle.shape
+        new_n = old_shape[0] + int(extra_pages)
+        self.handle = self.heap.realloc(self.handle,
+                                        (new_n,) + old_shape[1:])
+        self._free.extend(range(new_n - 1, old_shape[0] - 1, -1))
+        if pool is None:
+            return self.zeros()
+        pad = [(0, new_n - old_shape[0])] + [(0, 0)] * (pool.ndim - 1)
+        return jnp.pad(pool, pad)

@@ -1,0 +1,248 @@
+"""FCFS continuous batching with preempt-by-eviction.
+
+Classic continuous batching (Orca/vLLM style) over the paged KV cache:
+
+  * requests queue FCFS; a request is ADMITTED when a batch slot is
+    free and the pool can cover its prompt + one decode page;
+  * every engine tick decodes ONE token for every running sequence —
+    a sequence still consuming its prompt ("chunked prefill" after a
+    prefix-cache resume or a batched prefill for fresh admissions)
+    shares the same batch as sequences generating output;
+  * when a decode step needs a page and the pool is dry, the YOUNGEST
+    running sequence is preempted by eviction: its pages are freed, it
+    re-queues at the head of the waiting line (FCFS order preserved —
+    it is still ahead of everything that arrived after it) and will
+    re-prefill on re-admission.
+
+The scheduler is host-side and deterministic: given the same arrival
+trace it makes the same decisions regardless of communicator backend,
+which is what lets the mesh test demand bit-identical token streams
+across xla/posh/pallas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .kv_cache import PagedKVCache, PageMigration
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request.  ``prompt`` is a list of token ids;
+    ``max_new`` the decode budget."""
+
+    rid: int
+    prompt: list
+    max_new: int
+    t_arrive: float = 0.0
+
+    # runtime (engine-owned)
+    out: list = dataclasses.field(default_factory=list)
+    n_done: int = 0          # prompt tokens whose KV is in pages
+    slot: Optional[int] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def n_prompt(self) -> int:
+        return len(self.prompt)
+
+    def next_input(self) -> int:
+        """The token this sequence feeds next: the prompt while it is
+        still being consumed, the last sampled token afterwards."""
+        if self.n_done < self.n_prompt:
+            return int(self.prompt[self.n_done])
+        return int(self.out[-1])
+
+    def is_prefilling(self) -> bool:
+        return self.n_done < self.n_prompt
+
+    def finished(self) -> bool:
+        return len(self.out) >= self.max_new
+
+    def reset(self) -> None:
+        """Preemption: all progress is rebuilt from scratch."""
+        self.out.clear()
+        self.n_done = 0
+        self.slot = None
+        self.preemptions += 1
+
+
+@dataclasses.dataclass
+class TickPlan:
+    """What one scheduler tick decided (the engine executes it)."""
+
+    admitted: list = dataclasses.field(default_factory=list)   # fresh: batch prefill
+    resumed: list = dataclasses.field(default_factory=list)    # prefix-attached
+    preempted: list = dataclasses.field(default_factory=list)
+    migrations: list = dataclasses.field(default_factory=list)  # PageMigration
+
+
+class FCFSScheduler:
+    """First-come-first-served admission over a PagedKVCache."""
+
+    def __init__(self, kv: PagedKVCache, *, max_batch: int,
+                 max_seq: int, my_pe: int = 0):
+        self.kv = kv
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        self.my_pe = int(my_pe)
+        self.waiting: deque = deque()
+        self.running: list = []          # admission order (oldest first)
+        self._admit_seq = itertools.count()
+        self._admit_idx: dict = {}       # rid -> admission ticket
+        self.stats = {"admitted": 0, "resumed": 0, "preempted": 0,
+                      "finished": 0, "ticks": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.n_prompt + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: {req.n_prompt}+{req.max_new} tokens "
+                f"exceed max_seq {self.max_seq}")
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------------
+    def tick(self) -> TickPlan:
+        """One scheduling round: grow running sequences (preempting by
+        eviction when the pool is dry), then admit FCFS while slots and
+        pages last.  Prefix-cache hits admit as RESUMED sequences whose
+        first pages arrive by migration instead of recompute."""
+        self.stats["ticks"] += 1
+        plan = TickPlan()
+        self._ensure_running(plan)
+        self._admit(plan)
+        return plan
+
+    def _ensure_running(self, plan: TickPlan) -> None:
+        """Every running sequence needs page room for the token this
+        tick writes.  Out of pages -> evict the youngest until it fits
+        (never evicting the sequence we are growing unless it IS the
+        youngest — then it preempts itself and waits)."""
+        for req in list(self.running):
+            if req not in self.running:
+                continue                     # evicted by an earlier loop turn
+            # exact demand for THIS tick's write: the input token's
+            # position + 1 (prefill: prompt token n_done; decode: the
+            # last sampled token at n_prompt + len(out) - 1).  Asking
+            # for one more would preempt a neighbour for a page the
+            # final token of a finishing sequence never writes.
+            need = req.n_done + 1 if req.is_prefilling() \
+                else req.n_prompt + len(req.out)
+            while not self.kv.ensure(req.rid, need):
+                victim = self._youngest()
+                self._preempt(victim, plan)
+                if victim is req:
+                    break
+
+    def _youngest(self) -> Request:
+        return max(self.running, key=lambda r: self._admit_idx[r.rid])
+
+    def _preempt(self, req: Request, plan: TickPlan) -> None:
+        self.kv.free_seq(req.rid)
+        self.running.remove(req)
+        req.reset()
+        # back to the head of the line: still ahead of later arrivals
+        self.waiting.appendleft(req)
+        plan.preempted.append(req)
+        self.stats["preempted"] += 1
+
+    def _admit(self, plan: TickPlan) -> None:
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            if req in plan.preempted:
+                # evicted THIS tick to let an older sequence breathe —
+                # re-admitting immediately would thrash prefill
+                break
+            hit = self.kv.lookup_prefix(req.prompt)
+            if hit is not None:
+                # remote owner: pages arrive by one-sided migration;
+                # same-PE owner: the identical put_nbi path with
+                # self-pairs — a 0-hop page copy into fresh pages, so
+                # the pinned originals stay in the index
+                if not self._admit_resumed(req, hit, plan):
+                    break
+            else:
+                # prompt + the first decode page, all or nothing
+                if not self.kv.alloc_seq(req.rid, req.n_prompt + 1):
+                    break
+                self.waiting.popleft()
+                self._start(req)
+                plan.admitted.append(req)
+                self.stats["admitted"] += 1
+
+    def _admit_resumed(self, req: Request, hit, plan: TickPlan) -> bool:
+        """Prefix pages live on another PE: take landing pages, plan the
+        migrations, and admit with the prefix marked done — the rest of
+        the prompt streams through the decode path (chunked prefill)."""
+        owner_pe, src_pages = hit
+        landing = self.kv.take_pages(len(src_pages))
+        if landing is None:
+            return False
+        self.kv.attach_seq(req.rid, landing)
+        if not self.kv.ensure(req.rid, req.n_prompt + 1):
+            self.kv.free_seq(req.rid)
+            return False
+        plan.migrations.extend(
+            PageMigration(owner_pe, self.my_pe, s, d)
+            for s, d in zip(src_pages, landing))
+        self.waiting.popleft()
+        self._start(req)
+        # leave >= 1 prompt token to feed: re-feeding the boundary token
+        # rewrites identical KV (idempotent) and yields the next logits
+        covered = len(landing) * self.kv.page_tokens
+        req.n_done = min(covered, req.n_prompt - 1)
+        plan.resumed.append(req)
+        self.stats["resumed"] += 1
+        self.kv.stats["prefix_hits"] += 1
+        return True
+
+    def _start(self, req: Request) -> None:
+        self.running.append(req)
+        self._admit_idx[req.rid] = next(self._admit_seq)
+
+    # ------------------------------------------------------------------
+    def advance(self, req: Request, token: int, now: float = 0.0) -> None:
+        """Record the outcome of one decode step for ``req``: a prompt
+        token consumed, or a sampled token appended.  The caller removes
+        finished sequences via ``finish``."""
+        if req.is_prefilling():
+            req.n_done += 1
+            if not req.is_prefilling():
+                req.out.append(int(token))      # first sampled token
+                req.t_first = now
+        else:
+            req.out.append(int(token))
+
+    def note_prefilled(self, req: Request, first_token: int,
+                       now: float = 0.0) -> None:
+        """Batched full prefill consumed the whole prompt at once."""
+        req.n_done = req.n_prompt
+        req.out.append(int(first_token))
+        req.t_first = now
+
+    def finish(self, req: Request, now: float = 0.0,
+               register_prefix: bool = True) -> None:
+        req.t_finish = now
+        self.running.remove(req)
+        if register_prefix:
+            pages = self.kv.tables[req.rid]
+            n_full = min(len(pages),
+                         req.n_prompt // self.kv.page_tokens)
+            if n_full and self.kv.register_prefix(req.prompt, self.my_pe,
+                                                  pages[:n_full]):
+                # the registered pages stay resident (owned by the
+                # prefix index, not the free list) so they remain
+                # migratable; the rest return to the pool
+                self.kv.tables[req.rid] = pages[n_full:]
+        self.kv.free_seq(req.rid)
+        self.stats["finished"] += 1

@@ -4,10 +4,11 @@ Constructs two communicators (backend "xla" and backend "posh") over
 the SAME mesh/team and asserts numerical parity on every op, across
 dtypes and layouts; then asserts the posh communicator's dispatch table
 actually switched algorithms with payload size (eager below the
-threshold, chunked ring above).  Also exercises the deprecated
-free-function shims against the method API, including the
+threshold, chunked ring above).  Also covers the
 ``all_gather(tiled=False)`` stacked-axis placement for gather_axis != 0
-(the bug fixed with the Communicator redesign).
+(the bug fixed with the Communicator redesign) and the pinned
+``DispatchTable.fixed`` path that replaced the deleted CommConfig
+shims.
 
 The third backend, "pallas" (posh schedules with every p2p payload
 routed through the Pallas symm_copy engine), is parity-checked for
@@ -115,13 +116,6 @@ def check_stacked_matches_lax():
                 np.testing.assert_allclose(
                     np.asarray(got), np.asarray(ref),
                     err_msg=f"all_gather tiled={tiled} ax={ax} {backend}")
-            # deprecated shim path delegates to the same fixed code
-            got = smap(lambda v: C.all_gather(
-                v, "pe", C.CommConfig(backend="posh"), gather_axis=ax,
-                tiled=tiled), out_specs=ospec)(x)
-            np.testing.assert_allclose(
-                np.asarray(got), np.asarray(ref),
-                err_msg=f"shim all_gather tiled={tiled} ax={ax}")
     print("  all_gather (tiled & stacked) matches lax on every axis")
 
 
@@ -191,15 +185,15 @@ def check_pallas_backend():
     print("  pallas kernel-path + heap staging ok")
 
 
-def check_shim_vs_method():
-    """Deprecated free functions agree with method calls (posh)."""
-    cfg = C.CommConfig(backend="posh", allreduce_algo="tree")
+def check_fixed_dispatch():
+    """A pinned table (the old CommConfig semantics) agrees with the
+    size-aware default — same schedules, different selection."""
     x = _global_input(jnp.float32)
-    old = smap(lambda v: C.psum(v, "pe", cfg))(x)
-    new = smap(lambda v: mk("posh",
-                            dispatch=cfg.dispatch_table()).psum(v))(x)
-    np.testing.assert_allclose(np.asarray(old), np.asarray(new))
-    print("  shim == method")
+    pinned = smap(lambda v: mk(
+        "posh", dispatch=C.DispatchTable.fixed(allreduce="tree")).psum(v))(x)
+    sized = smap(lambda v: mk("posh").psum(v))(x)
+    np.testing.assert_allclose(np.asarray(pinned), np.asarray(sized))
+    print("  fixed dispatch == sized dispatch")
 
 
 def main():
@@ -207,7 +201,7 @@ def main():
     check_stacked_matches_lax()
     check_size_dispatch()
     check_pallas_backend()
-    check_shim_vs_method()
+    check_fixed_dispatch()
     print("COMM_PARITY_PASS")
 
 

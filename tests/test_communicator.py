@@ -78,10 +78,17 @@ def test_dispatch_fixed_ignores_size():
     assert t.choose("all_gather", 1, 8) == "ring"
 
 
-def test_commconfig_dispatch_table_roundtrip():
-    cfg = comm.CommConfig(backend="posh", allreduce_algo="tree",
-                          allgather_algo="recursive_doubling")
-    t = cfg.dispatch_table()
+def test_shims_removed():
+    """The deprecated free-function shims and CommConfig were deleted on
+    schedule (two PRs after the ordered pipeline).  The removal must be
+    total: no attribute survives to silently shadow the method API."""
+    for name in ("CommConfig", "psum", "pmax", "all_gather",
+                 "psum_scatter", "all_to_all", "pbroadcast",
+                 "axis_index", "axis_size"):
+        assert not hasattr(comm, name), f"shim '{name}' still exported"
+    # the pinned-algorithm behaviour lives on as DispatchTable.fixed
+    t = DispatchTable.fixed(allreduce="tree",
+                            allgather="recursive_doubling")
     assert t.choose("psum", 1 << 30, 8) == "tree"
     assert t.choose("all_gather", 1 << 30, 8) == "recursive_doubling"
 
@@ -251,14 +258,15 @@ def test_ctx_builds_communicators():
     ctx5 = ctx.with_(dp_size=1)
     assert ctx5.tp_comm is ctx.tp_comm
     assert ctx5.dp_comm is not ctx.dp_comm
-    # deprecated CommConfig path still works and pins the dispatch
-    ctx4 = ParallelCtx(comm=comm.CommConfig(backend="posh"))
-    assert ctx4.backend == "posh"
+    # a pinned dispatch table (the old CommConfig semantics) threads
+    # through to the built communicators
+    ctx4 = ParallelCtx(backend="posh",
+                       dispatch=comm.DispatchTable.fixed(allreduce="ring"))
     assert ctx4.dispatch is ctx4.tp_comm.dispatch
-    assert ctx4.tp_comm.dispatch.choose("psum", 1 << 30, 8) == "ring"
-    # conflicting explicit backend + CommConfig is an error, not silent
-    with pytest.raises(ValueError, match="conflicting"):
-        ParallelCtx(backend="posh", comm=comm.CommConfig(backend="xla"))
+    assert ctx4.tp_comm.dispatch.choose("psum", 1, 8) == "ring"
+    # the deprecated comm=CommConfig field is gone, loudly
+    with pytest.raises(TypeError):
+        ParallelCtx(comm=object())
 
 
 def test_ctx_from_mesh_overrides(monkeypatch):
@@ -277,17 +285,15 @@ def test_ctx_from_mesh_overrides(monkeypatch):
     assert (ctx.dp_size, ctx.tp_size) == (1, 1)
 
 
-def test_ctx_deprecated_comm_is_consumed_not_sticky():
-    """comm=CommConfig is converted at construction and cleared, so
-    later with_() overrides take effect instead of the stale config
-    winning (or spuriously conflicting) through dataclasses.replace."""
+def test_ctx_backend_override_rebuilds():
+    """with_(backend=...) rebuilds the communicators on the new
+    transport (the invalidation logic the removed CommConfig field used
+    to complicate)."""
     from repro.parallel.ctx import ParallelCtx
-    ctx = ParallelCtx(comm=comm.CommConfig(backend="posh"))
-    assert ctx.backend == "posh" and ctx.comm is None
+    ctx = ParallelCtx(backend="posh")
     ctx2 = ctx.with_(backend="xla")
     assert ctx2.backend == "xla" and ctx2.tp_comm.backend_name == "xla"
-    ctx3 = ctx.with_(comm=comm.CommConfig(backend="xla"))
-    assert ctx3.backend == "xla" and ctx3.tp_comm.backend_name == "xla"
+    assert ctx.tp_comm.backend_name == "posh"   # original untouched
 
 
 def test_pmean_and_layout_ops_accept_pytrees():
@@ -334,16 +340,17 @@ def test_psum_pmax_accept_pytrees():
     assert jax.tree.structure(out) == jax.tree.structure(tree)
     assert c.stats()["psum"]["calls"] == 3    # one record per leaf
     assert c.pmax(tree)["a"].shape == (3,)
-    # the deprecated free functions accepted pytrees (lax.psum does) —
-    # the shim must keep doing so
+    # a bare axis through as_communicator keeps the pytree polymorphism
+    # the deleted free functions had (lax.psum accepts pytrees)
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
     mesh = compat.make_mesh((1,), ("data",))
     specs = jax.tree.map(lambda _: P(), tree)
-    out = compat.shard_map(lambda t: comm.psum(t, "data", comm.CommConfig()),
-                           mesh=mesh, in_specs=(specs,), out_specs=specs,
-                           check_vma=False)(tree)
+    out = compat.shard_map(
+        lambda t: comm.as_communicator("data").psum(t),
+        mesh=mesh, in_specs=(specs,), out_specs=specs,
+        check_vma=False)(tree)
     assert jax.tree.structure(out) == jax.tree.structure(tree)
 
 

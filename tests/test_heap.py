@@ -1,13 +1,60 @@
 """Symmetric heap: allocator behaviour + the paper's memory-model
 properties (Fact 1, Corollary 1, Lemma 1)."""
+import random
+
 import jax.numpy as jnp
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # deterministic fallback driver
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    def given(strategy):
+        def deco(fn):
+            def run():
+                for ex in strategy:
+                    fn(ex)
+            return run
+        return deco
 
 from repro.core.heap import SymmetricHeap
+
+
+def _fallback_op_sequences(n_cases=60, seed=7, kinds=("alloc", "free")):
+    """Seeded stand-in for the hypothesis strategy: n_cases random
+    alloc/free(/realloc) sequences."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n_cases):
+        out.append([(rng.choice(kinds), rng.randint(0, 7),
+                     rng.randint(1, 96)) for _ in range(rng.randint(0, 24))])
+    return out
+
+
+if HAVE_HYPOTHESIS:
+    _ops_af = st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                                 st.integers(0, 7), st.integers(1, 64)),
+                       max_size=24)
+    _ops_afr = st.lists(st.tuples(
+        st.sampled_from(["alloc", "free", "realloc"]),
+        st.integers(0, 5), st.integers(1, 96)), max_size=24)
+    _sizes = st.lists(st.integers(1, 128), min_size=1, max_size=8)
+else:
+    _ops_af = _fallback_op_sequences()
+    _ops_afr = _fallback_op_sequences(kinds=("alloc", "free", "realloc"))
+
+    def _mixed_sizes(n_cases=40, seed=11):
+        rng = random.Random(seed)
+        return [[rng.randint(1, 128) for _ in range(rng.randint(1, 8))]
+                for _ in range(n_cases)]
+
+    _sizes = _mixed_sizes()
 
 
 def make_heap():
@@ -65,9 +112,7 @@ def test_corollary1_addressing():
 
 
 @settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
-                          st.integers(0, 7),
-                          st.integers(1, 64)), max_size=24))
+@given(_ops_af)
 def test_fact1_registry_symmetry(ops):
     """Fact 1: the same (trace-time) allocation sequence produces the
     same offsets — two heaps driven identically have identical
@@ -90,7 +135,7 @@ def test_fact1_registry_symmetry(ops):
 
 
 @settings(max_examples=40, deadline=None)
-@given(st.lists(st.integers(1, 128), min_size=1, max_size=8))
+@given(_sizes)
 def test_lemma1_scratch_invariance(sizes):
     """Lemma 1: temporary symmetric allocations inside a collective do
     not change the heap outside it."""
@@ -114,3 +159,140 @@ def test_state_factories():
     assert st_["a"].shape == (4, 2) and st_["a"].dtype == jnp.bfloat16
     spec = h.spec_state()
     assert spec["a"].shape == (4, 2)
+
+
+# ----------------------------------------------------------------------
+# realloc (shrealloc, §4.1.1) — in-place shrink/grow, move fallback
+# ----------------------------------------------------------------------
+def test_realloc_shrink_in_place():
+    h = make_heap()
+    a = h.alloc("a", (64,), jnp.float32)
+    b = h.alloc("b", (8,), jnp.float32)
+    used = h.used_bytes()
+    a2 = h.realloc("a", (16,))
+    assert a2.offset == a.offset           # offset preserved
+    assert a2.shape == (16,) and a2.nbytes == 64
+    assert h.used_bytes() == used - (a.nbytes - a2.nbytes)
+    # the freed tail is allocatable (a hole between a and b)
+    c = h.alloc("c", (4,), jnp.float32, align=64)
+    assert a2.offset < c.offset < b.offset
+
+
+def test_realloc_grow_absorbs_adjacent_free():
+    h = make_heap()
+    a = h.alloc("a", (16,), jnp.float32)
+    b = h.alloc("b", (8,), jnp.float32)
+    h.free("b")                            # free block right after a
+    a2 = h.realloc("a", (64,))
+    assert a2.offset == a.offset           # grew in place
+    assert a2.shape == (64,)
+    got, off = h.resolve(a2.offset + a2.nbytes - 1)
+    assert got.name == "a" and off == a2.nbytes - 1
+
+
+def test_realloc_move_when_blocked():
+    h = make_heap()
+    a = h.alloc("a", (16,), jnp.float32)
+    b = h.alloc("b", (8,), jnp.float32)    # pins the space after a
+    a2 = h.realloc("a", (1024,))
+    assert a2.shape == (1024,)
+    assert a2.offset != a.offset           # had to move...
+    assert "a" in h.registry               # ...but stayed registered
+    got, _ = h.resolve(a2.offset)
+    assert got.name == "a"
+    # old extent is free again: a small alloc first-fits into it
+    c = h.alloc("c", (4,), jnp.float32)
+    assert c.offset == a.offset
+
+
+def test_realloc_same_size_and_dtype_change():
+    h = make_heap()
+    a = h.alloc("a", (16,), jnp.float32)
+    a2 = h.realloc("a", (8, 2))            # same bytes, new shape
+    assert a2.offset == a.offset and a2.shape == (8, 2)
+    a3 = h.realloc("a", (32,), jnp.int16)  # same bytes, new dtype
+    assert a3.offset == a.offset and a3.dtype == jnp.dtype(jnp.int16)
+
+
+def test_realloc_missing_raises():
+    h = make_heap()
+    with pytest.raises(KeyError):
+        h.realloc("ghost", (4,))
+
+
+def test_realloc_align_validated_before_mutation():
+    """A bad align must fail BEFORE the object is freed (the move path
+    frees first), and a stronger align than the offset satisfies forces
+    a move to an offset that honours it."""
+    h = make_heap()
+    h.alloc("a", (16,), jnp.float32)
+    h.alloc("b", (16,), jnp.float32)       # blocks in-place growth
+    with pytest.raises(ValueError, match="power of two"):
+        h.realloc("a", (64,), align=3)
+    assert h.registry["a"].shape == (16,)  # untouched
+    # align_alloc'd objects keep their alignment through a moving grow
+    c = h.align_alloc("c", (4,), jnp.float32, align=4096)
+    h.alloc("d", (16,), jnp.float32)       # pins the space after c
+    c2 = h.realloc("c", (8192,))
+    assert c2.offset % 4096 == 0 and c2.align == 4096
+
+
+def test_realloc_oom_keeps_object_at_its_offset():
+    """A failed grow must leave the object untouched (shrealloc's
+    unchanged-on-failure contract): same offset, even when first-fit
+    would have preferred an earlier hole."""
+    h = SymmetricHeap(("data",), capacity_bytes=4096)
+    h.alloc("pad", (64,), jnp.float32)     # hole-to-be before 'a'
+    a = h.alloc("a", (64,), jnp.float32)
+    h.alloc("b", (64,), jnp.float32)       # blocks in-place growth
+    h.free("pad")                          # first-fit bait at offset 0
+    with pytest.raises(MemoryError):
+        h.realloc("a", (100_000,))
+    assert h.registry["a"].shape == (64,)
+    assert h.registry["a"].offset == a.offset   # did NOT move to 0
+    got, _ = h.resolve(a.offset)
+    assert got.name == "a"
+
+
+def test_realloc_free_list_coalesces():
+    """alloc/free/realloc churn must end fully coalesced: one free
+    block, zero used bytes."""
+    h = make_heap()
+    h.alloc("a", (32,), jnp.float32)
+    h.alloc("b", (32,), jnp.float32)
+    h.alloc("c", (32,), jnp.float32)
+    h.free("b")
+    h.realloc("a", (128,))                 # moves or absorbs
+    h.realloc("c", (4,))                   # shrinks
+    h.free("a")
+    h.free("c")
+    assert h.used_bytes() == 0
+    assert h.frag_blocks() == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(_ops_afr)
+def test_fact1_offsets_identical_across_pes_with_realloc(ops):
+    """Lemma 1 / Fact 1 for the full allocator surface: two PEs (two
+    heap instances) driven through the same alloc/free/REALLOC sequence
+    hold every object at identical offsets — block tables built from
+    those offsets are valid on either PE without translation."""
+    h1, h2 = make_heap(), make_heap()
+    for h in (h1, h2):
+        live = set()
+        for op, slot, n in ops:
+            name = f"buf{slot}"
+            try:
+                if op == "alloc" and name not in live:
+                    h.alloc(name, (n,), jnp.float32)
+                    live.add(name)
+                elif op == "free" and name in live:
+                    h.free(name)
+                    live.discard(name)
+                elif op == "realloc" and name in live:
+                    h.realloc(name, (n,))
+            except MemoryError:
+                pass
+    assert h1.fingerprint() == h2.fingerprint()
+    for name in h1.registry:
+        assert h1.registry[name].offset == h2.registry[name].offset

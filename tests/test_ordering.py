@@ -263,6 +263,84 @@ def test_queue_stats_and_free_functions():
     assert r.ready
 
 
+class _CountingTransport(LocalTransport):
+    """LocalTransport that counts actual delivery rounds."""
+
+    def __init__(self, n_pe):
+        super().__init__(n_pe)
+        self.rounds = 0
+
+    def put(self, *a, **k):
+        self.rounds += 1
+        return super().put(*a, **k)
+
+
+def test_drain_coalesces_contiguous_same_destination_puts():
+    """N contiguous puts through the same pairs merge into ONE
+    transport round at the drain (the ROADMAP coalescing item), with
+    the final state unchanged."""
+    tr = _CountingTransport(N_PE)
+    q = CommQueue("pe", {"buf": np.zeros((N_PE, OBJ_LEN), np.float32)},
+                  transport=tr)
+    for i in range(4):
+        q.put_nbi(HANDLE, _payload(0, 10.0 + i), [(0, 1)], offset=i)
+    q.quiet()
+    assert tr.rounds == 1
+    assert q.stats()["coalesced"] == 3
+    np.testing.assert_allclose(np.asarray(q.state["buf"])[1, :4],
+                               [10.0, 11.0, 12.0, 13.0])
+
+
+def test_drain_does_not_coalesce_across_pairs_or_gaps():
+    """Different pair lists, non-contiguous offsets and different
+    handles stay separate rounds — coalescing must never weaken the
+    addressing."""
+    tr = _CountingTransport(N_PE)
+    q = CommQueue("pe", {"buf": np.zeros((N_PE, OBJ_LEN), np.float32)},
+                  transport=tr)
+    q.put_nbi(HANDLE, _payload(0, 1.0), [(0, 1)], offset=0)
+    q.put_nbi(HANDLE, _payload(0, 2.0), [(0, 2)], offset=1)   # other dst
+    q.put_nbi(HANDLE, _payload(0, 3.0), [(0, 2)], offset=3)   # gap
+    q.quiet()
+    assert tr.rounds == 3
+    assert q.stats()["coalesced"] == 0
+    buf = np.asarray(q.state["buf"])
+    assert buf[1, 0] == 1.0 and buf[2, 1] == 2.0 and buf[2, 3] == 3.0
+
+
+def test_coalesced_drain_matches_uncoalesced_under_shuffle():
+    """Coalescing is an implementation detail: for every delivery seed
+    the coalesced drain produces the same final state as an opted-out
+    transport (concat_puts -> None)."""
+
+    class NoCoalesce(LocalTransport):
+        def concat_puts(self, datas):
+            return None
+
+    rng = random.Random(123)
+    for case in range(20):
+        events = gen_sequence(rng)
+        for seed in SEEDS:
+            states = []
+            for tr in (LocalTransport(N_PE), NoCoalesce(N_PE)):
+                q = CommQueue("pe",
+                              {"buf": np.zeros((N_PE, OBJ_LEN),
+                                               np.float32)},
+                              transport=tr, delivery_seed=seed)
+                for e in events:
+                    if e[0] == "put":
+                        _, pairs, offset, rows, values = e
+                        data = np.zeros((N_PE, rows), np.float32)
+                        for s, _ in pairs:
+                            data[s] = values[s] + \
+                                np.arange(rows, dtype=np.float32) / 16.0
+                        q.put_nbi(HANDLE, data, pairs, offset=offset)
+                    else:
+                        q.fence(e[1])
+                states.append(np.asarray(q.quiet()["buf"]))
+            np.testing.assert_array_equal(states[0], states[1])
+
+
 def test_allreduce_nbi_issue_order_and_barrier():
     log = []
 

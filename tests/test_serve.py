@@ -1,0 +1,392 @@
+"""repro.serve: paged KV cache allocator, FCFS scheduler, paged
+attention parity, end-to-end engine vs the contiguous decode path, and
+put_nbi/quiet page migration (LocalTransport oracle; the real-mesh run
+is tests/multipe/run_serve.py)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro.core import CommQueue, LocalTransport, SymmetricHeap
+from repro.kernels import ops
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_decode_attention_ref)
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx
+from repro.serve import (NULL_PAGE, FCFSScheduler, PagedKVCache,
+                         PageMigration, Request, ServeConfig, ServeEngine)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_kv(n_pages=8, page_tokens=4, n_layers=2, kv_heads=2, head_dim=4,
+            heap=None):
+    heap = heap or SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    return PagedKVCache(heap, n_layers=n_layers, kv_heads=kv_heads,
+                        head_dim=head_dim, n_pages=n_pages,
+                        page_tokens=page_tokens)
+
+
+# ======================================================================
+# allocator
+# ======================================================================
+def test_kv_pool_is_symmetric_heap_object():
+    heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    kv = make_kv(heap=heap)
+    assert kv.handle.name in heap.registry
+    assert heap.registry["kv_pages"].shape == (8, 2, 2, 4, 2, 4)
+    # page id -> pool row: the symmetric address of page p is the pool
+    # offset + p rows (Corollary 1 at page granularity)
+    got, off = heap.resolve(kv.handle.offset)
+    assert got.name == "kv_pages" and off == 0
+
+
+def test_page_alloc_free_reuse():
+    kv = make_kv(n_pages=6, page_tokens=4)     # 5 usable pages
+    assert kv.n_free() == 5
+    assert kv.alloc_seq("a", 6)                # 2 pages
+    assert kv.alloc_seq("b", 9)                # 3 pages
+    assert kv.n_free() == 0
+    assert not kv.alloc_seq("c", 1)            # pool dry -> refused whole
+    assert "c" not in kv.tables
+    pages_a = list(kv.tables["a"])
+    kv.free_seq("a")
+    assert kv.n_free() == 2
+    assert kv.alloc_seq("d", 5)                # 2 pages, LIFO reuse
+    assert set(kv.tables["d"]) == set(pages_a)
+    with pytest.raises(ValueError):
+        kv.alloc_seq("b", 1)                   # double alloc
+
+
+def test_ensure_grows_by_page():
+    kv = make_kv(n_pages=4, page_tokens=4)     # 3 usable
+    assert kv.alloc_seq("a", 3)                # 1 page covers 3 tokens
+    assert len(kv.tables["a"]) == 1
+    assert kv.ensure("a", 4)                   # still page 1
+    assert len(kv.tables["a"]) == 1
+    assert kv.ensure("a", 5)                   # boundary -> page 2
+    assert len(kv.tables["a"]) == 2
+    assert kv.ensure("a", 12)
+    assert len(kv.tables["a"]) == 3
+    assert not kv.ensure("a", 13)              # pool dry
+
+
+def test_block_table_padding_and_null_page():
+    kv = make_kv(n_pages=8, page_tokens=4)
+    kv.alloc_seq("a", 7)
+    bt = kv.block_table(["a", None], n_slots=4)
+    assert bt.shape == (2, 4) and bt.dtype == np.int32
+    assert list(bt[0][:2]) == kv.tables["a"]
+    assert (bt[0][2:] == NULL_PAGE).all()
+    assert (bt[1] == NULL_PAGE).all()
+    assert NULL_PAGE not in kv.tables["a"]     # page 0 never handed out
+
+
+def test_pool_grow_via_realloc_preserves_pages():
+    heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    kv = make_kv(n_pages=4, heap=heap)
+    pool = kv.zeros().at[1].set(7.0)
+    pool = kv.grow(4, pool)
+    assert kv.n_pages == 8 and pool.shape[0] == 8
+    assert heap.registry["kv_pages"].shape[0] == 8
+    np.testing.assert_allclose(np.asarray(pool[1]), 7.0)  # contents kept
+    np.testing.assert_allclose(np.asarray(pool[5]), 0.0)
+    assert kv.n_free() == 3 + 4
+
+
+# ======================================================================
+# scheduler
+# ======================================================================
+def mk_sched(n_pages=8, page_tokens=4, max_batch=4, max_seq=32):
+    kv = make_kv(n_pages=n_pages, page_tokens=page_tokens)
+    return FCFSScheduler(kv, max_batch=max_batch, max_seq=max_seq), kv
+
+
+def test_fcfs_admission_order_and_batch_cap():
+    s, kv = mk_sched(n_pages=16, max_batch=2)
+    reqs = [Request(rid=i, prompt=[1, 2, 3], max_new=4) for i in range(4)]
+    for r in reqs:
+        s.submit(r)
+    plan = s.tick()
+    assert [r.rid for r in plan.admitted] == [0, 1]    # FCFS, capped
+    assert [r.rid for r in s.running] == [0, 1]
+    s.finish(reqs[0])
+    plan = s.tick()
+    assert [r.rid for r in plan.admitted] == [2]       # next in line
+
+
+def test_admission_blocks_on_pages_not_slots():
+    s, kv = mk_sched(n_pages=4, page_tokens=4, max_batch=4)  # 3 usable
+    s.submit(Request(rid=0, prompt=list(range(10)), max_new=2))  # 3 pages
+    s.submit(Request(rid=1, prompt=[1], max_new=1))
+    plan = s.tick()
+    assert [r.rid for r in plan.admitted] == [0]
+    assert s.waiting[0].rid == 1                       # blocked, waiting
+
+
+def test_preempt_youngest_and_requeue_at_head():
+    s, kv = mk_sched(n_pages=6, page_tokens=2, max_batch=3, max_seq=16)
+    r0 = Request(rid=0, prompt=[1, 2, 3], max_new=6)   # 2 pages
+    r1 = Request(rid=1, prompt=[4, 5, 6], max_new=6)   # 2 pages
+    for r in (r0, r1):
+        s.submit(r)
+    s.tick()
+    assert len(s.running) == 2 and kv.n_free() == 1
+    # drive r0/r1 forward until a page is needed and the pool is dry
+    s.note_prefilled(r0, 9)
+    s.note_prefilled(r1, 9)
+    s.advance(r0, 9)                                   # out: 2 tokens
+    s.advance(r1, 9)
+    plan = s.tick()   # r0 takes the last page; r1 (youngest) evicted
+    assert [r.rid for r in plan.preempted] == [1]
+    assert r1.out == [] and r1.n_done == 0             # progress reset
+    assert s.waiting[0].rid == 1                       # head of the line
+    assert r1.preemptions == 1
+    assert [r.rid for r in s.running] == [0]
+
+
+def test_no_spurious_preemption_on_final_token():
+    """Page demand is exact: a sequence writing its last token at a
+    page boundary must not evict a neighbour for a page it will never
+    write."""
+    s, kv = mk_sched(n_pages=5, page_tokens=2, max_batch=2, max_seq=16)
+    r0 = Request(rid=0, prompt=[1, 2], max_new=3)
+    r1 = Request(rid=1, prompt=[3, 4], max_new=3)
+    for r in (r0, r1):
+        s.submit(r)
+    s.tick()
+    assert len(s.running) == 2 and kv.n_free() == 0   # pool exactly full
+    for r in (r0, r1):
+        s.note_prefilled(r, 9)
+    for _ in range(2):                # tokens 2 and 3: positions 2, 3
+        plan = s.tick()
+        assert plan.preempted == [], "evicted for an unwritten page"
+        for r in (r0, r1):
+            s.advance(r, 9)
+    assert r0.finished() and r1.finished()
+
+
+def test_preempted_request_eventually_completes():
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+    tight = ServeConfig(page_tokens=4, n_pages=8, max_batch=3,
+                        max_seq=32, max_prompt=16, attn_impl="ref")
+    roomy = ServeConfig(page_tokens=4, n_pages=32, max_batch=3,
+                        max_seq=32, max_prompt=16, attn_impl="ref")
+    streams = {}
+    for tag, scfg in (("tight", tight), ("roomy", roomy)):
+        eng = ServeEngine(params, cfg, ctx, scfg)
+        reqs = [Request(rid=i, prompt=list(range(2 + i, 10 + i)),
+                        max_new=8) for i in range(3)]
+        done = eng.run(reqs, clock="tick")
+        assert len(done) == 3
+        streams[tag] = {r.rid: r.out for r in done}
+        if tag == "tight":
+            assert eng.sched.stats["preempted"] > 0
+    # eviction + re-prefill must not change any token stream
+    assert streams["tight"] == streams["roomy"]
+
+
+# ======================================================================
+# paged attention parity (the tier-1 acceptance bar)
+# ======================================================================
+def _paged_case(seed=0, B=3, H=4, Hkv=2, D=16, P=4, n_pages=10, slots=3):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, H, D).astype(np.float32))
+    kp = jnp.asarray(rng.randn(n_pages, P, Hkv, D).astype(np.float32))
+    vp = jnp.asarray(rng.randn(n_pages, P, Hkv, D).astype(np.float32))
+    bt = jnp.asarray(rng.permutation(np.arange(1, 10))
+                     .reshape(B, slots).astype(np.int32))
+    lens = jnp.asarray(np.array([P * slots, 5, 0], np.int32))
+    return q, kp, vp, bt, lens
+
+
+def test_paged_attention_kernel_matches_ref():
+    q, kp, vp, bt, lens = _paged_case()
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lens)
+    ker = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+    # inactive sequence (len 0) -> exactly zero output
+    assert float(jnp.abs(ker[2]).max()) == 0.0
+
+
+def test_paged_attention_matches_contiguous_ops_attention():
+    """Gathering K/V through the block table must be numerically equal
+    to contiguous ops.attention on the same sequences."""
+    q, kp, vp, bt, lens = _paged_case()
+    for impl in ("kernel", "ref"):
+        out = ops.paged_attention(q, kp, vp, bt, lens, impl=impl)
+        for b in range(q.shape[0]):
+            L = int(lens[b])
+            if L == 0:
+                continue
+            kc = kp[bt[b]].reshape(-1, kp.shape[2], kp.shape[3])[:L]
+            vc = vp[bt[b]].reshape(-1, vp.shape[2], vp.shape[3])[:L]
+            # ops.attention wants (B, H, T, D) / (B, Hkv, S, D)
+            ref = ops.attention(q[b][None, :, None, :],
+                                kc[None].transpose(0, 2, 1, 3),
+                                vc[None].transpose(0, 2, 1, 3),
+                                causal=False)
+            np.testing.assert_allclose(
+                np.asarray(out[b]), np.asarray(ref[0, :, 0]),
+                atol=1e-5, rtol=1e-5,
+                err_msg=f"impl={impl} seq={b}")
+
+
+def test_paged_attention_gqa_and_mqa_groups():
+    for H, Hkv in ((4, 1), (6, 2), (4, 4)):
+        q, kp, vp, bt, lens = _paged_case(seed=H * 10 + Hkv, H=H,
+                                          Hkv=Hkv)
+        ref = paged_decode_attention_ref(q, kp, vp, bt, lens)
+        ker = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+        np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                                   atol=1e-6, rtol=1e-6,
+                                   err_msg=f"H={H} Hkv={Hkv}")
+
+
+# ======================================================================
+# engine end-to-end vs the contiguous decode path
+# ======================================================================
+def test_engine_streams_match_contiguous_decode():
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+
+    def ref_decode(prompt, max_new):
+        state = api.init_decode_state(cfg, ctx, 1, max_len=32)
+        step = jax.jit(lambda p, t, s: api.decode_step(p, t, s, ctx, cfg))
+        tok = None
+        for t in prompt:
+            tok, state = step(params, jnp.asarray([t], jnp.int32), state)
+        out = [int(tok[0])]
+        for _ in range(max_new - 1):
+            tok, state = step(params, tok, state)
+            out.append(int(tok[0]))
+        return out
+
+    prompts = [list(range(3, 9)), list(range(4, 10)), [7, 3, 99, 12]]
+    scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=3,
+                       max_seq=32, max_prompt=16, attn_impl="kernel")
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    reqs = [Request(rid=i, prompt=p, max_new=5)
+            for i, p in enumerate(prompts)]
+    done = sorted(eng.run(reqs, clock="tick"), key=lambda r: r.rid)
+    for r in done:
+        assert r.out == ref_decode(r.prompt, 5), f"req {r.rid}"
+
+
+# ======================================================================
+# page migration: put_nbi + one quiet() (LocalTransport oracle)
+# ======================================================================
+def test_page_migration_put_nbi_one_quiet():
+    """Pages move between PEs as one-sided writes: N migrations issue N
+    put_nbi and drain with exactly ONE quiet(); the destination PE's
+    pool rows equal the source PE's pages afterwards."""
+    heap = SymmetricHeap(("pe",), capacity_bytes=1 << 24)
+    kv = make_kv(n_pages=8, heap=heap)
+    n_pe = 2
+    rng = np.random.RandomState(0)
+    system = rng.randn(n_pe, *kv.handle.shape).astype(np.float32)
+    state = {kv.handle.name: system.copy()}
+    q = CommQueue("pe", state, transport=LocalTransport(n_pe))
+    migs = [PageMigration(src_pe=0, dst_pe=1, src_page=3, dst_page=5),
+            PageMigration(src_pe=0, dst_pe=1, src_page=4, dst_page=6)]
+    out = kv.issue_migrations(q, state[kv.handle.name], migs,
+                              system=True)
+    st = q.stats()
+    assert st["puts"] == 2 and st["quiets"] == 1
+    got = np.asarray(out[kv.handle.name])
+    np.testing.assert_array_equal(got[1, 5], system[0, 3])
+    np.testing.assert_array_equal(got[1, 6], system[0, 4])
+    # adjacent dst pages, same pair -> drain coalesced them into one
+    # permute round (the ROADMAP item working for serving traffic)
+    assert st["coalesced"] == 1
+    # everything else untouched
+    untouched = np.ones(8, bool)
+    untouched[[5, 6]] = False
+    np.testing.assert_array_equal(got[1][untouched], system[1][untouched])
+    np.testing.assert_array_equal(got[0], system[0])
+
+
+def test_local_prefix_hit_resumes_via_self_pair_copy():
+    """A same-PE prefix hit reuses the pinned pages through the SAME
+    put_nbi path with self-pairs (0-hop copy into fresh pages): the
+    re-served prompt must produce the identical stream while the
+    pinned originals stay registered."""
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+    scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=2,
+                       max_seq=32, max_prompt=16, attn_impl="ref",
+                       prefix_keep=True)
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    prompt = list(range(5, 13))                # 2 full pages
+    first = eng.run([Request(rid=0, prompt=prompt, max_new=5)],
+                    clock="tick")[0]
+    assert eng.kv.pinned_pages == 2
+    eng2_reqs = [Request(rid=1, prompt=list(prompt), max_new=5)]
+    for r in eng2_reqs:
+        eng.submit(r)
+    while eng.sched.has_work():
+        eng.tick()
+    resumed = next(r for r in eng.finished if r.rid == 1)
+    assert eng.sched.stats["resumed"] == 1
+    assert eng.kv.stats["migrations"] == 2     # 2 pages, self-pair copy
+    assert resumed.out == first.out
+    assert eng.kv.lookup_prefix(prompt) is not None   # originals intact
+
+
+def test_prefix_pin_budget_bounds_the_cache():
+    """Pinning stops at the budget: the pool can never be starved by
+    the prefix index (the cache is bounded, not a leak)."""
+    kv = make_kv(n_pages=9, page_tokens=4)     # budget = 8 // 4 = 2
+    assert kv.pin_budget == 2
+    assert kv.alloc_seq("a", 8)
+    assert kv.register_prefix(list(range(8)), 0, kv.tables["a"][:2])
+    assert kv.pinned_pages == 2
+    assert kv.alloc_seq("b", 8)
+    assert not kv.register_prefix(list(range(20, 28)), 0,
+                                  kv.tables["b"][:2])   # over budget
+    assert kv.pinned_pages == 2
+
+
+def test_prefix_cache_registration_and_lookup():
+    kv = make_kv(n_pages=10, page_tokens=4)
+    prompt = list(range(11))                   # 2 full pages + 3 tokens
+    assert kv.alloc_seq("a", len(prompt) + 1)
+    pages = kv.tables["a"]
+    assert kv.register_prefix(prompt, owner_pe=0, pages=pages[:2])
+    assert not kv.register_prefix(prompt, owner_pe=1, pages=pages[:2])
+    owner, src = kv.lookup_prefix(prompt + [99, 98])   # longest prefix
+    assert owner == 0 and src == pages[:2]
+    assert kv.lookup_prefix([5, 5, 5, 5]) is None
+
+
+# ======================================================================
+# the 8-PE mesh suite (subprocess, like the other multipe workers)
+# ======================================================================
+def test_serve_mesh_8pe():
+    if os.environ.get("REPRO_MULTIPE_EXPLICIT"):
+        pytest.skip("multipe workers run explicitly (scripts/verify.sh)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "multipe", "run_serve.py")],
+        capture_output=True, text=True, env=env, timeout=2400)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SERVE_PASS" in r.stdout

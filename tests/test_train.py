@@ -91,8 +91,7 @@ def test_bucketed_allreduce_identity_on_1dev():
     mesh = _mesh()
 
     def run(t):
-        return comm.bucketed_allreduce(t, "data", comm.CommConfig(),
-                                       bucket_bytes=128)
+        return comm.bucketed_allreduce(t, "data", bucket_bytes=128)
 
     out = compat.shard_map(run, mesh=mesh,
                            in_specs=(jax.tree.map(lambda _: P(), tree),),
@@ -107,8 +106,8 @@ def test_compression_bf16_and_ef():
     mesh = _mesh()
 
     def run(t):
-        out, st = comm.compressed_allreduce(t, "data", comm.CommConfig(),
-                                            scheme="bf16", mean=True)
+        out, st = comm.compressed_allreduce(t, "data", scheme="bf16",
+                                            mean=True)
         return out
 
     out = compat.shard_map(run, mesh=mesh, in_specs=(
@@ -122,9 +121,8 @@ def test_compression_bf16_and_ef():
 
     def run_ef(t, res):
         st = comm.CompressionState(residual=res)
-        out, st2 = comm.compressed_allreduce(t, "data", comm.CommConfig(),
-                                             scheme="bf16", state=st,
-                                             mean=True)
+        out, st2 = comm.compressed_allreduce(t, "data", scheme="bf16",
+                                             state=st, mean=True)
         return out, st2.residual
 
     f = compat.shard_map(run_ef, mesh=mesh,
