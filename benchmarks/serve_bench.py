@@ -4,17 +4,22 @@ ROOT (the bench trajectory the driver tracks):
 
     {"meta": {...},
      "results": [{"case", "arch", "backend", "attn_impl", "page_tokens",
-                  "n_pages", "max_batch", "requests", "tokens_out",
+                  "n_pages", "max_batch", "prefill_chunk", "sampling",
+                  "temperature", "top_p", "requests", "tokens_out",
                   "throughput_tok_s", "latency_p50_s", "latency_p99_s",
-                  "ttft_p50_s", "ttft_p99_s", "preempted",
-                  "migrations"}, ...]}
+                  "ttft_p50_s", "ttft_p99_s", "decode_p50_s",
+                  "decode_p99_s", "preempted", "migrations"}, ...]}
 
 Default sweep: page size x batch size x attention impl on the smoke
-qwen3 config under the same seeded Poisson trace.  ``--smoke`` runs the
-single smallest case (the `make verify` freshness gate — BENCH_serve
-must exist and parse, not be a full sweep).
+qwen3 config under the same seeded Poisson trace, plus a sampled
+(top-p) sweep (``--sampling top_p`` rows) and a chunked-vs-monolithic
+prefill pair on the long-prompt mixed trace — the row pair that shows
+chunked prefill protecting p99 decode latency.  ``--smoke`` runs the
+two smallest cases — one greedy, one SAMPLED (non-greedy), so the
+`make verify` freshness gate covers a sampled run end-to-end.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
+    PYTHONPATH=src python benchmarks/serve_bench.py --sampling top_p
 
 On CPU the numbers measure the engine/scheduler structure, not
 accelerator decode throughput (meta records the platform).
@@ -28,20 +33,41 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 ROOT = os.path.dirname(HERE)
 OUT = os.path.join(ROOT, "BENCH_serve.json")
 
+SAMPLING = {                      # name -> (temperature, top_k, top_p)
+    "greedy": (0.0, 0, 1.0),
+    "top_k": (0.8, 8, 1.0),
+    "top_p": (0.8, 0, 0.9),
+}
+
 
 def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
-             max_batch, n_requests, rate, seed):
-    import jax
-
+             max_batch, n_requests, rate, seed, *, sampling="greedy",
+             prefill_chunk=8, tick_tokens=0, long_frac=0.25,
+             warmup=True):
     from repro import serve
     from repro.launch.serve import build_engine
 
     eng, cfg = build_engine(arch, backend=backend,
                             page_tokens=page_tokens, n_pages=n_pages,
                             max_batch=max_batch, attn_impl=attn_impl,
-                            seed=seed)
+                            prefill_chunk=prefill_chunk,
+                            tick_tokens=tick_tokens, seed=seed)
+    temp, top_k, top_p = SAMPLING[sampling]
     tcfg = serve.TrafficConfig(n_requests=n_requests, rate=rate,
-                               vocab=cfg.vocab, seed=seed)
+                               vocab=cfg.vocab, seed=seed,
+                               long_frac=long_frac, temperature=temp,
+                               top_k=top_k, top_p=top_p)
+    if warmup:
+        # trigger every jit compile (prefill window, decode, sampler)
+        # on a throwaway mini-trace, then measure a clean run on the
+        # same engine: rows reflect engine structure, not XLA compiles
+        wcfg = serve.TrafficConfig(n_requests=3, rate=rate,
+                                   vocab=cfg.vocab, seed=seed + 1,
+                                   long_frac=long_frac,
+                                   temperature=temp, top_k=top_k,
+                                   top_p=top_p)
+        eng.run(serve.make_requests(wcfg))
+        eng.reset_metrics()
     t0 = time.perf_counter()
     eng.run(serve.make_requests(tcfg))
     wall = time.perf_counter() - t0
@@ -50,6 +76,8 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "case": case, "arch": cfg.name, "backend": backend,
         "attn_impl": attn_impl, "page_tokens": page_tokens,
         "n_pages": n_pages, "max_batch": max_batch,
+        "prefill_chunk": prefill_chunk, "rate_req_s": rate,
+        "sampling": sampling, "temperature": temp, "top_p": top_p,
         "requests": m["requests"], "tokens_out": m["tokens_out"],
         "wall_s": round(wall, 4),
         "throughput_tok_s": round(m["throughput_tok_s"], 2),
@@ -57,6 +85,8 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "latency_p99_s": round(m["latency_p99_s"], 4),
         "ttft_p50_s": round(m["ttft_p50_s"], 4),
         "ttft_p99_s": round(m["ttft_p99_s"], 4),
+        "decode_p50_s": round(m["decode_p50_s"], 4),
+        "decode_p99_s": round(m["decode_p99_s"], 4),
         "preempted": m["sched"]["preempted"],
         "migrations": m["kv"]["migrations"],
     }
@@ -65,39 +95,78 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="single tiny case (verify-gate freshness)")
+                    help="two tiny cases, one greedy + one sampled "
+                         "(verify-gate freshness)")
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=16.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sampling", default="top_p",
+                    choices=sorted(SAMPLING),
+                    help="policy for the sampled sweep rows")
     args = ap.parse_args()
 
     import jax
 
+    # (case, backend, impl, page_tokens, n_pages, max_batch, requests,
+    #  sampling, extra engine kwargs)
     if args.smoke:
-        cases = [("smoke", "xla", "ref", 4, 32, 3, 6)]
-    else:
+        # the sampled smoke row must actually be non-greedy — it is
+        # what gates the sampled path (top_k_merge + categorical draw)
+        # in `make verify`
+        sampled = args.sampling if args.sampling != "greedy" else "top_p"
         cases = [
-            ("p4_b2_ref", "xla", "ref", 4, 48, 2, args.requests),
-            ("p4_b4_ref", "xla", "ref", 4, 48, 4, args.requests),
-            ("p8_b4_ref", "xla", "ref", 8, 32, 4, args.requests),
-            ("p8_b4_kernel", "xla", "kernel", 8, 32, 4, args.requests),
-            ("p8_b4_posh", "posh", "ref", 8, 32, 4, args.requests),
+            ("smoke", "xla", "ref", 4, 32, 3, 6, "greedy", {}),
+            ("smoke_sampled", "xla", "ref", 4, 32, 3, 6, sampled, {}),
+        ]
+    else:
+        n = args.requests
+        cases = [
+            ("p4_b2_ref", "xla", "ref", 4, 48, 2, n, "greedy", {}),
+            ("p4_b4_ref", "xla", "ref", 4, 48, 4, n, "greedy", {}),
+            ("p8_b4_ref", "xla", "ref", 8, 32, 4, n, "greedy", {}),
+            ("p8_b4_kernel", "xla", "kernel", 8, 32, 4, n, "greedy", {}),
+            ("p8_b4_posh", "posh", "ref", 8, 32, 4, n, "greedy", {}),
+            # sampled sweep: the same engine shapes, non-greedy traffic
+            ("p4_b4_" + args.sampling, "xla", "ref", 4, 48, 4, n,
+             args.sampling, {}),
+            ("p8_b4_" + args.sampling, "xla", "ref", 8, 32, 4, n,
+             args.sampling, {}),
+            # chunked-vs-monolithic prefill on the long-heavy mixed
+            # trace under load: the structural probe for the token
+            # budget protecting per-token DECODE latency (decode_p99 =
+            # inter-token gaps, which a batch-mate's monolithic prompt
+            # admission stretches).  NOTE: on the 2-layer CPU smoke
+            # model the fused prefill window makes even a whole-prompt
+            # call ~one decode tick, so the contrast here is within
+            # noise — it grows with prefill compute per prompt (real
+            # depths/lengths); the budget mechanics themselves are
+            # pinned by the tier-1 scheduler tests.
+            ("mixed_long_chunked", "xla", "ref", 4, 48, 4, 3 * n,
+             "greedy", {"prefill_chunk": 8, "tick_tokens": 16,
+                        "long_frac": 0.5, "rate": 32.0}),
+            ("mixed_long_monolithic", "xla", "ref", 4, 48, 4, 3 * n,
+             "greedy", {"prefill_chunk": 24, "long_frac": 0.5,
+                        "rate": 32.0}),
         ]
     results = []
-    for case, backend, impl, pt, np_, mb, nreq in cases:
+    for case, backend, impl, pt, np_, mb, nreq, sampling, extra in cases:
+        extra = dict(extra)
+        rate = extra.pop("rate", args.rate)
         row = run_case(case, args.arch, backend, impl, pt, np_, mb, nreq,
-                       args.rate, args.seed)
+                       rate, args.seed, sampling=sampling, **extra)
         results.append(row)
-        print(f"{case:>14}: {row['throughput_tok_s']:8.1f} tok/s  "
+        print(f"{case:>22}: {row['throughput_tok_s']:8.1f} tok/s  "
               f"p50 {row['latency_p50_s']*1e3:7.1f} ms  "
               f"p99 {row['latency_p99_s']*1e3:7.1f} ms  "
+              f"dec99 {row['decode_p99_s']*1e3:7.1f} ms  "
               f"preempt {row['preempted']}")
 
     payload = {
         "meta": {"platform": jax.default_backend(),
                  "smoke": bool(args.smoke), "rate_req_s": args.rate,
-                 "seed": args.seed,
+                 "seed": args.seed, "sampling_sweep": args.sampling,
+                 "warmup": True,
                  "note": "CPU rows measure engine/scheduler structure, "
                          "not accelerator decode throughput"},
         "results": results,

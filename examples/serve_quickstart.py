@@ -5,19 +5,27 @@ over the paged symmetric-heap KV cache.
 
 What to look for in the output:
 
-  * tick 1 admits all three requests FCFS and batch-prefills them —
+  * tick 1 admits all three requests FCFS and starts CHUNKED prefill —
     each prompt's K/V lands in fixed-size PAGES carved from the
     symmetric heap, and each request's cache is a BLOCK TABLE of page
     ids (printed per request).  Page ids are symmetric addresses: the
     same table is valid on every PE (POSH Fact 1 at page granularity),
     which is what makes cross-PE page migration a one-sided ``put_nbi``
     (see tests/multipe/run_serve.py for the 8-PE version).
-  * every later tick decodes ONE token for EVERY running request in a
+  * prefill is TOKEN-BUDGETED: each tick hands every prefilling
+    request up to ``prefill_chunk`` prompt tokens from a budget shared
+    with decode (decode claims first), so watch the ``prefill i/n``
+    counters advance a chunk per tick instead of one prompt
+    monopolizing the tick.
+  * every later tick decodes ONE token for EVERY decoding request in a
     single batched step — requests of different lengths share the batch
     (continuous batching), and a request that finishes frees its pages
     for the next admission.
   * the decode step's attention reads K/V *through the block table*
-    (``ops.paged_attention`` — Pallas kernel on TPU, jnp gather here).
+    (``ops.paged_attention`` — Pallas kernel on TPU, jnp gather here),
+    and every step ends in the TP-aware sampler (greedy here; pass
+    ``serve.SamplingParams(temperature=..., top_p=...)`` on a Request
+    for top-k/p sampling with per-request RNG streams).
 """
 import jax
 import jax.numpy as jnp

@@ -36,7 +36,8 @@ default-dispatch one inside shard_map).  A pinned-algorithm run is
 from .bucketing import as_communicator, bucketed_allreduce, tree_allreduce
 from .communicator import (CommBackend, Communicator, DispatchTable,
                            available_backends, get_backend,
-                           make_communicator, register_backend)
+                           make_communicator, merge_candidates,
+                           register_backend)
 from .compress import CompressionState, compressed_allreduce
 from .pallas_backend import PallasBackend
 
@@ -47,6 +48,7 @@ __all__ = [
     "Communicator", "DispatchTable", "make_communicator", "as_communicator",
     "CommBackend", "PallasBackend",
     "register_backend", "get_backend", "available_backends",
+    "merge_candidates",
     # tree-level reductions
     "bucketed_allreduce", "tree_allreduce",
     "compressed_allreduce", "CompressionState",

@@ -128,6 +128,10 @@ class DispatchTable:
             return self.alltoall_algo
         if op == "pbroadcast":
             return self.broadcast_algo
+        if op == "top_k_merge":
+            # candidate merge = an all_gather of the per-rank candidate
+            # lists + a replicated local sort; route by the gather rule
+            return self.choose("all_gather", nbytes, team_size)
         raise KeyError(f"no dispatch rule for op '{op}'")
 
     @classmethod
@@ -322,6 +326,30 @@ def _nbytes(x) -> int:
                * jnp.dtype(jnp.result_type(x)).itemsize)
 
 
+def merge_candidates(vals, idxs, k: int):
+    """Merge ``(value, global-index)`` candidate lists along the last
+    axis into the top ``k`` by value descending, ties broken toward the
+    LOWEST global index (the tie-break every backend must agree on for
+    sampled token streams to be backend-invariant).
+
+    Pure function of its inputs — the merge kernel of ``top_k_merge``.
+    (The per-shard phase, ``repro.models.embed.tp_sample_candidates``,
+    gets the same tie-break from ``jax.lax.top_k``'s documented
+    lower-index-first behavior; the mesh parity suite pins both against
+    each other, ``tests/multipe/run_serve.py``.)
+    """
+    k = min(int(k), vals.shape[-1])
+    # lexicographic (-value, index) via two stable argsorts: index
+    # ascending first, then value descending preserves index order
+    # among equal values
+    o0 = jnp.argsort(idxs, axis=-1, stable=True)
+    v = jnp.take_along_axis(vals, o0, axis=-1)
+    i = jnp.take_along_axis(idxs, o0, axis=-1)
+    o1 = jnp.argsort(-v, axis=-1, stable=True)
+    return (jnp.take_along_axis(v, o1, axis=-1)[..., :k],
+            jnp.take_along_axis(i, o1, axis=-1)[..., :k])
+
+
 _LEAF_DEF = jax.tree.structure(0)
 
 
@@ -479,6 +507,42 @@ class Communicator:
                                        split_axis=split_axis,
                                        concat_axis=concat_axis,
                                        team_size=self.size)
+
+    def top_k_merge(self, vals, idxs, k: int):
+        """Merge per-rank ``(value, global-index)`` candidate lists
+        (``(..., k_loc)``, values sorted descending per rank) into the
+        global top ``k``, replicated on every rank.
+
+        The payload moves as ONE all_gather (algorithm from the
+        dispatch table's gather rule): the f32 values and the bitcast
+        int32 indices ride in a single packed ``(..., 2k)`` array, so a
+        sampled decode step costs one collective launch and the
+        recorded bytes cover the whole payload.  The merge itself is a
+        replicated local sort with the deterministic lowest-global-index
+        tie-break (``merge_candidates``).  This is the phase-2 collective
+        of the TP-aware sampler: phase 1 (per-shard local top-k) lives in
+        ``repro.models.embed.tp_sample_candidates``.  Values come back
+        as float32 (the packing width)."""
+        k = int(k)
+        kk = vals.shape[-1]
+        packed = jnp.concatenate(
+            [vals.astype(jnp.float32),
+             jax.lax.bitcast_convert_type(idxs.astype(jnp.int32),
+                                          jnp.float32)], axis=-1)
+        algo = self._begin("top_k_merge", packed)
+        if algo is None:
+            return vals[..., :k], idxs[..., :k]
+        # (n, ..., 2kk) stacked rank-major, then (..., n*kk) per list:
+        # concat order is rank-major, so global indices stay ascending
+        # among a rank's equal-valued candidates (the merge re-sorts)
+        g = self.backend.all_gather(packed, self.team, algo,
+                                    gather_axis=0, tiled=False)
+        g = jnp.moveaxis(g, 0, -2)                   # (..., n, 2kk)
+        flat = vals.shape[:-1] + (self.size * kk,)
+        gv = g[..., :kk].reshape(flat)
+        gi = jax.lax.bitcast_convert_type(g[..., kk:],
+                                          jnp.int32).reshape(flat)
+        return merge_candidates(gv, gi, k)
 
     def pbroadcast(self, x, root: int = 0):
         if not _is_single(x):

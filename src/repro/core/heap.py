@@ -154,6 +154,11 @@ class SymmetricHeap:
             since the move is the same deterministic decision on every
             PE the new offset is still symmetric (Fact 1).
 
+        Size 0 (``realloc(h, 0)`` or any shape with a zero dimension)
+        follows the §4.1.1 shrealloc contract: the block is FREED and
+        the null handle (``None``) returned — resizing to nothing is
+        deallocation, not a 1-byte stub.
+
         Content preservation is the *state* layer's job (heap state is a
         functional pytree): callers carry rows over themselves, e.g.
         ``repro.serve.kv_cache.PagedKVCache.grow``.
@@ -162,7 +167,14 @@ class SymmetricHeap:
         old = self.registry.get(name)
         if old is None:
             raise KeyError(f"no symmetric object named '{name}'")
+        if isinstance(shape, (int, np.integer)):
+            shape = (int(shape),)
         shape = tuple(int(d) for d in shape)
+        if shape and int(np.prod(shape, dtype=np.int64)) == 0:
+            # shrealloc(ptr, 0) == shfree(ptr): release the block and
+            # hand back the null handle
+            self.free(name)
+            return None
         dtype = old.dtype if dtype is None else np.dtype(dtype)
         # validate BEFORE any mutation: once the block is freed, a bad
         # argument must not be able to lose the object

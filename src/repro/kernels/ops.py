@@ -62,6 +62,21 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                       interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("sm_scale",))
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, start,
+                            n_tok, sm_scale: float | None = None):
+    """Chunk-window prefill attention through a block table: query row
+    ``j`` of sequence ``b`` (absolute position ``start[b] + j``)
+    attends to its first ``start[b]+j+1`` paged tokens; padded rows
+    (``j >= n_tok``) return zeros.  The fused jnp path (one gather +
+    one masked softmax for the whole window) — numerically the same
+    masked f32 softmax as ``paged_attention(impl="ref")`` per position;
+    a prefill-window Pallas grid kernel is the ROADMAP follow-up."""
+    return _pa.paged_prefill_attention_ref(q, k_pages, v_pages,
+                                           block_tables, start, n_tok,
+                                           sm_scale=sm_scale)
+
+
 COPY_VARIANTS = tuple(["stock", "auto"] + list(_sc.VARIANTS))
 COMBINE_VARIANTS = tuple(_rc.VARIANTS)
 PAGED_ATTN_IMPLS = ("kernel", "ref")

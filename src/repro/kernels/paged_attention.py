@@ -153,6 +153,51 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     )(bt_flat, lens, q, k_pages, v_pages)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                start, n_tok, *,
+                                sm_scale: float | None = None):
+    """Chunk-window prefill attention through the block table.
+
+    q: (B, C, H, D) — the queries of one prefill CHUNK, where row j of
+    sequence b sits at absolute position ``start[b] + j``; it attends
+    to the first ``start[b] + j + 1`` tokens of its sequence's pages
+    (the paged analogue of the causal mask, assuming the chunk's K/V
+    have already been scattered into the pages).  Rows ``j >= n_tok``
+    (the right-padding of a short chunk) produce exactly zero output.
+
+    One gather + one masked softmax for the whole window — the fused
+    form of C ``paged_decode_attention_ref`` calls (same mask, same
+    scale, same f32 math), so chunked prefill costs one einsum per
+    layer instead of C unrolled attention graphs.  The decode hot path
+    keeps the Pallas kernel; a prefill-window grid kernel is the
+    natural TPU follow-up.
+    """
+    b, c, h, d = q.shape
+    _, page_tokens, hkv, _ = k_pages.shape
+    group = h // hkv
+    n_slots = block_tables.shape[1]
+    s_max = n_slots * page_tokens
+    sm_scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+
+    kc = k_pages[block_tables].reshape(b, s_max, hkv, d)
+    vc = v_pages[block_tables].reshape(b, s_max, hkv, d)
+    qg = q.reshape(b, c, hkv, group, d).astype(jnp.float32)
+    sc = jnp.einsum("bchgd,bshd->bchgs", qg, kc.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * sm_scale
+    pos = start[:, None] + jnp.arange(c)[None]             # (B, C)
+    lens = jnp.where(jnp.arange(c)[None] < n_tok[:, None], pos + 1, 0)
+    valid = jnp.arange(s_max)[None, None] < lens[:, :, None]
+    vmask = valid[:, :, None, None, :]                     # (B,C,1,1,S)
+    sc = jnp.where(vmask, sc, NEG_INF)
+    m = sc.max(-1)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(vmask, p, 0.0)
+    l = p.sum(-1)
+    acc = jnp.einsum("bchgs,bshd->bchgd", p, vc.astype(jnp.float32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
 def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
                                *, sm_scale: float | None = None):
     """jnp oracle: gather the pages, dense masked softmax in f32.

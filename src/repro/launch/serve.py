@@ -2,11 +2,16 @@
 cache with seeded synthetic traffic.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \\
-        --requests 16 --rate 8 --page-tokens 8
+        --requests 16 --rate 8 --page-tokens 8 \\
+        --temperature 0.8 --top-p 0.9
 
-Prints per-tick scheduler activity (admissions, preemptions, page
-migrations) when --trace is set, then the throughput/latency summary.
-Smoke-size configs run on CPU; the same driver scales to a TPU mesh by
+Per-request sampling params ride on every Request (greedy by default;
+``--temperature/--top-k/--top-p`` set the trace-wide policy, drawn
+through the TP-aware two-phase sampler), and long prompts prefill in
+``--prefill-chunk``-token chunks under the ``--tick-tokens`` budget so
+they never stall concurrent decodes.  Prints per-request decode traces
+when --trace is set, then the throughput/latency summary.  Smoke-size
+configs run on CPU; the same driver scales to a TPU mesh by
 constructing the ctx from ``launch.mesh.make_ctx`` and tensor-parallel
 step functions (see tests/multipe/run_serve.py for the mesh wiring).
 """
@@ -26,7 +31,8 @@ from repro.parallel.ctx import ParallelCtx
 def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
                  n_pages: int = 64, max_batch: int = 4,
                  attn_impl: str = "ref", prefix_keep: bool = False,
-                 seed: int = 0):
+                 prefill_chunk: int = 8, tick_tokens: int = 0,
+                 sample_seed: int = 0, seed: int = 0):
     cfg = configs.get_smoke(arch)
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
                       backend=backend, param_dtype=jnp.float32,
@@ -35,8 +41,9 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
     params = api.init(jax.random.PRNGKey(seed), cfg, ctx)
     scfg = serve.ServeConfig(
         page_tokens=page_tokens, n_pages=n_pages, max_batch=max_batch,
-        max_seq=cfg.max_seq, max_prompt=min(cfg.max_seq, 24),
-        attn_impl=attn_impl, prefix_keep=prefix_keep)
+        max_seq=cfg.max_seq, prefill_chunk=prefill_chunk,
+        tick_tokens=tick_tokens, attn_impl=attn_impl,
+        prefix_keep=prefix_keep, sample_seed=sample_seed)
     return serve.ServeEngine(params, cfg, ctx, scfg), cfg
 
 
@@ -52,8 +59,21 @@ def main():
     ap.add_argument("--page-tokens", type=int, default=8)
     ap.add_argument("--n-pages", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="max prompt tokens one sequence prefills per tick")
+    ap.add_argument("--tick-tokens", type=int, default=0,
+                    help="per-tick token budget shared by decode+prefill "
+                         "(0 = max_batch + prefill_chunk)")
     ap.add_argument("--attn-impl", default="ref",
                     choices=["ref", "kernel"])
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k cut (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus cut (1 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="root of the per-(rid, position) RNG streams")
     ap.add_argument("--trace", action="store_true",
                     help="print the per-request decode trace")
     args = ap.parse_args()
@@ -61,17 +81,24 @@ def main():
     eng, cfg = build_engine(
         args.arch, backend=args.backend, page_tokens=args.page_tokens,
         n_pages=args.n_pages, max_batch=args.max_batch,
-        attn_impl=args.attn_impl, seed=args.seed)
+        attn_impl=args.attn_impl, prefill_chunk=args.prefill_chunk,
+        tick_tokens=args.tick_tokens, sample_seed=args.sample_seed,
+        seed=args.seed)
     tcfg = serve.TrafficConfig(n_requests=args.requests, rate=args.rate,
-                               vocab=cfg.vocab, seed=args.seed)
+                               vocab=cfg.vocab, seed=args.seed,
+                               temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p)
     reqs = serve.make_requests(tcfg)
     print(f"arch={cfg.name} backend={args.backend} "
           f"pages={args.n_pages}x{args.page_tokens} "
-          f"batch={args.max_batch} requests={len(reqs)}")
+          f"batch={args.max_batch} chunk={args.prefill_chunk} "
+          f"sampling=(T={args.temperature} k={args.top_k} "
+          f"p={args.top_p}) requests={len(reqs)}")
     done = eng.run(reqs)
     if args.trace:
         for r in sorted(done, key=lambda r: r.rid):
-            print(f"  req{r.rid}: prompt[{r.n_prompt}] -> "
+            print(f"  req{r.rid}: prompt[{r.n_prompt}] "
+                  f"chunks={r.prefill_chunks} -> "
                   f"{r.out[:10]}{'...' if len(r.out) > 10 else ''} "
                   f"({len(r.out)} tokens, {r.preemptions} preemptions)")
     print(json.dumps(eng.metrics(), indent=2))

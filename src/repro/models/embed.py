@@ -111,14 +111,37 @@ def lm_head_logits(params, x, ctx: ParallelCtx):
     return x @ wt.T
 
 
-def tp_argmax(logits_loc, ctx: ParallelCtx):
-    """Greedy sampling across vocab shards without gathering logits."""
+def tp_sample_candidates(logits_loc, ctx: ParallelCtx, k: int):
+    """The TP-aware two-phase sampler's candidate selection.
+
+    Phase 1 (per shard): each vocab shard extracts its local top-``k``
+    as ``(value, GLOBAL index)`` pairs — a stable descending sort, so
+    equal logits within a shard keep ascending-index order.  Phase 2:
+    the shards' candidate lists merge through ``ctx.tp_comm
+    .top_k_merge`` (one all_gather of k pairs per rank + a replicated
+    sort), which applies the same deterministic tie-break: equal values
+    resolve to the LOWEST global vocab index on every backend.
+
+    Returns ``(values, indices)`` of shape ``(..., k)``, value-sorted
+    descending, IDENTICAL on every TP rank.  Never materializes the
+    unsharded vocab.  ``k=1`` is exactly greedy argmax (``tp_argmax``).
+    """
     vloc = logits_loc.shape[-1]
-    loc_idx = jnp.argmax(logits_loc, axis=-1)
-    loc_val = jnp.take_along_axis(logits_loc, loc_idx[..., None], -1)[..., 0]
+    kk = min(int(k), vloc)
+    # lax.top_k breaks ties toward the lower index — exactly the
+    # contract — in O(V log k) instead of a full-shard sort
+    vals, order = jax.lax.top_k(logits_loc, kk)
+    gidx = (order + ctx.tp_rank() * vloc).astype(jnp.int32)
     if ctx.tp_size == 1:
-        return loc_idx
-    glob_val = ctx.tp_comm.pmax(loc_val)
-    mine = (loc_val >= glob_val)
-    cand = jnp.where(mine, loc_idx + ctx.tp_rank() * vloc, -1)
-    return ctx.tp_comm.pmax(cand)
+        return vals, gidx
+    return ctx.tp_comm.top_k_merge(vals, gidx, kk)
+
+
+def tp_argmax(logits_loc, ctx: ParallelCtx):
+    """Greedy sampling across vocab shards without gathering logits —
+    the ``k=1`` case of ``tp_sample_candidates``.  Equal-logit ties
+    resolve to the lowest global vocab index on EVERY backend (the old
+    pmax-of-candidate-index merge let the winning shard decide, so
+    xla/posh/pallas parity held only by luck of the weights)."""
+    _, gidx = tp_sample_candidates(logits_loc, ctx, 1)
+    return gidx[..., 0]

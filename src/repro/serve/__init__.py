@@ -4,11 +4,14 @@ The first end-to-end serving workload on top of the framework's POSH
 substrate: a paged KV cache whose pages are fixed-size blocks carved
 from the ``SymmetricHeap`` (so block tables are plain offset arrays
 valid on every PE — Fact 1 applied to serving), FCFS continuous
-batching with preempt-by-eviction, prefill/decode step functions that
-issue every collective through ``ctx.tp_comm`` (any registered backend:
-xla / posh / pallas), paged decode attention via the Pallas block-table
-kernel, and cross-PE KV page migration as ``put_nbi`` one-sided writes
-drained by one ``quiet()`` per scheduler tick.
+batching with preempt-by-eviction and TOKEN-BUDGETED CHUNKED PREFILL,
+prefill/decode step functions that issue every collective through
+``ctx.tp_comm`` (any registered backend: xla / posh / pallas), paged
+decode attention via the Pallas block-table kernel, per-request
+sampling (greedy / temperature / top-k / top-p) through the TP-aware
+two-phase sampler with counter-based per-(rid, position) RNG streams,
+and cross-PE KV page migration as ``put_nbi`` one-sided writes drained
+by one ``quiet()`` per scheduler tick.
 
     from repro import serve
     eng = serve.ServeEngine(params, cfg, ctx, serve.ServeConfig())
@@ -18,6 +21,8 @@ drained by one ``quiet()`` per scheduler tick.
 from .engine import LocalExec, ServeConfig, ServeEngine, make_decode_step, \
     make_prefill
 from .kv_cache import NULL_PAGE, PagedKVCache, PageMigration
+from .sampling import (GREEDY, SamplingParams, batch_state,
+                       sample_from_candidates, sample_tokens)
 from .scheduler import FCFSScheduler, Request, TickPlan
 from .traffic import TrafficConfig, make_requests
 
@@ -27,4 +32,6 @@ __all__ = [
     "PagedKVCache", "PageMigration", "NULL_PAGE",
     "FCFSScheduler", "Request", "TickPlan",
     "TrafficConfig", "make_requests",
+    "SamplingParams", "GREEDY", "batch_state",
+    "sample_from_candidates", "sample_tokens",
 ]

@@ -7,19 +7,26 @@ The engine is split in two layers:
     trace-friendly, built from the same model weights AND the same
     projection convention the registry's train/decode paths use
     (``attention.project_qkv``, ``embed``, ``mlp``), tensor-parallel
-    through ``ctx.tp_comm`` so all
-    registered communicator backends (xla / posh / pallas) serve
-    traffic.  Attention in the decode step is the paged kernel
-    (``ops.paged_attention``) reading K/V through the block table.
+    through ``ctx.tp_comm`` so all registered communicator backends
+    (xla / posh / pallas) serve traffic.  Both steps read/write K/V
+    through the block table (``ops.paged_attention``), and both end in
+    the TP-aware two-phase sampler (``serve.sampling``): per-shard
+    top-k candidates merged via ``ctx.tp_comm.top_k_merge``, then a
+    per-sequence counter-RNG draw keyed ``(rid, position)`` — token
+    streams are backend- and batch-composition-invariant by
+    construction.  ``make_prefill`` consumes prompt CHUNKS: a
+    ``(B, prefill_chunk)`` window of each prompt, attending through the
+    pages written so far, so prefill progress is metered by the
+    scheduler's token budget instead of monopolizing a tick.
 
   * a **host-side driver** (``ServeEngine``) — owns the
-    ``FCFSScheduler`` + ``PagedKVCache``, runs one token per running
-    sequence per tick, and drains every tick's planned page migrations
-    with ``put_nbi`` + ONE ``quiet()`` on a ``CommQueue`` before the
-    decode step runs.  The execution substrate is pluggable
-    (``LocalExec`` jits on one device; the mesh suite supplies a
-    shard_map-wrapped equivalent), so the same scheduler drives a
-    single CPU process and an 8-PE TP mesh.
+    ``FCFSScheduler`` + ``PagedKVCache``, executes each tick's plan
+    (migrate -> chunk-prefill -> decode), and drains every tick's
+    planned page migrations with ``put_nbi`` + ONE ``quiet()`` on a
+    ``CommQueue`` before the step functions run.  The execution
+    substrate is pluggable (``LocalExec`` jits on one device; the mesh
+    suite supplies a shard_map-wrapped equivalent), so the same
+    scheduler drives a single CPU process and an 8-PE TP mesh.
 
 Batch slots are fixed (``ServeConfig.max_batch``): empty slots carry
 the null page table and length 0, which zeroes their attention output
@@ -46,24 +53,33 @@ from repro.models import mlp as ff
 from repro.models.common import norm_apply
 from repro.parallel.ctx import ParallelCtx
 
-from .kv_cache import PagedKVCache
+from . import sampling
+from .kv_cache import NULL_PAGE, PagedKVCache
 from .scheduler import FCFSScheduler, Request
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Trace-time serving shape: page geometry, batch and sequence
-    bounds, attention implementation, KV precision."""
+    bounds, prefill chunking, attention implementation, KV precision,
+    sampler bounds."""
 
     page_tokens: int = 8
     n_pages: int = 64
     max_batch: int = 4
     max_seq: int = 64                 # prompt + decode budget per seq
-    max_prompt: int = 32              # prefill pad length
+    max_prompt: int = 32              # retired: prompts now stream
+                                      # through chunked prefill (kept
+                                      # for config compatibility)
+    prefill_chunk: int = 8            # prompt tokens per seq per tick
+    tick_tokens: int = 0              # shared decode+prefill budget per
+                                      # tick (0 -> max_batch + chunk)
     attn_impl: str = "kernel"         # "kernel" (Pallas) | "ref" (jnp)
     kv_dtype: jnp.dtype = jnp.float32
     prefix_keep: bool = False         # pin finished prompts' full pages
                                       # as migratable prefix cache
+    sample_candidates: int = 8        # static top-k bound per shard
+    sample_seed: int = 0              # RNG stream root for sampling
 
     @property
     def table_slots(self) -> int:
@@ -99,17 +115,18 @@ def _write_pages(pool, li, k, v, bt, pos, page_tokens):
 
 
 def make_decode_step(cfg, ctx: ParallelCtx, scfg: ServeConfig):
-    """One serving tick: (params, pool, tokens, pos, bt, lens) ->
+    """One serving tick: (params, pool, tokens, pos, bt, lens, samp) ->
     (next_tokens, pool).
 
     tokens (b,) int32 input token per slot; pos (b,) its position;
     bt (b, table_slots) int32 block tables; lens (b,) valid tokens
-    AFTER this write (pos+1 for live slots, 0 for empty ones).
+    AFTER this write (pos+1 for live slots, 0 for empty ones); samp the
+    ``sampling.batch_state`` pytree (per-slot sampling params + rid).
     """
     _check_supported(cfg, ctx)
     P = scfg.page_tokens
 
-    def step(params, pool, tokens, pos, bt, lens):
+    def step(params, pool, tokens, pos, bt, lens, samp):
         cd = ctx.compute_dtype
         x = emb.embed_lookup(params["embed"], tokens[:, None], ctx)[:, 0]
         b = x.shape[0]
@@ -142,47 +159,60 @@ def make_decode_step(cfg, ctx: ParallelCtx, scfg: ServeConfig):
                        params["ln_f"], x)
         head = params["embed"] if cfg.tie_embeddings else params["head"]
         logits = emb.lm_head_logits(head, x.astype(cd), ctx)
-        nxt = emb.tp_argmax(logits, ctx)
+        nxt = sampling.sample_tokens(logits, ctx, samp, pos + 1,
+                                     n_candidates=scfg.sample_candidates)
         return nxt.astype(jnp.int32), pool
 
     return step
 
 
 def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
-    """Batched full-prompt prefill: (params, pool, ids, lens, bt) ->
-    (first_tokens, pool).
+    """Chunked prefill: (params, pool, ids, start, n_tok, bt, samp) ->
+    (next_tokens, pool).
 
-    ids (b, t) right-padded prompts; lens (b,) true lengths (0 = empty
-    slot).  Writes every prompt position's K/V into the pages and
-    returns the greedy token following each prompt.  Attention is the
-    contiguous blocked flash (prompt K/V are in registers anyway); the
-    pages are written for the decode steps that follow.
+    ids (b, C) the next window of each prompt, right-padded
+    (C = ``scfg.prefill_chunk``); start (b,) the absolute position of
+    ids[:, 0]; n_tok (b,) valid tokens in the window (0 = inactive
+    slot).  Writes every chunk position's K/V into the pages, attends
+    each position against the pages written so far (position j sees
+    ``start + j + 1`` tokens — the paged analogue of the causal mask),
+    and returns the token sampled after position ``start + n_tok - 1``
+    with RNG counter ``start + n_tok`` — meaningful only for slots
+    whose chunk completes the prompt; the engine discards the rest.
     """
     _check_supported(cfg, ctx)
     P = scfg.page_tokens
-    from repro.models.flash import blocked_attention
+    C = scfg.prefill_chunk
 
-    def prefill(params, pool, ids, lens, bt):
+    def prefill(params, pool, ids, start, n_tok, bt, samp):
         cd = ctx.compute_dtype
         x = emb.embed_lookup(params["embed"], ids, ctx)
         b, t = ids.shape
-        pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        pos = start[:, None] + jnp.arange(t)[None]           # (b, t)
+        valid = jnp.arange(t)[None] < n_tok[:, None]
 
         def body(carry, inputs):
             x, pool = carry
             p, li = inputs
             h = norm_apply("rms", p["ln1"], x).astype(cd)
             q, k, v = attn.project_qkv(p["attn"], h, pos, cfg, ctx)
-            # page writes: token (b, j) -> page bt[b, j//P] slot j%P
-            page = jnp.take_along_axis(bt, pos // P, axis=1)     # (b, t)
+            # page writes: token (b, j) -> page bt[b, pos//P] slot
+            # pos%P; the invalid window tail lands in the null page
+            sidx = jnp.clip(pos // P, 0, bt.shape[1] - 1)
+            page = jnp.take_along_axis(bt, sidx, axis=1)     # (b, t)
+            page = jnp.where(valid, page, NULL_PAGE)
             slot = pos % P
             dt = pool.dtype
             pool = pool.at[page, 0, li, slot].set(k.astype(dt))
             pool = pool.at[page, 1, li, slot].set(v.astype(dt))
-            o = blocked_attention(q, k, v, causal=True,
-                                  block_q=ctx.attn_block_q,
-                                  block_kv=ctx.attn_block_kv,
-                                  unroll=ctx.unroll)
+            kp = jax.lax.dynamic_index_in_dim(pool[:, 0], li, axis=1,
+                                              keepdims=False)
+            vp = jax.lax.dynamic_index_in_dim(pool[:, 1], li, axis=1,
+                                              keepdims=False)
+            # whole-window paged attention in one fused call: position
+            # j attends to its first start+j+1 paged tokens (the
+            # chunk's K/V were just written above)
+            o = ops.paged_prefill_attention(q, kp, vp, bt, start, n_tok)
             out = o.reshape(b, t, -1).astype(cd) @ p["attn"]["wo"].astype(cd)
             out = ctx.tp_comm.psum(out)
             x = x + out
@@ -195,11 +225,12 @@ def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
             body, (x, pool),
             (params["blocks"], jnp.arange(cfg.n_layers)))
         x = norm_apply("rms", params["ln_f"], x)
-        last = jnp.clip(lens - 1, 0, t - 1)
+        last = jnp.clip(n_tok - 1, 0, t - 1)
         xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         head = params["embed"] if cfg.tie_embeddings else params["head"]
         logits = emb.lm_head_logits(head, xl.astype(cd), ctx)
-        nxt = emb.tp_argmax(logits, ctx)
+        nxt = sampling.sample_tokens(logits, ctx, samp, start + n_tok,
+                                     n_candidates=scfg.sample_candidates)
         return nxt.astype(jnp.int32), pool
 
     return prefill
@@ -225,14 +256,15 @@ class LocalExec:
     def init_pool(self):
         return self.kv.zeros()
 
-    def prefill(self, pool, ids, lens, bt):
+    def prefill(self, pool, ids, start, n_tok, bt, samp):
         return self._prefill(self.params, pool, jnp.asarray(ids),
-                             jnp.asarray(lens), jnp.asarray(bt))
+                             jnp.asarray(start), jnp.asarray(n_tok),
+                             jnp.asarray(bt), samp)
 
-    def decode(self, pool, tokens, pos, bt, lens):
+    def decode(self, pool, tokens, pos, bt, lens, samp):
         return self._decode(self.params, pool, jnp.asarray(tokens),
                             jnp.asarray(pos), jnp.asarray(bt),
-                            jnp.asarray(lens))
+                            jnp.asarray(lens), samp)
 
     def migrate(self, pool, migrations):
         # whole-system view with one PE: state rows carry the PE axis
@@ -247,8 +279,9 @@ class LocalExec:
 # the driver
 # ======================================================================
 class ServeEngine:
-    """Continuous-batching driver: one token per running sequence per
-    tick, FCFS admission, preempt-by-eviction, migration drain first."""
+    """Continuous-batching driver: token-budgeted ticks (one decode
+    token per decoding sequence + chunked prefill), FCFS admission,
+    preempt-by-eviction, migration drain first."""
 
     def __init__(self, params, cfg, ctx: ParallelCtx, scfg: ServeConfig,
                  *, heap: Optional[SymmetricHeap] = None,
@@ -265,56 +298,84 @@ class ServeEngine:
                 page_tokens=scfg.page_tokens, dtype=scfg.kv_dtype)
         self.kv = kv
         self.sched = FCFSScheduler(kv, max_batch=scfg.max_batch,
-                                   max_seq=scfg.max_seq, my_pe=my_pe)
+                                   max_seq=scfg.max_seq, my_pe=my_pe,
+                                   prefill_chunk=scfg.prefill_chunk,
+                                   tick_tokens=scfg.tick_tokens)
         self.exec = exec_ or LocalExec(params, cfg, ctx, scfg, kv)
         self.pool = self.exec.init_pool()
         self.finished: list = []
         self.ticks = 0
+        # inter-token gaps of decoding sequences (the serving ITL/TPOT
+        # metric): a gap spans the full tick(s) between two of a
+        # request's tokens, so a batch-mate's prefill stall lands here
+        self.itl: list = []
+        self._last_tok: dict = {}        # rid -> time of last token
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        if req.n_prompt > self.scfg.max_prompt:
+        # greedy requests ignore top_k (SamplingParams contract), so
+        # the candidate bound only constrains sampled ones
+        if req.sampling.temperature > 0 \
+                and req.sampling.top_k > self.scfg.sample_candidates:
             raise ValueError(
-                f"request {req.rid}: prompt of {req.n_prompt} exceeds "
-                f"max_prompt {self.scfg.max_prompt}")
+                f"request {req.rid}: top_k {req.sampling.top_k} exceeds "
+                f"the sampler's candidate bound "
+                f"{self.scfg.sample_candidates} "
+                f"(raise ServeConfig.sample_candidates)")
         self.sched.submit(req)
 
     def tick(self, now: float = 0.0) -> None:
-        """One engine tick: schedule -> migrate (one quiet) -> batched
-        prefill for fresh admissions -> one decode token for every
-        other running sequence -> retire finished."""
+        """One engine tick: schedule -> migrate (one quiet) -> chunked
+        prefill for every prefilling sequence's quota -> one decode
+        token for every decoding sequence -> retire finished."""
         self.ticks += 1
         plan = self.sched.tick()
+        for r in plan.preempted:         # progress resets, gaps with it
+            self._last_tok.pop(r.rid, None)
         if plan.migrations:
             self.pool = self.exec.migrate(self.pool,
                                           tuple(plan.migrations))
-        fresh = []
-        if plan.admitted:
-            fresh = self._batch_prefill(plan.admitted, now)
-        self._decode_tick(skip=fresh, now=now)
+        skip_rids = set()
+        if plan.prefill:
+            skip_rids = self._chunk_prefill(plan.prefill, now)
+        self._decode_tick(skip_rids=skip_rids, now=now)
 
-    def _batch_prefill(self, reqs, now):
-        B, T = self.scfg.max_batch, self.scfg.max_prompt
-        reqs = list(reqs)
-        ids = np.zeros((B, T), np.int32)
-        lens = np.zeros((B,), np.int32)
-        for i, r in enumerate(reqs):
-            if r.n_prompt > T:
-                raise ValueError(f"prompt {r.n_prompt} > max_prompt {T}")
-            ids[i, :r.n_prompt] = r.prompt
-            lens[i] = r.n_prompt
+    def _samp_state(self, reqs) -> dict:
+        return sampling.batch_state(reqs, self.scfg.max_batch,
+                                    self.scfg.sample_seed)
+
+    def _chunk_prefill(self, assignments, now):
+        """Feed every (req, n) chunk assignment through the prefill
+        step.  Returns the rids that COMPLETED prefill this tick (their
+        first output token came from the chunk — they must not also
+        decode)."""
+        B, C = self.scfg.max_batch, self.scfg.prefill_chunk
+        reqs = [r for r, _ in assignments]
+        ids = np.zeros((B, C), np.int32)
+        start = np.zeros((B,), np.int32)
+        n_tok = np.zeros((B,), np.int32)
+        for i, (r, n) in enumerate(assignments):
+            ids[i, :n] = r.prompt[r.n_done:r.n_done + n]
+            start[i] = r.n_done
+            n_tok[i] = n
         bt = self.kv.block_table(
             [r.rid for r in reqs] + [None] * (B - len(reqs)),
             self.scfg.table_slots)
-        toks, self.pool = self.exec.prefill(self.pool, ids, lens, bt)
+        toks, self.pool = self.exec.prefill(self.pool, ids, start, n_tok,
+                                            bt, self._samp_state(reqs))
         toks = np.asarray(toks)
-        for i, r in enumerate(reqs):
-            self.sched.note_prefilled(r, int(toks[i]), now)
-            self._maybe_finish(r, now)
-        return reqs
+        done = set()
+        for i, (r, n) in enumerate(assignments):
+            self.sched.note_chunk(r, n, int(toks[i]), now)
+            if not r.is_prefilling():
+                done.add(r.rid)
+                self._last_tok[r.rid] = now
+                self._maybe_finish(r, now)
+        return done
 
-    def _decode_tick(self, skip, now):
-        batch = [r for r in self.sched.running if r not in skip]
+    def _decode_tick(self, skip_rids, now):
+        batch = [r for r in self.sched.running
+                 if not r.is_prefilling() and r.rid not in skip_rids]
         if not batch:
             return
         B = self.scfg.max_batch
@@ -323,18 +384,21 @@ class ServeEngine:
         lens = np.zeros((B,), np.int32)
         for i, r in enumerate(batch):
             tokens[i] = r.next_input()
-            p = r.n_done if r.is_prefilling() \
-                else r.n_prompt + len(r.out) - 1
+            p = r.n_prompt + len(r.out) - 1
             pos[i] = p
             lens[i] = p + 1
         bt = self.kv.block_table(
             [r.rid for r in batch] + [None] * (B - len(batch)),
             self.scfg.table_slots)
         toks, self.pool = self.exec.decode(self.pool, tokens, pos, bt,
-                                           lens)
+                                           lens, self._samp_state(batch))
         toks = np.asarray(toks)
         for i, r in enumerate(batch):
             self.sched.advance(r, int(toks[i]), now)
+            prev = self._last_tok.get(r.rid)
+            if prev is not None:
+                self.itl.append(now - prev)
+            self._last_tok[r.rid] = now
             self._maybe_finish(r, now)
 
     def _maybe_finish(self, r, now):
@@ -342,6 +406,9 @@ class ServeEngine:
             self.sched.finish(r, now,
                               register_prefix=self.scfg.prefix_keep)
             self.finished.append(r)
+            # a reused rid (fresh trace on a live engine) must not see
+            # this request's last-token time as its previous gap
+            self._last_tok.pop(r.rid, None)
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], *, clock: str = "wall",
@@ -368,12 +435,32 @@ class ServeEngine:
         raise RuntimeError(f"serve loop did not converge in {max_ticks} "
                            f"ticks ({len(self.finished)} finished)")
 
+    def reset_metrics(self) -> None:
+        """Forget finished requests and counters (page/pool state
+        stays).  Benchmarks warm the jit caches with a throwaway trace,
+        reset, then measure a clean run on the SAME engine — so the
+        measured rows reflect engine/scheduler structure, not XLA
+        compile time."""
+        self.finished.clear()
+        self.ticks = 0
+        self.itl.clear()
+        self._last_tok.clear()
+        for k in self.sched.stats:
+            self.sched.stats[k] = 0
+        for k in self.kv.stats:
+            self.kv.stats[k] = 0
+
     # ------------------------------------------------------------------
     def metrics(self) -> dict:
         """Throughput/latency summary over finished requests."""
         lat = np.array([r.t_finish - r.t_arrive for r in self.finished])
         ttft = np.array([r.t_first - r.t_arrive for r in self.finished
                          if r.t_first is not None])
+        # decode latency = inter-token gaps (ITL/TPOT): the per-token
+        # quantity chunked prefill protects — a batch-mate's monolithic
+        # prompt admission stretches the tick every decoding neighbour
+        # waits on, and that stretch lands in these gaps
+        dec = np.asarray(self.itl)
         toks = sum(len(r.out) for r in self.finished)
         span = max((r.t_finish for r in self.finished), default=0.0) \
             - min((r.t_arrive for r in self.finished), default=0.0)
@@ -385,6 +472,7 @@ class ServeEngine:
             "throughput_tok_s": toks / span if span > 0 else 0.0,
             "latency_p50_s": pct(lat, 50), "latency_p99_s": pct(lat, 99),
             "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+            "decode_p50_s": pct(dec, 50), "decode_p99_s": pct(dec, 99),
             "ticks": self.ticks,
             "sched": dict(self.sched.stats),
             "kv": dict(self.kv.stats),

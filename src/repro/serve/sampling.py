@@ -1,0 +1,135 @@
+"""Per-request batched sampling for the serving engine.
+
+The sampler is **TP-aware and two-phase** (the device-resident
+selection-over-partitioned-data operation GPU-aware OpenSHMEM work
+singles out as the divergence magnet):
+
+  phase 1  every vocab shard computes its local top-k
+           ``(value, global-index)`` candidates
+           (``repro.models.embed.tp_sample_candidates``);
+  phase 2  candidate lists merge through ``ctx.tp_comm.top_k_merge``
+           — one all_gather of ``k`` pairs per rank plus a replicated
+           sort with a deterministic tie-break (equal values -> the
+           LOWEST global vocab index), so every rank holds the same
+           candidate set.  Greedy (``temperature == 0``) is exactly the
+           ``k = 1`` special case (``emb.tp_argmax``).
+
+The draw itself is a **counter-based RNG stream per sequence**: the key
+is ``fold_in(fold_in(PRNGKey(seed), rid), position)``, a pure function
+of the request id and the absolute position of the token being
+generated.  No RNG state threads through the engine, so token streams
+are invariant to
+
+  * the communicator backend (xla / posh / pallas — asserted on the
+    8-PE mesh, same style as the greedy parity suite),
+  * batch composition (a request sampled alone draws the same stream
+    as the same request packed in a full batch),
+  * the prefill path (a chunk-completing prompt and a decode step
+    sample position ``n_prompt + i`` with the same key).
+
+Truncation (top-k / top-p) happens over the merged candidate list, so
+per-request ``top_k`` must be ≤ the engine's static candidate bound
+(``ServeConfig.sample_candidates``); top-p renormalizes over the
+candidates, which carry all of the head mass that matters at the
+temperatures serving uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention import NEG_INF
+from repro.models import embed as emb
+from repro.parallel.ctx import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """One request's sampling policy.  ``temperature == 0`` is greedy
+    (top_k/top_p are then ignored); ``top_k == 0`` disables the top-k
+    cut; ``top_p == 1`` disables the nucleus cut."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+def batch_state(reqs, max_batch: int, seed: int) -> dict:
+    """Pack per-request :class:`SamplingParams` + RNG stream ids into
+    the array pytree the traced step functions consume.  Host-side;
+    empty batch slots sample greedily (their tokens are discarded)."""
+    st = {
+        "temperature": np.zeros((max_batch,), np.float32),
+        "top_k": np.zeros((max_batch,), np.int32),
+        "top_p": np.ones((max_batch,), np.float32),
+        "rid": np.zeros((max_batch,), np.int32),
+        "seed": np.int32(seed),
+    }
+    for i, r in enumerate(reqs):
+        sp = r.sampling
+        st["temperature"][i] = sp.temperature
+        st["top_k"][i] = sp.top_k
+        st["top_p"][i] = sp.top_p
+        st["rid"][i] = r.rid
+    return st
+
+
+def sample_from_candidates(vals, idxs, state: dict, pos):
+    """Draw one token per row from merged candidates.
+
+    vals/idxs: (b, k) value-sorted-descending global candidates
+    (identical on every TP rank after ``top_k_merge``); ``state`` the
+    ``batch_state`` pytree; ``pos`` (b,) the absolute position of the
+    token being GENERATED (the RNG counter).  Greedy rows take
+    candidate 0 — the argmax with the lowest-index tie-break.
+    """
+    b, k = vals.shape
+    temp = state["temperature"]
+    greedy = temp <= 0.0
+    t = jnp.where(greedy, 1.0, jnp.maximum(temp, 1e-6))
+    logit = vals.astype(jnp.float32) / t[:, None]
+
+    j = jnp.arange(k)[None, :]
+    top_k = state["top_k"][:, None]
+    logit = jnp.where((top_k > 0) & (j >= top_k), NEG_INF, logit)
+
+    # nucleus cut on the (descending) candidate probabilities: keep the
+    # smallest prefix with mass >= top_p (the first candidate always
+    # survives: its preceding mass is 0)
+    p = jax.nn.softmax(logit, axis=-1)
+    mass_before = jnp.cumsum(p, axis=-1) - p
+    logit = jnp.where(mass_before >= state["top_p"][:, None], NEG_INF, logit)
+
+    def draw(seed, rid, position, lg):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), rid), position)
+        return jax.random.categorical(key, lg)
+
+    choice = jax.vmap(draw, in_axes=(None, 0, 0, 0))(
+        state["seed"], state["rid"], pos.astype(jnp.int32), logit)
+    choice = jnp.where(greedy, 0, choice)
+    return jnp.take_along_axis(idxs, choice[:, None], axis=-1)[:, 0]
+
+
+def sample_tokens(logits_loc, ctx: ParallelCtx, state: dict, pos,
+                  n_candidates: int = 8):
+    """The full two-phase sampler: local shard candidates -> merged
+    global candidates -> per-sequence counter-RNG draw.  ``logits_loc``
+    is the (b, V/tp) LOCAL logits shard; the returned (b,) tokens are
+    identical on every rank."""
+    vals, idxs = emb.tp_sample_candidates(logits_loc, ctx, n_candidates)
+    return sample_from_candidates(vals, idxs, state, pos)

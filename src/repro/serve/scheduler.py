@@ -1,18 +1,26 @@
-"""FCFS continuous batching with preempt-by-eviction.
+"""FCFS continuous batching with preempt-by-eviction and token-budgeted
+chunked prefill.
 
 Classic continuous batching (Orca/vLLM style) over the paged KV cache:
 
   * requests queue FCFS; a request is ADMITTED when a batch slot is
     free and the pool can cover its prompt + one decode page;
-  * every engine tick decodes ONE token for every running sequence —
-    a sequence still consuming its prompt ("chunked prefill" after a
-    prefix-cache resume or a batched prefill for fresh admissions)
-    shares the same batch as sequences generating output;
+  * every engine tick decodes ONE token for every decoding sequence,
+    and assigns every PREFILLING sequence (fresh admission, preemption
+    re-prefill, or a prefix-cache resume's uncovered suffix) up to
+    ``prefill_chunk`` prompt tokens, all under one shared per-tick
+    token budget (``tick_tokens``) — decode claims its tokens first,
+    so a long prompt can never stall the decodes sharing its batch;
   * when a decode step needs a page and the pool is dry, the YOUNGEST
     running sequence is preempted by eviction: its pages are freed, it
     re-queues at the head of the waiting line (FCFS order preserved —
     it is still ahead of everything that arrived after it) and will
     re-prefill on re-admission.
+
+``Request`` identity is OBJECT identity (``eq=False``): two requests
+holding equal field values are still distinct schedulable entities, so
+plan membership (``plan.preempted``) and batch-skip bookkeeping can
+never conflate them; cross-object bookkeeping uses rid sets.
 
 The scheduler is host-side and deterministic: given the same arrival
 trace it makes the same decisions regardless of communicator backend,
@@ -29,21 +37,30 @@ from typing import Optional
 import numpy as np
 
 from .kv_cache import PagedKVCache, PageMigration
+from .sampling import GREEDY, SamplingParams
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One inference request.  ``prompt`` is a list of token ids;
-    ``max_new`` the decode budget."""
+    ``max_new`` the decode budget; ``sampling`` the per-request
+    sampling policy (default greedy).
+
+    ``eq=False``: requests compare and hash by OBJECT identity, never
+    by field values — the scheduler tracks live entities, and two
+    requests with identical parameters must stay distinguishable in
+    membership tests (``running.remove``, ``in plan.preempted``)."""
 
     rid: int
     prompt: list
     max_new: int
     t_arrive: float = 0.0
+    sampling: SamplingParams = GREEDY
 
     # runtime (engine-owned)
     out: list = dataclasses.field(default_factory=list)
     n_done: int = 0          # prompt tokens whose KV is in pages
+    prefill_chunks: list = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     t_first: Optional[float] = None
     t_finish: Optional[float] = None
@@ -69,6 +86,7 @@ class Request:
     def reset(self) -> None:
         """Preemption: all progress is rebuilt from scratch."""
         self.out.clear()
+        self.prefill_chunks.clear()
         self.n_done = 0
         self.slot = None
         self.preemptions += 1
@@ -78,27 +96,42 @@ class Request:
 class TickPlan:
     """What one scheduler tick decided (the engine executes it)."""
 
-    admitted: list = dataclasses.field(default_factory=list)   # fresh: batch prefill
+    admitted: list = dataclasses.field(default_factory=list)   # fresh
     resumed: list = dataclasses.field(default_factory=list)    # prefix-attached
     preempted: list = dataclasses.field(default_factory=list)
     migrations: list = dataclasses.field(default_factory=list)  # PageMigration
+    prefill: list = dataclasses.field(default_factory=list)    # (req, n_tokens)
 
 
 class FCFSScheduler:
-    """First-come-first-served admission over a PagedKVCache."""
+    """First-come-first-served admission over a PagedKVCache.
+
+    ``prefill_chunk`` caps the prompt tokens one sequence consumes per
+    tick; ``tick_tokens`` is the per-tick token budget shared by decode
+    (one token per decoding sequence, claimed first) and prefill chunks
+    (handed out FCFS in admission order).  The oldest prefilling
+    sequence is always guaranteed one token, so prefill can never
+    starve outright.  ``tick_tokens=0`` resolves to
+    ``max_batch + prefill_chunk``."""
 
     def __init__(self, kv: PagedKVCache, *, max_batch: int,
-                 max_seq: int, my_pe: int = 0):
+                 max_seq: int, my_pe: int = 0, prefill_chunk: int = 8,
+                 tick_tokens: int = 0):
         self.kv = kv
         self.max_batch = int(max_batch)
         self.max_seq = int(max_seq)
         self.my_pe = int(my_pe)
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.tick_tokens = int(tick_tokens) or (self.max_batch
+                                                + self.prefill_chunk)
         self.waiting: deque = deque()
         self.running: list = []          # admission order (oldest first)
+        self._decode_refund = 0          # unspent decode claims of
+                                         # sequences evicted this tick
         self._admit_seq = itertools.count()
         self._admit_idx: dict = {}       # rid -> admission ticket
         self.stats = {"admitted": 0, "resumed": 0, "preempted": 0,
-                      "finished": 0, "ticks": 0}
+                      "finished": 0, "ticks": 0, "prefill_tokens": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -113,32 +146,63 @@ class FCFSScheduler:
 
     # ------------------------------------------------------------------
     def tick(self) -> TickPlan:
-        """One scheduling round: grow running sequences (preempting by
-        eviction when the pool is dry), then admit FCFS while slots and
-        pages last.  Prefix-cache hits admit as RESUMED sequences whose
-        first pages arrive by migration instead of recompute."""
+        """One scheduling round: budget the tick's tokens (decode
+        first, then prefill chunks FCFS), grow running sequences
+        (preempting by eviction when the pool is dry), then admit FCFS
+        while slots, pages and budget last.  Prefix-cache hits admit as
+        RESUMED sequences whose first pages arrive by migration instead
+        of recompute."""
         self.stats["ticks"] += 1
         plan = TickPlan()
-        self._ensure_running(plan)
-        self._admit(plan)
+        quotas: dict = {}                # rid -> prompt tokens this tick
+        budget = self.tick_tokens
+        budget -= sum(1 for r in self.running if not r.is_prefilling())
+        for req in self.running:         # admission order = FCFS
+            if req.is_prefilling():
+                budget = self._grant(req, quotas, budget,
+                                     guarantee=not quotas)
+        self._decode_refund = 0
+        self._ensure_running(plan, quotas)
+        # tokens granted to (or claimed by) sequences that eviction
+        # just removed are unspent — hand them to this tick's admissions
+        for r in plan.preempted:
+            budget += quotas.pop(r.rid, 0)
+        budget += self._decode_refund
+        self._admit(plan, quotas, budget)
+        plan.prefill = [(r, quotas[r.rid]) for r in self.running
+                        if r.rid in quotas]
+        self.stats["prefill_tokens"] += sum(n for _, n in plan.prefill)
         return plan
 
-    def _ensure_running(self, plan: TickPlan) -> None:
-        """Every running sequence needs page room for the token this
+    def _grant(self, req: Request, quotas: dict, budget: int, *,
+               guarantee: bool) -> int:
+        """Assign ``req`` its chunk for this tick out of ``budget``.
+        ``guarantee`` forces at least one token (the oldest prefilling
+        sequence and fresh admissions always make progress)."""
+        q = min(self.prefill_chunk, max(budget, 0))
+        if guarantee:
+            q = max(q, 1)
+        q = min(q, req.n_prompt - req.n_done)
+        if q > 0:
+            quotas[req.rid] = q
+        return budget - q
+
+    def _ensure_running(self, plan: TickPlan, quotas: dict) -> None:
+        """Every running sequence needs page room for the tokens this
         tick writes.  Out of pages -> evict the youngest until it fits
         (never evicting the sequence we are growing unless it IS the
         youngest — then it preempts itself and waits)."""
         for req in list(self.running):
             if req not in self.running:
                 continue                     # evicted by an earlier loop turn
-            # exact demand for THIS tick's write: the input token's
-            # position + 1 (prefill: prompt token n_done; decode: the
-            # last sampled token at n_prompt + len(out) - 1).  Asking
-            # for one more would preempt a neighbour for a page the
-            # final token of a finishing sequence never writes.
-            need = req.n_done + 1 if req.is_prefilling() \
-                else req.n_prompt + len(req.out)
-            while not self.kv.ensure(req.rid, need):
+            # exact demand for THIS tick's writes: prefill covers its
+            # chunk quota; decode writes the last sampled token at
+            # position n_prompt + len(out) - 1.  Asking for one more
+            # would preempt a neighbour for a page the final token of a
+            # finishing sequence never writes.
+            need = req.n_done + quotas.get(req.rid, 0) \
+                if req.is_prefilling() else req.n_prompt + len(req.out)
+            while not self.kv.ensure(req.rid, max(need, 1)):
                 victim = self._youngest()
                 self._preempt(victim, plan)
                 if victim is req:
@@ -148,18 +212,21 @@ class FCFSScheduler:
         return max(self.running, key=lambda r: self._admit_idx[r.rid])
 
     def _preempt(self, req: Request, plan: TickPlan) -> None:
+        if not req.is_prefilling():
+            self._decode_refund += 1         # its decode token is unspent
         self.kv.free_seq(req.rid)
-        self.running.remove(req)
+        self.running.remove(req)             # identity (eq=False)
         req.reset()
         # back to the head of the line: still ahead of later arrivals
         self.waiting.appendleft(req)
         plan.preempted.append(req)
         self.stats["preempted"] += 1
 
-    def _admit(self, plan: TickPlan) -> None:
+    def _admit(self, plan: TickPlan, quotas: dict, budget: int) -> None:
+        preempted_rids = {r.rid for r in plan.preempted}
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
-            if req in plan.preempted:
+            if req.rid in preempted_rids:
                 # evicted THIS tick to let an older sequence breathe —
                 # re-admitting immediately would thrash prefill
                 break
@@ -179,11 +246,12 @@ class FCFSScheduler:
                 self._start(req)
                 plan.admitted.append(req)
                 self.stats["admitted"] += 1
+            budget = self._grant(req, quotas, budget, guarantee=True)
 
     def _admit_resumed(self, req: Request, hit, plan: TickPlan) -> bool:
         """Prefix pages live on another PE: take landing pages, plan the
         migrations, and admit with the prefix marked done — the rest of
-        the prompt streams through the decode path (chunked prefill)."""
+        the prompt streams through the chunked-prefill path."""
         owner_pe, src_pages = hit
         landing = self.kv.take_pages(len(src_pages))
         if landing is None:
@@ -212,28 +280,37 @@ class FCFSScheduler:
 
     # ------------------------------------------------------------------
     def advance(self, req: Request, token: int, now: float = 0.0) -> None:
-        """Record the outcome of one decode step for ``req``: a prompt
-        token consumed, or a sampled token appended.  The caller removes
-        finished sequences via ``finish``."""
+        """Record the outcome of one decode step for ``req``: a sampled
+        token appended (a still-prefilling sequence routes through
+        ``note_chunk`` as a 1-token chunk, so the chunk bookkeeping
+        stays the single source of truth).  The caller removes finished
+        sequences via ``finish``."""
         if req.is_prefilling():
-            req.n_done += 1
-            if not req.is_prefilling():
-                req.out.append(int(token))      # first sampled token
-                req.t_first = now
+            self.note_chunk(req, 1, token, now)
         else:
             req.out.append(int(token))
 
+    def note_chunk(self, req: Request, n: int, token: int,
+                   now: float = 0.0) -> None:
+        """Chunked prefill consumed ``n`` prompt tokens for ``req``;
+        when the chunk completes the prompt, ``token`` (sampled after
+        the last prompt position) is the first output token."""
+        req.n_done += int(n)
+        assert req.n_done <= req.n_prompt, (req.rid, req.n_done)
+        req.prefill_chunks.append(int(n))
+        if not req.is_prefilling():
+            req.out.append(int(token))
+            req.t_first = now
+
     def note_prefilled(self, req: Request, first_token: int,
                        now: float = 0.0) -> None:
-        """Batched full prefill consumed the whole prompt at once."""
-        req.n_done = req.n_prompt
-        req.out.append(int(first_token))
-        req.t_first = now
+        """A single chunk consumed the whole remaining prompt at once."""
+        self.note_chunk(req, req.n_prompt - req.n_done, first_token, now)
 
     def finish(self, req: Request, now: float = 0.0,
                register_prefix: bool = True) -> None:
         req.t_finish = now
-        self.running.remove(req)
+        self.running.remove(req)             # identity (eq=False)
         if register_prefix:
             pages = self.kv.tables[req.rid]
             n_full = min(len(pages),

@@ -5,6 +5,15 @@ the same trace drives the benchmark, the CLI and the parity suites, so
 "identical token streams across backends" is a meaningful assertion.
 Prompt/output lengths are drawn from a short/long mixture (the bimodal
 shape real serving traffic has: chat turns vs document prompts).
+
+Every request draws from its OWN RNG stream, seeded by ``(seed, rid)``:
+request ``i`` is a pure function of the config and ``i``, never of
+``n_requests``.  Traces are therefore PREFIX-STABLE — growing a
+benchmark from 16 to 64 requests extends the trace instead of
+reshuffling every prompt — which is what makes rows at different scales
+comparable.  (The old generator drew all arrival gaps in one
+``size=n_requests`` call before the per-request draws, so changing
+``n_requests`` shifted the RNG stream under every request.)
 """
 from __future__ import annotations
 
@@ -12,6 +21,7 @@ import dataclasses
 
 import numpy as np
 
+from .sampling import SamplingParams
 from .scheduler import Request
 
 
@@ -28,21 +38,43 @@ class TrafficConfig:
     long_frac: float = 0.25
     out_short: tuple = (2, 8)
     out_long: tuple = (6, 9)
+    # per-request sampling policy (defaults: greedy, matching the old
+    # traffic); greedy_frac forces that fraction of requests to greedy
+    # regardless, so one trace can mix sampled and greedy streams
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    greedy_frac: float = 0.0
+
+
+def _request_rng(seed: int, rid: int) -> np.random.RandomState:
+    """One independent, reproducible stream per request id."""
+    root = np.random.SeedSequence([int(seed), int(rid)])
+    return np.random.RandomState(root.generate_state(1)[0])
 
 
 def make_requests(tcfg: TrafficConfig) -> list:
     """The arrival trace: ``n_requests`` Requests with exponential
-    inter-arrival gaps (rate ``rate``) and mixed prompt/output lengths."""
-    rng = np.random.RandomState(tcfg.seed)
-    gaps = rng.exponential(1.0 / tcfg.rate, size=tcfg.n_requests)
-    arrivals = np.cumsum(gaps) - gaps[0]          # first request at t=0
+    inter-arrival gaps (rate ``rate``) and mixed prompt/output lengths.
+    All of request ``i``'s draws (its gap included) come from the
+    ``(seed, i)`` stream, interleaved per request — prefix-stable in
+    ``n_requests``."""
     reqs = []
+    t = 0.0
     for i in range(tcfg.n_requests):
+        rng = _request_rng(tcfg.seed, i)
+        gap = rng.exponential(1.0 / tcfg.rate)
+        if i > 0:                                 # first request at t=0
+            t += gap
         long = rng.rand() < tcfg.long_frac
         plen = rng.randint(*(tcfg.prompt_long if long
                              else tcfg.prompt_short))
         olen = rng.randint(*(tcfg.out_long if long else tcfg.out_short))
         prompt = rng.randint(0, tcfg.vocab, size=plen).tolist()
+        greedy = rng.rand() < tcfg.greedy_frac
+        sp = SamplingParams() if greedy else SamplingParams(
+            temperature=tcfg.temperature, top_k=tcfg.top_k,
+            top_p=tcfg.top_p)
         reqs.append(Request(rid=i, prompt=prompt, max_new=int(olen),
-                            t_arrive=float(arrivals[i])))
+                            t_arrive=float(t), sampling=sp))
     return reqs

@@ -1,28 +1,41 @@
 """Serving on a real 8-PE mesh — subprocess worker.
 
 Mesh (2, 4) = ("data", "model"): a 2-replica serving cell, each replica
-tensor-parallel over 4 PEs.  Three checks:
+tensor-parallel over 4 PEs.  Five checks:
 
   1. BACKEND PARITY — the same seeded request trace served with the
      engine's collectives routed through each registered communicator
-     backend (xla / posh / pallas) produces IDENTICAL token streams.
-     The scheduler is host-side and deterministic, so any divergence is
-     a numerical bug in a backend's schedules.
+     backend (xla / posh / pallas) produces IDENTICAL token streams,
+     for GREEDY requests and for SAMPLED ones (temperature > 0,
+     top-p < 1): the TP-aware two-phase sampler merges per-shard
+     candidates with a deterministic tie-break and draws from
+     counter-based per-(rid, position) RNG streams, so any divergence
+     is a numerical bug in a backend's schedules.
 
-  2. PAGE MIGRATION — a KV page moves replica 0 -> replica 1 as ONE
+  2. BATCH-COMPOSITION INVARIANCE — a sampled request served ALONE
+     yields the same token stream as the same request packed into a
+     full batch (the RNG stream is keyed by (rid, position), never by
+     batch slot or tick).
+
+  3. TP-ARGMAX TIE-BREAK — manufactured equal-logit ties spanning
+     vocab shards resolve to the LOWEST global vocab index on every
+     backend (regression: the old pmax-of-candidate-index merge picked
+     the highest tied shard).
+
+  4. PAGE MIGRATION — a KV page moves replica 0 -> replica 1 as ONE
      put_nbi round over the flattened ("data","model") team (one
      (src, dst) pair per TP rank: each rank's page shard moves to its
      counterpart) drained by one quiet(), through the REAL
      PermuteTransport.  Replica-distinct scribbles prove actual cross-
      PE data motion, not SPMD replication.
 
-  3. PREFIX-RESUME VIA MIGRATION — request A finishes and registers its
+  5. PREFIX-RESUME VIA MIGRATION — request A finishes and registers its
      full prompt pages in the prefix index (owner: replica 0).  A
      second serving cell (my_pe = replica 1) admits an identical-prompt
      request as RESUMED: the scheduler tick plans page migrations, the
-     engine drains them with one quiet(), and the request decodes from
-     the migrated pages — its token stream must equal the from-scratch
-     stream.
+     engine drains them with one quiet(), and the request CHUNK-
+     prefills only the uncovered suffix (>= 2 tokens per tick) — its
+     token stream must equal the from-scratch stream.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -35,6 +48,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat, configs, serve
 from repro.core import CommQueue, SymmetricHeap
 from repro.core.ordering import PermuteTransport
+from repro.models import embed as emb
 from repro.models import registry
 from repro.parallel.ctx import ParallelCtx, smap
 
@@ -58,20 +72,21 @@ class MeshExec:
         # tokens are replica-varying once pages migrate (replica 1 may
         # hold pages replica 0 does not), so they come back stacked per
         # replica — the host reads its own cell's row
-        def pf_w(params, pool, ids, lens, bt):
-            toks, kvo = pf(params, pool[0, 0], ids, lens, bt)
+        def pf_w(params, pool, ids, start, n_tok, bt, samp):
+            toks, kvo = pf(params, pool[0, 0], ids, start, n_tok, bt,
+                           samp)
             return toks, kvo[None, None]
 
-        def dc_w(params, pool, toks, pos, bt, lens):
-            nxt, kvo = dc(params, pool[0, 0], toks, pos, bt, lens)
+        def dc_w(params, pool, toks, pos, bt, lens, samp):
+            nxt, kvo = dc(params, pool[0, 0], toks, pos, bt, lens, samp)
             return nxt, kvo[None, None]
 
-        args = (pspecs, POOL_SPEC, P(), P(), P())
-        self._prefill = jax.jit(smap(pf_w, mesh, args,
-                                     (P("data"), POOL_SPEC)))
-        self._decode = jax.jit(smap(dc_w, mesh,
-                                    (pspecs, POOL_SPEC, P(), P(), P(),
-                                     P()), (P("data"), POOL_SPEC)))
+        self._prefill = jax.jit(smap(
+            pf_w, mesh, (pspecs, POOL_SPEC, P(), P(), P(), P(), P()),
+            (P("data"), POOL_SPEC)))
+        self._decode = jax.jit(smap(
+            dc_w, mesh, (pspecs, POOL_SPEC, P(), P(), P(), P(), P()),
+            (P("data"), POOL_SPEC)))
         self._migrate_cache = {}
 
     def _my_row(self, toks):
@@ -81,15 +96,18 @@ class MeshExec:
         return jnp.zeros((DP, TP) + self.kv.handle.shape,
                          self.kv.handle.dtype)
 
-    def prefill(self, pool, ids, lens, bt):
+    def prefill(self, pool, ids, start, n_tok, bt, samp):
         toks, pool = self._prefill(self.params, pool, jnp.asarray(ids),
-                                   jnp.asarray(lens), jnp.asarray(bt))
+                                   jnp.asarray(start),
+                                   jnp.asarray(n_tok), jnp.asarray(bt),
+                                   samp)
         return self._my_row(toks), pool
 
-    def decode(self, pool, tokens, pos, bt, lens):
+    def decode(self, pool, tokens, pos, bt, lens, samp):
         toks, pool = self._decode(self.params, pool,
                                   jnp.asarray(tokens), jnp.asarray(pos),
-                                  jnp.asarray(bt), jnp.asarray(lens))
+                                  jnp.asarray(bt), jnp.asarray(lens),
+                                  samp)
         return self._my_row(toks), pool
 
     def migrate(self, pool, migrations):
@@ -127,7 +145,7 @@ def build(backend, *, prefix_keep=False, my_pe=0, kv=None, scfg=None):
                                   compute_dtype=jnp.float32))
     scfg = scfg or serve.ServeConfig(page_tokens=4, n_pages=24,
                                      max_batch=3, max_seq=32,
-                                     max_prompt=16, attn_impl="ref",
+                                     prefill_chunk=3, attn_impl="ref",
                                      prefix_keep=prefix_keep)
     if kv is None:
         heap = SymmetricHeap(("data", "model"), capacity_bytes=1 << 30)
@@ -143,24 +161,67 @@ def build(backend, *, prefix_keep=False, my_pe=0, kv=None, scfg=None):
 
 
 PROMPTS = [list(range(3, 11)), list(range(40, 46)), [7, 3, 99, 12, 55]]
+SAMPLED = serve.SamplingParams(temperature=0.8, top_k=5, top_p=0.9)
 
 
-def serve_trace(backend):
+def serve_trace(backend, sampling=None):
     eng, cfg = build(backend)
-    reqs = [serve.Request(rid=i, prompt=p, max_new=6)
+    reqs = [serve.Request(rid=i, prompt=list(p), max_new=6,
+                          sampling=sampling or serve.GREEDY)
             for i, p in enumerate(PROMPTS)]
     done = eng.run(reqs, clock="tick")
     return {r.rid: list(r.out) for r in done}, eng
 
 
 def check_backend_parity():
-    streams = {}
+    for tag, sampling in (("greedy", None), ("sampled", SAMPLED)):
+        streams = {}
+        for backend in ("xla", "posh", "pallas"):
+            streams[backend], _ = serve_trace(backend, sampling)
+            print(f"  [{backend}/{tag}] streams: "
+                  f"{ {k: v[:4] for k, v in streams[backend].items()} }")
+        assert streams["xla"] == streams["posh"] == streams["pallas"], \
+            (tag, streams)
+        print(f"  {tag} token streams identical across xla/posh/pallas")
+
+
+def check_batch_invariance():
+    """The same sampled request, alone vs packed in a full batch, draws
+    the identical token stream — on the mesh, through the TP sampler."""
+    full, _ = serve_trace("xla", SAMPLED)
+    eng, _ = build("xla")
+    alone = eng.run([serve.Request(rid=1, prompt=list(PROMPTS[1]),
+                                   max_new=6, sampling=SAMPLED)],
+                    clock="tick")
+    assert list(alone[0].out) == full[1], (alone[0].out, full[1])
+    print(f"  sampled stream batch-composition-invariant "
+          f"(rid 1: {full[1]})")
+
+
+def check_tp_argmax_ties():
+    """Manufactured equal-logit ties across vocab shards: every backend
+    must resolve to the LOWEST global vocab index (the old merge used
+    pmax over candidate indices, i.e. the HIGHEST tied shard won)."""
+    V, vloc = 32, 32 // TP
+    logits = np.zeros((2, V), np.float32)
+    # row 0: the global max value 3.0 appears in shard 1 (idx 9) AND
+    # shard 3 (idx 25) -> must pick 9.  row 1: tie inside shard 0
+    # (idx 2, 5) AND shard 2 (idx 17) -> must pick 2.
+    logits[0, 9] = logits[0, 25] = 3.0
+    logits[1, 2] = logits[1, 5] = logits[1, 17] = 7.0
     for backend in ("xla", "posh", "pallas"):
-        streams[backend], _ = serve_trace(backend)
-        print(f"  [{backend}] streams: "
-              f"{ {k: v[:4] for k, v in streams[backend].items()} }")
-    assert streams["xla"] == streams["posh"] == streams["pallas"], streams
-    print("  token streams identical across xla/posh/pallas")
+        ctx = ParallelCtx(dp_size=DP, tp_size=TP, sp=False, remat=False,
+                          backend=backend, param_dtype=jnp.float32,
+                          compute_dtype=jnp.float32)
+
+        def am(lg):
+            return emb.tp_argmax(lg, ctx)
+
+        out = jax.jit(smap(am, mesh, (P(None, "model"),), P()))(
+            jnp.asarray(logits))
+        got = list(np.asarray(out))
+        assert got == [9, 2], (backend, got)
+    print("  tp_argmax ties -> lowest global index on every backend")
 
 
 def check_page_migration():
@@ -193,16 +254,21 @@ def check_page_migration():
 def check_prefix_resume_migration():
     """Scheduler-planned migration: an identical prompt re-served on
     replica 1 resumes from replica 0's registered prefix pages (moved
-    by the tick's put_nbi/quiet) and decodes the same tokens."""
-    prompt = list(range(3, 11))                # 2 full pages of 4
-    scratch, _ = serve_trace("xla")            # from-scratch streams
+    by the tick's put_nbi/quiet) and CHUNK-prefills the uncovered
+    suffix — >= 2 tokens per tick — to the same token stream."""
+    prompt = list(range(3, 14))                # 2 full pages + 3 extra
+
+    # from-scratch stream for this prompt
+    eng0, _ = build("xla")
+    scratch = eng0.run([serve.Request(rid=0, prompt=list(prompt),
+                                      max_new=6)], clock="tick")
+    want = list(scratch[0].out)
 
     # cell A (replica 0) serves and registers the prefix
     eng, cfg = build("xla", prefix_keep=True, my_pe=0)
-    done = eng.run([serve.Request(rid=0, prompt=prompt, max_new=6)],
-                   clock="tick")
-    want = list(done[0].out)
-    assert want == scratch[0]
+    done = eng.run([serve.Request(rid=0, prompt=list(prompt),
+                                  max_new=6)], clock="tick")
+    assert list(done[0].out) == want
     assert eng.kv.lookup_prefix(prompt) is not None
 
     # cell B (replica 1) shares the symmetric pool + prefix index
@@ -215,14 +281,20 @@ def check_prefix_resume_migration():
     (resumed,) = eng2.finished
     assert eng2.sched.stats["resumed"] == 1, eng2.sched.stats
     assert eng2.kv.stats["migrations"] >= 2    # 2 prefix pages moved
+    # the uncovered suffix (3 tokens past the 2 migrated pages) went
+    # through chunked prefill in >= 2-token chunks, not token-by-token
+    assert resumed.prefill_chunks and max(resumed.prefill_chunks) >= 2, \
+        resumed.prefill_chunks
     assert list(resumed.out) == want, (resumed.out, want)
     print(f"  prefix resume via migration ok "
-          f"(migrated {eng2.kv.stats['migrations']} pages, "
-          f"stream {resumed.out})")
+          f"(migrated {eng2.kv.stats['migrations']} pages, suffix "
+          f"chunks {resumed.prefill_chunks}, stream {resumed.out})")
 
 
 def main():
     check_backend_parity()
+    check_batch_invariance()
+    check_tp_argmax_ties()
     check_page_migration()
     check_prefix_resume_migration()
     print("SERVE_PASS")

@@ -190,6 +190,43 @@ def test_realloc_grow_absorbs_adjacent_free():
     assert got.name == "a" and off == a2.nbytes - 1
 
 
+def test_realloc_size_zero_frees_and_returns_null_handle():
+    """shrealloc(ptr, 0) == shfree(ptr): the block is released and the
+    null handle comes back — not a 1-byte stub allocation (§4.1.1)."""
+    h = make_heap()
+    a = h.alloc("a", (64,), jnp.float32)
+    b = h.alloc("b", (8,), jnp.float32)
+    assert h.realloc("a", 0) is None           # int size, like the paper
+    assert "a" not in h.registry
+    with pytest.raises(KeyError):
+        h.resolve(a.offset)                    # address no longer mapped
+    c = h.alloc("c", (64,), jnp.float32)
+    assert c.offset == a.offset                # extent truly free again
+    h.free("b")
+    h.free("c")
+    assert h.used_bytes() == 0 and h.frag_blocks() == 1
+
+
+def test_realloc_zero_dim_shapes_free_too():
+    h = make_heap()
+    h.alloc("a", (16, 4), jnp.float32)
+    assert h.realloc("a", (0,)) is None
+    assert "a" not in h.registry
+    h.alloc("b", (16, 4), jnp.float32)
+    assert h.realloc("b", (4, 0, 2)) is None   # any zero dim is size 0
+    assert h.used_bytes() == 0
+    # but a SCALAR shape () is one element, not zero: stays live
+    h.alloc("c", (4,), jnp.float32)
+    c2 = h.realloc("c", ())
+    assert c2 is not None and c2.shape == () and "c" in h.registry
+
+
+def test_realloc_zero_on_missing_name_still_raises():
+    h = make_heap()
+    with pytest.raises(KeyError):
+        h.realloc("ghost", 0)
+
+
 def test_realloc_move_when_blocked():
     h = make_heap()
     a = h.alloc("a", (16,), jnp.float32)

@@ -1,0 +1,298 @@
+"""repro.serve.sampling: the TP-aware two-phase sampler — candidate
+merge tie-breaking, top-k/top-p truncation, counter-based RNG stream
+invariance — plus the traffic prefix-stability and Request-identity
+regressions.  (The mesh-sharded phases run in tests/multipe/
+run_serve.py; here the merge and the draw are pinned as pure
+functions, and the engine end-to-end on 1 PE.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro.comm import merge_candidates
+from repro.comm.communicator import DispatchTable
+from repro.models import embed as emb
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx
+from repro.serve import Request, SamplingParams, TickPlan
+from repro.serve.sampling import batch_state, sample_from_candidates
+
+
+# ======================================================================
+# candidate merge — the tie-break every backend must agree on
+# ======================================================================
+def test_merge_candidates_tie_breaks_to_lowest_global_index():
+    """Manufactured ties ACROSS shard candidate lists: the merged
+    winner must be the lowest global vocab index regardless of which
+    shard (list position) holds the tie."""
+    # two shards' (value, global-index) lists, value-sorted descending;
+    # the max 5.0 appears at global idx 70 (shard hi) and 12 (shard lo)
+    vals = jnp.asarray([[5.0, 1.0, 5.0, 0.5]])
+    idxs = jnp.asarray([[70, 71, 12, 13]], jnp.int32)
+    mv, mi = merge_candidates(vals, idxs, 3)
+    assert list(np.asarray(mi[0])) == [12, 70, 71]
+    assert list(np.asarray(mv[0])) == [5.0, 5.0, 1.0]
+
+
+def test_merge_candidates_is_order_invariant():
+    rng = np.random.RandomState(0)
+    vals = rng.randint(0, 4, size=(2, 8)).astype(np.float32)  # many ties
+    idxs = np.stack([rng.permutation(100)[:8] for _ in range(2)])
+    perm = rng.permutation(8)
+    a = merge_candidates(jnp.asarray(vals), jnp.asarray(idxs), 4)
+    b = merge_candidates(jnp.asarray(vals[:, perm]),
+                         jnp.asarray(idxs[:, perm]), 4)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_tp_argmax_single_rank_tie_lowest_index():
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    logits = jnp.asarray([[0.0, 3.0, 1.0, 3.0],
+                          [2.0, 2.0, 2.0, 2.0]])
+    got = np.asarray(emb.tp_argmax(logits, ctx))
+    assert list(got) == [1, 0]
+
+
+def test_tp_sample_candidates_sorted_and_tied():
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    logits = jnp.asarray([[1.0, 4.0, 4.0, 0.0, 4.0]])
+    vals, idxs = emb.tp_sample_candidates(logits, ctx, 4)
+    assert list(np.asarray(idxs[0])) == [1, 2, 4, 0]
+    assert list(np.asarray(vals[0])) == [4.0, 4.0, 4.0, 1.0]
+
+
+def test_dispatch_table_routes_top_k_merge_like_all_gather():
+    t = DispatchTable()
+    for nbytes in (64, 1 << 20):
+        assert t.choose("top_k_merge", nbytes, 8) \
+            == t.choose("all_gather", nbytes, 8)
+
+
+# ======================================================================
+# the draw — truncation + counter-based RNG streams
+# ======================================================================
+def _mk_state(**kw):
+    b = kw.pop("b", 2)
+    st = {"temperature": np.zeros(b, np.float32),
+          "top_k": np.zeros(b, np.int32),
+          "top_p": np.ones(b, np.float32),
+          "rid": np.arange(b, dtype=np.int32),
+          "seed": np.int32(0)}
+    for k, v in kw.items():
+        st[k] = np.asarray(v, st[k].dtype) if k != "seed" else np.int32(v)
+    return st
+
+
+CAND_V = jnp.asarray([[3.0, 2.0, 1.0, 0.0]] * 2)
+CAND_I = jnp.asarray([[7, 11, 13, 17]] * 2, jnp.int32)
+POS = jnp.asarray([4, 4], jnp.int32)
+
+
+def test_greedy_rows_take_candidate_zero():
+    st = _mk_state(temperature=[0.0, 0.0])
+    tok = sample_from_candidates(CAND_V, CAND_I, st, POS)
+    assert list(np.asarray(tok)) == [7, 7]
+
+
+def test_top_k_one_and_tiny_top_p_reduce_to_greedy():
+    st = _mk_state(temperature=[5.0, 5.0], top_k=[1, 0],
+                   top_p=[1.0, 1e-6])
+    tok = sample_from_candidates(CAND_V, CAND_I, st, POS)
+    assert list(np.asarray(tok)) == [7, 7]
+
+
+def test_top_k_never_selects_beyond_cut():
+    st = _mk_state(b=1, temperature=[100.0], top_k=[2])
+    seen = set()
+    for pos in range(64):
+        tok = sample_from_candidates(
+            CAND_V[:1], CAND_I[:1], st, jnp.asarray([pos], jnp.int32))
+        seen.add(int(tok[0]))
+    assert seen <= {7, 11} and len(seen) == 2
+
+
+def test_stream_keyed_by_rid_position_seed_only():
+    """The draw is a pure function of (seed, rid, position) — batch
+    slot, batch size and neighbouring rows must not matter."""
+    st2 = _mk_state(temperature=[2.0, 2.0], rid=[5, 9])
+    both = sample_from_candidates(CAND_V, CAND_I, st2, POS)
+    # rid 9 alone in a size-1 batch, same position
+    st1 = _mk_state(b=1, temperature=[2.0], rid=[9])
+    alone = sample_from_candidates(CAND_V[:1], CAND_I[:1], st1, POS[:1])
+    assert int(alone[0]) == int(both[1])
+    # swapped slots -> swapped tokens
+    sts = _mk_state(temperature=[2.0, 2.0], rid=[9, 5])
+    swapped = sample_from_candidates(CAND_V, CAND_I, sts, POS)
+    assert list(np.asarray(swapped)) == list(np.asarray(both))[::-1]
+    # a different seed or position moves the stream somewhere
+    tokens = {(0, 4): int(both[1])}
+    for seed, pos in ((1, 4), (0, 5)):
+        st = _mk_state(b=1, temperature=[2.0], rid=[9], seed=seed)
+        tokens[(seed, pos)] = int(sample_from_candidates(
+            CAND_V[:1], CAND_I[:1], st, jnp.asarray([pos], jnp.int32))[0])
+    assert len(set(tokens.values())) > 1
+
+
+def test_sampling_params_validate():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-2)
+
+
+def test_batch_state_packs_per_request_params():
+    reqs = [Request(rid=3, prompt=[1], max_new=1,
+                    sampling=SamplingParams(temperature=0.5, top_k=4,
+                                            top_p=0.9)),
+            Request(rid=8, prompt=[2], max_new=1)]
+    st = batch_state(reqs, 4, seed=42)
+    assert list(st["rid"]) == [3, 8, 0, 0]
+    assert st["temperature"][0] == np.float32(0.5)
+    assert st["top_k"][0] == 4 and st["top_p"][1] == 1.0
+    assert st["temperature"][1] == 0.0          # greedy default
+    assert st["seed"] == 42
+
+
+# ======================================================================
+# engine end-to-end (1 PE): sampled streams
+# ======================================================================
+def _engine(params, cfg, ctx, **kw):
+    scfg = serve.ServeConfig(page_tokens=4, n_pages=32, max_batch=3,
+                             max_seq=32, attn_impl="ref", **kw)
+    return serve.ServeEngine(params, cfg, ctx, scfg)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+    return params, cfg, ctx
+
+
+SP = SamplingParams(temperature=0.9, top_k=5, top_p=0.9)
+
+
+def test_engine_sampled_streams_batch_invariant(smoke_model):
+    params, cfg, ctx = smoke_model
+    prompts = [list(range(3, 9)), list(range(4, 10)), [7, 3, 99, 12]]
+    eng = _engine(params, cfg, ctx)
+    full = {r.rid: list(r.out) for r in eng.run(
+        [Request(rid=i, prompt=list(p), max_new=5, sampling=SP)
+         for i, p in enumerate(prompts)], clock="tick")}
+    eng2 = _engine(params, cfg, ctx)
+    alone = eng2.run([Request(rid=1, prompt=list(prompts[1]), max_new=5,
+                              sampling=SP)], clock="tick")
+    assert list(alone[0].out) == full[1]
+
+
+def test_engine_sampled_stream_depends_on_seed(smoke_model):
+    params, cfg, ctx = smoke_model
+    prompt = list(range(4, 10))
+    outs = []
+    for seed in (0, 1):
+        eng = _engine(params, cfg, ctx, sample_seed=seed)
+        outs.append(list(eng.run(
+            [Request(rid=1, prompt=list(prompt), max_new=6,
+                     sampling=SP)], clock="tick")[0].out))
+    assert outs[0] != outs[1]
+
+
+def test_engine_greedy_requests_unaffected_by_sampled_neighbours(
+        smoke_model):
+    params, cfg, ctx = smoke_model
+    g = Request(rid=0, prompt=list(range(3, 9)), max_new=5)
+    eng = _engine(params, cfg, ctx)
+    ref = list(eng.run([Request(rid=0, prompt=list(range(3, 9)),
+                                max_new=5)], clock="tick")[0].out)
+    eng2 = _engine(params, cfg, ctx)
+    mixed = eng2.run([g, Request(rid=1, prompt=list(range(4, 10)),
+                                 max_new=5, sampling=SP)], clock="tick")
+    got = next(r for r in mixed if r.rid == 0)
+    assert list(got.out) == ref
+
+
+def test_engine_rejects_top_k_over_candidate_bound(smoke_model):
+    params, cfg, ctx = smoke_model
+    eng = _engine(params, cfg, ctx, sample_candidates=4)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=[1, 2], max_new=2,
+                           sampling=SamplingParams(temperature=1.0,
+                                                   top_k=9)))
+
+
+def test_engine_itl_state_cleared_on_finish_and_rid_reuse(smoke_model):
+    """Inter-token-latency bookkeeping must not leak across requests:
+    after a request finishes its rid leaves the gap tracker, so a
+    second trace reusing rids on the SAME engine measures its own gaps
+    (a stale last-token timestamp would fabricate a giant gap spanning
+    the two traces)."""
+    params, cfg, ctx = smoke_model
+    eng = _engine(params, cfg, ctx)
+    reqs = [Request(rid=i, prompt=[3 + i, 4 + i], max_new=3)
+            for i in range(2)]
+    eng.run(reqs, clock="tick")
+    assert eng._last_tok == {}             # all finished -> tracker empty
+    eng.run([Request(rid=0, prompt=[9, 8], max_new=3)], clock="tick")
+    # uncontended tick-clock decodes advance one token per tick: every
+    # true gap is exactly 1; a stale rid-0 entry from the first trace
+    # would fabricate a >= 2-tick gap bridging the two traces
+    assert eng.itl and set(eng.itl) == {1}
+
+
+# ======================================================================
+# Request identity (bugfix regression)
+# ======================================================================
+def test_request_identity_not_field_equality():
+    """Two requests holding equal field values are DISTINCT schedulable
+    entities: membership in plans and skip sets must never conflate
+    them (the old dataclass __eq__ compared field values, so
+    ``req in plan.preempted`` / ``running.remove`` could hit the wrong
+    object)."""
+    a = Request(rid=0, prompt=[1, 2], max_new=2)
+    b = Request(rid=0, prompt=[1, 2], max_new=2)
+    assert a != b
+    assert b not in [a]
+    plan = TickPlan(preempted=[a])
+    assert a in plan.preempted and b not in plan.preempted
+    running = [a, b]
+    running.remove(b)                 # identity remove: b, not a
+    assert running == [a] and running[0] is a
+
+
+# ======================================================================
+# traffic prefix stability (bugfix regression)
+# ======================================================================
+def test_traffic_prefix_stable_in_n_requests():
+    """Growing n_requests must extend the trace, not reshuffle it:
+    request i is a pure function of (config, i)."""
+    small = serve.make_requests(serve.TrafficConfig(n_requests=6))
+    big = serve.make_requests(serve.TrafficConfig(n_requests=16))
+    for a, b in zip(small, big):
+        assert a.rid == b.rid
+        assert a.prompt == b.prompt
+        assert a.max_new == b.max_new
+        assert a.t_arrive == b.t_arrive
+        assert a.sampling == b.sampling
+
+
+def test_traffic_seed_and_params_flow_to_requests():
+    t1 = serve.make_requests(serve.TrafficConfig(n_requests=8, seed=1))
+    t2 = serve.make_requests(serve.TrafficConfig(n_requests=8, seed=2))
+    assert [r.prompt for r in t1] != [r.prompt for r in t2]
+    sampled = serve.make_requests(serve.TrafficConfig(
+        n_requests=8, temperature=0.7, top_k=6, top_p=0.85))
+    assert all(r.sampling == SamplingParams(0.7, 6, 0.85)
+               for r in sampled)
+    mixed = serve.make_requests(serve.TrafficConfig(
+        n_requests=32, temperature=0.7, greedy_frac=0.5))
+    kinds = {r.sampling.temperature for r in mixed}
+    assert kinds == {0.0, np.float32(0.7).item()} or kinds == {0.0, 0.7}

@@ -102,9 +102,10 @@ def test_pool_grow_via_realloc_preserves_pages():
 # ======================================================================
 # scheduler
 # ======================================================================
-def mk_sched(n_pages=8, page_tokens=4, max_batch=4, max_seq=32):
+def mk_sched(n_pages=8, page_tokens=4, max_batch=4, max_seq=32, **kw):
     kv = make_kv(n_pages=n_pages, page_tokens=page_tokens)
-    return FCFSScheduler(kv, max_batch=max_batch, max_seq=max_seq), kv
+    return FCFSScheduler(kv, max_batch=max_batch, max_seq=max_seq,
+                         **kw), kv
 
 
 def test_fcfs_admission_order_and_batch_cap():
@@ -169,6 +170,64 @@ def test_no_spurious_preemption_on_final_token():
         for r in (r0, r1):
             s.advance(r, 9)
     assert r0.finished() and r1.finished()
+
+
+def test_tick_token_budget_chunk_cap_and_fcfs_split():
+    """Fresh prompts split the tick budget FCFS, each capped at
+    prefill_chunk."""
+    s, kv = mk_sched(n_pages=32, page_tokens=4, max_batch=4, max_seq=64,
+                     prefill_chunk=4, tick_tokens=6)
+    s.submit(Request(rid=0, prompt=list(range(20)), max_new=2))
+    s.submit(Request(rid=1, prompt=list(range(100, 120)), max_new=2))
+    plan = s.tick()
+    # 6 tokens: rid 0 gets a full chunk (4), rid 1 the remaining 2
+    assert [(r.rid, n) for r, n in plan.prefill] == [(0, 4), (1, 2)]
+
+
+def test_tick_token_budget_decode_claims_first():
+    """Decoding sequences claim their token before any prefill chunk
+    is granted — a long prompt can never starve running decodes — and
+    the oldest prefilling sequence always makes >= 1 token progress."""
+    s, kv = mk_sched(n_pages=32, page_tokens=4, max_batch=4, max_seq=64,
+                     prefill_chunk=4, tick_tokens=5)
+    shorts = [Request(rid=i, prompt=[i, i + 1], max_new=4)
+              for i in (1, 2, 3)]
+    for r in shorts:
+        s.submit(r)
+    plan = s.tick()                 # budget 5 over three 2-token prompts
+    assert [(r.rid, n) for r, n in plan.prefill] == [(1, 2), (2, 2),
+                                                     (3, 1)]
+    for req, n in plan.prefill:
+        s.note_chunk(req, n, 42)
+    assert not shorts[0].is_prefilling() and not shorts[1].is_prefilling()
+    assert shorts[2].is_prefilling()            # 1 of 2 tokens done
+    long = Request(rid=9, prompt=list(range(20)), max_new=2)
+    s.submit(long)
+    plan = s.tick()
+    # 2 decoding seqs claim 2 of the 5; rid 3 finishes its prompt (1),
+    # the long newcomer gets what is left (2) — not a full chunk
+    assert [(r.rid, n) for r, n in plan.prefill] == [(3, 1), (9, 2)]
+    # starved budget: decode eats everything, yet the oldest prefilling
+    # sequence is still guaranteed one token per tick
+    for req, n in plan.prefill:
+        s.note_chunk(req, n, 42)
+    s.tick_tokens = 2
+    plan = s.tick()
+    assert [(r.rid, n) for r, n in plan.prefill] == [(9, 1)]
+
+
+def test_chunked_prefill_tracks_chunks_and_budget():
+    s, kv = mk_sched(n_pages=32, page_tokens=4, max_batch=2, max_seq=64,
+                     prefill_chunk=3, tick_tokens=8)
+    r = Request(rid=0, prompt=list(range(8)), max_new=2)
+    s.submit(r)
+    while r.is_prefilling():
+        plan = s.tick()
+        for req, n in plan.prefill:
+            s.note_chunk(req, n, 42)
+    assert r.prefill_chunks == [3, 3, 2]
+    assert r.out == [42] and r.t_first is not None
+    assert s.stats["prefill_tokens"] == 8
 
 
 def test_preempted_request_eventually_completes():
@@ -242,6 +301,93 @@ def test_paged_attention_matches_contiguous_ops_attention():
                 err_msg=f"impl={impl} seq={b}")
 
 
+def test_paged_attention_full_final_page():
+    """Sequence lengths that are EXACT multiples of page_tokens (the
+    final page completely full, no partial-page mask) — with the block
+    table null-padded past the live pages, exactly the shape the engine
+    hands the kernel at a page boundary."""
+    rng = np.random.RandomState(3)
+    B, H, Hkv, D, P, n_pages, slots = 3, 4, 2, 16, 4, 12, 6
+    q = jnp.asarray(rng.randn(B, H, D).astype(np.float32))
+    kp = jnp.asarray(rng.randn(n_pages, P, Hkv, D).astype(np.float32))
+    vp = jnp.asarray(rng.randn(n_pages, P, Hkv, D).astype(np.float32))
+    bt = np.zeros((B, slots), np.int32)          # null-padded
+    bt[0, :2] = [1, 2]
+    bt[1, :3] = [3, 4, 5]
+    bt[2, :6] = [6, 7, 8, 9, 10, 11]
+    bt = jnp.asarray(bt)
+    lens = jnp.asarray([2 * P, 3 * P, 6 * P], np.int32)  # all full pages
+    for impl in ("kernel", "ref"):
+        out = ops.paged_attention(q, kp, vp, bt, lens, impl=impl)
+        for b in range(B):
+            L = int(lens[b])
+            kc = kp[bt[b]].reshape(-1, Hkv, D)[:L]
+            vc = vp[bt[b]].reshape(-1, Hkv, D)[:L]
+            ref = ops.attention(q[b][None, :, None, :],
+                                kc[None].transpose(0, 2, 1, 3),
+                                vc[None].transpose(0, 2, 1, 3),
+                                causal=False)
+            np.testing.assert_allclose(
+                np.asarray(out[b]), np.asarray(ref[0, :, 0]),
+                atol=1e-5, rtol=1e-5, err_msg=f"impl={impl} seq={b}")
+
+
+def test_paged_attention_first_decode_after_midpage_prefill():
+    """Decode position 0 of the OUTPUT right after a chunked prefill
+    that ended mid-page: the query at position L attends to L+1 tokens
+    where L+1 is NOT page-aligned (the partial final page holds both
+    the prompt tail and this step's write)."""
+    rng = np.random.RandomState(4)
+    B, H, Hkv, D, P = 1, 4, 2, 16, 4
+    q = jnp.asarray(rng.randn(B, H, D).astype(np.float32))
+    kp = rng.randn(8, P, Hkv, D).astype(np.float32)
+    vp = rng.randn(8, P, Hkv, D).astype(np.float32)
+    bt = jnp.asarray([[1, 2, 0, 0]], jnp.int32)
+    for L in (5, 6, 7):          # prompt ended mid-page at L-1
+        lens = jnp.asarray([L + 1], np.int32)    # after this write
+        for impl in ("kernel", "ref"):
+            out = ops.paged_attention(q, jnp.asarray(kp),
+                                      jnp.asarray(vp), bt, lens,
+                                      impl=impl)
+            kc = kp[np.asarray(bt[0])].reshape(-1, Hkv, D)[:L + 1]
+            vc = vp[np.asarray(bt[0])].reshape(-1, Hkv, D)[:L + 1]
+            ref = ops.attention(q[0][None, :, None, :],
+                                jnp.asarray(kc[None].transpose(0, 2, 1, 3)),
+                                jnp.asarray(vc[None].transpose(0, 2, 1, 3)),
+                                causal=False)
+            np.testing.assert_allclose(
+                np.asarray(out[0]), np.asarray(ref[0, :, 0]),
+                atol=1e-5, rtol=1e-5, err_msg=f"impl={impl} L={L}")
+
+
+def test_paged_prefill_window_matches_per_position_decode():
+    """The fused chunk-window attention equals C per-position calls of
+    the decode oracle (same mask, same scale) — including padded rows
+    (zeros) and windows whose last position fills a page exactly."""
+    rng = np.random.RandomState(5)
+    B, C, H, Hkv, D, P, n_pages, slots = 3, 4, 4, 2, 16, 4, 10, 4
+    q = jnp.asarray(rng.randn(B, C, H, D).astype(np.float32))
+    kp = jnp.asarray(rng.randn(n_pages, P, Hkv, D).astype(np.float32))
+    vp = jnp.asarray(rng.randn(n_pages, P, Hkv, D).astype(np.float32))
+    bt = jnp.asarray([[1, 2, 0, 0], [3, 4, 5, 0], [6, 7, 8, 9]],
+                     jnp.int32)
+    start = jnp.asarray([0, 4, 2], jnp.int32)   # mid-page + page starts
+    n_tok = jnp.asarray([4, 3, 0], np.int32)    # full, padded, inactive
+    out = ops.paged_prefill_attention(q, kp, vp, bt, start, n_tok)
+    for b in range(B):
+        for j in range(C):
+            if j >= int(n_tok[b]):
+                assert float(jnp.abs(out[b, j]).max()) == 0.0
+                continue
+            lens = np.zeros(B, np.int32)
+            lens[b] = int(start[b]) + j + 1
+            ref = paged_decode_attention_ref(q[:, j], kp, vp, bt,
+                                             jnp.asarray(lens))
+            np.testing.assert_allclose(
+                np.asarray(out[b, j]), np.asarray(ref[b]),
+                atol=1e-6, rtol=1e-6, err_msg=f"b={b} j={j}")
+
+
 def test_paged_attention_gqa_and_mqa_groups():
     for H, Hkv in ((4, 1), (6, 2), (4, 4)):
         q, kp, vp, bt, lens = _paged_case(seed=H * 10 + Hkv, H=H,
@@ -286,6 +432,39 @@ def test_engine_streams_match_contiguous_decode():
         assert r.out == ref_decode(r.prompt, 5), f"req {r.rid}"
 
 
+def test_engine_streams_invariant_to_prefill_chunking():
+    """Chunked prefill is a scheduling choice, not a numerical one:
+    any (prefill_chunk, tick_tokens) setting must produce the token
+    streams of the monolithic whole-prompt run.  Covers chunks that end
+    mid-page (prompt 6 over 4-token pages, chunk 3) and the first
+    decode right after such a chunk."""
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg, ctx)
+    prompts = [list(range(3, 9)), list(range(4, 10)), [7, 3, 99, 12]]
+
+    def run(chunk, tick_tokens=0):
+        scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=3,
+                           max_seq=32, prefill_chunk=chunk,
+                           tick_tokens=tick_tokens, attn_impl="ref")
+        eng = ServeEngine(params, cfg, ctx, scfg)
+        done = eng.run([Request(rid=i, prompt=list(p), max_new=5)
+                        for i, p in enumerate(prompts)], clock="tick")
+        return {r.rid: list(r.out) for r in done}, \
+            {r.rid: list(r.prefill_chunks) for r in done}
+
+    mono, mono_chunks = run(chunk=16)
+    assert mono_chunks[0] == [6]               # one whole-prompt chunk
+    for chunk, tick_tokens in ((1, 0), (2, 0), (3, 0), (3, 4), (5, 7)):
+        streams, chunks = run(chunk, tick_tokens)
+        assert streams == mono, (chunk, tick_tokens, streams, mono)
+        assert all(max(c) <= chunk for c in chunks.values())
+    _, c3 = run(3)
+    assert c3[0] == [3, 3]                     # mid-page chunk boundary
+
+
 # ======================================================================
 # page migration: put_nbi + one quiet() (LocalTransport oracle)
 # ======================================================================
@@ -323,28 +502,31 @@ def test_local_prefix_hit_resumes_via_self_pair_copy():
     """A same-PE prefix hit reuses the pinned pages through the SAME
     put_nbi path with self-pairs (0-hop copy into fresh pages): the
     re-served prompt must produce the identical stream while the
-    pinned originals stay registered."""
+    pinned originals stay registered — and the uncovered suffix
+    prefills in >= 2-token chunks, not token-by-token."""
     cfg = configs.get_smoke("qwen3-8b")
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
                       param_dtype=jnp.float32, compute_dtype=jnp.float32)
     api = registry.build(cfg)
     params = api.init(jax.random.PRNGKey(0), cfg, ctx)
     scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=2,
-                       max_seq=32, max_prompt=16, attn_impl="ref",
+                       max_seq=32, prefill_chunk=4, attn_impl="ref",
                        prefix_keep=True)
     eng = ServeEngine(params, cfg, ctx, scfg)
-    prompt = list(range(5, 13))                # 2 full pages
-    first = eng.run([Request(rid=0, prompt=prompt, max_new=5)],
+    prompt = list(range(5, 16))                # 2 full pages + 3 extra
+    first = eng.run([Request(rid=0, prompt=list(prompt), max_new=5)],
                     clock="tick")[0]
     assert eng.kv.pinned_pages == 2
-    eng2_reqs = [Request(rid=1, prompt=list(prompt), max_new=5)]
-    for r in eng2_reqs:
-        eng.submit(r)
+    eng.submit(Request(rid=1, prompt=list(prompt), max_new=5))
     while eng.sched.has_work():
         eng.tick()
     resumed = next(r for r in eng.finished if r.rid == 1)
     assert eng.sched.stats["resumed"] == 1
     assert eng.kv.stats["migrations"] == 2     # 2 pages, self-pair copy
+    # 8 of 11 prompt tokens arrived by migration; the 3-token suffix
+    # went through chunked prefill in one >= 2-token chunk
+    assert resumed.prefill_chunks and max(resumed.prefill_chunks) >= 2
+    assert sum(resumed.prefill_chunks) == 3
     assert resumed.out == first.out
     assert eng.kv.lookup_prefix(prompt) is not None   # originals intact
 
