@@ -1,6 +1,8 @@
 # Single gate for every PR: `make verify` (tier-1 pytest + the
-# tests/multipe/ workers under 8 fake CPU PEs — see scripts/verify.sh).
-.PHONY: verify verify-fast test multipe bench bench-serve
+# tests/multipe/ workers under 8 fake CPU PEs + smoke serve bench +
+# check_bench regression gate — see scripts/verify.sh; CI runs the
+# same script, .github/workflows/ci.yml).
+.PHONY: verify verify-fast test multipe bench bench-serve check-bench
 
 verify:
 	scripts/verify.sh
@@ -23,7 +25,12 @@ bench:
 	python benchmarks/comm_microbench.py --quick
 
 # refresh the repo-root BENCH_serve.json (full serving sweep; `make
-# verify` already refreshes the --smoke row)
+# verify` already refreshes the --smoke rows)
 bench-serve:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	python benchmarks/serve_bench.py
+
+# compare BENCH_serve.json against the committed copy (what verify/CI
+# run after the smoke bench)
+check-bench:
+	python scripts/check_bench.py

@@ -12,11 +12,18 @@ ROOT (the bench trajectory the driver tracks):
 
 Default sweep: page size x batch size x attention impl on the smoke
 qwen3 config under the same seeded Poisson trace, plus a sampled
-(top-p) sweep (``--sampling top_p`` rows) and a chunked-vs-monolithic
+(top-p) sweep (``--sampling top_p`` rows), a chunked-vs-monolithic
 prefill pair on the long-prompt mixed trace — the row pair that shows
-chunked prefill protecting p99 decode latency.  ``--smoke`` runs the
-two smallest cases — one greedy, one SAMPLED (non-greedy), so the
-`make verify` freshness gate covers a sampled run end-to-end.
+chunked prefill protecting p99 decode latency — and SPECULATIVE-DECODE
+rows (``spec_k > 0``, n-gram self-draft) on the REPEATED-PROMPT
+workload, reporting ``spec_accept_rate`` and ``spec_tokens_per_tick``
+(tokens one sequence's verify pass emits; > 1 = speculation beats
+one-token-per-tick decode).  ``--smoke`` runs the smallest cases — one
+greedy, one SAMPLED, one SPECULATIVE — so the `make verify` freshness
+gate covers all three serving modes end-to-end; the full sweep emits
+the same smoke rows under the same case names, which is what lets
+``scripts/check_bench.py`` match fresh smoke rows against the
+committed file.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
     PYTHONPATH=src python benchmarks/serve_bench.py --sampling top_p
@@ -40,10 +47,33 @@ SAMPLING = {                      # name -> (temperature, top_k, top_p)
 }
 
 
+def repeated_requests(n_requests, vocab, rate, seed, *, max_new=16,
+                      sampling="greedy"):
+    """The repeated-prompt workload speculation feeds on: periodic
+    prompts (a short random pattern tiled to 12 tokens) that drive
+    greedy decoding into self-repetition, where the n-gram self-draft
+    proposer earns its accept rate.  Deterministic given the seed."""
+    import numpy as np
+
+    from repro import serve
+
+    temp, top_k, top_p = SAMPLING[sampling]
+    sp = serve.SamplingParams(temperature=temp, top_k=top_k, top_p=top_p)
+    reqs, t = [], 0.0
+    for i in range(n_requests):
+        rng = np.random.RandomState(seed * 1000 + i)
+        pattern = rng.randint(0, vocab, size=3 + i % 3).tolist()
+        reqs.append(serve.Request(
+            rid=i, prompt=(pattern * 8)[:12], max_new=max_new,
+            t_arrive=t, sampling=sp))
+        t += float(rng.exponential(1.0 / rate))
+    return reqs
+
+
 def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
              max_batch, n_requests, rate, seed, *, sampling="greedy",
              prefill_chunk=8, tick_tokens=0, long_frac=0.25,
-             warmup=True):
+             spec_k=0, workload="poisson", warmup=True):
     from repro import serve
     from repro.launch.serve import build_engine
 
@@ -51,25 +81,30 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
                             page_tokens=page_tokens, n_pages=n_pages,
                             max_batch=max_batch, attn_impl=attn_impl,
                             prefill_chunk=prefill_chunk,
-                            tick_tokens=tick_tokens, seed=seed)
+                            tick_tokens=tick_tokens, seed=seed,
+                            spec_k=spec_k)
     temp, top_k, top_p = SAMPLING[sampling]
-    tcfg = serve.TrafficConfig(n_requests=n_requests, rate=rate,
-                               vocab=cfg.vocab, seed=seed,
-                               long_frac=long_frac, temperature=temp,
-                               top_k=top_k, top_p=top_p)
-    if warmup:
-        # trigger every jit compile (prefill window, decode, sampler)
-        # on a throwaway mini-trace, then measure a clean run on the
-        # same engine: rows reflect engine structure, not XLA compiles
-        wcfg = serve.TrafficConfig(n_requests=3, rate=rate,
-                                   vocab=cfg.vocab, seed=seed + 1,
+
+    def trace(seed_, n):
+        if workload == "repeated":
+            return repeated_requests(n, cfg.vocab, rate, seed_,
+                                     sampling=sampling)
+        tcfg = serve.TrafficConfig(n_requests=n, rate=rate,
+                                   vocab=cfg.vocab, seed=seed_,
                                    long_frac=long_frac,
                                    temperature=temp, top_k=top_k,
                                    top_p=top_p)
-        eng.run(serve.make_requests(wcfg))
+        return serve.make_requests(tcfg)
+
+    if warmup:
+        # trigger every jit compile (prefill window, decode/verify,
+        # sampler) on a throwaway mini-trace, then measure a clean run
+        # on the same engine: rows reflect engine structure, not XLA
+        # compiles
+        eng.run(trace(seed + 1, 3))
         eng.reset_metrics()
     t0 = time.perf_counter()
-    eng.run(serve.make_requests(tcfg))
+    eng.run(trace(seed, n_requests))
     wall = time.perf_counter() - t0
     m = eng.metrics()
     return {
@@ -78,6 +113,7 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "n_pages": n_pages, "max_batch": max_batch,
         "prefill_chunk": prefill_chunk, "rate_req_s": rate,
         "sampling": sampling, "temperature": temp, "top_p": top_p,
+        "workload": workload,
         "requests": m["requests"], "tokens_out": m["tokens_out"],
         "wall_s": round(wall, 4),
         "throughput_tok_s": round(m["throughput_tok_s"], 2),
@@ -89,14 +125,20 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "decode_p99_s": round(m["decode_p99_s"], 4),
         "preempted": m["sched"]["preempted"],
         "migrations": m["kv"]["migrations"],
+        "spec_k": spec_k,
+        "spec_accept_rate": round(m["spec"]["accept_rate"], 4),
+        "spec_tokens_per_tick": round(m["spec"]["tokens_per_tick"], 4),
+        "spec_drafted": m["spec"]["drafted"],
+        "spec_emitted": m["spec"]["emitted"],
     }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="two tiny cases, one greedy + one sampled "
-                         "(verify-gate freshness)")
+                    help="three tiny cases — greedy, sampled, "
+                         "speculative — refreshed IN PLACE inside the "
+                         "committed file (verify-gate freshness)")
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=16.0)
@@ -110,18 +152,26 @@ def main():
 
     # (case, backend, impl, page_tokens, n_pages, max_batch, requests,
     #  sampling, extra engine kwargs)
+    # the sampled smoke row must actually be non-greedy — it is what
+    # gates the sampled path (top_k_merge + categorical draw) in `make
+    # verify`; the spec smoke row gates the whole draft->verify->
+    # accept->rewind loop (repeated-prompt workload, so its accept
+    # rate is structurally > 0 and check_bench can enforce that).
+    # SMOKE_CASES also open the full sweep under the SAME names: the
+    # committed full file always contains the rows a fresh --smoke run
+    # is compared against.
+    sampled = args.sampling if args.sampling != "greedy" else "top_p"
+    SMOKE_CASES = [
+        ("smoke", "xla", "ref", 4, 32, 3, 6, "greedy", {}),
+        ("smoke_sampled", "xla", "ref", 4, 32, 3, 6, sampled, {}),
+        ("smoke_spec", "xla", "ref", 4, 32, 3, 6, "greedy",
+         {"spec_k": 3, "workload": "repeated"}),
+    ]
     if args.smoke:
-        # the sampled smoke row must actually be non-greedy — it is
-        # what gates the sampled path (top_k_merge + categorical draw)
-        # in `make verify`
-        sampled = args.sampling if args.sampling != "greedy" else "top_p"
-        cases = [
-            ("smoke", "xla", "ref", 4, 32, 3, 6, "greedy", {}),
-            ("smoke_sampled", "xla", "ref", 4, 32, 3, 6, sampled, {}),
-        ]
+        cases = SMOKE_CASES
     else:
         n = args.requests
-        cases = [
+        cases = SMOKE_CASES + [
             ("p4_b2_ref", "xla", "ref", 4, 48, 2, n, "greedy", {}),
             ("p4_b4_ref", "xla", "ref", 4, 48, 4, n, "greedy", {}),
             ("p8_b4_ref", "xla", "ref", 8, 32, 4, n, "greedy", {}),
@@ -148,6 +198,22 @@ def main():
             ("mixed_long_monolithic", "xla", "ref", 4, 48, 4, 3 * n,
              "greedy", {"prefill_chunk": 24, "long_frac": 0.5,
                         "rate": 32.0}),
+            # speculative decoding on the repeated-prompt workload:
+            # the spec_on/spec_off pair isolates what draft->verify
+            # buys on self-repeating greedy streams (accept_rate and
+            # tokens_per_tick are the structural wins; CPU wall time
+            # grows with window width, the tick count shrinks), plus a
+            # sampled spec row (acceptance is rarer — the draft must
+            # hit the counter-RNG draw — but streams stay identical)
+            ("repeated_spec_off", "xla", "ref", 4, 48, 4, n, "greedy",
+             {"workload": "repeated"}),
+            ("repeated_spec_k2", "xla", "ref", 4, 48, 4, n, "greedy",
+             {"workload": "repeated", "spec_k": 2}),
+            ("repeated_spec_k4", "xla", "ref", 4, 48, 4, n, "greedy",
+             {"workload": "repeated", "spec_k": 4}),
+            ("repeated_spec_k4_" + args.sampling, "xla", "ref", 4, 48,
+             4, n, args.sampling,
+             {"workload": "repeated", "spec_k": 4}),
         ]
     results = []
     for case, backend, impl, pt, np_, mb, nreq, sampling, extra in cases:
@@ -156,23 +222,39 @@ def main():
         row = run_case(case, args.arch, backend, impl, pt, np_, mb, nreq,
                        rate, args.seed, sampling=sampling, **extra)
         results.append(row)
+        spec = (f"  accept {row['spec_accept_rate']:.2f} "
+                f"tok/tick {row['spec_tokens_per_tick']:.2f}"
+                if row["spec_k"] else "")
         print(f"{case:>22}: {row['throughput_tok_s']:8.1f} tok/s  "
               f"p50 {row['latency_p50_s']*1e3:7.1f} ms  "
               f"p99 {row['latency_p99_s']*1e3:7.1f} ms  "
               f"dec99 {row['decode_p99_s']*1e3:7.1f} ms  "
-              f"preempt {row['preempted']}")
+              f"preempt {row['preempted']}{spec}")
 
-    payload = {
-        "meta": {"platform": jax.default_backend(),
-                 "smoke": bool(args.smoke), "rate_req_s": args.rate,
-                 "seed": args.seed, "sampling_sweep": args.sampling,
-                 "warmup": True,
-                 "note": "CPU rows measure engine/scheduler structure, "
-                         "not accelerator decode throughput"},
-        "results": results,
-    }
+    if args.smoke and os.path.exists(OUT):
+        # a smoke run REFRESHES its rows inside the committed file
+        # instead of truncating the full-sweep trajectory down to 3
+        # rows (a `make verify` must never destroy the other
+        # baseline rows check_bench guards).  An unreadable existing
+        # file fails LOUDLY here — quietly starting over would be
+        # exactly the destruction this branch exists to prevent.
+        with open(OUT) as f:
+            old = json.load(f)
+        fresh = {r["case"]: r for r in results}
+        merged = [fresh.pop(r["case"], r)
+                  for r in old.get("results", [])]
+        results = merged + list(fresh.values())
+        meta = old.get("meta", {})
+        meta["smoke_refreshed"] = True
+    else:
+        meta = {"platform": jax.default_backend(),
+                "smoke": bool(args.smoke), "rate_req_s": args.rate,
+                "seed": args.seed, "sampling_sweep": args.sampling,
+                "warmup": True,
+                "note": "CPU rows measure engine/scheduler structure, "
+                        "not accelerator decode throughput"}
     with open(OUT, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump({"meta": meta, "results": results}, f, indent=1)
     print(f"wrote {OUT} ({len(results)} rows)")
 
 

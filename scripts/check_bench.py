@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Bench-regression gate: compare freshly-written BENCH_serve.json rows
+against the committed baseline and fail loudly on real regressions.
+
+Run by ``scripts/verify.sh`` right after the smoke bench refreshes
+``BENCH_serve.json`` (and by CI on every push), so a PR that tanks
+serving latency or throughput fails the gate instead of silently
+rewriting the trajectory file.
+
+Rows are matched by ``case`` name — the full sweep includes the smoke
+cases under the same names, so the fresh ``--smoke`` rows always find
+their committed counterparts.  Per matched row:
+
+  * p99 latency (``latency_p99_s``, ``decode_p99_s``) may not grow by
+    more than ``--factor`` (default 2x) — small absolute values are
+    exempt below ``--floor-s`` (CPU timer noise, default 50 ms);
+  * throughput (``throughput_tok_s``) may not fall by more than the
+    same factor;
+  * speculative rows must stay structurally healthy: committed
+    ``spec_accept_rate > 0`` must stay ``> 0``, and committed
+    ``spec_tokens_per_tick > 1`` must stay ``> 1`` (these are
+    deterministic given the seed, not timing-noise-bound).
+
+The baseline defaults to ``git show HEAD:BENCH_serve.json``;
+``--baseline PATH`` overrides it (verify.sh passes a pre-bench
+snapshot, which also covers dirty working trees).
+
+    python scripts/check_bench.py
+    python scripts/check_bench.py --baseline /tmp/bench.snap --factor 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+FRESH = os.path.join(ROOT, "BENCH_serve.json")
+
+P99_KEYS = ("latency_p99_s", "decode_p99_s")
+
+
+def load_baseline(path: str | None) -> dict:
+    if path:
+        with open(path) as f:
+            return json.load(f)
+    out = subprocess.run(["git", "show", "HEAD:BENCH_serve.json"],
+                         capture_output=True, text=True, cwd=ROOT)
+    if out.returncode != 0:
+        raise SystemExit(
+            "check_bench: no --baseline given and 'git show "
+            "HEAD:BENCH_serve.json' failed:\n" + out.stderr)
+    return json.loads(out.stdout)
+
+
+def by_case(payload: dict) -> dict:
+    return {r["case"]: r for r in payload.get("results", [])}
+
+
+def compare(base: dict, fresh: dict, *, factor: float,
+            floor_s: float) -> list:
+    """Returns the list of failure strings (empty = gate passes)."""
+    bases, freshes = by_case(base), by_case(fresh)
+    common = sorted(set(bases) & set(freshes))
+    fails = []
+    if not common:
+        fails.append(
+            f"no common case names between baseline "
+            f"({sorted(bases)}) and fresh ({sorted(freshes)}) rows — "
+            f"the gate compared nothing, which is itself a failure")
+        return fails
+    for case in common:
+        b, f = bases[case], freshes[case]
+        for key in P99_KEYS:
+            if key not in b or key not in f:
+                continue
+            bound = max(float(b[key]) * factor, floor_s)
+            if float(f[key]) > bound:
+                fails.append(
+                    f"{case}: {key} {f[key]:.4f}s > {factor:g}x "
+                    f"baseline {b[key]:.4f}s (floor {floor_s:g}s)")
+        bt, ft = b.get("throughput_tok_s"), f.get("throughput_tok_s")
+        if bt and float(bt) > 0 and float(ft or 0) < float(bt) / factor:
+            fails.append(
+                f"{case}: throughput {ft} tok/s < baseline "
+                f"{bt} / {factor:g}")
+        # structural spec-decode health (deterministic, not timing)
+        if float(b.get("spec_accept_rate") or 0) > 0 \
+                and float(f.get("spec_accept_rate") or 0) <= 0:
+            fails.append(f"{case}: spec_accept_rate fell to "
+                         f"{f.get('spec_accept_rate')} (baseline "
+                         f"{b['spec_accept_rate']})")
+        if float(b.get("spec_tokens_per_tick") or 0) > 1 \
+                and float(f.get("spec_tokens_per_tick") or 0) <= 1:
+            fails.append(f"{case}: spec_tokens_per_tick fell to "
+                         f"{f.get('spec_tokens_per_tick')} (baseline "
+                         f"{b['spec_tokens_per_tick']})")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=FRESH,
+                    help="freshly-written bench file (default: repo "
+                         "root BENCH_serve.json)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline bench file (default: git show "
+                         "HEAD:BENCH_serve.json)")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated regression factor (default 2)")
+    ap.add_argument("--floor-s", type=float, default=0.05,
+                    help="p99 regressions below this absolute value "
+                         "are timer noise, not regressions")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    base = load_baseline(args.baseline)
+    fails = compare(base, fresh, factor=args.factor,
+                    floor_s=args.floor_s)
+    n = len(set(by_case(base)) & set(by_case(fresh)))
+    if fails:
+        print(f"CHECK_BENCH_FAIL ({len(fails)} regressions over "
+              f"{n} compared cases):")
+        for line in fails:
+            print(f"  {line}")
+        return 1
+    print(f"CHECK_BENCH_PASS ({n} cases within {args.factor:g}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,26 @@
 #!/usr/bin/env bash
-# The PR gate: every change runs this exact sequence (also `make verify`).
+# The PR gate: every change runs this exact sequence (also `make
+# verify`; CI runs it on every PR/push — .github/workflows/ci.yml).
 #
 #   1. tier-1 pytest (the suite the driver enforces), then
 #   2. each tests/multipe/run_*.py worker under 8 fake CPU PEs, run
 #      directly so their full stdout is visible.  During phase 1 the
 #      pytest subprocess wrappers for those same workers are skipped
-#      (REPRO_MULTIPE_EXPLICIT) so each suite runs exactly once.
+#      (REPRO_MULTIPE_EXPLICIT) so each suite runs exactly once
+#      (tier-1 pins that invariant: tests/test_ci_gate.py), then
+#   3. the smoke serving bench refreshes BENCH_serve.json, and
+#   4. scripts/check_bench.py gates the fresh rows against the
+#      pre-bench snapshot (>2x p99/throughput regression fails).
+#
+# Every phase is timed, and each phase fails with its OWN exit code +
+# a "VERIFY_FAIL phase=<name>" line, so a bench crash (exit 3) or a
+# bench regression (exit 4) is distinguishable from a tier-1 (exit 1)
+# or multipe (exit 2) failure straight from the log.
 #
 # Usage: scripts/verify.sh [--fast]
-#   --fast: tier-1 only; the multipe workers then run through their
-#   normal pytest wrappers instead of the explicit loop.
+#   --fast: tier-1 only (the CI pull-request job); the multipe workers
+#   then run through their normal pytest wrappers instead of the
+#   explicit loop, and the bench phases are skipped.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,20 +29,49 @@ FAST=0
 [[ "${1:-}" == "--fast" ]] && FAST=1
 [[ ${FAST} == 0 ]] && export REPRO_MULTIPE_EXPLICIT=1
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+T_START=$(date +%s)
+PHASE_TIMES=()
+phase_begin() { PHASE_NAME="$1"; PHASE_T0=$(date +%s); echo "== ${PHASE_NAME} =="; }
+phase_end() {
+    local dt=$(( $(date +%s) - PHASE_T0 ))
+    PHASE_TIMES+=("${PHASE_NAME}: ${dt}s")
+    echo "-- phase ${PHASE_NAME}: ${dt}s"
+}
+fail() {  # fail <exit-code> — named, coded, greppable
+    echo "VERIFY_FAIL phase=${PHASE_NAME}"
+    exit "$1"
+}
+
+phase_begin "tier-1 pytest"
+python -m pytest -x -q || fail 1
+phase_end
 
 if [[ ${FAST} == 0 ]]; then
+    phase_begin "multipe (8 PEs)"
     export XLA_FLAGS="--xla_force_host_platform_device_count=8"
     for script in tests/multipe/run_*.py; do
-        echo "== multipe: ${script} =="
-        python "${script}"
+        echo "-- multipe: ${script}"
+        python "${script}" || fail 2
     done
     unset XLA_FLAGS
+    phase_end
 
-    # keep repo-root BENCH_serve.json fresh without a full sweep
-    echo "== serve bench (smoke) =="
-    python benchmarks/serve_bench.py --smoke
+    # keep repo-root BENCH_serve.json fresh without a full sweep; the
+    # pre-bench snapshot is the regression baseline (covers dirty
+    # trees where HEAD's copy is not what this run started from)
+    phase_begin "serve bench (smoke)"
+    BENCH_SNAP=$(mktemp) || fail 3
+    trap 'rm -f "${BENCH_SNAP}"' EXIT
+    cp BENCH_serve.json "${BENCH_SNAP}" || fail 3
+    python benchmarks/serve_bench.py --smoke || fail 3
+    phase_end
+
+    phase_begin "check_bench"
+    python scripts/check_bench.py --baseline "${BENCH_SNAP}" || fail 4
+    phase_end
 fi
 
+echo "== timing =="
+for t in "${PHASE_TIMES[@]}"; do echo "  ${t}"; done
+echo "  total: $(( $(date +%s) - T_START ))s"
 echo "VERIFY_PASS"

@@ -62,16 +62,26 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                       interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale",))
+@functools.partial(jax.jit, static_argnames=("sm_scale", "impl"))
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, start,
-                            n_tok, sm_scale: float | None = None):
-    """Chunk-window prefill attention through a block table: query row
-    ``j`` of sequence ``b`` (absolute position ``start[b] + j``)
-    attends to its first ``start[b]+j+1`` paged tokens; padded rows
-    (``j >= n_tok``) return zeros.  The fused jnp path (one gather +
-    one masked softmax for the whole window) — numerically the same
-    masked f32 softmax as ``paged_attention(impl="ref")`` per position;
-    a prefill-window Pallas grid kernel is the ROADMAP follow-up."""
+                            n_tok, sm_scale: float | None = None,
+                            impl: str = "ref"):
+    """Chunk-window attention through a block table: query row ``j`` of
+    sequence ``b`` (absolute position ``start[b] + j``) attends to its
+    first ``start[b]+j+1`` paged tokens; padded rows (``j >= n_tok``)
+    return zeros.  This is BOTH the chunked-prefill window and the
+    speculative-decode verify window (a ``(B, k+1)`` window of pending
+    token + drafts — ``serve.make_verify``): one fused gather + masked
+    f32 softmax, numerically the same per-position reduction as
+    ``paged_attention(impl="ref")``, which is what lets verify-path
+    token streams match sequential decoding.  Only the jnp ``"ref"``
+    impl exists today; the ``impl`` switch reserves the name for the
+    prefill-window Pallas grid kernel (ROADMAP follow-up) so call sites
+    won't churn when it lands."""
+    if impl != "ref":
+        raise NotImplementedError(
+            f"paged_prefill_attention impl='{impl}' (only 'ref' is "
+            f"implemented; the window grid kernel is a ROADMAP item)")
     return _pa.paged_prefill_attention_ref(q, k_pages, v_pages,
                                            block_tables, start, n_tok,
                                            sm_scale=sm_scale)
@@ -80,3 +90,4 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, start,
 COPY_VARIANTS = tuple(["stock", "auto"] + list(_sc.VARIANTS))
 COMBINE_VARIANTS = tuple(_rc.VARIANTS)
 PAGED_ATTN_IMPLS = ("kernel", "ref")
+PAGED_PREFILL_IMPLS = ("ref",)

@@ -9,7 +9,13 @@ Per-request sampling params ride on every Request (greedy by default;
 ``--temperature/--top-k/--top-p`` set the trace-wide policy, drawn
 through the TP-aware two-phase sampler), and long prompts prefill in
 ``--prefill-chunk``-token chunks under the ``--tick-tokens`` budget so
-they never stall concurrent decodes.  Prints per-request decode traces
+they never stall concurrent decodes.  ``--spec-k N`` turns on
+speculative decoding (N drafts verified per sequence per tick;
+``--draft`` picks the proposer — the n-gram self-draft or a registry
+arch as a small draft model) without changing a single output token:
+acceptance is exact matching against the engine's counter-RNG draws,
+so speculation only shrinks tick counts.  Prints per-request decode
+traces
 when --trace is set, then the throughput/latency summary.  Smoke-size
 configs run on CPU; the same driver scales to a TPU mesh by
 constructing the ctx from ``launch.mesh.make_ctx`` and tensor-parallel
@@ -32,7 +38,8 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
                  n_pages: int = 64, max_batch: int = 4,
                  attn_impl: str = "ref", prefix_keep: bool = False,
                  prefill_chunk: int = 8, tick_tokens: int = 0,
-                 sample_seed: int = 0, seed: int = 0):
+                 sample_seed: int = 0, seed: int = 0, spec_k: int = 0,
+                 draft: str = "ngram"):
     cfg = configs.get_smoke(arch)
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
                       backend=backend, param_dtype=jnp.float32,
@@ -43,7 +50,27 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
         page_tokens=page_tokens, n_pages=n_pages, max_batch=max_batch,
         max_seq=cfg.max_seq, prefill_chunk=prefill_chunk,
         tick_tokens=tick_tokens, attn_impl=attn_impl,
-        prefix_keep=prefix_keep, sample_seed=sample_seed)
+        prefix_keep=prefix_keep, sample_seed=sample_seed,
+        # scfg.draft only names parameterless proposers; a draft ARCH
+        # becomes an explicit DraftModelProposer below
+        spec_k=spec_k, draft="ngram")
+    if spec_k > 0 and draft != "ngram":
+        # --draft <arch>: a registry-backed small draft model on the
+        # same mesh and page geometry (vocabularies must match); the
+        # shared PagedKVCache is built first so draft and target index
+        # their pools through the same block tables
+        from repro.core.heap import SymmetricHeap
+        kv = serve.PagedKVCache(
+            SymmetricHeap(("data",)), n_layers=cfg.n_layers,
+            kv_heads=cfg.kv_per_rank(1), head_dim=cfg.head_dim,
+            n_pages=n_pages, page_tokens=page_tokens)
+        dcfg = configs.get_smoke(draft)
+        dparams = registry.build(dcfg).init(
+            jax.random.PRNGKey(seed + 1), dcfg, ctx)
+        proposer = serve.DraftModelProposer(dparams, dcfg, ctx, scfg, kv,
+                                            target_vocab=cfg.vocab)
+        return serve.ServeEngine(params, cfg, ctx, scfg, kv=kv,
+                                 proposer=proposer), cfg
     return serve.ServeEngine(params, cfg, ctx, scfg), cfg
 
 
@@ -74,6 +101,14 @@ def main():
                     help="per-request nucleus cut (1 = off)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="root of the per-(rid, position) RNG streams")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens verified "
+                         "per sequence per tick (0 = off); token "
+                         "streams are unchanged, only ticks shrink")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft proposer: 'ngram' (prompt-lookup "
+                         "self-draft) or a registry arch name for a "
+                         "small draft model (e.g. gemma-2b)")
     ap.add_argument("--trace", action="store_true",
                     help="print the per-request decode trace")
     args = ap.parse_args()
@@ -83,7 +118,7 @@ def main():
         n_pages=args.n_pages, max_batch=args.max_batch,
         attn_impl=args.attn_impl, prefill_chunk=args.prefill_chunk,
         tick_tokens=args.tick_tokens, sample_seed=args.sample_seed,
-        seed=args.seed)
+        seed=args.seed, spec_k=args.spec_k, draft=args.draft)
     tcfg = serve.TrafficConfig(n_requests=args.requests, rate=args.rate,
                                vocab=cfg.vocab, seed=args.seed,
                                temperature=args.temperature,
@@ -93,7 +128,8 @@ def main():
           f"pages={args.n_pages}x{args.page_tokens} "
           f"batch={args.max_batch} chunk={args.prefill_chunk} "
           f"sampling=(T={args.temperature} k={args.top_k} "
-          f"p={args.top_p}) requests={len(reqs)}")
+          f"p={args.top_p}) spec=(k={args.spec_k} "
+          f"draft={args.draft}) requests={len(reqs)}")
     done = eng.run(reqs)
     if args.trace:
         for r in sorted(done, key=lambda r: r.rid):

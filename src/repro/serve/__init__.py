@@ -10,8 +10,12 @@ prefill/decode step functions that issue every collective through
 decode attention via the Pallas block-table kernel, per-request
 sampling (greedy / temperature / top-k / top-p) through the TP-aware
 two-phase sampler with counter-based per-(rid, position) RNG streams,
-and cross-PE KV page migration as ``put_nbi`` one-sided writes drained
-by one ``quiet()`` per scheduler tick.
+cross-PE KV page migration as ``put_nbi`` one-sided writes drained
+by one ``quiet()`` per scheduler tick, and LOSSLESS speculative
+decoding (``serve.spec``): pluggable draft proposers verified through
+a ``(B, k+1)`` prefill-machinery window with exact counter-RNG prefix
+acceptance and page-granular rewind, so spec streams are bit-identical
+to sequential decoding on every backend.
 
     from repro import serve
     eng = serve.ServeEngine(params, cfg, ctx, serve.ServeConfig())
@@ -19,19 +23,24 @@ by one ``quiet()`` per scheduler tick.
     eng.metrics()
 """
 from .engine import LocalExec, ServeConfig, ServeEngine, make_decode_step, \
-    make_prefill
+    make_prefill, make_verify
 from .kv_cache import NULL_PAGE, PagedKVCache, PageMigration
 from .sampling import (GREEDY, SamplingParams, batch_state,
-                       sample_from_candidates, sample_tokens)
+                       sample_from_candidates, sample_tokens,
+                       sample_window_tokens)
 from .scheduler import FCFSScheduler, Request, TickPlan
+from .spec import (DraftModelProposer, FixedProposer, NgramProposer,
+                   ReplayProposer, SpecProposer, make_proposer)
 from .traffic import TrafficConfig, make_requests
 
 __all__ = [
     "ServeConfig", "ServeEngine", "LocalExec",
-    "make_decode_step", "make_prefill",
+    "make_decode_step", "make_prefill", "make_verify",
     "PagedKVCache", "PageMigration", "NULL_PAGE",
     "FCFSScheduler", "Request", "TickPlan",
     "TrafficConfig", "make_requests",
     "SamplingParams", "GREEDY", "batch_state",
-    "sample_from_candidates", "sample_tokens",
+    "sample_from_candidates", "sample_tokens", "sample_window_tokens",
+    "SpecProposer", "NgramProposer", "DraftModelProposer",
+    "ReplayProposer", "FixedProposer", "make_proposer",
 ]

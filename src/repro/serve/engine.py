@@ -19,9 +19,16 @@ The engine is split in two layers:
     pages written so far, so prefill progress is metered by the
     scheduler's token budget instead of monopolizing a tick.
 
+    ``make_verify`` is the SPECULATIVE-DECODE twin of the prefill
+    window: the same trunk over a ``(B, k+1)`` window of pending token
+    + proposed drafts, sampling at EVERY position with the
+    non-speculative counter keys, so exact prefix-match acceptance
+    reproduces the sequential stream bit-for-bit (``serve.spec`` holds
+    the draft proposers).
+
   * a **host-side driver** (``ServeEngine``) — owns the
     ``FCFSScheduler`` + ``PagedKVCache``, executes each tick's plan
-    (migrate -> chunk-prefill -> decode), and drains every tick's
+    (migrate -> chunk-prefill -> decode/verify), and drains every tick's
     planned page migrations with ``put_nbi`` + ONE ``quiet()`` on a
     ``CommQueue`` before the step functions run.  The execution
     substrate is pluggable (``LocalExec`` jits on one device; the mesh
@@ -80,6 +87,12 @@ class ServeConfig:
                                       # as migratable prefix cache
     sample_candidates: int = 8        # static top-k bound per shard
     sample_seed: int = 0              # RNG stream root for sampling
+    spec_k: int = 0                   # draft tokens verified per seq per
+                                      # tick (0 = speculation off)
+    draft: str = "ngram"              # default proposer when none is
+                                      # passed ("ngram" self-draft; a
+                                      # model-backed proposer is built
+                                      # by the caller, see serve.spec)
 
     @property
     def table_slots(self) -> int:
@@ -166,25 +179,25 @@ def make_decode_step(cfg, ctx: ParallelCtx, scfg: ServeConfig):
     return step
 
 
-def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
-    """Chunked prefill: (params, pool, ids, start, n_tok, bt, samp) ->
-    (next_tokens, pool).
+def _make_window_forward(cfg, ctx: ParallelCtx, scfg: ServeConfig):
+    """The shared chunk-window trunk: (params, pool, ids, start, n_tok,
+    bt) -> (x, pool) where ``x`` is the final-norm hidden state at every
+    window position.
 
-    ids (b, C) the next window of each prompt, right-padded
-    (C = ``scfg.prefill_chunk``); start (b,) the absolute position of
-    ids[:, 0]; n_tok (b,) valid tokens in the window (0 = inactive
-    slot).  Writes every chunk position's K/V into the pages, attends
-    each position against the pages written so far (position j sees
-    ``start + j + 1`` tokens — the paged analogue of the causal mask),
-    and returns the token sampled after position ``start + n_tok - 1``
-    with RNG counter ``start + n_tok`` — meaningful only for slots
-    whose chunk completes the prompt; the engine discards the rest.
-    """
+    ids (b, C) a token window per sequence, right-padded; start (b,)
+    the absolute position of ids[:, 0]; n_tok (b,) valid tokens in the
+    window (0 = inactive slot).  Writes every valid position's K/V into
+    the pages through the block table and attends each position against
+    the pages written so far (position j sees ``start + j + 1`` tokens
+    — the paged analogue of the causal mask).  Chunked prefill and
+    speculative verify are BOTH this trunk — they differ only in which
+    positions they sample (prefill: the last; verify: all of them), so
+    the verify pass cannot numerically drift from the prefill path the
+    chunking-invariance tests pin."""
     _check_supported(cfg, ctx)
     P = scfg.page_tokens
-    C = scfg.prefill_chunk
 
-    def prefill(params, pool, ids, start, n_tok, bt, samp):
+    def window(params, pool, ids, start, n_tok, bt):
         cd = ctx.compute_dtype
         x = emb.embed_lookup(params["embed"], ids, ctx)
         b, t = ids.shape
@@ -224,7 +237,31 @@ def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
         (x, pool), _ = jax.lax.scan(
             body, (x, pool),
             (params["blocks"], jnp.arange(cfg.n_layers)))
-        x = norm_apply("rms", params["ln_f"], x)
+        return norm_apply("rms", params["ln_f"], x), pool
+
+    return window
+
+
+def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
+    """Chunked prefill: (params, pool, ids, start, n_tok, bt, samp) ->
+    (next_tokens, pool).
+
+    ids (b, C) the next window of each prompt, right-padded
+    (C = ``scfg.prefill_chunk``); start (b,) the absolute position of
+    ids[:, 0]; n_tok (b,) valid tokens in the window (0 = inactive
+    slot).  Writes every chunk position's K/V into the pages, attends
+    each position against the pages written so far (the shared window
+    trunk), and returns the token sampled after position
+    ``start + n_tok - 1`` with RNG counter ``start + n_tok`` —
+    meaningful only for slots whose chunk completes the prompt; the
+    engine discards the rest.
+    """
+    window = _make_window_forward(cfg, ctx, scfg)
+
+    def prefill(params, pool, ids, start, n_tok, bt, samp):
+        cd = ctx.compute_dtype
+        x, pool = window(params, pool, ids, start, n_tok, bt)
+        t = ids.shape[1]
         last = jnp.clip(n_tok - 1, 0, t - 1)
         xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         head = params["embed"] if cfg.tie_embeddings else params["head"]
@@ -234,6 +271,43 @@ def make_prefill(cfg, ctx: ParallelCtx, scfg: ServeConfig):
         return nxt.astype(jnp.int32), pool
 
     return prefill
+
+
+def make_verify(cfg, ctx: ParallelCtx, scfg: ServeConfig):
+    """Speculative verify: (params, pool, ids, start, n_tok, bt, samp)
+    -> (target_tokens, pool) — ONE batched forward over a (b, k+1)
+    window through the chunked-prefill machinery, sampling at EVERY
+    position.
+
+    ids[:, 0] is the sequence's pending last token (its K/V unwritten,
+    exactly what a decode step would feed) and ids[:, 1:] the proposed
+    draft tokens; start (b,) the absolute position of ids[:, 0]; n_tok
+    (b,) = 1 + drafts (1 = a plain decode through the verify window).
+    Row j of the output is the token the TARGET model generates at
+    position ``start + j + 1`` — drawn with the non-speculative
+    counter-RNG key ``(rid, start + j + 1)`` — so the engine's exact
+    prefix-match acceptance reproduces the sequential stream
+    bit-for-bit: row 0 IS the non-speculative next token, and row j is
+    what the (j+1)-th sequential step would have produced given that
+    all j fed drafts matched.  K/V of every fed position is written
+    through the block table; rejected positions are rewound by
+    ``PagedKVCache.truncate`` (page-granular) + length bookkeeping.
+    """
+    window = _make_window_forward(cfg, ctx, scfg)
+
+    def verify(params, pool, ids, start, n_tok, bt, samp):
+        cd = ctx.compute_dtype
+        x, pool = window(params, pool, ids, start, n_tok, bt)
+        b, t = ids.shape
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = emb.lm_head_logits(head, x.astype(cd), ctx)  # (b,t,V/tp)
+        pos = start[:, None] + jnp.arange(t)[None] + 1        # counters
+        nxt = sampling.sample_window_tokens(
+            logits, ctx, samp, pos,
+            n_candidates=scfg.sample_candidates)
+        return nxt.astype(jnp.int32), pool
+
+    return verify
 
 
 # ======================================================================
@@ -251,6 +325,7 @@ class LocalExec:
         self.kv = kv
         self._prefill = jax.jit(make_prefill(cfg, ctx, scfg))
         self._decode = jax.jit(make_decode_step(cfg, ctx, scfg))
+        self._verify = jax.jit(make_verify(cfg, ctx, scfg))
         self._team = ctx.tp_comm.team
 
     def init_pool(self):
@@ -265,6 +340,11 @@ class LocalExec:
         return self._decode(self.params, pool, jnp.asarray(tokens),
                             jnp.asarray(pos), jnp.asarray(bt),
                             jnp.asarray(lens), samp)
+
+    def verify(self, pool, ids, start, n_tok, bt, samp):
+        return self._verify(self.params, pool, jnp.asarray(ids),
+                            jnp.asarray(start), jnp.asarray(n_tok),
+                            jnp.asarray(bt), samp)
 
     def migrate(self, pool, migrations):
         # whole-system view with one PE: state rows carry the PE axis
@@ -286,7 +366,7 @@ class ServeEngine:
     def __init__(self, params, cfg, ctx: ParallelCtx, scfg: ServeConfig,
                  *, heap: Optional[SymmetricHeap] = None,
                  kv: Optional[PagedKVCache] = None, exec_=None,
-                 my_pe: int = 0):
+                 proposer=None, my_pe: int = 0):
         self.cfg, self.ctx, self.scfg = cfg, ctx, scfg
         if kv is None:
             heap = heap or SymmetricHeap(
@@ -300,8 +380,15 @@ class ServeEngine:
         self.sched = FCFSScheduler(kv, max_batch=scfg.max_batch,
                                    max_seq=scfg.max_seq, my_pe=my_pe,
                                    prefill_chunk=scfg.prefill_chunk,
-                                   tick_tokens=scfg.tick_tokens)
+                                   tick_tokens=scfg.tick_tokens,
+                                   spec_k=scfg.spec_k)
         self.exec = exec_ or LocalExec(params, cfg, ctx, scfg, kv)
+        self.proposer = proposer
+        if scfg.spec_k > 0 and proposer is None:
+            from . import spec                 # engine <-> spec cycle
+            self.proposer = spec.make_proposer(scfg.draft)
+        self.spec_stats = {"drafted": 0, "accepted": 0, "emitted": 0,
+                           "verify_ticks": 0, "verify_seqs": 0}
         self.pool = self.exec.init_pool()
         self.finished: list = []
         self.ticks = 0
@@ -332,6 +419,8 @@ class ServeEngine:
         plan = self.sched.tick()
         for r in plan.preempted:         # progress resets, gaps with it
             self._last_tok.pop(r.rid, None)
+            if self.proposer is not None:
+                self.proposer.drop(r.rid)
         if plan.migrations:
             self.pool = self.exec.migrate(self.pool,
                                           tuple(plan.migrations))
@@ -378,6 +467,8 @@ class ServeEngine:
                  if not r.is_prefilling() and r.rid not in skip_rids]
         if not batch:
             return
+        if self.scfg.spec_k > 0:
+            return self._spec_tick(batch, now)
         B = self.scfg.max_batch
         tokens = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
@@ -401,6 +492,77 @@ class ServeEngine:
             self._last_tok[r.rid] = now
             self._maybe_finish(r, now)
 
+    def _spec_tick(self, batch, now):
+        """Draft -> verify -> accept -> rewind, one batched verify
+        forward for every decoding sequence.
+
+        The proposer supplies up to ``draft_allowance(r)`` draft tokens
+        per sequence (the scheduler already budgeted and paged them);
+        ONE verify pass scores the pending token plus all drafts; then
+        exact prefix matching against the target's own counter-RNG
+        draws accepts ``m`` drafts and emits ``m + 1`` tokens — the
+        Leviathan accept test collapses to exact matching here because
+        the drafts are point proposals (one-hot draft distributions)
+        and the target's draw at a position is a deterministic function
+        of its counter key, which is what makes accepted streams
+        BIT-IDENTICAL to non-speculative decoding on every backend.
+        Rejected positions rewind: page-granular ``kv.truncate`` plus
+        the length bookkeeping the scheduler already keeps."""
+        B, K = self.scfg.max_batch, self.scfg.spec_k
+        allow = [self.sched.draft_allowance(r) for r in batch]
+        drafts = self.proposer.propose(batch, allow)
+        ids = np.zeros((B, K + 1), np.int32)
+        start = np.zeros((B,), np.int32)
+        n_tok = np.zeros((B,), np.int32)
+        for i, r in enumerate(batch):
+            d = drafts[i][:allow[i]]
+            drafts[i] = d
+            ids[i, 0] = r.next_input()
+            if d:
+                ids[i, 1:1 + len(d)] = d
+            start[i] = r.n_prompt + len(r.out) - 1
+            n_tok[i] = 1 + len(d)
+        bt = self.kv.block_table(
+            [r.rid for r in batch] + [None] * (B - len(batch)),
+            self.scfg.table_slots)
+        toks, self.pool = self.exec.verify(self.pool, ids, start, n_tok,
+                                           bt, self._samp_state(batch))
+        toks = np.asarray(toks)
+        self.spec_stats["verify_ticks"] += 1
+        self.spec_stats["verify_seqs"] += len(batch)
+        for i, r in enumerate(batch):
+            d = drafts[i]
+            m = 0
+            while m < len(d) and int(toks[i, m]) == int(d[m]):
+                m += 1
+            # the allowance already caps drafts at the output budget,
+            # so emitting every accepted token can never overshoot
+            emit = min(m + 1, r.max_new - len(r.out))
+            self.spec_stats["drafted"] += len(d)
+            self.spec_stats["accepted"] += m
+            self.spec_stats["emitted"] += emit
+            prev = self._last_tok.get(r.rid)
+            for j in range(emit):
+                self.sched.advance(r, int(toks[i, j]), now)
+                if prev is not None:
+                    # tokens of one verify pass arrive together: the
+                    # first closes the inter-token gap, the rest are
+                    # free (that IS the latency win)
+                    self.itl.append(now - prev if j == 0 else 0.0)
+            self._last_tok[r.rid] = now
+            if r.finished():
+                self._maybe_finish(r, now)
+                continue
+            if not d:
+                continue      # nothing speculative was written: the
+                              # allowance pages stay attached for the
+                              # next window (no alloc/free churn)
+            # rewind: K/V is valid through the last ACCEPTED position
+            # (the newest sampled token's K/V is written when it is fed
+            # next tick, same as non-speculative decode)
+            self.kv.truncate(r.rid, r.n_prompt + len(r.out) - 1)
+            self.proposer.rewind(r.rid, r.n_prompt + len(r.out) - 1)
+
     def _maybe_finish(self, r, now):
         if not r.is_prefilling() and r.finished():
             self.sched.finish(r, now,
@@ -409,6 +571,8 @@ class ServeEngine:
             # a reused rid (fresh trace on a live engine) must not see
             # this request's last-token time as its previous gap
             self._last_tok.pop(r.rid, None)
+            if self.proposer is not None:
+                self.proposer.drop(r.rid)
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], *, clock: str = "wall",
@@ -449,6 +613,8 @@ class ServeEngine:
             self.sched.stats[k] = 0
         for k in self.kv.stats:
             self.kv.stats[k] = 0
+        for k in self.spec_stats:
+            self.spec_stats[k] = 0
 
     # ------------------------------------------------------------------
     def metrics(self) -> dict:
@@ -465,6 +631,13 @@ class ServeEngine:
         span = max((r.t_finish for r in self.finished), default=0.0) \
             - min((r.t_arrive for r in self.finished), default=0.0)
         pct = (lambda a, p: float(np.percentile(a, p)) if a.size else 0.0)
+        sp = dict(self.spec_stats)
+        sp["accept_rate"] = (sp["accepted"] / sp["drafted"]
+                             if sp["drafted"] else 0.0)
+        # tokens one sequence's verify pass emits (> 1 = speculation is
+        # beating one-token-per-tick decode)
+        sp["tokens_per_tick"] = (sp["emitted"] / sp["verify_seqs"]
+                                 if sp["verify_seqs"] else 0.0)
         return {
             "requests": len(self.finished),
             "tokens_out": int(toks),
@@ -476,4 +649,5 @@ class ServeEngine:
             "ticks": self.ticks,
             "sched": dict(self.sched.stats),
             "kv": dict(self.kv.stats),
+            "spec": sp,
         }

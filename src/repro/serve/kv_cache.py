@@ -82,7 +82,7 @@ class PagedKVCache:
         self.pin_budget = max((n_pages - 1) // 4, 2)
         self.pinned_pages = 0
         self.stats = {"page_allocs": 0, "page_frees": 0, "migrations": 0,
-                      "prefix_hits": 0}
+                      "prefix_hits": 0, "rewound_pages": 0}
 
     # ------------------------------------------------------------------
     # geometry
@@ -123,6 +123,29 @@ class PagedKVCache:
             table.append(self._free.pop())
             self.stats["page_allocs"] += 1
         return True
+
+    def truncate(self, seq_id, n_tokens: int) -> int:
+        """Speculative-decode rewind: shrink a live sequence's block
+        table to the pages covering its first ``n_tokens`` tokens.
+
+        Page-granular: fully-rejected tail pages return to the free
+        list (LIFO, like ``free_seq``); the partially-valid final page
+        stays in the table and its slots past ``n_tokens`` are DEAD by
+        length bookkeeping — every reader masks by sequence length, and
+        the next write at a position lands in the same (page, slot), so
+        stale K/V is overwritten before it can ever be attended to.
+        ``n_tokens == 0`` rewinds the whole sequence (all pages freed,
+        the empty table stays attached).  The null page is never in a
+        table, so it is never freed here.  Returns the pages freed."""
+        table = self.tables[seq_id]
+        keep = self.pages_for(n_tokens)
+        freed = table[keep:]
+        if freed:
+            del table[keep:]
+            self._free.extend(reversed(freed))
+            self.stats["page_frees"] += len(freed)
+            self.stats["rewound_pages"] += len(freed)
+        return len(freed)
 
     def free_seq(self, seq_id) -> None:
         pages = self.tables.pop(seq_id)

@@ -133,3 +133,33 @@ def sample_tokens(logits_loc, ctx: ParallelCtx, state: dict, pos,
     identical on every rank."""
     vals, idxs = emb.tp_sample_candidates(logits_loc, ctx, n_candidates)
     return sample_from_candidates(vals, idxs, state, pos)
+
+
+def sample_window_tokens(logits_loc, ctx: ParallelCtx, state: dict, pos,
+                         n_candidates: int = 8):
+    """The window form of :func:`sample_tokens` — what speculative
+    verify uses: one draw per (sequence, window position).
+
+    ``logits_loc`` is (b, C, V/tp) — the local logits shard at every
+    position of a (b, C) token window; ``pos`` (b, C) the absolute
+    position of the token being GENERATED at each window row (the RNG
+    counter).  Row ``(i, j)`` draws with exactly the key a
+    non-speculative decode step at that position would use —
+    ``fold_in(fold_in(PRNGKey(seed), rid), pos[i, j])`` — so a verified
+    window reproduces the sequential stream bit-for-bit wherever the
+    fed tokens match.  Returns (b, C) tokens, identical on every rank
+    (phase 2 merges through ``ctx.tp_comm.top_k_merge`` like the
+    single-position path)."""
+    vals, idxs = emb.tp_sample_candidates(logits_loc, ctx, n_candidates)
+    b, c, k = vals.shape
+    flat_state = {
+        "temperature": jnp.repeat(state["temperature"], c),
+        "top_k": jnp.repeat(state["top_k"], c),
+        "top_p": jnp.repeat(state["top_p"], c),
+        "rid": jnp.repeat(state["rid"], c),
+        "seed": state["seed"],
+    }
+    toks = sample_from_candidates(vals.reshape(b * c, k),
+                                  idxs.reshape(b * c, k),
+                                  flat_state, pos.reshape(b * c))
+    return toks.reshape(b, c)

@@ -111,19 +111,28 @@ class FCFSScheduler:
     (one token per decoding sequence, claimed first) and prefill chunks
     (handed out FCFS in admission order).  The oldest prefilling
     sequence is always guaranteed one token, so prefill can never
-    starve outright.  ``tick_tokens=0`` resolves to
-    ``max_batch + prefill_chunk``."""
+    starve outright.  With speculation on (``spec_k > 0``) a decoding
+    sequence's claim is its whole verify window — one pending token
+    plus ``draft_allowance`` drafts — in both the token budget and the
+    page demand, so spec decode composes with chunked prefill and
+    preempt-by-eviction instead of silently overcommitting the tick.
+    ``tick_tokens=0`` resolves to
+    ``max_batch * (1 + spec_k) + prefill_chunk``."""
 
     def __init__(self, kv: PagedKVCache, *, max_batch: int,
                  max_seq: int, my_pe: int = 0, prefill_chunk: int = 8,
-                 tick_tokens: int = 0):
+                 tick_tokens: int = 0, spec_k: int = 0):
         self.kv = kv
         self.max_batch = int(max_batch)
         self.max_seq = int(max_seq)
         self.my_pe = int(my_pe)
         self.prefill_chunk = max(int(prefill_chunk), 1)
-        self.tick_tokens = int(tick_tokens) or (self.max_batch
-                                                + self.prefill_chunk)
+        self.spec_k = max(int(spec_k), 0)
+        # under speculation a decoding sequence's tick claim is its
+        # whole verify window (pending token + drafts), so the default
+        # budget scales with it
+        self.tick_tokens = int(tick_tokens) or (
+            self.max_batch * (1 + self.spec_k) + self.prefill_chunk)
         self.waiting: deque = deque()
         self.running: list = []          # admission order (oldest first)
         self._decode_refund = 0          # unspent decode claims of
@@ -156,7 +165,11 @@ class FCFSScheduler:
         plan = TickPlan()
         quotas: dict = {}                # rid -> prompt tokens this tick
         budget = self.tick_tokens
-        budget -= sum(1 for r in self.running if not r.is_prefilling())
+        # decode claims first: one token per decoding sequence PLUS its
+        # draft allowance — a verify window spends real forward tokens,
+        # so speculation composes with (never starves) chunked prefill
+        budget -= sum(1 + self.draft_allowance(r) for r in self.running
+                      if not r.is_prefilling())
         for req in self.running:         # admission order = FCFS
             if req.is_prefilling():
                 budget = self._grant(req, quotas, budget,
@@ -173,6 +186,17 @@ class FCFSScheduler:
                         if r.rid in quotas]
         self.stats["prefill_tokens"] += sum(n for _, n in plan.prefill)
         return plan
+
+    def draft_allowance(self, req: Request) -> int:
+        """Draft tokens a decoding sequence may carry into this tick's
+        verify window: ``spec_k`` capped by the output budget — a
+        request with ``m`` tokens left to emit can accept at most
+        ``m - 1`` drafts (the verify pass itself emits one), so pages
+        and budget are never reserved for tokens that cannot exist."""
+        if self.spec_k == 0 or req.is_prefilling():
+            return 0
+        return max(0, min(self.spec_k,
+                          req.max_new - len(req.out) - 1))
 
     def _grant(self, req: Request, quotas: dict, budget: int, *,
                guarantee: bool) -> int:
@@ -197,11 +221,13 @@ class FCFSScheduler:
                 continue                     # evicted by an earlier loop turn
             # exact demand for THIS tick's writes: prefill covers its
             # chunk quota; decode writes the last sampled token at
-            # position n_prompt + len(out) - 1.  Asking for one more
-            # would preempt a neighbour for a page the final token of a
+            # position n_prompt + len(out) - 1 PLUS one slot per draft
+            # its verify window will score.  Asking for one more would
+            # preempt a neighbour for a page the final token of a
             # finishing sequence never writes.
             need = req.n_done + quotas.get(req.rid, 0) \
-                if req.is_prefilling() else req.n_prompt + len(req.out)
+                if req.is_prefilling() \
+                else req.n_prompt + len(req.out) + self.draft_allowance(req)
             while not self.kv.ensure(req.rid, max(need, 1)):
                 victim = self._youngest()
                 self._preempt(victim, plan)
@@ -213,7 +239,8 @@ class FCFSScheduler:
 
     def _preempt(self, req: Request, plan: TickPlan) -> None:
         if not req.is_prefilling():
-            self._decode_refund += 1         # its decode token is unspent
+            # its decode claim (token + draft window) is unspent
+            self._decode_refund += 1 + self.draft_allowance(req)
         self.kv.free_seq(req.rid)
         self.running.remove(req)             # identity (eq=False)
         req.reset()

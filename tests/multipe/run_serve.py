@@ -36,6 +36,14 @@ tensor-parallel over 4 PEs.  Five checks:
      engine drains them with one quiet(), and the request CHUNK-
      prefills only the uncovered suffix (>= 2 tokens per tick) — its
      token stream must equal the from-scratch stream.
+
+  6. SPECULATIVE DECODING PARITY — the same traces served with
+     spec_k=3 (n-gram self-draft verified through the (B, k+1) window,
+     exact counter-RNG prefix acceptance) produce the IDENTICAL token
+     streams as non-speculative serving, greedy AND sampled, on every
+     backend; a replay-oracle run then pins the multi-accept path
+     (accept-rate 1, > 1 token per sequence per verify pass) and the
+     rejection/rewind path runs under an adversarial proposer.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -68,6 +76,7 @@ class MeshExec:
         self.my_pe = int(my_pe)       # which replica this cell reads
         pf = serve.make_prefill(cfg, ctx, scfg)
         dc = serve.make_decode_step(cfg, ctx, scfg)
+        vf = serve.make_verify(cfg, ctx, scfg)
 
         # tokens are replica-varying once pages migrate (replica 1 may
         # hold pages replica 0 does not), so they come back stacked per
@@ -81,16 +90,26 @@ class MeshExec:
             nxt, kvo = dc(params, pool[0, 0], toks, pos, bt, lens, samp)
             return nxt, kvo[None, None]
 
+        def vf_w(params, pool, ids, start, n_tok, bt, samp):
+            toks, kvo = vf(params, pool[0, 0], ids, start, n_tok, bt,
+                           samp)
+            return toks, kvo[None, None]
+
         self._prefill = jax.jit(smap(
             pf_w, mesh, (pspecs, POOL_SPEC, P(), P(), P(), P(), P()),
             (P("data"), POOL_SPEC)))
         self._decode = jax.jit(smap(
             dc_w, mesh, (pspecs, POOL_SPEC, P(), P(), P(), P(), P()),
             (P("data"), POOL_SPEC)))
+        self._verify = jax.jit(smap(
+            vf_w, mesh, (pspecs, POOL_SPEC, P(), P(), P(), P(), P()),
+            (P("data"), POOL_SPEC)))
         self._migrate_cache = {}
 
     def _my_row(self, toks):
-        return np.asarray(toks).reshape(DP, -1)[self.my_pe]
+        # (DP*b,) token vectors and (DP*b, C) verify windows alike
+        t = np.asarray(toks)
+        return t.reshape((DP, -1) + t.shape[1:])[self.my_pe]
 
     def init_pool(self):
         return jnp.zeros((DP, TP) + self.kv.handle.shape,
@@ -107,6 +126,13 @@ class MeshExec:
         toks, pool = self._decode(self.params, pool,
                                   jnp.asarray(tokens), jnp.asarray(pos),
                                   jnp.asarray(bt), jnp.asarray(lens),
+                                  samp)
+        return self._my_row(toks), pool
+
+    def verify(self, pool, ids, start, n_tok, bt, samp):
+        toks, pool = self._verify(self.params, pool, jnp.asarray(ids),
+                                  jnp.asarray(start),
+                                  jnp.asarray(n_tok), jnp.asarray(bt),
                                   samp)
         return self._my_row(toks), pool
 
@@ -132,7 +158,8 @@ class MeshExec:
         return self._migrate_cache[migs](pool)
 
 
-def build(backend, *, prefix_keep=False, my_pe=0, kv=None, scfg=None):
+def build(backend, *, prefix_keep=False, my_pe=0, kv=None, scfg=None,
+          spec_k=0, proposer=None):
     cfg = configs.get_smoke("qwen3-8b")
     ctx = ParallelCtx(dp_size=DP, tp_size=TP, sp=False, remat=False,
                       backend=backend, param_dtype=jnp.float32,
@@ -146,7 +173,8 @@ def build(backend, *, prefix_keep=False, my_pe=0, kv=None, scfg=None):
     scfg = scfg or serve.ServeConfig(page_tokens=4, n_pages=24,
                                      max_batch=3, max_seq=32,
                                      prefill_chunk=3, attn_impl="ref",
-                                     prefix_keep=prefix_keep)
+                                     prefix_keep=prefix_keep,
+                                     spec_k=spec_k)
     if kv is None:
         heap = SymmetricHeap(("data", "model"), capacity_bytes=1 << 30)
         kv = serve.PagedKVCache(
@@ -156,7 +184,7 @@ def build(backend, *, prefix_keep=False, my_pe=0, kv=None, scfg=None):
     exec_ = MeshExec(params, api.specs(cfg, ctx), cfg, ctx, scfg, kv,
                      my_pe=my_pe)
     eng = serve.ServeEngine(params, cfg, ctx, scfg, kv=kv, exec_=exec_,
-                            my_pe=my_pe)
+                            proposer=proposer, my_pe=my_pe)
     return eng, cfg
 
 
@@ -291,12 +319,60 @@ def check_prefix_resume_migration():
           f"chunks {resumed.prefill_chunks}, stream {resumed.out})")
 
 
+def check_spec_parity():
+    """Speculation is lossless on the mesh: spec_k=3 streams equal the
+    non-speculative ones for greedy AND sampled traffic on every
+    backend (the n-gram proposer drafts, the verify window scores, the
+    counter-RNG prefix match accepts)."""
+    for tag, sampling in (("greedy", None), ("sampled", SAMPLED)):
+        want, _ = serve_trace("xla", sampling)   # == posh == pallas
+        for backend in ("xla", "posh", "pallas"):
+            eng, _ = build(backend, spec_k=3)
+            done = eng.run(
+                [serve.Request(rid=i, prompt=list(p), max_new=6,
+                               sampling=sampling or serve.GREEDY)
+                 for i, p in enumerate(PROMPTS)], clock="tick")
+            got = {r.rid: list(r.out) for r in done}
+            assert got == want, (backend, tag, got, want)
+            assert eng.spec_stats["verify_ticks"] > 0
+        print(f"  spec {tag} streams identical to non-spec across "
+              f"xla/posh/pallas")
+
+
+def check_spec_accept_and_rewind():
+    """The two ends of the acceptance spectrum, on the real mesh: a
+    replay oracle accepts every draft (multi-token verify emits), an
+    adversarial proposer rejects every draft (page rewind), and both
+    leave the streams untouched."""
+    want, _ = serve_trace("xla")
+    eng, _ = build("xla", spec_k=3,
+                   proposer=serve.ReplayProposer(want))
+    done = eng.run([serve.Request(rid=i, prompt=list(p), max_new=6)
+                    for i, p in enumerate(PROMPTS)], clock="tick")
+    assert {r.rid: list(r.out) for r in done} == want
+    sp = eng.metrics()["spec"]
+    assert sp["accept_rate"] == 1.0 and sp["tokens_per_tick"] > 1, sp
+    eng2, _ = build("xla", spec_k=3,
+                    proposer=serve.FixedProposer([101, 102, 103]))
+    done2 = eng2.run([serve.Request(rid=i, prompt=list(p), max_new=6)
+                      for i, p in enumerate(PROMPTS)], clock="tick")
+    assert {r.rid: list(r.out) for r in done2} == want
+    assert eng2.spec_stats["accepted"] == 0
+    assert eng2.kv.stats["rewound_pages"] > 0
+    print(f"  spec oracle accept-rate 1.0 "
+          f"({sp['tokens_per_tick']:.2f} tok/seq/tick); adversarial "
+          f"rewind {eng2.kv.stats['rewound_pages']} pages, streams "
+          f"unchanged")
+
+
 def main():
     check_backend_parity()
     check_batch_invariance()
     check_tp_argmax_ties()
     check_page_migration()
     check_prefix_resume_migration()
+    check_spec_parity()
+    check_spec_accept_and_rewind()
     print("SERVE_PASS")
 
 

@@ -1,0 +1,189 @@
+"""The CI gate's own invariants (tier-1).
+
+Two things CI leans on that nothing else pins:
+
+  * RUN-EACH-SUITE-ONCE — `make verify` runs every tests/multipe/
+    run_*.py worker explicitly and exports REPRO_MULTIPE_EXPLICIT so
+    the pytest subprocess wrappers for those same workers skip.  If a
+    wrapper loses its guard (or a new worker ships without one), the
+    8-PE suite runs twice (or zero times) per gate — this test counts
+    workers and wrappers and asserts every wrapper skips under the
+    flag.
+
+  * scripts/check_bench.py — the bench-regression comparison `make
+    verify` and the main-branch CI job enforce.
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ======================================================================
+# multipe wrappers skip exactly once under REPRO_MULTIPE_EXPLICIT
+# ======================================================================
+def _workers():
+    d = os.path.join(ROOT, "tests", "multipe")
+    return sorted(f for f in os.listdir(d)
+                  if f.startswith("run_") and f.endswith(".py"))
+
+
+def _pytest(env_extra, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_MULTIPE_EXPLICIT", None)
+    env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         os.path.join(ROOT, "tests"), "-k", "8pe", *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+
+
+def test_every_worker_has_exactly_one_wrapper():
+    """Every tests/multipe/run_*.py is invoked by exactly one pytest
+    wrapper (the `-k 8pe` convention), so tier-1 coverage and the
+    explicit verify loop stay in one-to-one correspondence."""
+    workers = _workers()
+    assert workers, "no multipe workers found"
+    counts = {w: 0 for w in workers}
+    tests_dir = os.path.join(ROOT, "tests")
+    for fn in os.listdir(tests_dir):
+        if not (fn.startswith("test_") and fn.endswith(".py")) \
+                or fn == os.path.basename(__file__):
+            continue
+        with open(os.path.join(tests_dir, fn)) as f:
+            src = f.read()
+        for w in workers:
+            counts[w] += src.count(f'"{w}"')
+    assert all(c == 1 for c in counts.values()), counts
+
+
+def test_wrappers_skip_exactly_once_under_explicit_flag():
+    """With REPRO_MULTIPE_EXPLICIT set (what scripts/verify.sh exports
+    before the explicit worker loop) every 8-PE pytest wrapper SKIPS —
+    one skip per worker, nothing passes or fails — so each multipe
+    suite runs exactly once per `make verify`."""
+    n = len(_workers())
+    r = _pytest({"REPRO_MULTIPE_EXPLICIT": "1"}, "-rs")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    # count skips carrying the wrappers' own reason (other suites may
+    # contribute unrelated collection skips, e.g. optional imports)
+    wrapper_skips = sum(
+        int(line.split("[", 1)[1].split("]", 1)[0])
+        for line in r.stdout.splitlines()
+        if line.startswith("SKIPPED") and "multipe workers" in line)
+    assert wrapper_skips == n, (n, r.stdout)
+    tail = r.stdout.strip().splitlines()[-1]
+    assert "passed" not in tail and "failed" not in tail, tail
+
+
+def test_wrappers_collected_without_flag():
+    """Without the flag the same wrappers are real tests (collect-only:
+    nothing executes here) — the suites DO run when pytest is the only
+    driver, e.g. the CI pull-request job's verify --fast."""
+    n = len(_workers())
+    r = _pytest({}, "--collect-only")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert f"{n}/" in r.stdout and "tests collected" in r.stdout, \
+        (n, r.stdout)
+
+
+# ======================================================================
+# check_bench: the regression comparison itself
+# ======================================================================
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(ROOT, "scripts", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _payload(**rows):
+    return {"meta": {}, "results": [dict(case=c, **r)
+                                    for c, r in rows.items()]}
+
+
+ROW = dict(latency_p99_s=0.2, decode_p99_s=0.1, throughput_tok_s=100.0)
+
+
+def test_check_bench_passes_identical_rows():
+    cb = _load_check_bench()
+    base = _payload(smoke=dict(ROW))
+    assert cb.compare(base, base, factor=2.0, floor_s=0.05) == []
+
+
+def test_check_bench_fails_p99_regression_over_factor():
+    cb = _load_check_bench()
+    base = _payload(smoke=dict(ROW))
+    bad = _payload(smoke=dict(ROW, latency_p99_s=0.5))   # > 2 x 0.2
+    fails = cb.compare(base, bad, factor=2.0, floor_s=0.05)
+    assert len(fails) == 1 and "latency_p99_s" in fails[0]
+    # exactly at the bound: allowed
+    edge = _payload(smoke=dict(ROW, latency_p99_s=0.4))
+    assert cb.compare(base, edge, factor=2.0, floor_s=0.05) == []
+
+
+def test_check_bench_floor_absorbs_timer_noise():
+    cb = _load_check_bench()
+    base = _payload(smoke=dict(ROW, latency_p99_s=0.001,
+                               decode_p99_s=0.001))
+    noisy = _payload(smoke=dict(ROW, latency_p99_s=0.04,
+                                decode_p99_s=0.03))      # 30-40x, tiny
+    assert cb.compare(base, noisy, factor=2.0, floor_s=0.05) == []
+    over = _payload(smoke=dict(ROW, latency_p99_s=0.06,
+                               decode_p99_s=0.001))
+    assert len(cb.compare(base, over, factor=2.0, floor_s=0.05)) == 1
+
+
+def test_check_bench_fails_throughput_collapse():
+    cb = _load_check_bench()
+    base = _payload(smoke=dict(ROW))
+    slow = _payload(smoke=dict(ROW, throughput_tok_s=40.0))  # < 100/2
+    fails = cb.compare(base, slow, factor=2.0, floor_s=0.05)
+    assert len(fails) == 1 and "throughput" in fails[0]
+
+
+def test_check_bench_guards_spec_health():
+    cb = _load_check_bench()
+    base = _payload(spec=dict(ROW, spec_accept_rate=0.5,
+                              spec_tokens_per_tick=1.4))
+    dead = _payload(spec=dict(ROW, spec_accept_rate=0.0,
+                              spec_tokens_per_tick=1.0))
+    fails = cb.compare(base, dead, factor=2.0, floor_s=0.05)
+    assert len(fails) == 2
+    assert any("spec_accept_rate" in f for f in fails)
+    assert any("spec_tokens_per_tick" in f for f in fails)
+
+
+def test_check_bench_fails_when_nothing_matches():
+    """An empty intersection must FAIL — a renamed case set silently
+    comparing zero rows would neuter the gate."""
+    cb = _load_check_bench()
+    fails = cb.compare(_payload(a=dict(ROW)), _payload(b=dict(ROW)),
+                       factor=2.0, floor_s=0.05)
+    assert len(fails) == 1 and "compared nothing" in fails[0]
+
+
+def test_check_bench_cli_end_to_end(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_payload(smoke=dict(ROW))))
+    fresh.write_text(json.dumps(_payload(smoke=dict(ROW))))
+    script = os.path.join(ROOT, "scripts", "check_bench.py")
+    ok = subprocess.run(
+        [sys.executable, script, "--fresh", str(fresh),
+         "--baseline", str(base)], capture_output=True, text=True)
+    assert ok.returncode == 0 and "CHECK_BENCH_PASS" in ok.stdout
+    fresh.write_text(json.dumps(
+        _payload(smoke=dict(ROW, latency_p99_s=9.9))))
+    bad = subprocess.run(
+        [sys.executable, script, "--fresh", str(fresh),
+         "--baseline", str(base)], capture_output=True, text=True)
+    assert bad.returncode == 1 and "CHECK_BENCH_FAIL" in bad.stdout

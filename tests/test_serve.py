@@ -87,6 +87,51 @@ def test_block_table_padding_and_null_page():
     assert NULL_PAGE not in kv.tables["a"]     # page 0 never handed out
 
 
+def test_truncate_rewinds_across_page_boundary():
+    """Speculative rewind: shrinking 10 -> 5 tokens over 4-token pages
+    frees exactly the fully-rejected page(s); the partial final page
+    stays; freed pages are immediately reusable (LIFO)."""
+    kv = make_kv(n_pages=8, page_tokens=4)
+    assert kv.alloc_seq("a", 10)               # 3 pages
+    pages = list(kv.tables["a"])
+    freed = kv.truncate("a", 5)                # 2 pages cover 5 tokens
+    assert freed == 1
+    assert kv.tables["a"] == pages[:2]
+    assert kv.stats["rewound_pages"] == 1
+    assert kv.n_free() == 7 - 2
+    assert kv.alloc_seq("b", 1)
+    assert kv.tables["b"] == [pages[2]]        # LIFO reuse of the freed page
+    # exact page multiple: nothing to free
+    assert kv.truncate("a", 8) == 0
+    assert kv.tables["a"] == pages[:2]
+
+
+def test_truncate_to_zero_frees_all_pages():
+    kv = make_kv(n_pages=8, page_tokens=4)
+    assert kv.alloc_seq("a", 9)                # 3 pages
+    assert kv.truncate("a", 0) == 3
+    assert kv.tables["a"] == []                # attached, but empty
+    assert kv.n_free() == 7
+    bt = kv.block_table(["a"], n_slots=3)
+    assert (bt == NULL_PAGE).all()             # all-null row
+    kv.free_seq("a")                           # still detachable
+    assert kv.n_free() == 7
+
+
+def test_truncate_never_touches_null_page():
+    """The null page is never in a table, so no rewind can free it —
+    even a rewind-to-zero across every sequence."""
+    kv = make_kv(n_pages=6, page_tokens=4)
+    kv.alloc_seq("a", 8)
+    kv.alloc_seq("b", 12)
+    for sid in ("a", "b"):
+        kv.truncate(sid, 0)
+    assert NULL_PAGE not in kv._free
+    assert kv.n_free() == 5                    # pages 1..5 back, page 0 out
+    kv.alloc_seq("c", 20)                      # reuse everything
+    assert NULL_PAGE not in kv.tables["c"]
+
+
 def test_pool_grow_via_realloc_preserves_pages():
     heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
     kv = make_kv(n_pages=4, heap=heap)

@@ -1,0 +1,293 @@
+"""Speculative decoding (serve.spec + the engine verify path).
+
+The acceptance bar: speculation may only change HOW MANY ticks a
+stream takes, never the stream — spec-decode token streams must be
+bit-identical to non-speculative decoding for greedy AND sampled
+requests, alone AND batched, under good, bad and model-backed
+proposers (the mesh/backend axis of the same invariant runs in
+tests/multipe/run_serve.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro.core.heap import SymmetricHeap
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx
+
+PATTERN = [5, 17, 42]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = registry.build(cfg).init(jax.random.PRNGKey(0), cfg, ctx)
+    return params, cfg, ctx
+
+
+def scfg_of(spec_k, **kw):
+    base = dict(page_tokens=4, n_pages=48, max_batch=3, max_seq=32,
+                attn_impl="ref")
+    base.update(kw)
+    return serve.ServeConfig(spec_k=spec_k, **base)
+
+
+def repeated_reqs(sampling=serve.GREEDY, max_new=16):
+    """The repeated-prompt workload: periodic prompts that drive the
+    greedy model into self-repetition, where the n-gram proposer
+    earns a real accept rate."""
+    return [serve.Request(rid=i, prompt=(PATTERN * 4)[:12 - i],
+                          max_new=max_new, sampling=sampling)
+            for i in range(3)]
+
+
+def run_engine(model, scfg, reqs, proposer=None):
+    params, cfg, ctx = model
+    eng = serve.ServeEngine(params, cfg, ctx, scfg, proposer=proposer)
+    done = eng.run(reqs, clock="tick")
+    return {r.rid: list(r.out) for r in done}, eng
+
+
+# ======================================================================
+# proposers (host-side units)
+# ======================================================================
+def test_ngram_proposes_repeated_continuation():
+    prop = serve.NgramProposer(min_n=1, max_n=3)
+    r = serve.Request(rid=0, prompt=[1, 2, 3, 1, 2, 3, 1, 2], max_new=8)
+    # suffix 3-gram [3, 1, 2] occurred at index 2 -> continue [3, 1, 2]
+    assert prop.propose([r], [3]) == [[3, 1, 2]]
+    assert prop.propose([r], [2]) == [[3, 1]]      # allowance cap
+    assert prop.propose([r], [0]) == [[]]          # no allowance
+
+
+def test_ngram_uses_generated_history_and_longest_match():
+    prop = serve.NgramProposer(min_n=1, max_n=3)
+    r = serve.Request(rid=0, prompt=[7, 8], max_new=8)
+    r.out = [9, 4, 9, 4, 9]
+    # history 7 8 9 4 9 4 9: suffix [4, 9] -> most recent earlier
+    # occurrence ends at index 4, propose [4, 9]
+    assert prop.propose([r], [2]) == [[4, 9]]
+
+
+def test_ngram_no_match_means_no_drafts():
+    prop = serve.NgramProposer()
+    r = serve.Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new=4)
+    assert prop.propose([r], [3]) == [[]]
+
+
+def test_replay_and_fixed_proposers():
+    rep = serve.ReplayProposer({0: [10, 11, 12, 13]})
+    r = serve.Request(rid=0, prompt=[1], max_new=8)
+    r.out = [10, 11]
+    assert rep.propose([r], [3]) == [[12, 13]]     # resumes mid-stream
+    fx = serve.FixedProposer([99, 98, 97])
+    assert fx.propose([r], [2]) == [[99, 98]]
+
+
+def test_make_proposer_registry():
+    assert isinstance(serve.make_proposer("ngram"), serve.NgramProposer)
+    with pytest.raises(ValueError):
+        serve.make_proposer("nope")
+
+
+# ======================================================================
+# lossless acceptance: streams are bit-identical to non-spec decoding
+# ======================================================================
+def test_spec_streams_bit_identical_greedy(model):
+    want, base = run_engine(model, scfg_of(0), repeated_reqs())
+    got, eng = run_engine(model, scfg_of(3), repeated_reqs())
+    assert got == want
+    sp = eng.metrics()["spec"]
+    # the repeated-prompt workload must actually speculate and win
+    assert sp["accept_rate"] > 0
+    assert sp["tokens_per_tick"] > 1
+    assert eng.ticks < base.ticks                 # fewer ticks, same text
+
+
+def test_spec_streams_bit_identical_sampled(model):
+    samp = serve.SamplingParams(temperature=0.8, top_k=5, top_p=0.9)
+    want, _ = run_engine(model, scfg_of(0), repeated_reqs(samp))
+    got, eng = run_engine(model, scfg_of(3), repeated_reqs(samp))
+    assert got == want
+    assert eng.spec_stats["drafted"] > 0          # it did speculate
+
+
+def test_spec_sampled_alone_equals_batched(model):
+    """Batch-composition invariance survives speculation: the verify
+    window samples with the same (rid, position) counters regardless
+    of batch mates."""
+    samp = serve.SamplingParams(temperature=0.8, top_k=5, top_p=0.9)
+    full, _ = run_engine(model, scfg_of(3), repeated_reqs(samp))
+    alone, _ = run_engine(
+        model, scfg_of(3),
+        [serve.Request(rid=1, prompt=(PATTERN * 4)[:11], max_new=16,
+                       sampling=samp)])
+    assert alone[1] == full[1]
+
+
+def test_replay_oracle_accepts_everything(model):
+    """A perfect proposer is fully accepted: k+1 tokens per sequence
+    per verify pass, stream unchanged — the deterministic multi-accept
+    case."""
+    want, _ = run_engine(model, scfg_of(0), repeated_reqs())
+    got, eng = run_engine(model, scfg_of(3), repeated_reqs(),
+                          proposer=serve.ReplayProposer(want))
+    assert got == want
+    sp = eng.metrics()["spec"]
+    assert sp["accept_rate"] == 1.0
+    assert sp["drafted"] == sp["accepted"] > 0
+    # every full window emits k+1 = 4 tokens; only budget-capped final
+    # windows emit fewer
+    assert sp["tokens_per_tick"] > 2
+
+
+def test_adversarial_proposer_rejects_and_rewinds(model):
+    """Every draft wrong: the stream must still be identical (one real
+    token per verify pass) and the rejected pages must rewind."""
+    want, _ = run_engine(model, scfg_of(0), repeated_reqs())
+    # page_tokens=2 so a k=3 verify window regularly crosses a page
+    # boundary and rejection frees whole pages
+    want2, _ = run_engine(model, scfg_of(0, page_tokens=2),
+                          repeated_reqs())
+    assert want2 == want
+    got, eng = run_engine(model, scfg_of(3, page_tokens=2),
+                          repeated_reqs(),
+                          proposer=serve.FixedProposer([101, 102, 103]))
+    assert got == want
+    sp = eng.metrics()["spec"]
+    assert sp["accepted"] == 0 and sp["drafted"] > 0
+    assert sp["tokens_per_tick"] == 1.0
+    assert eng.kv.stats["rewound_pages"] > 0
+
+
+def test_empty_proposals_degenerate_to_plain_decode(model):
+    """The base SpecProposer never proposes: the verify window carries
+    n_tok=1 everywhere — plain decode through the verify path.
+    (tick_tokens pinned equal: the spec default budget scales with the
+    verify window, which would change prefill pacing, not decode.)"""
+    want, base = run_engine(model, scfg_of(0, tick_tokens=11),
+                            repeated_reqs())
+    got, eng = run_engine(model, scfg_of(3, tick_tokens=11),
+                          repeated_reqs(),
+                          proposer=serve.SpecProposer())
+    assert got == want
+    assert eng.ticks == base.ticks
+    assert eng.spec_stats["drafted"] == 0
+    assert eng.kv.stats["rewound_pages"] == 0      # nothing to rewind
+
+
+def test_spec_composes_with_preemption_and_chunked_prefill(model):
+    """Tight pool: speculation's page demand triggers eviction; the
+    preempted request re-prefills in chunks and every stream still
+    matches the roomy non-speculative run."""
+    params, cfg, ctx = model
+    prompts = [list(range(2 + i, 10 + i)) for i in range(3)]
+    reqs = lambda: [serve.Request(rid=i, prompt=list(p), max_new=8)
+                    for i, p in enumerate(prompts)]
+    want, _ = run_engine(model, scfg_of(0), reqs())
+    got, eng = run_engine(model, scfg_of(3, n_pages=8, prefill_chunk=3),
+                          reqs())
+    assert got == want
+    assert eng.sched.stats["preempted"] > 0        # it was actually tight
+
+
+def test_spec_with_draft_model_same_params_is_oracle(model):
+    """A draft model with the TARGET's own params drafts greedily what
+    the target greedily emits — so on greedy traffic every draft is
+    accepted (the model-backed analogue of the replay oracle), and the
+    stream is untouched."""
+    params, cfg, ctx = model
+    scfg = scfg_of(3)
+    kv = serve.PagedKVCache(
+        SymmetricHeap(("data",)), n_layers=cfg.n_layers,
+        kv_heads=cfg.kv_per_rank(1), head_dim=cfg.head_dim,
+        n_pages=scfg.n_pages, page_tokens=scfg.page_tokens)
+    prop = serve.DraftModelProposer(params, cfg, ctx, scfg, kv,
+                                    target_vocab=cfg.vocab)
+    want, _ = run_engine(model, scfg_of(0), repeated_reqs())
+    eng = serve.ServeEngine(params, cfg, ctx, scfg, kv=kv, proposer=prop)
+    done = eng.run(repeated_reqs(), clock="tick")
+    assert {r.rid: list(r.out) for r in done} == want
+    sp = eng.metrics()["spec"]
+    assert sp["accept_rate"] == 1.0
+    assert sp["tokens_per_tick"] > 2
+
+
+def test_spec_with_mismatched_draft_model_still_lossless(model):
+    """A DIFFERENT-family random draft model gets ~nothing accepted —
+    and that must not matter: proposers can only change tick counts,
+    never tokens."""
+    params, cfg, ctx = model
+    scfg = scfg_of(2)
+    dcfg = configs.get_smoke("gemma-2b")
+    assert dcfg.vocab == cfg.vocab
+    kv = serve.PagedKVCache(
+        SymmetricHeap(("data",)), n_layers=cfg.n_layers,
+        kv_heads=cfg.kv_per_rank(1), head_dim=cfg.head_dim,
+        n_pages=scfg.n_pages, page_tokens=scfg.page_tokens)
+    dparams = registry.build(dcfg).init(jax.random.PRNGKey(1), dcfg, ctx)
+    prop = serve.DraftModelProposer(dparams, dcfg, ctx, scfg, kv,
+                                    target_vocab=cfg.vocab)
+    want, _ = run_engine(model, scfg_of(0), repeated_reqs(max_new=8))
+    eng = serve.ServeEngine(params, cfg, ctx, scfg, kv=kv, proposer=prop)
+    done = eng.run(repeated_reqs(max_new=8), clock="tick")
+    assert {r.rid: list(r.out) for r in done} == want
+    assert eng.spec_stats["drafted"] > 0
+
+
+def test_draft_model_vocab_mismatch_rejected(model):
+    params, cfg, ctx = model
+    scfg = scfg_of(2)
+    kv = serve.PagedKVCache(
+        SymmetricHeap(("data",)), n_layers=cfg.n_layers,
+        kv_heads=cfg.kv_per_rank(1), head_dim=cfg.head_dim,
+        n_pages=scfg.n_pages, page_tokens=scfg.page_tokens)
+    with pytest.raises(ValueError, match="vocab"):
+        serve.DraftModelProposer(params, cfg, ctx, scfg, kv,
+                                 target_vocab=cfg.vocab + 1)
+
+
+# ======================================================================
+# scheduler accounting under speculation
+# ======================================================================
+def test_draft_allowance_caps_at_output_budget():
+    heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    kv = serve.PagedKVCache(heap, n_layers=1, kv_heads=1, head_dim=4,
+                            n_pages=16, page_tokens=4)
+    s = serve.FCFSScheduler(kv, max_batch=2, max_seq=32, spec_k=4)
+    r = serve.Request(rid=0, prompt=[1, 2], max_new=3)
+    s.submit(r)
+    s.tick()
+    s.note_prefilled(r, 9)                 # out = [9], 2 tokens left
+    assert s.draft_allowance(r) == 1       # m - 1 = 1, not spec_k
+    r.out.append(8)                        # 1 token left
+    assert s.draft_allowance(r) == 0
+    r2 = serve.Request(rid=1, prompt=[1], max_new=32 - 1)
+    assert r2.is_prefilling() and s.draft_allowance(r2) == 0
+
+
+def test_spec_budget_claims_verify_window():
+    """A decoding sequence claims 1 + allowance tokens, so prefill
+    chunks shrink accordingly (decode claims first, oldest prefill
+    still guaranteed one token)."""
+    heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    kv = serve.PagedKVCache(heap, n_layers=1, kv_heads=1, head_dim=4,
+                            n_pages=32, page_tokens=4)
+    s = serve.FCFSScheduler(kv, max_batch=4, max_seq=64, spec_k=3,
+                            prefill_chunk=4, tick_tokens=6)
+    r0 = serve.Request(rid=0, prompt=[1, 2], max_new=8)
+    s.submit(r0)
+    s.tick()
+    s.note_prefilled(r0, 9)                # r0 now decoding
+    r1 = serve.Request(rid=1, prompt=list(range(10)), max_new=4)
+    s.submit(r1)
+    plan = s.tick()
+    # budget 6 - (1 + 3) for r0's verify window leaves 2 for r1
+    assert [(r.rid, n) for r, n in plan.prefill] == [(1, 2)]
+    # default budget resolution scales with the window
+    s2 = serve.FCFSScheduler(kv, max_batch=4, max_seq=64, spec_k=3,
+                             prefill_chunk=4)
+    assert s2.tick_tokens == 4 * (1 + 3) + 4
