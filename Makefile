@@ -1,8 +1,9 @@
-# Single gate for every PR: `make verify` (tier-1 pytest + the
-# tests/multipe/ workers under 8 fake CPU PEs + smoke serve bench +
-# check_bench regression gate — see scripts/verify.sh; CI runs the
-# same script, .github/workflows/ci.yml).
-.PHONY: verify verify-fast test multipe bench bench-serve check-bench
+# Single gate for every PR: `make verify` (shmemlint + tier-1 pytest
+# and the tests/multipe/ workers under REPRO_SHMEMCHECK=1 with 8 fake
+# CPU PEs + smoke serve bench + check_bench regression gate — see
+# scripts/verify.sh; CI runs the same script,
+# .github/workflows/ci.yml).
+.PHONY: verify verify-fast test lint multipe bench bench-serve check-bench
 
 verify:
 	scripts/verify.sh
@@ -13,6 +14,11 @@ verify-fast:
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+# static comm-API lint (nbi-drain, raw-collective, handle-after-free,
+# drain-callback) — the verify gate's first phase
+lint:
+	python scripts/shmemlint.py
 
 multipe:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \

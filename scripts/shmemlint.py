@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""shmemlint — static comm-API lint over the source tree.
+
+Usage:
+    python scripts/shmemlint.py [PATH ...]     (default: src/)
+
+Exit 0 and print ``SHMEMLINT_PASS`` when clean; exit 1 and print one
+``path:line: [rule] message`` line per finding plus ``SHMEMLINT_FAIL``
+otherwise.  Rules live in ``repro.analysis.lint``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.lint import lint_paths  # noqa: E402
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [_SRC]
+    errors = lint_paths(paths)
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"SHMEMLINT_FAIL findings={len(errors)}")
+        return 1
+    print("SHMEMLINT_PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

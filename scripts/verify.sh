@@ -13,14 +13,23 @@
 #      pre-bench snapshot (>2x p99/throughput regression fails).
 #
 # Every phase is timed, and each phase fails with its OWN exit code +
-# a "VERIFY_FAIL phase=<name>" line, so a bench crash (exit 3) or a
-# bench regression (exit 4) is distinguishable from a tier-1 (exit 1)
-# or multipe (exit 2) failure straight from the log.
+# a "VERIFY_FAIL phase=<name>" line, so a bench crash (exit 3), a
+# bench regression (exit 4) or a lint finding (exit 5) is
+# distinguishable from a tier-1 (exit 1) or multipe (exit 2) failure
+# straight from the log.
+#
+# The lint phase (scripts/shmemlint.py, static comm-API invariants)
+# runs first in BOTH modes — it is seconds-cheap and fails fastest.
+# In full mode the tier-1 + multipe phases additionally run under
+# REPRO_SHMEMCHECK=1: the happens-before checker is live in every
+# CommQueue/SymmetricHeap, and any finding fails the owning test
+# (tests/conftest.py).  The bench phases stay checker-free so the
+# check_bench p99 gate measures the shipped hot path.
 #
 # Usage: scripts/verify.sh [--fast]
-#   --fast: tier-1 only (the CI pull-request job); the multipe workers
-#   then run through their normal pytest wrappers instead of the
-#   explicit loop, and the bench phases are skipped.
+#   --fast: lint + tier-1 only (the CI pull-request job); the multipe
+#   workers then run through their normal pytest wrappers instead of
+#   the explicit loop, and the bench phases are skipped.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -42,19 +51,30 @@ fail() {  # fail <exit-code> — named, coded, greppable
     exit "$1"
 }
 
-phase_begin "tier-1 pytest"
-python -m pytest -x -q || fail 1
+phase_begin "lint"
+python scripts/shmemlint.py || fail 5
 phase_end
 
 if [[ ${FAST} == 0 ]]; then
+    phase_begin "tier-1 pytest"
+    REPRO_SHMEMCHECK=1 python -m pytest -x -q || fail 1
+    phase_end
+
     phase_begin "multipe (8 PEs)"
     export XLA_FLAGS="--xla_force_host_platform_device_count=8"
     for script in tests/multipe/run_*.py; do
         echo "-- multipe: ${script}"
-        python "${script}" || fail 2
+        REPRO_SHMEMCHECK=1 python "${script}" || fail 2
     done
     unset XLA_FLAGS
     phase_end
+else
+    phase_begin "tier-1 pytest"
+    python -m pytest -x -q || fail 1
+    phase_end
+fi
+
+if [[ ${FAST} == 0 ]]; then
 
     # keep repo-root BENCH_serve.json fresh without a full sweep; the
     # pre-bench snapshot is the regression baseline (covers dirty

@@ -1,0 +1,34 @@
+"""repro.analysis — correctness tooling for the shmem memory model.
+
+Two complementary checkers over the paper's §3.2 completion model
+(puts complete locally at issue; delivery is unordered until ``fence``
+— per destination — or ``quiet`` — full barrier):
+
+  shmemcheck   dynamic happens-before race detection instrumented into
+               ``repro.core.ordering.CommQueue`` and
+               ``repro.core.heap.SymmetricHeap`` behind a
+               zero-cost-when-off hook (the §4.7 ``_SAFE`` philosophy:
+               disabled, the hot path pays one global load + is-None
+               test).  Enable with ``REPRO_SHMEMCHECK=1`` or
+               ``shmemcheck.enable()``.
+
+  lint         a static AST pass over ``src/`` enforcing the comm-API
+               invariants that hold by convention: every ``*_nbi``
+               issue drained on all paths (or annotated
+               ``# shmem: deferred-drain``), no raw ``jax.lax``
+               collectives outside the comm substrate, no
+               ``SymHandle`` used past its ``free``, no drain inside a
+               drain callback.  CLI: ``python scripts/shmemlint.py``.
+"""
+from . import lint, shmemcheck
+from .lint import LintError, lint_paths, lint_source
+from .shmemcheck import (Finding, ShmemChecker, compare_heaps, disable,
+                         enable, get_checker, is_enabled, report, reset,
+                         suspended)
+
+__all__ = [
+    "shmemcheck", "lint",
+    "Finding", "ShmemChecker", "enable", "disable", "is_enabled",
+    "get_checker", "report", "reset", "suspended", "compare_heaps",
+    "LintError", "lint_paths", "lint_source",
+]

@@ -1,0 +1,443 @@
+"""Static AST lint for the comm-API invariants.
+
+Four rules, each encoding a convention the substrate's correctness
+arguments lean on but that nothing enforced mechanically until now:
+
+  nbi-drain           every ``*_nbi`` issue must be dominated by a
+                      ``fence``/``quiet`` on all paths to the end of
+                      its function: a function that issues and returns
+                      with the op still pending has silently widened
+                      its contract to "caller must drain".  Explicitly
+                      deferred drains are annotated
+                      ``# shmem: deferred-drain`` on the call line or
+                      the enclosing ``def`` line (the CommQueue wrapper
+                      functions themselves, proposer-style pipelines).
+
+  raw-collective      no raw ``jax.lax`` collectives outside
+                      ``repro/comm/``, ``repro/core/`` and the version
+                      shim ``repro/compat.py`` — every collective goes
+                      through a ``Communicator`` so backend dispatch,
+                      instrumentation and the safety guard see it.
+                      (``jax.lax.axis_index`` is a rank query, not a
+                      collective, and stays legal everywhere.)
+
+  handle-after-free   a ``SymHandle`` variable must not be used after
+                      being passed to ``free`` — the CommQueue would
+                      happily deliver through the stale name (the
+                      static twin of shmemcheck's use-after-free).
+
+  drain-callback      a callback handed to ``allreduce_nbi`` runs
+                      inside the drain; calling ``fence``/``quiet``/
+                      ``barrier*`` there re-enters completion handling
+                      (the deadlock analogue shmemcheck flags
+                      dynamically as ``nested-drain``).
+
+The analysis is deliberately conservative and function-local: loops
+may run zero times (a drain inside one does not dominate), ``raise``
+is an accepted exit (exceptional paths abandon the queue), and traced
+or dynamic control flow falls back to "not drained".
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Optional
+
+DEFER_ANNOTATION = "shmem: deferred-drain"
+
+# paths (normalized, '/'-separated) where raw jax.lax collectives are
+# the implementation, not a bypass
+RAW_COLLECTIVE_ALLOWED = ("repro/comm/", "repro/core/", "repro/compat.py")
+
+# jax.lax collective primitives (axis_index excluded: rank query)
+LAX_COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
+    "ppermute", "pshuffle", "psum_scatter", "axis_size",
+})
+
+DRAIN_NAMES = frozenset({"fence", "quiet"})
+DRAIN_CALLBACK_FORBIDDEN = frozenset(
+    {"fence", "quiet", "barrier", "barrier_all"})
+
+# path-status lattice for the post-dominator scan
+_DRAINED, _BAD, _CONT = "drained", "bad", "continue"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintError:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# ======================================================================
+# shared AST helpers
+# ======================================================================
+def _call_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _is_drain_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _call_name(node) in DRAIN_NAMES)
+
+
+def _contains_drain(node: ast.AST) -> bool:
+    """A drain call anywhere in this expression/statement, excluding
+    nested function bodies (their execution is deferred)."""
+    for sub in _walk_no_nested_defs(node):
+        if _is_drain_call(sub):
+            return True
+    return False
+
+
+def _walk_no_nested_defs(node: ast.AST):
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)) and child is not node:
+                continue
+            stack.append(child)
+
+
+def _annotated(lines: list[str], lineno: int) -> bool:
+    if 1 <= lineno <= len(lines):
+        return DEFER_ANNOTATION in lines[lineno - 1]
+    return False
+
+
+# ======================================================================
+# rule: nbi-drain — post-dominating drain on all paths
+# ======================================================================
+def _path_status(stmts: list[ast.stmt]) -> str:
+    """Walk a statement list: does every path through it reach an
+    unconditional drain before leaving the function normally?
+
+    _DRAINED  every path hits a drain inside this list
+    _BAD      some path returns (function exit) without a drain
+    _CONT     control can fall off the end of this list undrained
+    """
+    for s in stmts:
+        if isinstance(s, ast.Return):
+            return _DRAINED if _contains_drain(s) else _BAD
+        if isinstance(s, ast.Raise):
+            return _DRAINED          # exceptional exit: queue abandoned
+        if isinstance(s, (ast.Break, ast.Continue)):
+            return _CONT             # loop-local jump: resolved upward
+        if isinstance(s, ast.If):
+            sb = _path_status(s.body)
+            so = _path_status(s.orelse) if s.orelse else _CONT
+            if _BAD in (sb, so):
+                return _BAD
+            if sb == so == _DRAINED:
+                return _DRAINED
+            continue                 # some branch falls through: scan on
+        if isinstance(s, (ast.For, ast.AsyncFor, ast.While)):
+            body = _path_status(s.body)
+            if body == _BAD or (s.orelse
+                                and _path_status(s.orelse) == _BAD):
+                return _BAD
+            continue                 # zero iterations possible: no drain
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            sw = _path_status(s.body)
+            if sw != _CONT:
+                return sw
+            continue
+        if isinstance(s, ast.Try):
+            parts = [s.body] + [h.body for h in s.handlers]
+            if s.orelse:
+                parts.append(s.orelse)
+            if any(_path_status(p) == _BAD for p in parts):
+                return _BAD
+            if s.finalbody:
+                sf = _path_status(s.finalbody)
+                if sf != _CONT:
+                    return sf
+            if all(_path_status(p) == _DRAINED
+                   for p in [s.body] + [h.body for h in s.handlers]):
+                return _DRAINED
+            continue
+        if _contains_drain(s):
+            return _DRAINED
+    return _CONT
+
+
+class _NbiDrainRule(ast.NodeVisitor):
+    def __init__(self, path: str, lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.errors: list[LintError] = []
+
+    def visit_FunctionDef(self, node):
+        self._check_function(node)
+        self.generic_visit(node)     # nested defs checked on their own
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _check_function(self, fn) -> None:
+        if _annotated(self.lines, fn.lineno):
+            return
+        for call, chain in _nbi_calls_with_chain(fn):
+            if _annotated(self.lines, call.lineno):
+                continue
+            if not self._drained(chain):
+                name = _call_name(call)
+                self.errors.append(LintError(
+                    self.path, call.lineno, "nbi-drain",
+                    f"'{name}' is not followed by a fence/quiet on all "
+                    f"paths of '{fn.name}' — drain before returning, or "
+                    f"annotate the call '# {DEFER_ANNOTATION}' if the "
+                    f"caller owns the drain"))
+
+    @staticmethod
+    def _drained(chain) -> bool:
+        """chain: [(stmt_list, index), ...] innermost block last.  The
+        issue is covered if, at some enclosing level, everything after
+        it drains on all paths (and no level exposes an undrained
+        return first)."""
+        for stmts, idx in reversed(chain):
+            status = _path_status(stmts[idx + 1:])
+            if status == _DRAINED:
+                return True
+            if status == _BAD:
+                return False
+        return False
+
+
+def _nbi_calls_with_chain(fn):
+    """Yield (call, enclosing-block chain) for every ``*_nbi`` call in
+    ``fn``, excluding nested function bodies."""
+    out = []
+
+    def walk_block(stmts, chain):
+        for i, s in enumerate(stmts):
+            here = chain + [(stmts, i)]
+            for sub in _walk_no_nested_defs_stmt(s):
+                if isinstance(sub, ast.Call):
+                    name = _call_name(sub)
+                    if name and name.endswith("_nbi") \
+                            and not name.startswith("on_"):
+                        # on_*_nbi are observer hooks, not issue APIs
+                        out.append((sub, here))
+            for blk in _child_blocks(s):
+                walk_block(blk, here)
+
+    walk_block(fn.body, [])
+    return out
+
+
+def _child_blocks(stmt):
+    blocks = []
+    for field in ("body", "orelse", "finalbody"):
+        val = getattr(stmt, field, None)
+        if val and isinstance(val, list) \
+                and all(isinstance(x, ast.stmt) for x in val):
+            blocks.append(val)
+    for h in getattr(stmt, "handlers", []) or []:
+        blocks.append(h.body)
+    return blocks
+
+
+def _walk_no_nested_defs_stmt(stmt):
+    """Expressions of one statement only: neither nested statement
+    blocks (walked separately) nor deferred function bodies."""
+    todo = [stmt]
+    while todo:
+        n = todo.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.stmt)):
+                continue
+            todo.append(child)
+
+
+# ======================================================================
+# rule: raw-collective
+# ======================================================================
+def _lax_collective(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if not isinstance(f, ast.Attribute) or f.attr not in LAX_COLLECTIVES:
+        return None
+    v = f.value
+    if isinstance(v, ast.Name) and v.id == "lax":
+        return f.attr
+    if isinstance(v, ast.Attribute) and v.attr == "lax" \
+            and isinstance(v.value, ast.Name) and v.value.id == "jax":
+        return f.attr
+    return None
+
+
+def _raw_collective_errors(tree, path: str, relpath: str):
+    rel = relpath.replace(os.sep, "/")
+    if any(a in rel for a in RAW_COLLECTIVE_ALLOWED):
+        return []
+    errors = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _lax_collective(node)
+            if name:
+                errors.append(LintError(
+                    path, node.lineno, "raw-collective",
+                    f"raw jax.lax.{name} outside repro/comm|core: route "
+                    f"it through a Communicator (ctx.tp_comm/dp_comm) so "
+                    f"dispatch, instrumentation and the safety guard "
+                    f"see it"))
+    return errors
+
+
+# ======================================================================
+# rule: handle-after-free
+# ======================================================================
+ALLOC_METHODS = frozenset({"alloc", "align_alloc", "realloc"})
+
+
+class _HandleAfterFreeRule(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.errors: list[LintError] = []
+
+    def visit_FunctionDef(self, node):
+        self._check(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _check(self, fn) -> None:
+        allocated: set[str] = set()
+        freed: dict[str, int] = {}          # var -> line of the free
+        for node in _walk_in_lineno_order(fn):
+            if isinstance(node, ast.Assign):
+                v = node.value
+                if isinstance(v, ast.Call) \
+                        and _call_name(v) in ALLOC_METHODS:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            allocated.add(t.id)
+                            freed.pop(t.id, None)
+                else:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            freed.pop(t.id, None)  # rebound: new object
+            elif isinstance(node, ast.Call) and _call_name(node) == "free":
+                for a in node.args:
+                    if isinstance(a, ast.Name) and a.id in allocated:
+                        freed[a.id] = node.lineno
+            elif isinstance(node, ast.Name) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and node.id in freed and node.lineno > freed[node.id]:
+                self.errors.append(LintError(
+                    self.path, node.lineno, "handle-after-free",
+                    f"SymHandle '{node.id}' used after free "
+                    f"(freed at line {freed[node.id]}) — the queue would "
+                    f"deliver through the stale symmetric name"))
+                freed.pop(node.id)          # one report per free
+
+
+def _walk_in_lineno_order(fn):
+    nodes = [n for n in _walk_no_nested_defs(fn)
+             if hasattr(n, "lineno")]
+    seen_free_args = set()
+    # the free(...) call's own argument is a legal (last) use
+    for n in nodes:
+        if isinstance(n, ast.Call) and _call_name(n) == "free":
+            for a in n.args:
+                seen_free_args.add(id(a))
+    nodes.sort(key=lambda n: (n.lineno, n.col_offset))
+    for n in nodes:
+        if id(n) in seen_free_args:
+            continue
+        yield n
+
+
+# ======================================================================
+# rule: drain-callback
+# ======================================================================
+class _DrainCallbackRule(ast.NodeVisitor):
+    def __init__(self, path: str, tree):
+        self.path = path
+        self.errors: list[LintError] = []
+        self._defs = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._defs.setdefault(node.name, []).append(node)
+
+    def visit_Call(self, node):
+        if _call_name(node) == "allreduce_nbi" and node.args:
+            cb = node.args[-1]
+            body = None
+            if isinstance(cb, ast.Lambda):
+                body = cb.body
+            elif isinstance(cb, ast.Name) \
+                    and len(self._defs.get(cb.id, [])) == 1:
+                body = self._defs[cb.id][0]
+            if body is not None:
+                self._scan_callback(body, node.lineno)
+        self.generic_visit(node)
+
+    def _scan_callback(self, body, issue_line: int) -> None:
+        for sub in ast.walk(body):
+            if isinstance(sub, ast.Call):
+                name = _call_name(sub)
+                if name in DRAIN_CALLBACK_FORBIDDEN:
+                    self.errors.append(LintError(
+                        self.path, sub.lineno, "drain-callback",
+                        f"'{name}' inside a drain callback (allreduce_nbi "
+                        f"at line {issue_line}): completion handling must "
+                        f"not block on another drain or barrier"))
+
+
+# ======================================================================
+# driver
+# ======================================================================
+def lint_source(src: str, path: str, relpath: Optional[str] = None
+                ) -> list[LintError]:
+    relpath = relpath if relpath is not None else path
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintError(path, e.lineno or 0, "parse-error", str(e))]
+    lines = src.splitlines()
+    nbi = _NbiDrainRule(path, lines)
+    nbi.visit(tree)
+    haf = _HandleAfterFreeRule(path)
+    haf.visit(tree)
+    dcb = _DrainCallbackRule(path, tree)
+    dcb.visit(tree)
+    errors = (nbi.errors + _raw_collective_errors(tree, path, relpath)
+              + haf.errors + dcb.errors)
+    return sorted(errors, key=lambda e: (e.path, e.line, e.rule))
+
+
+def lint_paths(paths) -> list[LintError]:
+    """Lint every ``.py`` file under the given files/directories."""
+    errors: list[LintError] = []
+    for root in paths:
+        if os.path.isfile(root):
+            files = [root]
+            base = os.path.dirname(root)
+        else:
+            files = []
+            base = root
+            for dirpath, _, names in os.walk(root):
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(names) if f.endswith(".py"))
+        for f in files:
+            with open(f, encoding="utf-8") as fh:
+                src = fh.read()
+            errors.extend(lint_source(src, f, os.path.relpath(f, base)
+                                      if base else f))
+    return errors

@@ -25,6 +25,7 @@ import bisect
 import dataclasses
 import hashlib
 import math
+import os
 from contextlib import contextmanager
 from typing import Iterator, Optional
 
@@ -35,6 +36,20 @@ import numpy as np
 from .teams import Team, TeamAxes
 
 HeapState = dict  # name -> per-PE array (inside shard_map) or global array
+
+# repro.analysis.shmemcheck hook slot (see repro.core.ordering): None
+# when the checker is off; REPRO_SHMEMCHECK=1 arms it lazily at first
+# heap construction (one-shot).
+_checker = None
+_AUTOENV = os.environ.get("REPRO_SHMEMCHECK") == "1"
+
+
+def _autoenable() -> None:
+    global _AUTOENV
+    if _AUTOENV:
+        _AUTOENV = False
+        from repro.analysis import shmemcheck
+        shmemcheck.enable()
 
 
 def _nbytes(shape, dtype) -> int:
@@ -75,6 +90,8 @@ class SymmetricHeap:
 
     def __init__(self, team: TeamAxes = ("data", "model"),
                  capacity_bytes: int = 1 << 40):
+        if _AUTOENV:
+            _autoenable()
         self.team = Team.of(team)
         self.capacity = int(capacity_bytes)
         self._blocks: list[_Block] = [_Block(0, self.capacity, True)]
@@ -114,6 +131,8 @@ class SymmetricHeap:
                 j = bisect.bisect_left(self._sorted_offsets, start)
                 self._sorted_offsets.insert(j, start)
                 self._sorted_handles.insert(j, h)
+                if _checker is not None:
+                    _checker.on_alloc(self, h)
                 return h
         raise MemoryError(
             f"symmetric heap exhausted: need {need}B aligned {align} "
@@ -126,6 +145,8 @@ class SymmetricHeap:
     def free(self, handle_or_name) -> None:
         """``shfree`` — symmetric deallocation with coalescing."""
         name = handle_or_name.name if isinstance(handle_or_name, SymHandle) else handle_or_name
+        if _checker is not None:
+            _checker.on_free(self, name, self.registry.get(name))
         h = self.registry.pop(name, None)
         if h is None:
             raise KeyError(f"no symmetric object named '{name}'")
@@ -234,6 +255,8 @@ class SymmetricHeap:
                 j = bisect.bisect_left(self._sorted_offsets, h.offset)
                 self._sorted_offsets.insert(j, h.offset)
                 self._sorted_handles.insert(j, h)
+                if _checker is not None:
+                    _checker.on_alloc(self, h)
                 return
         raise AssertionError(
             f"extent of '{h.name}' not free during realloc restore")
@@ -250,6 +273,8 @@ class SymmetricHeap:
         j = bisect.bisect_left(self._sorted_offsets, offset)
         self._sorted_offsets.insert(j, offset)
         self._sorted_handles.insert(j, h)
+        if _checker is not None:
+            _checker.on_realloc(self, old, h)
         return h
 
     def _carve(self, i: int, pad: int, need: int, name: str) -> None:

@@ -52,6 +52,7 @@ Data motion is pluggable through a :class:`Transport`:
 from __future__ import annotations
 
 import dataclasses
+import os
 import random
 from typing import Any, Callable, Optional, Sequence
 
@@ -62,6 +63,23 @@ from .heap import HeapState, SymHandle
 from .teams import Team, TeamAxes
 
 Pairs = Sequence[tuple[int, int]]
+
+# repro.analysis.shmemcheck hook slot.  None when the checker is off —
+# an instrumented call site then costs one global load plus an is-None
+# test, the trace-time analogue of compiling POSH without _SAFE (§4.7).
+# ``shmemcheck.enable()`` installs a checker here; REPRO_SHMEMCHECK=1
+# does the same lazily at first queue construction (one-shot, so
+# ``shmemcheck.suspended()`` is not silently re-armed).
+_checker = None
+_AUTOENV = os.environ.get("REPRO_SHMEMCHECK") == "1"
+
+
+def _autoenable() -> None:
+    global _AUTOENV
+    if _AUTOENV:
+        _AUTOENV = False
+        from repro.analysis import shmemcheck
+        shmemcheck.enable()
 
 
 # ======================================================================
@@ -249,6 +267,8 @@ class CommQueue:
     def __init__(self, team: TeamAxes, state: Optional[HeapState] = None,
                  *, transport: Optional[Transport] = None,
                  delivery_seed: Optional[int] = None):
+        if _AUTOENV:
+            _autoenable()
         self.team = Team.of(team)
         self._state: HeapState = dict(state or {})
         self.transport = transport or PermuteTransport()
@@ -280,6 +300,8 @@ class CommQueue:
         self._puts.append(op)
         self._stats["puts"] += 1
         self._track_pending()
+        if _checker is not None:
+            _checker.on_put_nbi(self, handle, data, pairs, offset, op.seq)
         return op.seq
 
     def get_nbi(self, handle: SymHandle, pairs: Pairs, offset=0,
@@ -309,6 +331,8 @@ class CommQueue:
         self._gets.append(op)
         self._stats["gets"] += 1
         self._track_pending()
+        if _checker is not None:
+            _checker.on_get_nbi(self, handle, pairs, offset, size, op.seq)
         return res
 
     def allreduce_nbi(self, x, deliver: Callable[[Any], Any]) -> NbiValue:
@@ -333,6 +357,8 @@ class CommQueue:
         before this call returns, hence before anything issued later —
         delivery-at-fence is the strongest legal implementation of the
         paper's ordering-only guarantee."""
+        if _checker is not None:
+            _checker.on_fence(self, dst)
         self._stats["fences"] += 1
         if dst is None:
             todo, keep = self._puts, []
@@ -349,6 +375,13 @@ class CommQueue:
         runs nonblocking reductions in issue order.  Returns the heap
         state; afterwards the queue is empty and every NbiValue is
         readable."""
+        if _checker is not None:
+            _checker.on_quiet(self)
+            with _checker.draining(self):
+                return self._quiet_impl()
+        return self._quiet_impl()
+
+    def _quiet_impl(self) -> HeapState:
         self._stats["quiets"] += 1
         todo, self._puts = self._puts, []
         self._deliver_puts(todo)
@@ -443,14 +476,29 @@ class CommQueue:
     @property
     def state(self) -> HeapState:
         """The heap state as of the last drain.  Pending (undelivered)
-        ops are NOT visible here — that is the point."""
+        ops are NOT visible here — that is the point (and reading it
+        with puts in flight is the wr-race shmemcheck flags)."""
+        if _checker is not None:
+            _checker.on_state_read(self)
         return self._state
 
     def pending_ops(self) -> int:
         return len(self._puts) + len(self._gets) + len(self._reduces)
 
     def stats(self) -> dict:
-        return dict(self._stats)
+        """Counter snapshot.  On top of the raw counters, exposes the
+        derived fields analysis tooling keys on: ``drains`` (fences +
+        quiets — total happens-before edges inserted) and
+        ``pending_by_dst`` (undelivered put count per destination PE,
+        the live racy-window footprint)."""
+        out = dict(self._stats)
+        out["drains"] = out["fences"] + out["quiets"]
+        by_dst: dict[int, int] = {}
+        for p in self._puts:
+            for d in p.dsts():
+                by_dst[d] = by_dst.get(d, 0) + 1
+        out["pending_by_dst"] = by_dst
+        return out
 
 
 # ======================================================================
@@ -459,13 +507,13 @@ class CommQueue:
 def put_nbi(queue: CommQueue, handle: SymHandle, data, pairs: Pairs,
             offset=0) -> int:
     """``shmem_put_nbi`` — nonblocking put onto ``queue``."""
-    return queue.put_nbi(handle, data, pairs, offset=offset)
+    return queue.put_nbi(handle, data, pairs, offset=offset)  # shmem: deferred-drain
 
 
 def get_nbi(queue: CommQueue, handle: SymHandle, pairs: Pairs, offset=0,
             size: Optional[int] = None) -> NbiValue:
     """``shmem_get_nbi`` — nonblocking get from ``queue``."""
-    return queue.get_nbi(handle, pairs, offset=offset, size=size)
+    return queue.get_nbi(handle, pairs, offset=offset, size=size)  # shmem: deferred-drain
 
 
 def fence(queue: CommQueue, dst: Optional[int] = None) -> None:

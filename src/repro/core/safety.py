@@ -60,7 +60,13 @@ class PoshSafetyError(RuntimeError):
 def collective_guard(team_axes: tuple[str, ...], op_tag: str):
     """Trace-time re-entrancy guard (paper §4.7: "check that when a process
     wants to run a collective communication, it is not already
-    participating to another collective communication")."""
+    participating to another collective communication").
+
+    Exception-safe by construction: exit removes exactly THIS guard's
+    frame (by identity, searched from the top) rather than blind-popping
+    the stack tail — a raise out of a nested collective, or a misbehaved
+    inner guard, can therefore never strip someone else's frame and
+    poison every later ``safe_mode`` check on the thread."""
     st = _flags()
     if st.safe:
         for axes, tag in st.in_progress:
@@ -69,7 +75,8 @@ def collective_guard(team_axes: tuple[str, ...], op_tag: str):
                     f"collective '{op_tag}' on {team_axes} started while "
                     f"'{tag}' on {axes} is in progress"
                 )
-    st.in_progress.append((team_axes, op_tag))
+    entry = (team_axes, op_tag)
+    st.in_progress.append(entry)
     try:
         if st.debug:
             jax.debug.print("posh: >> {} on " + str(team_axes), op_tag)
@@ -77,7 +84,10 @@ def collective_guard(team_axes: tuple[str, ...], op_tag: str):
         if st.debug:
             jax.debug.print("posh: << {} on " + str(team_axes), op_tag)
     finally:
-        st.in_progress.pop()
+        for i in range(len(st.in_progress) - 1, -1, -1):
+            if st.in_progress[i] is entry:
+                del st.in_progress[i]
+                break
 
 
 def check_symmetric_arg(x: Any, op_tag: str) -> None:

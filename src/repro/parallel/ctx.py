@@ -124,8 +124,10 @@ def grad_sync(w, sync_comm, scale=1.0):
     corrects over-counting when several ranks compute identical grads
     for the same slice (KV-head replication: scale = n_kv / tp).
 
-    A bare axis name is still accepted (deprecated) and reduces with the
-    native psum."""
+    ``sync_comm`` must be a Communicator — the raw-axis spelling was
+    removed so every collective goes through the comm layer (where
+    dispatch, safety guards and instrumentation live; enforced by
+    ``scripts/shmemlint.py``'s raw-collective rule)."""
     return w
 
 
@@ -134,10 +136,7 @@ def _grad_sync_fwd(w, sync_comm, scale):
 
 
 def _grad_sync_bwd(sync_comm, scale, res, ct):
-    if isinstance(sync_comm, Communicator):
-        out = jax.tree.map(sync_comm.psum, ct)
-    else:                               # deprecated: raw axis name
-        out = jax.lax.psum(ct, sync_comm)
+    out = jax.tree.map(sync_comm.psum, ct)
     if scale != 1.0:
         out = jax.tree.map(lambda t: t * scale, out)
     return (out,)

@@ -1,0 +1,76 @@
+"""Suite-wide wiring for the shmem memory-model checker.
+
+With ``REPRO_SHMEMCHECK=1`` every test runs under
+``repro.analysis.shmemcheck``: the checker is enabled with fresh state
+before each test, and any finding it accumulated fails the owning test
+at teardown — so a race is attributed to the test that raced, not to a
+global end-of-session report.  All findings are additionally written to
+``shmemcheck-report.json`` (path overridable via
+``REPRO_SHMEMCHECK_REPORT``) for CI artifact upload.
+
+Tests that *deliberately* exercise racy or pending-state behaviour —
+the ordering property tests replay many legal interleavings of
+unordered puts, which is the checker's definition of a ww-race — opt
+out with ``@pytest.mark.shmem_racy``.
+"""
+import json
+import os
+
+import pytest
+
+_ENABLED = os.environ.get("REPRO_SHMEMCHECK") == "1"
+_ALL: list[dict] = []
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "shmem_racy: test deliberately explores racy/pending-state "
+        "interleavings; the shmemcheck happens-before checker is "
+        "suspended for it")
+    config.addinivalue_line("markers", "slow: long-running test")
+
+
+def pytest_runtest_setup(item):
+    if not _ENABLED:
+        return
+    from repro.analysis import shmemcheck
+    if item.get_closest_marker("shmem_racy"):
+        shmemcheck.disable()
+        return
+    chk = shmemcheck.enable()
+    chk.reset()
+
+
+def pytest_runtest_teardown(item, nextitem):
+    if not _ENABLED:
+        return
+    from repro.analysis import shmemcheck
+    if item.get_closest_marker("shmem_racy"):
+        return
+    chk = shmemcheck.get_checker()
+    if chk is None:
+        return
+    findings = chk.report()
+    if not findings:
+        return
+    _ALL.extend({"test": item.nodeid, "rule": f.rule, "loc": f.loc,
+                 "other_loc": f.other_loc, "message": f.message}
+                for f in findings)
+    lines = "\n".join(f"  {f}" for f in findings)
+    chk.reset()
+    pytest.fail(
+        f"shmemcheck: {len(findings)} memory-model finding(s):\n{lines}",
+        pytrace=False)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _ENABLED:
+        return
+    path = os.environ.get("REPRO_SHMEMCHECK_REPORT",
+                          "shmemcheck-report.json")
+    try:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump({"findings": _ALL, "count": len(_ALL)}, fh, indent=2)
+    except OSError:
+        pass

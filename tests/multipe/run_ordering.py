@@ -27,6 +27,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat, configs
+from repro.analysis import shmemcheck
 from repro.core import CommQueue, LocalTransport, SymmetricHeap
 from repro.data import SyntheticLM
 from repro.models import registry
@@ -124,13 +125,18 @@ def run_local(events, seed, handle):
 def check_transport_equivalence():
     heap = SymmetricHeap(("pe",))
     handle = heap.alloc("buf", (OBJ_LEN,), jnp.float32)
-    for i in range(6):
-        events = gen_sequence(random.Random(i))
-        for seed in (None, 0, 11):
-            got = run_mesh(events, seed, heap, handle)
-            want = run_local(events, seed, handle)
-            np.testing.assert_array_equal(
-                got, want, err_msg=f"seq {i} seed {seed}")
+    # The generated sequences deliberately include unordered overlapping
+    # puts (that is the property under test: the delivery shuffle must
+    # agree between transports) — the script analogue of the
+    # @pytest.mark.shmem_racy opt-out.
+    with shmemcheck.suspended():
+        for i in range(6):
+            events = gen_sequence(random.Random(i))
+            for seed in (None, 0, 11):
+                got = run_mesh(events, seed, heap, handle)
+                want = run_local(events, seed, handle)
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"seq {i} seed {seed}")
     print("  permute transport == local oracle (6 sequences x 3 seeds)")
 
 
@@ -229,10 +235,21 @@ def check_overlapped_training():
 
 
 def main():
+    # Under REPRO_SHMEMCHECK=1 (verify.sh full mode) the checker arms
+    # before the first queue; enabling up front makes suspended() above
+    # restore it correctly and lets us fail on residual findings.
+    checked = os.environ.get("REPRO_SHMEMCHECK") == "1"
+    if checked:
+        shmemcheck.enable().reset()
     check_transport_equivalence()
     check_posh_micro_sweep()
     check_fence_semantics_mesh()
     check_overlapped_training()
+    if checked:
+        findings = shmemcheck.report()
+        for f in findings:
+            print(f"  SHMEMCHECK {f}")
+        assert not findings, f"{len(findings)} memory-model finding(s)"
     print("ORDERING_PASS")
 
 

@@ -1,0 +1,495 @@
+"""Directed true-positive / true-negative corpus for `repro.analysis`.
+
+Every checker rule gets a seeded violation that MUST be flagged and a
+drain-correct twin that MUST be clean (acceptance criterion: zero false
+positives on correct programs); every lint rule gets one fixture each
+way, including the ``# shmem: deferred-drain`` suppression path.
+"""
+import contextlib
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint as shmemlint
+from repro.analysis import shmemcheck
+from repro.core import CommQueue, LocalTransport, SymmetricHeap
+from repro.core.heap import SymHandle
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_PE = 3
+HANDLE = SymHandle("buf", (8,), np.dtype(np.float32), 0, 32)
+
+
+@contextlib.contextmanager
+def fresh_checker():
+    """A private checker instance installed into the core hooks — keeps
+    these deliberate violations out of the suite-wide conftest checker
+    when the whole run is under REPRO_SHMEMCHECK=1."""
+    was = shmemcheck.is_enabled()
+    chk = shmemcheck.ShmemChecker()
+    shmemcheck._install(chk)
+    try:
+        yield chk
+    finally:
+        shmemcheck._install(None)
+        if was:
+            shmemcheck.enable()
+
+
+def _queue(state=None, seed=7):
+    state = state if state is not None else {
+        "buf": np.zeros((N_PE, 8), np.float32)}
+    return CommQueue("pe", state, transport=LocalTransport(N_PE),
+                     delivery_seed=seed)
+
+
+def _payload(value, rows=1):
+    data = np.full((N_PE, rows), float(value), np.float32)
+    return data
+
+
+def _rules(chk):
+    return [f.rule for f in chk.report()]
+
+
+# ======================================================================
+# ww-race: unordered overlapping puts
+# ======================================================================
+def test_ww_race_flagged_and_carries_both_locations():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(1.0, rows=3), [(0, 1)], offset=0)
+        q.put_nbi(HANDLE, _payload(2.0, rows=3), [(0, 1)], offset=2)
+        q.quiet()
+    assert _rules(chk) == ["ww-race"]
+    f = chk.report()[0]
+    assert "test_analysis.py" in f.loc and "test_analysis.py" in f.other_loc
+    assert "PE 1" in f.message
+
+
+def test_fence_separated_puts_are_clean():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(1.0, rows=3), [(0, 1)], offset=0)
+        q.fence()
+        q.put_nbi(HANDLE, _payload(2.0, rows=3), [(0, 1)], offset=2)
+        q.quiet()
+    assert chk.report() == []
+
+
+def test_quiet_separated_puts_are_clean():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(1.0, rows=3), [(0, 1)], offset=0)
+        q.quiet()
+        q.put_nbi(HANDLE, _payload(2.0, rows=3), [(0, 1)], offset=0)
+        q.quiet()
+    assert chk.report() == []
+
+
+def test_disjoint_ranges_and_destinations_are_clean():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(1.0, rows=2), [(0, 1)], offset=0)
+        q.put_nbi(HANDLE, _payload(2.0, rows=2), [(0, 1)], offset=2)  # gap ok
+        q.put_nbi(HANDLE, _payload(3.0, rows=2), [(0, 2)], offset=0)  # other PE
+        q.quiet()
+    assert chk.report() == []
+
+
+def test_per_dst_fence_only_retires_that_destination():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(1.0, rows=2), [(0, 1), (0, 2)], offset=0)
+        q.fence(dst=1)
+        # overlaps the still-pending dst-2 copy, not the fenced dst-1 one
+        q.put_nbi(HANDLE, _payload(2.0, rows=2), [(0, 2)], offset=1)
+        q.quiet()
+    assert _rules(chk) == ["ww-race"]
+
+
+# ======================================================================
+# wr-race: heap state read with puts in flight
+# ======================================================================
+def test_state_read_before_drain_flagged():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(4.0), [(0, 1)])
+        _ = q.state                      # target range still undefined
+        q.quiet()
+    assert _rules(chk) == ["wr-race"]
+
+
+def test_state_read_after_drain_clean():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.put_nbi(HANDLE, _payload(4.0), [(0, 1)])
+        q.quiet()
+        _ = q.state
+    assert chk.report() == []
+
+
+# ======================================================================
+# heap lifetime: use-after-free / stale handle / double free
+# ======================================================================
+def test_put_through_freed_handle_flagged():
+    with fresh_checker() as chk:
+        heap = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        h = heap.alloc("x", (8,), np.float32)
+        q = _queue({"x": np.zeros((N_PE, 8), np.float32)})
+        heap.free(h)
+        q.put_nbi(h, _payload(1.0), [(0, 1)])
+        q.quiet()
+    assert "use-after-free" in _rules(chk)
+
+
+def test_live_handle_roundtrip_clean():
+    with fresh_checker() as chk:
+        heap = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        h = heap.alloc("x", (8,), np.float32)
+        q = _queue({"x": np.zeros((N_PE, 8), np.float32)})
+        q.put_nbi(h, _payload(1.0), [(0, 1)])
+        q.quiet()
+        heap.free(h)
+    assert chk.report() == []
+
+
+def test_stale_handle_after_realloc_move_flagged():
+    with fresh_checker() as chk:
+        heap = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        old = heap.alloc("x", (8,), np.float32)
+        heap.alloc("blocker", (8,), np.float32)   # forbids in-place grow
+        new = heap.realloc("x", (4096,))
+        assert new.offset != old.offset           # it moved
+        q = _queue({"x": np.zeros((N_PE, 8), np.float32)})
+        q.put_nbi(old, _payload(1.0), [(0, 1)])   # through the old extent
+        q.quiet()
+    assert "stale-handle" in _rules(chk)
+
+
+def test_double_free_flagged():
+    with fresh_checker() as chk:
+        heap = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        heap.alloc("x", (8,), np.float32)
+        heap.free("x")
+        with pytest.raises(KeyError):
+            heap.free("x")
+    assert "double-free" in _rules(chk)
+
+
+def test_free_of_never_allocated_name_not_flagged():
+    # the heap's own KeyError is the right error; the checker only
+    # escalates frees of names it saw retired
+    with fresh_checker() as chk:
+        heap = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        with pytest.raises(KeyError):
+            heap.free("ghost")
+    assert chk.report() == []
+
+
+# ======================================================================
+# Fact 1: cross-PE offset symmetry
+# ======================================================================
+def test_offset_asymmetry_flagged():
+    with fresh_checker() as chk:
+        ha = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        hb = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        ha.alloc("w", (8,), np.float32)
+        hb.alloc("w", (16,), np.float32)          # PE-dependent size
+        bad = chk.compare_heaps(ha, hb)
+    assert [f.rule for f in bad] == ["offset-asymmetry"]
+    assert "offset-asymmetry" in _rules(chk)
+
+
+def test_symmetric_heaps_compare_clean():
+    with fresh_checker() as chk:
+        heaps = [SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+                 for _ in range(3)]
+        for h in heaps:                           # same SPMD call sequence
+            h.alloc("w", (8,), np.float32)
+            h.alloc("kv", (4, 2), np.int32)
+        assert chk.compare_heaps(*heaps) == []
+    assert chk.report() == []
+
+
+def test_alloc_count_divergence_flagged():
+    with fresh_checker() as chk:
+        ha = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        hb = SymmetricHeap(("pe",), capacity_bytes=1 << 20)
+        for h in (ha, hb):
+            h.alloc("w", (8,), np.float32)
+        hb.alloc("extra", (8,), np.float32)       # branch ran on one PE
+        bad = chk.compare_heaps(ha, hb)
+    assert [f.rule for f in bad] == ["offset-asymmetry"]
+    assert "extra" in bad[0].message
+
+
+# ======================================================================
+# nested drain
+# ======================================================================
+def test_drain_callback_calling_fence_flagged():
+    with fresh_checker() as chk:
+        q = _queue()
+        q.allreduce_nbi(np.ones(3), lambda x: (q.fence(), x)[1])
+        q.quiet()
+    assert "nested-drain" in _rules(chk)
+
+
+def test_plain_reduce_callback_clean():
+    with fresh_checker() as chk:
+        q = _queue()
+        r = q.allreduce_nbi(np.ones(3), lambda x: x * 2)
+        q.quiet()
+        np.testing.assert_allclose(r.value(), 2.0)
+    assert chk.report() == []
+
+
+# ======================================================================
+# enable/suspend machinery
+# ======================================================================
+def test_disabled_checker_records_nothing():
+    before = shmemcheck.is_enabled()
+    q = _queue()
+    with shmemcheck.suspended():
+        q.put_nbi(HANDLE, _payload(1.0, rows=3), [(0, 1)], offset=0)
+        q.put_nbi(HANDLE, _payload(2.0, rows=3), [(0, 1)], offset=1)
+        _ = q.state
+        q.quiet()
+        assert not shmemcheck.is_enabled()
+    assert shmemcheck.is_enabled() == before
+
+
+def test_suspended_restores_installed_checker():
+    with fresh_checker() as chk:
+        q = _queue()
+        with shmemcheck.suspended():
+            q.put_nbi(HANDLE, _payload(1.0, rows=3), [(0, 1)], offset=0)
+            q.put_nbi(HANDLE, _payload(2.0, rows=3), [(0, 1)], offset=1)
+            q.quiet()                    # racy, but the checker is off
+        assert chk.report() == []
+        # NOTE: suspended() re-installs the global checker, not ours —
+        # mirror what matters: hooks are live again afterwards
+        assert shmemcheck.is_enabled()
+
+
+def test_env_autoenable_in_subprocess():
+    """REPRO_SHMEMCHECK=1 arms the checker lazily at first queue/heap
+    construction — the path the multipe worker scripts rely on."""
+    prog = textwrap.dedent("""
+        import numpy as np
+        from repro.core import CommQueue, LocalTransport
+        from repro.core.heap import SymHandle
+        from repro.analysis import shmemcheck
+        h = SymHandle("buf", (8,), np.dtype(np.float32), 0, 32)
+        q = CommQueue("pe", {"buf": np.zeros((2, 8), np.float32)},
+                      transport=LocalTransport(2))
+        assert shmemcheck.is_enabled()
+        q.put_nbi(h, np.ones((2, 2), np.float32), [(0, 1)], offset=0)
+        q.put_nbi(h, np.ones((2, 2), np.float32), [(0, 1)], offset=1)
+        q.quiet()
+        rules = [f.rule for f in shmemcheck.report()]
+        assert rules == ["ww-race"], rules
+        print("AUTOENABLE_OK")
+    """)
+    env = dict(os.environ, REPRO_SHMEMCHECK="1",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr
+    assert "AUTOENABLE_OK" in r.stdout
+
+
+def test_findings_cap_bounds_memory():
+    with fresh_checker() as chk:
+        q = _queue()
+        for _ in range(shmemcheck.MAX_FINDINGS + 50):
+            _ = q.state                  # cheap repeated wr-race source
+            q.put_nbi(HANDLE, _payload(1.0, rows=8), [(0, 1)], offset=0)
+        q.quiet()
+    assert len(chk.report()) == shmemcheck.MAX_FINDINGS
+    assert chk.dropped > 0
+
+
+# ======================================================================
+# lint fixtures — one per rule, both polarities
+# ======================================================================
+def _lint(src, relpath="repro/serve/fixture.py"):
+    return shmemlint.lint_source(textwrap.dedent(src), relpath, relpath)
+
+
+def test_lint_nbi_without_drain_flagged():
+    errs = _lint("""
+        def leak(q, h, x, pairs):
+            q.put_nbi(h, x, pairs)
+            return q.state
+    """)
+    assert [e.rule for e in errs] == ["nbi-drain"]
+
+
+def test_lint_nbi_with_quiet_clean():
+    errs = _lint("""
+        def ok(q, h, x, pairs):
+            q.put_nbi(h, x, pairs)
+            return q.quiet()
+    """)
+    assert errs == []
+
+
+def test_lint_nbi_in_loop_drained_after_clean():
+    errs = _lint("""
+        def ok(q, h, pages, pairs):
+            for i, x in enumerate(pages):
+                q.put_nbi(h, x, pairs, offset=i)
+            q.quiet()
+    """)
+    assert errs == []
+
+
+def test_lint_branch_missing_drain_flagged():
+    errs = _lint("""
+        def half(q, h, x, pairs, flush):
+            q.put_nbi(h, x, pairs)
+            if flush:
+                q.quiet()
+            return q.state
+    """)
+    assert [e.rule for e in errs] == ["nbi-drain"]
+
+
+def test_lint_both_branches_drained_clean():
+    errs = _lint("""
+        def ok(q, h, x, pairs, last):
+            q.put_nbi(h, x, pairs)
+            if last:
+                q.quiet()
+            else:
+                q.fence()
+            return q.state
+    """)
+    assert errs == []
+
+
+def test_lint_deferred_drain_annotation_on_call_suppresses():
+    errs = _lint("""
+        def pipeline_issue(q, h, x, pairs):
+            return q.put_nbi(h, x, pairs)  # shmem: deferred-drain
+    """)
+    assert errs == []
+
+
+def test_lint_deferred_drain_annotation_on_def_suppresses():
+    errs = _lint("""
+        def pipeline_issue(q, h, x, pairs):  # shmem: deferred-drain
+            q.put_nbi(h, x, pairs)
+            q.put_nbi(h, x, pairs, offset=1)
+    """)
+    assert errs == []
+
+
+def test_lint_raise_is_accepted_exit():
+    errs = _lint("""
+        def ok(q, h, x, pairs):
+            q.put_nbi(h, x, pairs)
+            if x is None:
+                raise ValueError("bad payload")
+            q.quiet()
+    """)
+    assert errs == []
+
+
+def test_lint_raw_collective_flagged_outside_comm():
+    errs = _lint("""
+        import jax
+
+        def reduce_me(x):
+            return jax.lax.psum(x, "model")
+    """)
+    assert [e.rule for e in errs] == ["raw-collective"]
+
+
+def test_lint_raw_collective_allowed_in_comm_and_core():
+    src = """
+        import jax
+
+        def impl(x):
+            return jax.lax.psum(x, "model")
+    """
+    assert _lint(src, "repro/comm/communicator.py") == []
+    assert _lint(src, "repro/core/p2p.py") == []
+    assert _lint(src, "repro/compat.py") == []
+
+
+def test_lint_axis_index_is_not_a_collective():
+    errs = _lint("""
+        import jax
+
+        def my_rank():
+            return jax.lax.axis_index("model")
+    """)
+    assert errs == []
+
+
+def test_lint_handle_after_free_flagged():
+    errs = _lint("""
+        def leak(heap, q, x, pairs):
+            h = heap.alloc("tmp", (8,), "float32")
+            heap.free(h)
+            q.put_nbi(h, x, pairs)  # shmem: deferred-drain
+    """)
+    assert [e.rule for e in errs] == ["handle-after-free"]
+
+
+def test_lint_handle_rebound_after_free_clean():
+    errs = _lint("""
+        def ok(heap, q, x, pairs):
+            h = heap.alloc("tmp", (8,), "float32")
+            heap.free(h)
+            h = heap.alloc("tmp", (16,), "float32")
+            q.put_nbi(h, x, pairs)
+            q.quiet()
+    """)
+    assert errs == []
+
+
+def test_lint_drain_in_callback_flagged():
+    errs = _lint("""
+        def bad(q, g):
+            r = q.allreduce_nbi(g, lambda x: (q.quiet(), x)[1])
+            q.quiet()
+            return r
+    """)
+    assert [e.rule for e in errs] == ["drain-callback"]
+
+
+def test_lint_plain_callback_clean():
+    errs = _lint("""
+        def ok(q, g, comm):
+            r = q.allreduce_nbi(g, comm.psum)
+            q.quiet()
+            return r
+    """)
+    assert errs == []
+
+
+def test_lint_src_tree_is_clean():
+    """The acceptance criterion: shmemlint exits 0 on the shipped
+    source tree."""
+    errs = shmemlint.lint_paths([os.path.join(ROOT, "src")])
+    assert errs == [], "\n".join(str(e) for e in errs)
+
+
+def test_shmemlint_cli_exit_codes(tmp_path):
+    script = os.path.join(ROOT, "scripts", "shmemlint.py")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=300)
+    assert r.returncode == 0 and "SHMEMLINT_PASS" in r.stdout
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(q, h, x, p):\n    q.put_nbi(h, x, p)\n")
+    r = subprocess.run([sys.executable, script, str(bad)],
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 1 and "SHMEMLINT_FAIL" in r.stdout
+    assert "nbi-drain" in r.stdout

@@ -12,6 +12,10 @@ Two things CI leans on that nothing else pins:
 
   * scripts/check_bench.py — the bench-regression comparison `make
     verify` and the main-branch CI job enforce.
+
+  * the LINT phase — scripts/verify.sh runs scripts/shmemlint.py with
+    its own exit code (5) before everything else; a seeded
+    nbi-without-drain violation must turn the gate red.
 """
 import importlib.util
 import json
@@ -92,6 +96,55 @@ def test_wrappers_collected_without_flag():
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert f"{n}/" in r.stdout and "tests collected" in r.stdout, \
         (n, r.stdout)
+
+
+# ======================================================================
+# the lint phase: exists in verify.sh, fires on a seeded violation
+# ======================================================================
+def test_verify_sh_has_lint_phase_with_exit_code_5():
+    """The gate script runs shmemlint as its own phase with the
+    distinct exit code the CI log taxonomy documents."""
+    with open(os.path.join(ROOT, "scripts", "verify.sh")) as f:
+        src = f.read()
+    assert 'phase_begin "lint"' in src
+    assert "shmemlint.py" in src
+    lint_line = next(line for line in src.splitlines()
+                     if "shmemlint.py" in line and "fail" in line)
+    assert "fail 5" in lint_line
+
+
+def test_shmemlint_fires_on_seeded_nbi_violation(tmp_path):
+    """End to end: shmemlint exits 0 on the shipped src/ and nonzero
+    when a seeded nbi-without-drain violation is introduced."""
+    script = os.path.join(ROOT, "scripts", "shmemlint.py")
+    clean = subprocess.run([sys.executable, script],
+                           capture_output=True, text=True, timeout=300)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert "SHMEMLINT_PASS" in clean.stdout
+    seeded = tmp_path / "repro" / "serve" / "seeded.py"
+    seeded.parent.mkdir(parents=True)
+    seeded.write_text(
+        "def migrate_and_leak(queue, handle, page, pairs):\n"
+        "    queue.put_nbi(handle, page, pairs)\n"
+        "    return queue.state\n")
+    bad = subprocess.run([sys.executable, script, str(tmp_path)],
+                         capture_output=True, text=True, timeout=300)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "SHMEMLINT_FAIL" in bad.stdout and "nbi-drain" in bad.stdout
+
+
+def test_ci_workflow_wires_lint_and_checker():
+    """Both CI jobs run verify.sh (hence the lint phase); the full job
+    runs the checker-enabled suites and uploads the checker report on
+    failure."""
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "verify.sh --fast" in ci and "make verify" in ci
+    assert "shmemcheck-report" in ci
+    with open(os.path.join(ROOT, "scripts", "verify.sh")) as f:
+        vs = f.read()
+    assert "REPRO_SHMEMCHECK=1 python -m pytest" in vs
+    assert 'REPRO_SHMEMCHECK=1 python "${script}"' in vs
 
 
 # ======================================================================

@@ -77,6 +77,33 @@ def test_safety_modes():
         safety.safe_mode(False)
 
 
+def test_collective_guard_unwinds_on_raise():
+    """Regression: a collective that raises must unwind its in_progress
+    frame — a poisoned stack would make every later collective on the
+    same team fail the nesting check for the life of the thread."""
+    from repro.core import safety
+
+    safety.safe_mode(True)
+    try:
+        with pytest.raises(RuntimeError, match="boom"):
+            with safety.collective_guard(("pe",), "exploder"):
+                raise RuntimeError("boom")
+        # the stack is clean: the same team is immediately usable again
+        with safety.collective_guard(("pe",), "after"):
+            pass
+        # same through the nesting-violation path: the OUTER frame must
+        # survive the inner guard's refusal, and be gone afterwards
+        with pytest.raises(safety.PoshSafetyError):
+            with safety.collective_guard(("pe",), "outer"):
+                with safety.collective_guard(("pe",), "inner"):
+                    pass
+        with safety.collective_guard(("pe",), "clean"):
+            pass
+        assert safety._flags().in_progress == []
+    finally:
+        safety.safe_mode(False)
+
+
 def test_schedule_validation():
     from repro.core.p2p import _check_pairs
 

@@ -161,11 +161,13 @@ def check_sequence(events):
 # the property test — 200+ examples with or without hypothesis
 # ======================================================================
 if HAVE_HYPOTHESIS:
+    @pytest.mark.shmem_racy        # replays deliberately-racy sequences
     @settings(max_examples=220, deadline=None)
     @given(st.integers(0, 2 ** 32 - 1))
     def test_ordering_model_property(seed):
         check_sequence(gen_sequence(random.Random(seed)))
 else:
+    @pytest.mark.shmem_racy        # replays deliberately-racy sequences
     @pytest.mark.parametrize("chunk", range(11))
     def test_ordering_model_property(chunk):
         # 11 chunks x 20 sequences = 220 examples, hypothesis-free
@@ -200,6 +202,7 @@ def test_fence_orders_same_destination():
         assert buf[2, 0] == 2.0
 
 
+@pytest.mark.shmem_racy            # reads state with a put in flight
 def test_per_destination_fence_only_orders_that_destination():
     q = _queue(0)
     q.put_nbi(HANDLE, _payload(0, 1.0), [(0, 2)])
@@ -212,6 +215,7 @@ def test_per_destination_fence_only_orders_that_destination():
     assert np.asarray(q.state["buf"])[1, 0] == 5.0
 
 
+@pytest.mark.shmem_racy            # reads state with a put in flight
 def test_pending_invisible_until_drain():
     """Delivery does not happen at issue: state is unchanged until a
     drain point covers the destination."""
@@ -259,8 +263,28 @@ def test_queue_stats_and_free_functions():
     st = q.stats()
     assert st["puts"] == 1 and st["gets"] == 1
     assert st["fences"] == 1 and st["quiets"] == 1
+    assert st["drains"] == 2                     # fences + quiets
+    assert st["pending_by_dst"] == {}            # fully drained queue
     assert st["drained"] == 2 and st["max_pending"] == 2
     assert r.ready
+
+
+def test_stats_pending_by_dst_tracks_undrained_puts():
+    """The stats contract the analysis tooling keys on: per-destination
+    pending counts shrink with per-dst fences, drains counts every
+    happens-before edge."""
+    q = _queue()
+    q.put_nbi(HANDLE, _payload(0, 1.0), [(0, 1)])
+    q.put_nbi(HANDLE, _payload(0, 2.0), [(0, 2)], offset=1)
+    q.put_nbi(HANDLE, _payload(0, 3.0), [(0, 2)], offset=3)
+    assert q.stats()["pending_by_dst"] == {1: 1, 2: 2}
+    assert q.stats()["drains"] == 0
+    q.fence(dst=2)
+    assert q.stats()["pending_by_dst"] == {1: 1}
+    assert q.stats()["drains"] == 1
+    q.quiet()
+    assert q.stats()["pending_by_dst"] == {}
+    assert q.stats()["drains"] == 2
 
 
 class _CountingTransport(LocalTransport):
@@ -308,6 +332,7 @@ def test_drain_does_not_coalesce_across_pairs_or_gaps():
     assert buf[1, 0] == 1.0 and buf[2, 1] == 2.0 and buf[2, 3] == 3.0
 
 
+@pytest.mark.shmem_racy            # replays deliberately-racy sequences
 def test_coalesced_drain_matches_uncoalesced_under_shuffle():
     """Coalescing is an implementation detail: for every delivery seed
     the coalesced drain produces the same final state as an opted-out
