@@ -3,7 +3,7 @@
 # CPU PEs + smoke serve bench + check_bench regression gate — see
 # scripts/verify.sh; CI runs the same script,
 # .github/workflows/ci.yml).
-.PHONY: verify verify-fast test lint multipe bench bench-serve check-bench
+.PHONY: verify verify-fast test lint multipe bench bench-serve bench-attn check-bench
 
 verify:
 	scripts/verify.sh
@@ -36,7 +36,14 @@ bench-serve:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
 	python benchmarks/serve_bench.py
 
-# compare BENCH_serve.json against the committed copy (what verify/CI
-# run after the smoke bench)
+# refresh the repo-root BENCH_attn.json (paged decode + prefill-window
+# kernel/ref sweep with the choose_block candidate cross-check; `make
+# verify` already refreshes the --smoke rows)
+bench-attn:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	python benchmarks/attn_microbench.py
+
+# compare BENCH_serve.json + BENCH_attn.json against the committed
+# copies (what verify/CI run after the smoke benches)
 check-bench:
-	python scripts/check_bench.py
+	python scripts/check_bench.py --attn-fresh BENCH_attn.json

@@ -18,9 +18,13 @@ chunked prefill protecting p99 decode latency — and SPECULATIVE-DECODE
 rows (``spec_k > 0``, n-gram self-draft) on the REPEATED-PROMPT
 workload, reporting ``spec_accept_rate`` and ``spec_tokens_per_tick``
 (tokens one sequence's verify pass emits; > 1 = speculation beats
-one-token-per-tick decode).  ``--smoke`` runs the smallest cases — one
-greedy, one SAMPLED, one SPECULATIVE — so the `make verify` freshness
-gate covers all three serving modes end-to-end; the full sweep emits
+one-token-per-tick decode).  Attention-impl rows come in kernel/ref
+PAIRS (``smoke``/``smoke_kernel``, ``p8_b4_ref``/``p8_b4_kernel``,
+``repeated_spec_k2``/``repeated_spec_k2_kernel``) whose presence
+``scripts/check_bench.py`` enforces.  ``--smoke`` runs the smallest
+cases — one greedy, one with the Pallas paged-attention KERNELS, one
+SAMPLED, one SPECULATIVE — so the `make verify` freshness
+gate covers all serving modes end-to-end; the full sweep emits
 the same smoke rows under the same case names, which is what lets
 ``scripts/check_bench.py`` match fresh smoke rows against the
 committed file.
@@ -163,6 +167,11 @@ def main():
     sampled = args.sampling if args.sampling != "greedy" else "top_p"
     SMOKE_CASES = [
         ("smoke", "xla", "ref", 4, 32, 3, 6, "greedy", {}),
+        # the attn_impl kernel/ref PAIR: same engine shape as "smoke"
+        # with the Pallas paged kernels on all three call sites
+        # (decode + prefill/verify windows); check_bench enforces the
+        # pair's presence
+        ("smoke_kernel", "xla", "kernel", 4, 32, 3, 6, "greedy", {}),
         ("smoke_sampled", "xla", "ref", 4, 32, 3, 6, sampled, {}),
         ("smoke_spec", "xla", "ref", 4, 32, 3, 6, "greedy",
          {"spec_k": 3, "workload": "repeated"}),
@@ -209,6 +218,11 @@ def main():
              {"workload": "repeated"}),
             ("repeated_spec_k2", "xla", "ref", 4, 48, 4, n, "greedy",
              {"workload": "repeated", "spec_k": 2}),
+            # the verify-window kernel under speculation: pairs with
+            # repeated_spec_k2 the way p8_b4_kernel pairs with
+            # p8_b4_ref (streams identical, only the attn impl moves)
+            ("repeated_spec_k2_kernel", "xla", "kernel", 4, 48, 4, n,
+             "greedy", {"workload": "repeated", "spec_k": 2}),
             ("repeated_spec_k4", "xla", "ref", 4, 48, 4, n, "greedy",
              {"workload": "repeated", "spec_k": 4}),
             ("repeated_spec_k4_" + args.sampling, "xla", "ref", 4, 48,

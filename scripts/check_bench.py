@@ -21,12 +21,28 @@ their committed counterparts.  Per matched row:
     ``spec_tokens_per_tick > 1`` must stay ``> 1`` (these are
     deterministic given the seed, not timing-noise-bound).
 
+Two attention-kernel gates ride along:
+
+  * serve rows must still carry the smoke ``attn_impl`` kernel/ref PAIR
+    (``smoke`` + ``smoke_kernel``) — losing either row would silently
+    drop the serving hot path's kernel-vs-ref trajectory (only enforced
+    on payloads that carry ``attn_impl`` fields, i.e. real serve-bench
+    files);
+  * with ``--attn-fresh BENCH_attn.json`` the microbench trajectory is
+    gated too: every fresh ``*_kernel`` row must have its ``*_ref``
+    partner, kernel ``max_err_vs_ref`` may not exceed the row's
+    ``err_tol`` (parity is absolute, not baseline-relative), and
+    ``us_per_call`` may not grow past ``--factor`` x baseline above
+    ``--attn-floor-us`` (interpreter rows off-TPU sit under the floor).
+
 The baseline defaults to ``git show HEAD:BENCH_serve.json``;
 ``--baseline PATH`` overrides it (verify.sh passes a pre-bench
-snapshot, which also covers dirty working trees).
+snapshot, which also covers dirty working trees; same for
+``--attn-baseline``).
 
     python scripts/check_bench.py
     python scripts/check_bench.py --baseline /tmp/bench.snap --factor 2
+    python scripts/check_bench.py --attn-fresh BENCH_attn.json
 """
 from __future__ import annotations
 
@@ -42,17 +58,21 @@ FRESH = os.path.join(ROOT, "BENCH_serve.json")
 
 P99_KEYS = ("latency_p99_s", "decode_p99_s")
 
+# the serve-bench attn_impl kernel/ref row pairs the smoke refresh must
+# always re-emit: (case, required attn_impl)
+SERVE_ATTN_PAIR = (("smoke", "ref"), ("smoke_kernel", "kernel"))
 
-def load_baseline(path: str | None) -> dict:
+
+def load_baseline(path: str | None, fname: str = "BENCH_serve.json") -> dict:
     if path:
         with open(path) as f:
             return json.load(f)
-    out = subprocess.run(["git", "show", "HEAD:BENCH_serve.json"],
+    out = subprocess.run(["git", "show", f"HEAD:{fname}"],
                          capture_output=True, text=True, cwd=ROOT)
     if out.returncode != 0:
         raise SystemExit(
-            "check_bench: no --baseline given and 'git show "
-            "HEAD:BENCH_serve.json' failed:\n" + out.stderr)
+            f"check_bench: no baseline given and 'git show "
+            f"HEAD:{fname}' failed:\n" + out.stderr)
     return json.loads(out.stdout)
 
 
@@ -101,6 +121,70 @@ def compare(base: dict, fresh: dict, *, factor: float,
     return fails
 
 
+def attn_pair_fails(fresh: dict) -> list:
+    """The serve sweep must keep benching the smoke attn_impl
+    kernel/ref pair.  Only enforced on payloads that look like real
+    serve-bench output (rows carrying ``attn_impl``), so unit fixtures
+    with synthetic case names are unaffected."""
+    rows = by_case(fresh)
+    if not any("attn_impl" in r for r in rows.values()):
+        return []
+    fails = []
+    for case, impl in SERVE_ATTN_PAIR:
+        r = rows.get(case)
+        if r is None:
+            fails.append(
+                f"attn pair: serve case '{case}' missing — the "
+                f"attn_impl={impl} half of the smoke kernel/ref pair "
+                f"must always be benched")
+        elif r.get("attn_impl") != impl:
+            fails.append(
+                f"attn pair: serve case '{case}' has attn_impl="
+                f"{r.get('attn_impl')!r}, expected {impl!r}")
+    return fails
+
+
+def compare_attn(base: dict, fresh: dict, *, factor: float,
+                 floor_us: float) -> list:
+    """Gate the BENCH_attn.json microbench trajectory: kernel/ref row
+    pairing, absolute kernel parity (``max_err_vs_ref <= err_tol``),
+    and ``us_per_call`` regression vs baseline above the floor."""
+    bases, freshes = by_case(base), by_case(fresh)
+    fails = []
+    common = sorted(set(bases) & set(freshes))
+    if not common:
+        fails.append(
+            f"attn: no common case names between baseline "
+            f"({sorted(bases)}) and fresh ({sorted(freshes)}) rows — "
+            f"the gate compared nothing, which is itself a failure")
+        return fails
+    for case, row in sorted(freshes.items()):
+        if case.endswith("_kernel"):
+            partner = case[:-len("_kernel")] + "_ref"
+            if partner not in freshes:
+                fails.append(
+                    f"attn: {case} has no {partner} partner row — "
+                    f"kernel rows are only meaningful as a pair")
+        if row.get("impl") == "kernel":
+            err, tol = row.get("max_err_vs_ref"), row.get("err_tol")
+            if err is not None and tol and float(err) > float(tol):
+                fails.append(
+                    f"attn: {case} kernel-vs-ref parity error "
+                    f"{float(err):.3e} > tol {float(tol):g}")
+    for case in common:
+        bu = bases[case].get("us_per_call")
+        fu = freshes[case].get("us_per_call")
+        if bu is None or fu is None:
+            continue
+        bound = max(float(bu) * factor, floor_us)
+        if float(fu) > bound:
+            fails.append(
+                f"attn: {case} us_per_call {float(fu):.1f} > "
+                f"{factor:g}x baseline {float(bu):.1f} "
+                f"(floor {floor_us:g}us)")
+    return fails
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=FRESH,
@@ -114,6 +198,16 @@ def main() -> int:
     ap.add_argument("--floor-s", type=float, default=0.05,
                     help="p99 regressions below this absolute value "
                          "are timer noise, not regressions")
+    ap.add_argument("--attn-fresh", default=None,
+                    help="freshly-written BENCH_attn.json to gate "
+                         "alongside the serve rows (pairing + parity "
+                         "+ us_per_call regression)")
+    ap.add_argument("--attn-baseline", default=None,
+                    help="baseline attn bench file (default: git show "
+                         "HEAD:BENCH_attn.json)")
+    ap.add_argument("--attn-floor-us", type=float, default=50000.0,
+                    help="us_per_call regressions below this absolute "
+                         "value are interpreter/timer noise")
     args = ap.parse_args()
 
     with open(args.fresh) as f:
@@ -121,7 +215,15 @@ def main() -> int:
     base = load_baseline(args.baseline)
     fails = compare(base, fresh, factor=args.factor,
                     floor_s=args.floor_s)
+    fails += attn_pair_fails(fresh)
     n = len(set(by_case(base)) & set(by_case(fresh)))
+    if args.attn_fresh:
+        with open(args.attn_fresh) as f:
+            fresh_a = json.load(f)
+        base_a = load_baseline(args.attn_baseline, "BENCH_attn.json")
+        fails += compare_attn(base_a, fresh_a, factor=args.factor,
+                              floor_us=args.attn_floor_us)
+        n += len(set(by_case(base_a)) & set(by_case(fresh_a)))
     if fails:
         print(f"CHECK_BENCH_FAIL ({len(fails)} regressions over "
               f"{n} compared cases):")

@@ -8,9 +8,12 @@
 #      pytest subprocess wrappers for those same workers are skipped
 #      (REPRO_MULTIPE_EXPLICIT) so each suite runs exactly once
 #      (tier-1 pins that invariant: tests/test_ci_gate.py), then
-#   3. the smoke serving bench refreshes BENCH_serve.json, and
-#   4. scripts/check_bench.py gates the fresh rows against the
-#      pre-bench snapshot (>2x p99/throughput regression fails).
+#   3. the smoke serving bench refreshes BENCH_serve.json and the
+#      smoke attention microbench refreshes BENCH_attn.json, and
+#   4. scripts/check_bench.py gates the fresh rows of BOTH files
+#      against their pre-bench snapshots (>2x p99/throughput/us_per_call
+#      regression, missing attn kernel/ref pair rows, or a kernel
+#      parity error over tolerance all fail).
 #
 # Every phase is timed, and each phase fails with its OWN exit code +
 # a "VERIFY_FAIL phase=<name>" line, so a bench crash (exit 3), a
@@ -81,13 +84,24 @@ if [[ ${FAST} == 0 ]]; then
     # trees where HEAD's copy is not what this run started from)
     phase_begin "serve bench (smoke)"
     BENCH_SNAP=$(mktemp) || fail 3
-    trap 'rm -f "${BENCH_SNAP}"' EXIT
+    ATTN_SNAP=$(mktemp) || fail 3
+    trap 'rm -f "${BENCH_SNAP}" "${ATTN_SNAP}"' EXIT
     cp BENCH_serve.json "${BENCH_SNAP}" || fail 3
     python benchmarks/serve_bench.py --smoke || fail 3
     phase_end
 
+    # same freshness contract for the attention microbench: the smoke
+    # pairs (decode + chunk + verify windows, kernel vs ref) refresh in
+    # place and are gated against the pre-bench snapshot
+    phase_begin "attn bench (smoke)"
+    cp BENCH_attn.json "${ATTN_SNAP}" || fail 3
+    python benchmarks/attn_microbench.py --smoke || fail 3
+    phase_end
+
     phase_begin "check_bench"
-    python scripts/check_bench.py --baseline "${BENCH_SNAP}" || fail 4
+    python scripts/check_bench.py --baseline "${BENCH_SNAP}" \
+        --attn-fresh BENCH_attn.json --attn-baseline "${ATTN_SNAP}" \
+        || fail 4
     phase_end
 fi
 

@@ -57,37 +57,50 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
         return _pa.paged_decode_attention_ref(q, k_pages, v_pages,
                                               block_tables, lengths,
                                               sm_scale=sm_scale)
+    if impl != "kernel":
+        raise ValueError(
+            f"paged_attention impl='{impl}' "
+            f"(choose from {PAGED_ATTN_IMPLS})")
     return _pa.paged_decode_attention(q, k_pages, v_pages, block_tables,
                                       lengths, sm_scale=sm_scale,
                                       interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "impl"))
+@functools.partial(jax.jit, static_argnames=("sm_scale", "impl", "block_q"))
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, start,
                             n_tok, sm_scale: float | None = None,
-                            impl: str = "ref"):
+                            impl: str = "ref", block_q: int | None = None):
     """Chunk-window attention through a block table: query row ``j`` of
     sequence ``b`` (absolute position ``start[b] + j``) attends to its
     first ``start[b]+j+1`` paged tokens; padded rows (``j >= n_tok``)
     return zeros.  This is BOTH the chunked-prefill window and the
     speculative-decode verify window (a ``(B, k+1)`` window of pending
-    token + drafts — ``serve.make_verify``): one fused gather + masked
-    f32 softmax, numerically the same per-position reduction as
-    ``paged_attention(impl="ref")``, which is what lets verify-path
-    token streams match sequential decoding.  Only the jnp ``"ref"``
-    impl exists today; the ``impl`` switch reserves the name for the
-    prefill-window Pallas grid kernel (ROADMAP follow-up) so call sites
-    won't churn when it lands."""
-    if impl != "ref":
-        raise NotImplementedError(
-            f"paged_prefill_attention impl='{impl}' (only 'ref' is "
-            f"implemented; the window grid kernel is a ROADMAP item)")
-    return _pa.paged_prefill_attention_ref(q, k_pages, v_pages,
-                                           block_tables, start, n_tok,
-                                           sm_scale=sm_scale)
+    token + drafts — ``serve.make_verify``): numerically the same
+    per-position reduction as ``paged_attention(impl="ref")``, which is
+    what lets verify-path token streams match sequential decoding.
+
+    ``impl="kernel"`` runs the prefill-window Pallas grid kernel — a
+    ``(batch, q-block, page)`` grid whose scalar-prefetched block table
+    drives the HBM→VMEM K/V DMA, online softmax across pages (compiled
+    on TPU, interpret elsewhere); ``"ref"`` the fused jnp gather +
+    masked f32 softmax.  ``block_q`` (kernel only) overrides the
+    ``choose_block`` size/dtype dispatch; windows are padded to a block
+    multiple and sliced back."""
+    if impl == "ref":
+        return _pa.paged_prefill_attention_ref(q, k_pages, v_pages,
+                                               block_tables, start, n_tok,
+                                               sm_scale=sm_scale)
+    if impl != "kernel":
+        raise ValueError(
+            f"paged_prefill_attention impl='{impl}' "
+            f"(choose from {PAGED_PREFILL_IMPLS})")
+    return _pa.paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                       start, n_tok, sm_scale=sm_scale,
+                                       block_q=block_q,
+                                       interpret=_interpret())
 
 
 COPY_VARIANTS = tuple(["stock", "auto"] + list(_sc.VARIANTS))
 COMBINE_VARIANTS = tuple(_rc.VARIANTS)
 PAGED_ATTN_IMPLS = ("kernel", "ref")
-PAGED_PREFILL_IMPLS = ("ref",)
+PAGED_PREFILL_IMPLS = ("kernel", "ref")

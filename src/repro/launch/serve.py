@@ -92,7 +92,11 @@ def main():
                     help="per-tick token budget shared by decode+prefill "
                          "(0 = max_batch + prefill_chunk)")
     ap.add_argument("--attn-impl", default="ref",
-                    choices=["ref", "kernel"])
+                    choices=["ref", "kernel"],
+                    help="paged attention impl for decode AND the "
+                         "prefill/verify windows: 'kernel' (Pallas "
+                         "grid kernels; compiled on TPU, interpret "
+                         "elsewhere) or 'ref' (fused jnp)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,

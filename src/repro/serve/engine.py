@@ -81,7 +81,9 @@ class ServeConfig:
     prefill_chunk: int = 8            # prompt tokens per seq per tick
     tick_tokens: int = 0              # shared decode+prefill budget per
                                       # tick (0 -> max_batch + chunk)
-    attn_impl: str = "kernel"         # "kernel" (Pallas) | "ref" (jnp)
+    attn_impl: str = "kernel"         # "kernel" (Pallas) | "ref" (jnp);
+                                      # governs decode AND the
+                                      # prefill/verify window trunk
     kv_dtype: jnp.dtype = jnp.float32
     prefix_keep: bool = False         # pin finished prompts' full pages
                                       # as migratable prefix cache
@@ -225,7 +227,8 @@ def _make_window_forward(cfg, ctx: ParallelCtx, scfg: ServeConfig):
             # whole-window paged attention in one fused call: position
             # j attends to its first start+j+1 paged tokens (the
             # chunk's K/V were just written above)
-            o = ops.paged_prefill_attention(q, kp, vp, bt, start, n_tok)
+            o = ops.paged_prefill_attention(q, kp, vp, bt, start, n_tok,
+                                            impl=scfg.attn_impl)
             out = o.reshape(b, t, -1).astype(cd) @ p["attn"]["wo"].astype(cd)
             out = ctx.tp_comm.psum(out)
             x = x + out

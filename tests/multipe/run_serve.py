@@ -44,6 +44,13 @@ tensor-parallel over 4 PEs.  Five checks:
      backend; a replay-oracle run then pins the multi-accept path
      (accept-rate 1, > 1 token per sequence per verify pass) and the
      rejection/rewind path runs under an adversarial proposer.
+
+  7. ATTENTION-IMPL PARITY — the same traces served with
+     attn_impl="kernel" (the Pallas paged decode + prefill-window grid
+     kernels, interpret mode off-TPU) produce the IDENTICAL token
+     streams as attn_impl="ref" on xla/posh/pallas, greedy and
+     sampled, plus a spec_k run where the verify window itself runs
+     the grid kernel.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -365,6 +372,40 @@ def check_spec_accept_and_rewind():
           f"unchanged")
 
 
+def _kernel_scfg(spec_k=0):
+    return serve.ServeConfig(page_tokens=4, n_pages=24, max_batch=3,
+                             max_seq=32, prefill_chunk=3,
+                             attn_impl="kernel", spec_k=spec_k)
+
+
+def check_attn_impl_parity():
+    """attn_impl is a per-call impl choice, never a numerical one, on
+    the real mesh too: kernel-served streams (Pallas paged decode +
+    prefill-window grid kernels, interpret mode off-TPU) equal the ref
+    streams on every backend, greedy AND sampled — and with spec_k=3
+    the verify window itself runs the grid kernel to the same
+    streams."""
+    for tag, sampling in (("greedy", None), ("sampled", SAMPLED)):
+        want, _ = serve_trace("xla", sampling)   # ref == posh == pallas
+        for backend in ("xla", "posh", "pallas"):
+            eng, _ = build(backend, scfg=_kernel_scfg())
+            done = eng.run(
+                [serve.Request(rid=i, prompt=list(p), max_new=6,
+                               sampling=sampling or serve.GREEDY)
+                 for i, p in enumerate(PROMPTS)], clock="tick")
+            got = {r.rid: list(r.out) for r in done}
+            assert got == want, (backend, tag, got, want)
+        print(f"  attn kernel {tag} streams == ref streams across "
+              f"xla/posh/pallas")
+    want, _ = serve_trace("xla")
+    eng, _ = build("xla", scfg=_kernel_scfg(spec_k=3))
+    done = eng.run([serve.Request(rid=i, prompt=list(p), max_new=6)
+                    for i, p in enumerate(PROMPTS)], clock="tick")
+    assert {r.rid: list(r.out) for r in done} == want
+    assert eng.spec_stats["verify_ticks"] > 0
+    print("  attn kernel verify window (spec_k=3) streams unchanged")
+
+
 def main():
     check_backend_parity()
     check_batch_invariance()
@@ -373,6 +414,7 @@ def main():
     check_prefix_resume_migration()
     check_spec_parity()
     check_spec_accept_and_rewind()
+    check_attn_impl_parity()
     print("SERVE_PASS")
 
 

@@ -240,3 +240,120 @@ def test_check_bench_cli_end_to_end(tmp_path):
         [sys.executable, script, "--fresh", str(fresh),
          "--baseline", str(base)], capture_output=True, text=True)
     assert bad.returncode == 1 and "CHECK_BENCH_FAIL" in bad.stdout
+
+
+# ======================================================================
+# check_bench: the attention kernel/ref gates
+# ======================================================================
+SERVE_ROW = dict(ROW, attn_impl="ref")
+
+
+def test_attn_pair_gate_requires_smoke_kernel_row():
+    """A real serve-bench payload (rows carry attn_impl) must keep both
+    halves of the smoke kernel/ref pair; synthetic unit payloads
+    without attn_impl fields are exempt."""
+    cb = _load_check_bench()
+    ok = _payload(smoke=dict(SERVE_ROW),
+                  smoke_kernel=dict(ROW, attn_impl="kernel"))
+    assert cb.attn_pair_fails(ok) == []
+    missing = _payload(smoke=dict(SERVE_ROW))
+    fails = cb.attn_pair_fails(missing)
+    assert len(fails) == 1 and "smoke_kernel" in fails[0]
+    wrong = _payload(smoke=dict(SERVE_ROW),
+                     smoke_kernel=dict(ROW, attn_impl="ref"))
+    assert any("expected 'kernel'" in f
+               for f in cb.attn_pair_fails(wrong))
+    # fixtures without attn_impl anywhere: gate stays silent
+    assert cb.attn_pair_fails(_payload(smoke=dict(ROW))) == []
+
+
+ATTN_ROW = dict(impl="kernel", us_per_call=500.0, max_err_vs_ref=1e-7,
+                err_tol=1e-5)
+
+
+def _attn_payload(**rows):
+    return {"meta": {}, "results": [dict(case=c, **r)
+                                    for c, r in rows.items()]}
+
+
+def _attn_pair(**kernel_over):
+    return _attn_payload(
+        x_kernel=dict(ATTN_ROW, **kernel_over),
+        x_ref=dict(impl="ref", us_per_call=100.0, max_err_vs_ref=0.0,
+                   err_tol=1e-5))
+
+
+def test_check_bench_attn_passes_identical_rows():
+    cb = _load_check_bench()
+    base = _attn_pair()
+    assert cb.compare_attn(base, base, factor=2.0, floor_us=5e4) == []
+
+
+def test_check_bench_attn_fails_parity_over_tol():
+    cb = _load_check_bench()
+    base = _attn_pair()
+    bad = _attn_pair(max_err_vs_ref=1e-3)
+    fails = cb.compare_attn(base, bad, factor=2.0, floor_us=5e4)
+    assert len(fails) == 1 and "parity error" in fails[0]
+
+
+def test_check_bench_attn_fails_missing_ref_partner():
+    cb = _load_check_bench()
+    base = _attn_pair()
+    lonely = _attn_payload(x_kernel=dict(ATTN_ROW))
+    fails = cb.compare_attn(base, lonely, factor=2.0, floor_us=5e4)
+    assert any("partner" in f for f in fails)
+
+
+def test_check_bench_attn_timing_floor_and_factor():
+    cb = _load_check_bench()
+    base = _attn_pair()
+    # 100x slower but under the floor: interpreter noise, not a fail
+    noisy = _attn_pair(us_per_call=4.9e4)
+    assert cb.compare_attn(base, noisy, factor=2.0, floor_us=5e4) == []
+    slow = _attn_pair(us_per_call=2e5)         # over floor AND factor
+    fails = cb.compare_attn(base, slow, factor=2.0, floor_us=5e4)
+    assert len(fails) == 1 and "us_per_call" in fails[0]
+
+
+def test_check_bench_attn_fails_when_nothing_matches():
+    cb = _load_check_bench()
+    fails = cb.compare_attn(_attn_payload(a=dict(ATTN_ROW)),
+                            _attn_payload(b=dict(ATTN_ROW)),
+                            factor=2.0, floor_us=5e4)
+    assert len(fails) == 1 and "compared nothing" in fails[0]
+
+
+def test_check_bench_attn_cli_end_to_end(tmp_path):
+    """--attn-fresh/--attn-baseline gate the microbench trajectory in
+    the same invocation that gates the serve rows."""
+    cb_script = os.path.join(ROOT, "scripts", "check_bench.py")
+    sb = tmp_path / "serve_base.json"
+    sf = tmp_path / "serve_fresh.json"
+    ab = tmp_path / "attn_base.json"
+    af = tmp_path / "attn_fresh.json"
+    serve_ok = _payload(smoke=dict(ROW))
+    sb.write_text(json.dumps(serve_ok))
+    sf.write_text(json.dumps(serve_ok))
+    ab.write_text(json.dumps(_attn_pair()))
+    af.write_text(json.dumps(_attn_pair()))
+    args = [sys.executable, cb_script, "--fresh", str(sf),
+            "--baseline", str(sb), "--attn-fresh", str(af),
+            "--attn-baseline", str(ab)]
+    ok = subprocess.run(args, capture_output=True, text=True)
+    assert ok.returncode == 0 and "CHECK_BENCH_PASS" in ok.stdout, \
+        ok.stdout + ok.stderr
+    af.write_text(json.dumps(_attn_pair(max_err_vs_ref=1.0)))
+    bad = subprocess.run(args, capture_output=True, text=True)
+    assert bad.returncode == 1 and "parity error" in bad.stdout
+
+
+def test_verify_sh_has_attn_bench_phase():
+    """The gate refreshes BENCH_attn.json smoke rows and hands both
+    snapshots to one check_bench call."""
+    with open(os.path.join(ROOT, "scripts", "verify.sh")) as f:
+        src = f.read()
+    assert 'phase_begin "attn bench (smoke)"' in src
+    assert "attn_microbench.py --smoke" in src
+    assert "--attn-fresh BENCH_attn.json" in src
+    assert "--attn-baseline" in src

@@ -617,3 +617,92 @@ def test_serve_mesh_8pe():
         capture_output=True, text=True, env=env, timeout=2400)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "SERVE_PASS" in r.stdout
+
+
+# ======================================================================
+# attn_impl: end-to-end threading + ref/kernel stream identity
+# ======================================================================
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = registry.build(cfg).init(jax.random.PRNGKey(0), cfg, ctx)
+    return params, cfg, ctx
+
+
+def test_attn_impl_threads_through_all_three_call_sites(
+        smoke_model, monkeypatch):
+    """Regression: ServeConfig.attn_impl used to be silently dropped on
+    the window trunk (engine hardcoded the ref for prefill AND verify).
+    Spy on the ops layer and assert the CONFIGURED impl is what every
+    call site — decode, prefill window, verify window — actually
+    passes."""
+    params, cfg, ctx = smoke_model
+    calls = []
+    real_window = ops.paged_prefill_attention
+    real_decode = ops.paged_attention
+
+    def spy_window(q, *a, **kw):
+        calls.append(("window", int(q.shape[1]), kw.get("impl", "ref")))
+        return real_window(q, *a, **kw)
+
+    def spy_decode(q, *a, **kw):
+        calls.append(("decode", 1, kw.get("impl", "kernel")))
+        return real_decode(q, *a, **kw)
+
+    monkeypatch.setattr(ops, "paged_prefill_attention", spy_window)
+    monkeypatch.setattr(ops, "paged_attention", spy_decode)
+
+    def run(spec_k):
+        scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=2,
+                           max_seq=32, prefill_chunk=4, spec_k=spec_k,
+                           attn_impl="kernel")
+        eng = ServeEngine(params, cfg, ctx, scfg)
+        eng.run([Request(rid=0, prompt=[5, 17, 42] * 3, max_new=6)],
+                clock="tick")
+
+    run(spec_k=0)            # prefill window (C=4) + plain decode
+    run(spec_k=2)            # + verify windows (C=spec_k+1=3)
+    widths = {c for kind, c, _ in calls if kind == "window"}
+    assert 4 in widths, "prefill window never traced"
+    assert 3 in widths, "verify window never traced"
+    assert any(kind == "decode" for kind, _, _ in calls)
+    bad = [c for c in calls if c[2] != "kernel"]
+    assert not bad, f"attn_impl not threaded: {bad}"
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_streams_bit_identical_across_attn_impl(smoke_model, spec_k):
+    """The acceptance bar: attn_impl is a performance choice, never a
+    numerical one — greedy AND sampled token streams, spec off and on,
+    alone and batched, are bit-identical between ref and kernel."""
+    params, cfg, ctx = smoke_model
+    sp = serve.SamplingParams(temperature=0.9, top_k=5, top_p=0.9)
+
+    def mixed_reqs():
+        # greedy + sampled in ONE batch; prompts repeat so the n-gram
+        # proposer earns accepts when spec is on
+        return [Request(rid=0, prompt=[5, 17, 42] * 4, max_new=8),
+                Request(rid=1, prompt=[5, 17, 42] * 3, max_new=8,
+                        sampling=sp),
+                Request(rid=2, prompt=[7, 3, 99, 12], max_new=8)]
+
+    def alone_reqs():
+        return [Request(rid=0, prompt=[5, 17, 42] * 3, max_new=8,
+                        sampling=sp)]
+
+    def run(attn_impl, mk):
+        scfg = ServeConfig(page_tokens=4, n_pages=48, max_batch=3,
+                           max_seq=48, spec_k=spec_k,
+                           attn_impl=attn_impl)
+        eng = ServeEngine(params, cfg, ctx, scfg)
+        done = eng.run(mk(), clock="tick")
+        return {r.rid: list(r.out) for r in done}, eng
+
+    for mk in (mixed_reqs, alone_reqs):
+        ref_streams, _ = run("ref", mk)
+        ker_streams, eng = run("kernel", mk)
+        assert ref_streams == ker_streams, (spec_k, mk.__name__)
+        if spec_k:
+            assert eng.spec_stats["drafted"] > 0
