@@ -21,9 +21,15 @@ workload, reporting ``spec_accept_rate`` and ``spec_tokens_per_tick``
 one-token-per-tick decode).  Attention-impl rows come in kernel/ref
 PAIRS (``smoke``/``smoke_kernel``, ``p8_b4_ref``/``p8_b4_kernel``,
 ``repeated_spec_k2``/``repeated_spec_k2_kernel``) whose presence
-``scripts/check_bench.py`` enforces.  ``--smoke`` runs the smallest
-cases — one greedy, one with the Pallas paged-attention KERNELS, one
-SAMPLED, one SPECULATIVE — so the `make verify` freshness
+``scripts/check_bench.py`` enforces, and so does the DISAGGREGATION
+topology pair (``colocated``/``disagg_2p2d``): the same engine shape
+and trace served monolithically vs split 2 prefill + 2 decode cells
+with put-with-signal page handoff — disagg rows carry
+``handoff_signals``/``handoff_quiets`` counters, and check_bench pins
+``handoff_quiets`` to ZERO (per-transfer completion carries the whole
+handoff load).  ``--smoke`` runs the smallest cases — one greedy, one
+with the Pallas paged-attention KERNELS, one SAMPLED, one SPECULATIVE,
+one DISAGGREGATED — so the `make verify` freshness
 gate covers all serving modes end-to-end; the full sweep emits
 the same smoke rows under the same case names, which is what lets
 ``scripts/check_bench.py`` match fresh smoke rows against the
@@ -77,7 +83,7 @@ def repeated_requests(n_requests, vocab, rate, seed, *, max_new=16,
 def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
              max_batch, n_requests, rate, seed, *, sampling="greedy",
              prefill_chunk=8, tick_tokens=0, long_frac=0.25,
-             spec_k=0, workload="poisson", warmup=True):
+             spec_k=0, workload="poisson", warmup=True, disagg=""):
     from repro import serve
     from repro.launch.serve import build_engine
 
@@ -86,7 +92,7 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
                             max_batch=max_batch, attn_impl=attn_impl,
                             prefill_chunk=prefill_chunk,
                             tick_tokens=tick_tokens, seed=seed,
-                            spec_k=spec_k)
+                            spec_k=spec_k, disagg=disagg)
     temp, top_k, top_p = SAMPLING[sampling]
 
     def trace(seed_, n):
@@ -105,13 +111,15 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         # sampler) on a throwaway mini-trace, then measure a clean run
         # on the same engine: rows reflect engine structure, not XLA
         # compiles
-        eng.run(trace(seed + 1, 3))
+        eng.run(trace(seed + 1, 3), clock="wall")
         eng.reset_metrics()
     t0 = time.perf_counter()
-    eng.run(trace(seed, n_requests))
+    # explicit wall clock: ServeEngine and DisaggEngine default to
+    # different clocks, and a topology row pair must share one
+    eng.run(trace(seed, n_requests), clock="wall")
     wall = time.perf_counter() - t0
     m = eng.metrics()
-    return {
+    row = {
         "case": case, "arch": cfg.name, "backend": backend,
         "attn_impl": attn_impl, "page_tokens": page_tokens,
         "n_pages": n_pages, "max_batch": max_batch,
@@ -134,7 +142,18 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "spec_tokens_per_tick": round(m["spec"]["tokens_per_tick"], 4),
         "spec_drafted": m["spec"]["drafted"],
         "spec_emitted": m["spec"]["emitted"],
+        "topology": disagg or "colocated",
     }
+    if disagg:
+        # handoff counters only exist on disagg rows — check_bench
+        # keys its topology gate off their presence
+        h = m["handoff"]
+        row.update(handoff_tickets=h["handoff_tickets"],
+                   handoff_pages=h["handoff_pages"],
+                   handoff_signals=h["handoff_signals"],
+                   handoff_waits=h["handoff_waits"],
+                   handoff_quiets=h["handoff_quiets"])
+    return row
 
 
 def main():
@@ -175,6 +194,11 @@ def main():
         ("smoke_sampled", "xla", "ref", 4, 32, 3, 6, sampled, {}),
         ("smoke_spec", "xla", "ref", 4, 32, 3, 6, "greedy",
          {"spec_k": 3, "workload": "repeated"}),
+        # the disagg smoke row: prefill and decode in separate cells
+        # with the put-with-signal page handoff on the hot path — its
+        # handoff_quiets counter is what check_bench pins to zero
+        ("smoke_disagg", "xla", "ref", 4, 32, 3, 6, "greedy",
+         {"disagg": "1+1"}),
     ]
     if args.smoke:
         cases = SMOKE_CASES
@@ -228,6 +252,14 @@ def main():
             ("repeated_spec_k4_" + args.sampling, "xla", "ref", 4, 48,
              4, n, args.sampling,
              {"workload": "repeated", "spec_k": 4}),
+            # the disaggregation row pair: identical engine shape and
+            # trace, topology is the ONLY knob — what page handoff
+            # costs (TTFT, p99 decode) against the colocated engine,
+            # with the signal/quiet counters showing the handoff load
+            # rides per-transfer completion alone
+            ("colocated", "xla", "ref", 4, 48, 3, n, "greedy", {}),
+            ("disagg_2p2d", "xla", "ref", 4, 48, 3, n, "greedy",
+             {"disagg": "2+2"}),
         ]
     results = []
     for case, backend, impl, pt, np_, mb, nreq, sampling, extra in cases:
@@ -239,6 +271,10 @@ def main():
         spec = (f"  accept {row['spec_accept_rate']:.2f} "
                 f"tok/tick {row['spec_tokens_per_tick']:.2f}"
                 if row["spec_k"] else "")
+        if row["topology"] != "colocated":
+            spec += (f"  [{row['topology']}] signals "
+                     f"{row['handoff_signals']} quiets "
+                     f"{row['handoff_quiets']}")
         print(f"{case:>22}: {row['throughput_tok_s']:8.1f} tok/s  "
               f"p50 {row['latency_p50_s']*1e3:7.1f} ms  "
               f"p99 {row['latency_p99_s']*1e3:7.1f} ms  "

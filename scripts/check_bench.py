@@ -21,6 +21,12 @@ their committed counterparts.  Per matched row:
     ``spec_tokens_per_tick > 1`` must stay ``> 1`` (these are
     deterministic given the seed, not timing-noise-bound).
 
+A disaggregation gate rides along: payloads whose rows carry
+``topology`` must keep the ``colocated``/``disagg_2p2d`` pair, and
+every disaggregated row must report ``handoff_quiets == 0`` with
+``handoff_signals > 0`` — the put-with-signal page handoff completing
+per transfer, never through a tick-global quiet.
+
 Two attention-kernel gates ride along:
 
   * serve rows must still carry the smoke ``attn_impl`` kernel/ref PAIR
@@ -61,6 +67,10 @@ P99_KEYS = ("latency_p99_s", "decode_p99_s")
 # the serve-bench attn_impl kernel/ref row pairs the smoke refresh must
 # always re-emit: (case, required attn_impl)
 SERVE_ATTN_PAIR = (("smoke", "ref"), ("smoke_kernel", "kernel"))
+
+# the disaggregation topology pair the full sweep must keep benching:
+# (case, required topology)
+SERVE_DISAGG_PAIR = (("colocated", "colocated"), ("disagg_2p2d", "2+2"))
 
 
 def load_baseline(path: str | None, fname: str = "BENCH_serve.json") -> dict:
@@ -144,6 +154,44 @@ def attn_pair_fails(fresh: dict) -> list:
     return fails
 
 
+def disagg_pair_fails(fresh: dict) -> list:
+    """The sweep must keep benching the colocated/disagg_2p2d topology
+    pair, and every disaggregated row must show a handoff that drained
+    through ``signal_wait_until`` ALONE — a single tick-global quiet on
+    the mailbox queue means the per-transfer completion contract broke.
+    Only enforced on payloads whose rows carry ``topology`` (real
+    serve-bench files); synthetic unit fixtures are unaffected."""
+    rows = by_case(fresh)
+    if not any("topology" in r for r in rows.values()):
+        return []
+    fails = []
+    for case, topo in SERVE_DISAGG_PAIR:
+        r = rows.get(case)
+        if r is None:
+            fails.append(
+                f"disagg pair: serve case '{case}' missing — the "
+                f"topology={topo} half of the colocated/disagg pair "
+                f"must always be benched")
+        elif r.get("topology") != topo:
+            fails.append(
+                f"disagg pair: serve case '{case}' has topology="
+                f"{r.get('topology')!r}, expected {topo!r}")
+    for case, r in sorted(rows.items()):
+        if r.get("topology", "colocated") == "colocated":
+            continue
+        if int(r.get("handoff_quiets", 0)) != 0:
+            fails.append(
+                f"{case}: handoff_quiets={r['handoff_quiets']} — the "
+                f"page handoff must drain via signal_wait_until alone, "
+                f"never a tick-global quiet/fence")
+        if int(r.get("handoff_signals", 0)) <= 0:
+            fails.append(
+                f"{case}: handoff_signals="
+                f"{r.get('handoff_signals')} — a disaggregated row "
+                f"that moved no pages benched nothing")
+    return fails
+
+
 def compare_attn(base: dict, fresh: dict, *, factor: float,
                  floor_us: float) -> list:
     """Gate the BENCH_attn.json microbench trajectory: kernel/ref row
@@ -216,6 +264,7 @@ def main() -> int:
     fails = compare(base, fresh, factor=args.factor,
                     floor_s=args.floor_s)
     fails += attn_pair_fails(fresh)
+    fails += disagg_pair_fails(fresh)
     n = len(set(by_case(base)) & set(by_case(fresh)))
     if args.attn_fresh:
         with open(args.attn_fresh) as f:

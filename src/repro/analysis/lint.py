@@ -4,10 +4,13 @@ Four rules, each encoding a convention the substrate's correctness
 arguments lean on but that nothing enforced mechanically until now:
 
   nbi-drain           every ``*_nbi`` issue must be dominated by a
-                      ``fence``/``quiet`` on all paths to the end of
-                      its function: a function that issues and returns
-                      with the op still pending has silently widened
-                      its contract to "caller must drain".  Explicitly
+                      ``fence``/``quiet``/``signal_wait_until`` on all
+                      paths to the end of its function: a function that
+                      issues and returns with the op still pending has
+                      silently widened its contract to "caller must
+                      drain" (``put_signal_nbi`` ends in ``_nbi`` and
+                      so is covered; its paired wait is the drain the
+                      rule accepts for it).  Explicitly
                       deferred drains are annotated
                       ``# shmem: deferred-drain`` on the call line or
                       the enclosing ``def`` line (the CommQueue wrapper
@@ -56,9 +59,13 @@ LAX_COLLECTIVES = frozenset({
     "ppermute", "pshuffle", "psum_scatter", "axis_size",
 })
 
-DRAIN_NAMES = frozenset({"fence", "quiet"})
+# signal_wait_until is the put-with-signal extension's per-transfer
+# drain point (core.signals): it validly completes the guarded
+# put_signal_nbi, so the nbi-drain walk accepts it next to fence/quiet
+# — and, being a drain, it is just as illegal inside a drain callback.
+DRAIN_NAMES = frozenset({"fence", "quiet", "signal_wait_until"})
 DRAIN_CALLBACK_FORBIDDEN = frozenset(
-    {"fence", "quiet", "barrier", "barrier_all"})
+    {"fence", "quiet", "barrier", "barrier_all", "signal_wait_until"})
 
 # path-status lattice for the post-dominator scan
 _DRAINED, _BAD, _CONT = "drained", "bad", "continue"

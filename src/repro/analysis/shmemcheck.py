@@ -30,7 +30,14 @@ code.  This module is that checker for the shmem substrate:
   * a drain re-entered from a drain callback (``fence``/``quiet``
     called while the same queue is draining) is flagged — the
     deadlock analogue of a blocking collective inside completion
-    handling.
+    handling;
+  * put-with-signal (``core.signals``) adds the per-transfer edge:
+    ``signal_wait_until`` retires EXACTLY the pending intervals of
+    puts guarding that signal word; reading the payload object while
+    its guard is still pending is a **signal-race** (the wait, not the
+    issue, is the completion point); and writing a registered signal
+    word with a plain ``put_nbi`` is a **raw-signal** (the word's
+    payload-before-signal guarantee only holds for signal updates).
 
 Findings are *reports*, not exceptions: each carries the rule, a
 message, and the source locations of both conflicting events, so a CI
@@ -86,6 +93,7 @@ class Finding:
     rule: str                 # "ww-race" | "wr-race" | "use-after-free"
                               # | "double-free" | "stale-handle"
                               # | "offset-asymmetry" | "nested-drain"
+                              # | "signal-race" | "raw-signal"
     message: str
     loc: str                  # source location of the flagged access
     other_loc: Optional[str] = None   # the conflicting earlier event
@@ -108,6 +116,9 @@ class _PendingWrite:
     seq: int
     loc: str
     reported_read: bool = False
+    sig_key: Optional[tuple] = None   # (sig name, word offset) guarding
+                                      # this write; retired by the wait
+    is_sig_word: bool = False         # the signal-word update itself
 
 
 def _overlap(a: _PendingWrite, lo, hi) -> bool:
@@ -126,6 +137,9 @@ class ShmemChecker:
         self.dropped = 0
         # queue id -> list[_PendingWrite] (retired at fence/quiet)
         self._pending: dict[int, list[_PendingWrite]] = {}
+        # queue id -> registered signal words {(name, offset)}: a word
+        # becomes a signal word at its first put_signal or wait
+        self._sig_words: dict[int, set] = {}
         self._draining: set[int] = set()
         # heap object lifetime, keyed by symmetric NAME: extents are
         # (offset, nbytes) tuples; a Counter because several heaps may
@@ -163,12 +177,13 @@ class ShmemChecker:
                 lo, hi = off, off + int(rows)
         except Exception:
             lo = hi = None
+        self._check_raw_signal(queue, handle, lo, hi, seq, loc)
         pend = self._pending.setdefault(id(queue), [])
         byte = self._row_bytes(handle)
         for dst in sorted({int(d) for _, d in pairs}):
             for w in pend:
                 if w.dst == dst and w.name == handle.name \
-                        and _overlap(w, lo, hi):
+                        and not w.is_sig_word and _overlap(w, lo, hi):
                     olo, ohi = max(w.lo, lo), min(w.hi, hi)
                     brange = (f"bytes [{olo * byte}, {ohi * byte})"
                               if byte else f"rows [{olo}, {ohi})")
@@ -180,6 +195,77 @@ class ShmemChecker:
                         f"{w.seq} and {seq}); separate them with "
                         f"fence({dst}) or quiet()", loc, w.loc)
             pend.append(_PendingWrite(dst, handle.name, lo, hi, seq, loc))
+
+    def _check_raw_signal(self, queue, handle, lo, hi, seq,
+                          loc: str) -> None:
+        """A plain put overlapping a registered signal word bypasses
+        the payload-before-signal protocol — a waiter can observe the
+        word flip with no payload guarantee behind it."""
+        words = self._sig_words.get(id(queue))
+        if not words or lo is None:
+            return
+        for name, off in sorted(words):
+            if name == handle.name and lo <= off < hi:
+                self._report(
+                    "raw-signal",
+                    f"plain put_nbi (seq {seq}) writes signal word "
+                    f"'{name}'+{off}: signal words carry the "
+                    f"payload-before-signal guarantee and must only be "
+                    f"written through put_signal_nbi", loc)
+
+    def on_put_signal(self, queue, handle, data, pairs, offset,
+                      payload_seq, sig_handle, sig_offset,
+                      sig_seq) -> None:
+        """Record the guarded pair: the payload interval AND the
+        signal-word update both join the pending set tagged with the
+        word's key, so the matching wait can retire exactly them."""
+        loc = _loc()
+        self._check_handle_live(handle, "put_signal_nbi", loc)
+        self._check_handle_live(sig_handle, "put_signal_nbi", loc)
+        key = (sig_handle.name, int(sig_offset))
+        self._sig_words.setdefault(id(queue), set()).add(key)
+        lo = hi = None
+        try:
+            off = operator.index(offset)
+            rows = queue.transport.put_rows(data)
+            if rows is not None:
+                lo, hi = off, off + int(rows)
+        except Exception:
+            lo = hi = None
+        pend = self._pending.setdefault(id(queue), [])
+        byte = self._row_bytes(handle)
+        for dst in sorted({int(d) for _, d in pairs}):
+            for w in pend:
+                if w.dst == dst and w.name == handle.name \
+                        and not w.is_sig_word and _overlap(w, lo, hi):
+                    olo, ohi = max(w.lo, lo), min(w.hi, hi)
+                    brange = (f"bytes [{olo * byte}, {ohi * byte})"
+                              if byte else f"rows [{olo}, {ohi})")
+                    self._report(
+                        "ww-race",
+                        f"unordered puts to overlapping range of "
+                        f"'{handle.name}' on PE {dst} ({brange}): delivery "
+                        f"order is undefined between drains (seqs "
+                        f"{w.seq} and {payload_seq}); separate them with "
+                        f"fence({dst}) or quiet()", loc, w.loc)
+            pend.append(_PendingWrite(dst, handle.name, lo, hi,
+                                      payload_seq, loc, sig_key=key))
+            pend.append(_PendingWrite(dst, sig_handle.name,
+                                      int(sig_offset), int(sig_offset) + 1,
+                                      sig_seq, loc, sig_key=key,
+                                      is_sig_word=True))
+
+    def on_signal_wait(self, queue, sig_handle, sig_offset) -> None:
+        """The per-transfer happens-before edge: retire EXACTLY the
+        pending intervals guarded by this signal word (payloads and the
+        word itself) — everything else stays pending."""
+        self._check_reentry(
+            queue, f"signal_wait_until({sig_handle.name}+{sig_offset})")
+        key = (sig_handle.name, int(sig_offset))
+        self._sig_words.setdefault(id(queue), set()).add(key)
+        pend = self._pending.get(id(queue))
+        if pend:
+            pend[:] = [w for w in pend if w.sig_key != key]
 
     def on_get_nbi(self, queue, handle, pairs, offset, size, seq) -> None:
         self._check_handle_live(handle, "get_nbi", _loc())
@@ -209,11 +295,21 @@ class ShmemChecker:
             if w.reported_read:
                 continue
             w.reported_read = True
-            self._report(
-                "wr-race",
-                f"heap state read while a put to '{w.name}' on PE "
-                f"{w.dst} (seq {w.seq}) is pending: the target range is "
-                f"undefined until fence/quiet", loc, w.loc)
+            if w.sig_key is not None:
+                name, off = w.sig_key
+                self._report(
+                    "signal-race",
+                    f"heap state read while a put-with-signal to "
+                    f"'{w.name}' on PE {w.dst} (seq {w.seq}) guarded by "
+                    f"'{name}'+{off} is pending: the payload is only "
+                    f"defined once signal_wait_until on that word "
+                    f"returns", loc, w.loc)
+            else:
+                self._report(
+                    "wr-race",
+                    f"heap state read while a put to '{w.name}' on PE "
+                    f"{w.dst} (seq {w.seq}) is pending: the target range "
+                    f"is undefined until fence/quiet", loc, w.loc)
 
     @contextlib.contextmanager
     def draining(self, queue):

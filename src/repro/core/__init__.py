@@ -12,6 +12,10 @@ Public API (mirrors OpenSHMEM 1.0 naming where meaningful):
                                     locally at issue; delivery is
                                     unordered until fence — per-dst —
                                     or quiet — full barrier)
+    put_signal_nbi,
+    signal_wait_until, SignalPad    put-with-signal per-transfer
+                                    completion (the shmem_put_signal
+                                    extension; see core.signals)
     barrier_all, broadcast,
     fcollect, reduce, allreduce,
     reduce_scatter, alltoall        collectives on p2p (§4.5)
@@ -29,6 +33,9 @@ from .ordering import (CommQueue, LocalTransport, NbiValue, PermuteTransport,
 from .p2p import get, heap_g, heap_get, heap_p, heap_put, put, ring_shift
 from .safety import (PoshSafetyError, debug_mode, is_debug, is_safe,
                      safe_mode)
+from .signals import (CMP_EQ, CMP_GE, CMP_GT, CMP_LE, CMP_LT, CMP_NE,
+                      SIGNAL_ADD, SIGNAL_SET, SignalPad, cmp_ok,
+                      put_signal_nbi, signal_wait_until)
 from .teams import ActiveSet, Team, TeamAxes, my_pe, team_size
 
 __all__ = [
@@ -36,6 +43,9 @@ __all__ = [
     "put", "get", "ring_shift", "heap_put", "heap_get", "heap_p", "heap_g",
     "CommQueue", "NbiValue", "Transport", "PermuteTransport",
     "LocalTransport", "put_nbi", "get_nbi", "fence", "quiet",
+    "put_signal_nbi", "signal_wait_until", "SignalPad", "cmp_ok",
+    "CMP_EQ", "CMP_NE", "CMP_GT", "CMP_GE", "CMP_LT", "CMP_LE",
+    "SIGNAL_SET", "SIGNAL_ADD",
     "barrier_all", "broadcast", "fcollect", "reduce", "allreduce",
     "reduce_scatter", "alltoall",
     "atomic_fadd", "atomic_swap", "atomic_cswap", "TicketLock",

@@ -88,13 +88,22 @@ def _autoenable() -> None:
 @dataclasses.dataclass
 class PendingPut:
     """One issued-but-undelivered put.  ``data`` is the issue-time
-    snapshot (local completion); ``seq`` is the global issue index."""
+    snapshot (local completion); ``seq`` is the global issue index.
+
+    A put-with-signal (``CommQueue.put_signal_nbi``) enqueues TWO of
+    these: the payload put, and a signal-word update whose ``signal``
+    field carries ``(op, value)`` (``data`` is None) and whose
+    ``signal_of`` names the payload's seq — the one delivery-order
+    constraint the model adds: within any drain the signal lands
+    after its payload (see ``_drain_order``)."""
 
     seq: int
     handle: SymHandle
     data: Any
     pairs: list[tuple[int, int]]
     offset: Any
+    signal: Optional[tuple] = None        # (op, value) for signal words
+    signal_of: Optional[int] = None       # payload seq this signal guards
 
     def dsts(self) -> set[int]:
         return {d for _, d in self.pairs}
@@ -176,6 +185,13 @@ class Transport:
             team: Team, offset, size: Optional[int]):
         raise NotImplementedError
 
+    def put_signal(self, state: HeapState, handle: SymHandle, value,
+                   pairs: Pairs, team: Team, offset, op: str) -> HeapState:
+        """Deliver one signal-word update (``shmem_put_signal``'s
+        second half).  ``op`` is ``"set"`` (overwrite) or ``"add"``
+        (fetch-accumulate, SHMEM_SIGNAL_ADD)."""
+        raise NotImplementedError
+
     def put_rows(self, data) -> Optional[int]:
         return None                       # unknown layout: no coalescing
 
@@ -194,6 +210,16 @@ class PermuteTransport(Transport):
     def get(self, state, handle, pairs, team, offset, size):
         return p2p.heap_get(state, handle, pairs, team, offset=offset,
                             size=size)
+
+    def put_signal(self, state, handle, value, pairs, team, offset, op):
+        import jax.numpy as jnp
+        if op == "add":
+            # fetch-accumulate needs a remote read; the permute path is
+            # write-only one round, so additive signals stay local-only
+            raise NotImplementedError(
+                "PermuteTransport delivers 'set' signals only")
+        data = jnp.full((1,), value, handle.dtype)
+        return p2p.heap_put(state, handle, data, pairs, team, offset=offset)
 
     def put_rows(self, data):
         shape = getattr(data, "shape", None)
@@ -230,6 +256,16 @@ class LocalTransport(Transport):
             out[reader] = buf[owner, offset:offset + size]
         return out
 
+    def put_signal(self, state, handle, value, pairs, team, offset, op):
+        out = dict(state)
+        out[handle.name] = buf = np.array(state[handle.name])
+        for _, d in pairs:
+            if op == "add":
+                buf[d, offset] += value
+            else:
+                buf[d, offset] = value
+        return out
+
     def put_rows(self, data):
         data = np.asarray(data)
         return int(data.shape[1]) if data.ndim > 1 else 1
@@ -246,9 +282,11 @@ class LocalTransport(Transport):
 class CommQueue:
     """Ordered communication pipeline over a team.
 
-    ``put_nbi``/``get_nbi`` enqueue; ``fence``/``quiet`` are the ONLY
-    drain points (the paper's §3.2 ordering model).  The queue owns the
-    heap state between drains::
+    ``put_nbi``/``get_nbi`` enqueue; ``fence``/``quiet`` are the
+    drain points (the paper's §3.2 ordering model), plus
+    ``signal_wait_until`` as the per-transfer completion the
+    put-with-signal extension adds (``core.signals``).  The queue owns
+    the heap state between drains::
 
         q = CommQueue(team, heap.zeros_state())
         q.put_nbi(h, x, pairs)            # returns immediately
@@ -276,10 +314,16 @@ class CommQueue:
         self._puts: list[PendingPut] = []
         self._gets: list[PendingGet] = []
         self._reduces: list[PendingReduce] = []
+        # signal-word guard map: (sig object name, word offset) -> the
+        # pending seqs (payload AND signal updates) a wait on that word
+        # retires.  signal_wait_until pops its key — per-transfer
+        # completion, the third drain class next to fence/quiet.
+        self._sig_guards: dict[tuple[str, int], list[int]] = {}
         self._seq = 0
         self._stats = {"puts": 0, "gets": 0, "reduces": 0, "fences": 0,
                        "quiets": 0, "drained": 0, "max_pending": 0,
-                       "coalesced": 0}
+                       "coalesced": 0, "signal_puts": 0,
+                       "signal_waits": 0}
 
     # ------------------------------------------------------------------
     # issue side — returns immediately (local completion)
@@ -303,6 +347,41 @@ class CommQueue:
         if _checker is not None:
             _checker.on_put_nbi(self, handle, data, pairs, offset, op.seq)
         return op.seq
+
+    def put_signal_nbi(self, handle: SymHandle, data, pairs: Pairs,
+                       sig_handle: SymHandle, sig_value, *, offset=0,
+                       sig_offset=0, sig_op: str = "set") -> int:
+        """``shmem_put_signal_nbi``: enqueue the payload put PLUS a
+        signal-word update that is delivered only AFTER the payload —
+        the one intra-drain ordering edge the model adds on top of
+        §3.2's unordered delivery.  ``sig_handle``/``sig_offset`` name
+        one word of a symmetric signal object (see ``core.signals``);
+        ``sig_op`` is ``"set"`` or ``"add"`` (SHMEM_SIGNAL_SET/ADD).
+        The pair is drained by ``signal_wait_until`` on that word (or
+        by any fence/quiet covering it).  Returns the payload's issue
+        seq."""
+        pairs = [(int(s), int(d)) for s, d in pairs]
+        if sig_op not in ("set", "add"):
+            raise ValueError(f"put_signal_nbi: bad sig_op {sig_op!r} "
+                             "(want 'set' or 'add')")
+        if isinstance(data, np.ndarray):
+            data = data.copy()            # local completion (see put_nbi)
+        payload = PendingPut(self._next_seq(), handle, data, pairs, offset)
+        self._puts.append(payload)
+        sig = PendingPut(self._next_seq(), sig_handle, None, pairs,
+                         int(sig_offset), signal=(sig_op, sig_value),
+                         signal_of=payload.seq)
+        self._puts.append(sig)
+        self._stats["puts"] += 1
+        self._stats["signal_puts"] += 1
+        key = (sig_handle.name, int(sig_offset))
+        self._sig_guards.setdefault(key, []).extend((payload.seq, sig.seq))
+        self._track_pending()
+        if _checker is not None:
+            _checker.on_put_signal(self, handle, data, pairs, offset,
+                                   payload.seq, sig_handle,
+                                   int(sig_offset), sig.seq)
+        return payload.seq
 
     def get_nbi(self, handle: SymHandle, pairs: Pairs, offset=0,
                 size: Optional[int] = None) -> NbiValue:
@@ -384,6 +463,7 @@ class CommQueue:
     def _quiet_impl(self) -> HeapState:
         self._stats["quiets"] += 1
         todo, self._puts = self._puts, []
+        self._sig_guards.clear()          # everything delivers below
         self._deliver_puts(todo)
         gets, self._gets = self._gets, []
         for g in gets:
@@ -397,12 +477,62 @@ class CommQueue:
             self._stats["drained"] += 1
         return self._state
 
+    def signal_wait_until(self, sig_handle: SymHandle, cmp: str, value,
+                          *, sig_offset=0, pe: Optional[int] = None
+                          ) -> HeapState:
+        """``shmem_signal_wait_until``: the per-transfer drain point.
+        Delivers EXACTLY the pending puts guarding the named signal
+        word — each payload before its signal update — and nothing
+        else: every unrelated pending put stays pending, which is what
+        makes this cheaper than a quiet (and what the property test
+        pins: a satisfied wait implies the guarded payload is visible,
+        and ONLY that payload).
+
+        ``cmp`` is one of ``core.signals``'s CMP_* spellings; ``pe``
+        names whose heap to check under a whole-system transport
+        (LocalTransport).  When the settled word still fails the
+        comparison — nothing pending could ever satisfy it — the real
+        call would spin forever, so this raises instead.  Returns the
+        heap state."""
+        if _checker is not None:
+            _checker.on_signal_wait(self, sig_handle, int(sig_offset))
+        self._stats["signal_waits"] += 1
+        key = (sig_handle.name, int(sig_offset))
+        seqs = set(self._sig_guards.pop(key, ()))
+        if seqs:
+            todo = [p for p in self._puts if p.seq in seqs]
+            self._puts = [p for p in self._puts if p.seq not in seqs]
+            self._deliver_puts(todo)
+        buf = self._state.get(sig_handle.name)
+        word = None
+        if isinstance(buf, np.ndarray):
+            if isinstance(self.transport, LocalTransport):
+                word = buf[int(pe)] if pe is not None else None
+            else:
+                word = buf
+        if word is not None:
+            from .signals import cmp_ok
+            cur = word[int(sig_offset)]
+            if not cmp_ok(int(cur), cmp, int(value)):
+                raise RuntimeError(
+                    f"signal_wait_until[{sig_handle.name}+{sig_offset}]: "
+                    f"word is {int(cur)}, fails {cmp} {int(value)} with "
+                    "no guarded put pending — this wait would block "
+                    "forever")
+        return self._state
+
     # ------------------------------------------------------------------
     def _deliver_puts(self, ops: list[PendingPut]) -> None:
         for op in self._coalesce(self._drain_order(ops)):
-            self._state = self.transport.put(
-                self._state, op.handle, op.data, op.pairs, self.team,
-                op.offset)
+            if op.signal is not None:
+                sig_op, val = op.signal
+                self._state = self.transport.put_signal(
+                    self._state, op.handle, val, op.pairs, self.team,
+                    op.offset, sig_op)
+            else:
+                self._state = self.transport.put(
+                    self._state, op.handle, op.data, op.pairs, self.team,
+                    op.offset)
             self._stats["drained"] += 1
 
     def _coalesce(self, ops: list[PendingPut]) -> list[PendingPut]:
@@ -435,6 +565,10 @@ class CommQueue:
             run, run_rows = [], 0
 
         for op in ops:
+            if op.signal is not None:     # signal words never coalesce
+                flush()
+                out.append(op)
+                continue
             rows = (self.transport.put_rows(op.data)
                     if isinstance(op.offset, (int, np.integer)) else None)
             if rows is None:
@@ -454,13 +588,41 @@ class CommQueue:
 
     def _drain_order(self, ops: list[PendingPut]) -> list[PendingPut]:
         """Intra-drain delivery order: mutually unordered by the model,
-        so any permutation is legal.  ``delivery_seed`` picks one
-        deterministically; None keeps issue order (also legal)."""
+        so any permutation is legal — EXCEPT that a signal-word update
+        lands after the payload it guards (put-with-signal's one
+        promise, restored by ``_signal_fixup`` after the shuffle).
+        ``delivery_seed`` picks one deterministically; None keeps issue
+        order (also legal, and payload-before-signal by issue)."""
         if self.delivery_seed is None or len(ops) < 2:
             return ops
         ops = list(ops)
         random.Random(self.delivery_seed).shuffle(ops)
-        return ops
+        return self._signal_fixup(ops)
+
+    @staticmethod
+    def _signal_fixup(ops: list[PendingPut]) -> list[PendingPut]:
+        """Move every signal update whose payload is in the same drain
+        to just after that payload, preserving the shuffled order of
+        everything else (the minimal repair: any shuffle with the
+        constraint applied is still a legal delivery order)."""
+        present = {op.seq for op in ops}
+        emitted: set[int] = set()
+        held: dict[int, list[PendingPut]] = {}
+        out: list[PendingPut] = []
+
+        def emit(op: PendingPut) -> None:
+            out.append(op)
+            emitted.add(op.seq)
+            for sig in held.pop(op.seq, ()):
+                emit(sig)
+
+        for op in ops:
+            if (op.signal_of is not None and op.signal_of in present
+                    and op.signal_of not in emitted):
+                held.setdefault(op.signal_of, []).append(op)
+            else:
+                emit(op)
+        return out
 
     def _next_seq(self) -> int:
         self._seq += 1

@@ -1,0 +1,123 @@
+"""Put-with-signal: per-transfer completion on the CommQueue.
+
+POSH's §3.2 model has exactly two drain points — ``fence`` (ordering
+per destination) and ``quiet`` (the full completion barrier) — so any
+consumer that wants ONE producer's payload must today pay for everyone
+else's outstanding traffic too.  Modern OpenSHMEM extensions (see
+"Toward a Unified GPU-Aware OpenSHMEM Specification" and "Intel SHMEM:
+GPU-initiated OpenSHMEM using SYCL" in PAPERS.md) close that gap with
+``shmem_put_signal`` / ``shmem_signal_wait_until``: the put carries a
+*signal word* update that the target delivers only after the payload,
+and the consumer spins on just that word.
+
+This module is the API surface for that extension over
+:class:`repro.core.ordering.CommQueue`:
+
+  * ``put_signal_nbi(queue, handle, data, pairs, sig_handle, value)``
+    enqueues the payload put plus the guarded signal update.  Within
+    any drain the signal is delivered AFTER the payload — the single
+    ordering edge added to the otherwise-unordered delivery shuffle
+    (``CommQueue._signal_fixup``).
+  * ``signal_wait_until(queue, sig_handle, cmp, value)`` drains exactly
+    the puts guarding that word — payloads first — and nothing else.
+    A satisfied wait therefore implies the guarded payload is visible,
+    and ONLY that payload (the property ``tests/test_ordering.py``
+    checks against the PR-2 maximal-write oracle).
+
+Signal words are ordinary symmetric objects: :class:`SignalPad` carves
+``n`` of them from a :class:`~repro.core.heap.SymmetricHeap` (one word
+per handoff ticket in ``repro.serve.disagg``), so Fact 1 gives every PE
+the pad at the same offset and a ticket index IS the remote address of
+its word.
+"""
+from __future__ import annotations
+
+import operator
+from typing import TYPE_CHECKING, Optional
+
+import numpy as np
+
+from .heap import SymHandle, SymmetricHeap
+
+if TYPE_CHECKING:                         # avoid a runtime cycle
+    from .ordering import CommQueue, HeapState, Pairs
+
+# comparison spellings (SHMEM_CMP_*)
+CMP_EQ = "eq"
+CMP_NE = "ne"
+CMP_GT = "gt"
+CMP_GE = "ge"
+CMP_LT = "lt"
+CMP_LE = "le"
+
+# signal-update ops (SHMEM_SIGNAL_*)
+SIGNAL_SET = "set"
+SIGNAL_ADD = "add"
+
+_CMPS = {CMP_EQ: operator.eq, CMP_NE: operator.ne, CMP_GT: operator.gt,
+         CMP_GE: operator.ge, CMP_LT: operator.lt, CMP_LE: operator.le}
+
+
+def cmp_ok(cur, cmp: str, value) -> bool:
+    """Evaluate one SHMEM_CMP_* comparison against a signal word."""
+    try:
+        fn = _CMPS[cmp]
+    except KeyError:
+        raise ValueError(f"unknown signal comparison {cmp!r} "
+                         f"(want one of {sorted(_CMPS)})") from None
+    return bool(fn(cur, value))
+
+
+# ======================================================================
+# free-function OpenSHMEM spellings
+# ======================================================================
+def put_signal_nbi(queue: "CommQueue", handle: SymHandle, data,
+                   pairs: "Pairs", sig_handle: SymHandle, sig_value, *,
+                   offset=0, sig_offset=0, sig_op: str = SIGNAL_SET) -> int:
+    """``shmem_put_signal_nbi`` — payload put + guarded signal update
+    onto ``queue``.  Drained per-transfer by ``signal_wait_until`` on
+    the same word (or by any covering fence/quiet)."""
+    return queue.put_signal_nbi(  # shmem: deferred-drain
+        handle, data, pairs, sig_handle, sig_value, offset=offset,
+        sig_offset=sig_offset, sig_op=sig_op)
+
+
+def signal_wait_until(queue: "CommQueue", sig_handle: SymHandle,
+                      cmp: str, value, *, sig_offset=0,
+                      pe: Optional[int] = None) -> "HeapState":
+    """``shmem_signal_wait_until`` — per-transfer drain point: delivers
+    exactly the puts guarding the named signal word, then checks the
+    settled word against ``cmp``/``value`` (raising where the real call
+    would spin forever)."""
+    return queue.signal_wait_until(sig_handle, cmp, value,
+                                   sig_offset=sig_offset, pe=pe)
+
+
+# ======================================================================
+# signal words as symmetric objects
+# ======================================================================
+class SignalPad:
+    """``n`` signal words carved from the symmetric heap — one per
+    in-flight handoff ticket.  The pad is one symmetric allocation, so
+    a ticket's word lives at the same offset on every PE (Fact 1) and
+    ``word(ticket)`` is its remote address on any of them.  Tickets
+    recycle words round-robin; callers must retire (wait on) a word
+    before its slot comes around again — ``repro.serve.disagg`` sizes
+    the pad past its in-flight bound, so recycling never outruns the
+    waits."""
+
+    def __init__(self, heap: SymmetricHeap, n: int, *,
+                 name: str = "sig_words", dtype=np.int64):
+        if n < 1:
+            raise ValueError("SignalPad needs at least one word")
+        self.n = int(n)
+        self.handle: SymHandle = heap.alloc(name, (self.n,),
+                                            np.dtype(dtype))
+
+    def word(self, ticket: int) -> int:
+        """The pad offset of ``ticket``'s signal word."""
+        return int(ticket) % self.n
+
+    def zeros(self) -> np.ndarray:
+        """A cleared pad object (initial heap-state value)."""
+        return np.zeros((self.n,), self.handle.dtype)

@@ -34,12 +34,25 @@ from repro.models import registry
 from repro.parallel.ctx import ParallelCtx
 
 
+def parse_disagg(spec: str) -> tuple[int, int]:
+    """``--disagg P+D`` topology spec -> (n_prefill, n_decode)."""
+    try:
+        p, d = spec.split("+")
+        n_prefill, n_decode = int(p), int(d)
+    except ValueError:
+        raise SystemExit(
+            f"--disagg wants P+D (e.g. 2+2), got {spec!r}") from None
+    if n_prefill < 1 or n_decode < 1:
+        raise SystemExit(f"--disagg {spec}: both cell counts must be >= 1")
+    return n_prefill, n_decode
+
+
 def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
                  n_pages: int = 64, max_batch: int = 4,
                  attn_impl: str = "ref", prefix_keep: bool = False,
                  prefill_chunk: int = 8, tick_tokens: int = 0,
                  sample_seed: int = 0, seed: int = 0, spec_k: int = 0,
-                 draft: str = "ngram"):
+                 draft: str = "ngram", disagg: str = ""):
     cfg = configs.get_smoke(arch)
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
                       backend=backend, param_dtype=jnp.float32,
@@ -54,6 +67,11 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
         # scfg.draft only names parameterless proposers; a draft ARCH
         # becomes an explicit DraftModelProposer below
         spec_k=spec_k, draft="ngram")
+    if disagg:
+        n_prefill, n_decode = parse_disagg(disagg)
+        return serve.DisaggEngine(params, cfg, ctx, scfg,
+                                  n_prefill=n_prefill,
+                                  n_decode=n_decode), cfg
     if spec_k > 0 and draft != "ngram":
         # --draft <arch>: a registry-backed small draft model on the
         # same mesh and page geometry (vocabularies must match); the
@@ -113,6 +131,11 @@ def main():
                     help="draft proposer: 'ngram' (prompt-lookup "
                          "self-draft) or a registry arch name for a "
                          "small draft model (e.g. gemma-2b)")
+    ap.add_argument("--disagg", default="",
+                    help="disaggregated topology 'P+D' (e.g. 2+2): P "
+                         "prefill cells + D decode cells with "
+                         "put-with-signal page handoff (empty = "
+                         "colocated single engine)")
     ap.add_argument("--trace", action="store_true",
                     help="print the per-request decode trace")
     args = ap.parse_args()
@@ -122,7 +145,8 @@ def main():
         n_pages=args.n_pages, max_batch=args.max_batch,
         attn_impl=args.attn_impl, prefill_chunk=args.prefill_chunk,
         tick_tokens=args.tick_tokens, sample_seed=args.sample_seed,
-        seed=args.seed, spec_k=args.spec_k, draft=args.draft)
+        seed=args.seed, spec_k=args.spec_k, draft=args.draft,
+        disagg=args.disagg)
     tcfg = serve.TrafficConfig(n_requests=args.requests, rate=args.rate,
                                vocab=cfg.vocab, seed=args.seed,
                                temperature=args.temperature,
@@ -133,7 +157,8 @@ def main():
           f"batch={args.max_batch} chunk={args.prefill_chunk} "
           f"sampling=(T={args.temperature} k={args.top_k} "
           f"p={args.top_p}) spec=(k={args.spec_k} "
-          f"draft={args.draft}) requests={len(reqs)}")
+          f"draft={args.draft}) "
+          f"topology={args.disagg or 'colocated'} requests={len(reqs)}")
     done = eng.run(reqs)
     if args.trace:
         for r in sorted(done, key=lambda r: r.rid):

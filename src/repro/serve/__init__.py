@@ -15,13 +15,19 @@ by one ``quiet()`` per scheduler tick, and LOSSLESS speculative
 decoding (``serve.spec``): pluggable draft proposers verified through
 a ``(B, k+1)`` prefill-machinery window with exact counter-RNG prefix
 acceptance and page-granular rewind, so spec streams are bit-identical
-to sequential decoding on every backend.
+to sequential decoding on every backend.  ``serve.disagg`` splits the
+mesh into prefill/decode CELLS: finished prefills stream their pages
+to a decode cell with ``put_signal_nbi`` (one signal word per handoff
+ticket) and the consumer adopts on ``signal_wait_until`` — per-transfer
+completion, zero tick-global quiets on the handoff path.
 
     from repro import serve
     eng = serve.ServeEngine(params, cfg, ctx, serve.ServeConfig())
     done = eng.run(serve.make_requests(serve.TrafficConfig()))
     eng.metrics()
 """
+from .disagg import (CellRouter, CellSpec, DisaggEngine, HandoffTicket,
+                     make_cells)
 from .engine import LocalExec, ServeConfig, ServeEngine, make_decode_step, \
     make_prefill, make_verify
 from .kv_cache import NULL_PAGE, PagedKVCache, PageMigration
@@ -35,6 +41,8 @@ from .traffic import TrafficConfig, make_requests
 
 __all__ = [
     "ServeConfig", "ServeEngine", "LocalExec",
+    "DisaggEngine", "CellRouter", "CellSpec", "HandoffTicket",
+    "make_cells",
     "make_decode_step", "make_prefill", "make_verify",
     "PagedKVCache", "PageMigration", "NULL_PAGE",
     "FCFSScheduler", "Request", "TickPlan",

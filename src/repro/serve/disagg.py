@@ -1,0 +1,408 @@
+"""Disaggregated prefill/decode serving cells with put-with-signal
+page handoff.
+
+Colocated continuous batching (``ServeEngine``) makes every decode
+tick share its batch with prefill chunks — chunking bounds the damage,
+but a prefill-heavy trace still steals decode budget.  Disaggregation
+(DistServe / Splitwise / Mooncake in PAPERS.md) splits the mesh into
+PREFILL cells and DECODE cells: prompts burn their compute on cells
+that decode never sees, and finished prefills migrate their KV pages
+to a decode cell once.
+
+The migration is where POSH earns its keep.  The colocated engine
+drains page moves with ONE ``quiet()`` per tick — a full completion
+barrier every cell would pay on every handoff.  Here each handoff is a
+*ticket*: the producer streams the sequence's pages into the consumer
+cell's mailbox with ``put_signal_nbi`` (every page guarded by the
+ticket's signal word, one word per ticket carved from the symmetric
+heap by :class:`~repro.core.signals.SignalPad`), and the consumer
+adopts the sequence the moment ``signal_wait_until`` on that word
+returns — a per-transfer drain that retires ONLY this ticket's pages.
+No cell ever issues a tick-global quiet for handoff traffic
+(``handoff_quiets == 0`` is asserted by the bench gate), and a decode
+cell consumes a sequence on signal fire instead of at a barrier shared
+with unrelated producers.
+
+Topology is host-side and explicit:
+
+  * :class:`CellRouter` — admits each prompt to the least-loaded
+    prefill cell (queued prompt tokens) and owns each handoff to the
+    least-loaded decode cell (live + inbound sequences);
+  * :class:`DisaggEngine` — one ``ServeEngine`` per cell
+    (``role="prefill"`` / ``role="decode"``), cell PE ids carved from
+    the flat PE space with :class:`repro.core.teams.ActiveSet`, and
+    ONE persistent handoff ``CommQueue`` over the cell space whose
+    stats expose ``handoff_signals`` / ``handoff_quiets``.
+
+Token streams are unchanged by construction: sampling is keyed
+``(rid, position)`` off ``ServeConfig.sample_seed``, so a sequence
+decoded on a different cell — in whatever batch composition — draws
+the exact tokens the colocated engine draws (the parity tests pin
+this, greedy and sampled, speculation on and off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.heap import SymmetricHeap
+from repro.core.ordering import CommQueue, LocalTransport
+from repro.core.signals import CMP_EQ, SignalPad
+from repro.core.teams import ActiveSet
+
+from .engine import ServeConfig, ServeEngine
+from .scheduler import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One serving cell: its index in the cell space, its role, and
+    the PE ids (flat mesh numbering) it owns — an OpenSHMEM active
+    set, so a 2-PE tensor-parallel cell is ``stride 1, size 2``."""
+
+    cell: int
+    role: str                      # "prefill" | "decode"
+    pes: tuple[int, ...]
+
+
+def make_cells(n_prefill: int, n_decode: int,
+               pes_per_cell: int = 1) -> list[CellSpec]:
+    """Carve ``n_prefill + n_decode`` cells out of the flat PE space,
+    prefill cells first, each owning ``pes_per_cell`` consecutive PEs
+    (``ActiveSet(start=cell * pes_per_cell, size=pes_per_cell)``)."""
+    if n_prefill < 1 or n_decode < 1:
+        raise ValueError("need at least one prefill and one decode cell")
+    cells = []
+    for c in range(n_prefill + n_decode):
+        aset = ActiveSet(start=c * pes_per_cell, size=pes_per_cell)
+        role = "prefill" if c < n_prefill else "decode"
+        cells.append(CellSpec(c, role, tuple(aset.pes())))
+    return cells
+
+
+@dataclasses.dataclass
+class HandoffTicket:
+    """One in-flight prefill->decode page handoff."""
+
+    ticket: int                    # unique id; signal value = ticket + 1
+    req: Request
+    src_cell: int
+    dst_cell: int
+    src_pages: list                # producer-pool page ids (resident)
+    dst_pages: list                # consumer-pool landing page ids
+    word: int                      # SignalPad offset guarding the ticket
+
+
+class CellRouter:
+    """Host-side admission + handoff routing across cells.
+
+    Least-loaded placement on both sides: prompts go to the prefill
+    cell with the fewest QUEUED PROMPT TOKENS still to compute
+    (waiting + running prefill remainders), handoffs go to the decode
+    cell with the fewest LIVE + INBOUND sequences.  Ties break to the
+    lowest cell index, so routing is deterministic for a given trace —
+    the property every parity test leans on."""
+
+    def __init__(self, engines: Sequence[ServeEngine],
+                 cells: Sequence[CellSpec]):
+        self.engines = list(engines)
+        self.cells = list(cells)
+        self.prefill = [c.cell for c in cells if c.role == "prefill"]
+        self.decode = [c.cell for c in cells if c.role == "decode"]
+        self.inbound = {c: 0 for c in self.decode}   # undelivered tickets
+
+    def prefill_load(self, cell: int) -> int:
+        e = self.engines[cell]
+        return (sum(r.n_prompt for r in e.sched.waiting)
+                + sum(r.n_prompt - r.n_done for r in e.sched.running
+                      if r.is_prefilling()))
+
+    def decode_load(self, cell: int) -> int:
+        return len(self.engines[cell].sched.running) + self.inbound[cell]
+
+    def route_prompt(self, req: Request) -> int:
+        return min(self.prefill, key=lambda c: (self.prefill_load(c), c))
+
+    def route_handoff(self, req: Request) -> Optional[int]:
+        """The decode cell that will own ``req`` — None when every
+        decode cell's batch (live + inbound) is full (backpressure:
+        the producer keeps the sequence parked, pages resident)."""
+        c = min(self.decode, key=lambda c: (self.decode_load(c), c))
+        if self.decode_load(c) >= self.engines[c].scfg.max_batch:
+            return None
+        return c
+
+
+class DisaggEngine:
+    """P prefill + D decode ``ServeEngine`` cells behind one submit/run
+    interface, handing sequences off through a put-with-signal mailbox.
+
+    The mailbox is a persistent :class:`CommQueue` over the CELL space
+    (``LocalTransport(n_cells)``): one symmetric ``kv_mail`` object
+    mirroring the page-pool geometry plus a :class:`SignalPad` of
+    ticket words.  Producers ``put_signal_nbi`` each exported page into
+    the consumer's mailbox rows at the LANDING page ids (the consumer
+    carved them with ``PagedKVCache.adopt_seq`` — that is the
+    block-table remap); the consumer drains with ONE
+    ``signal_wait_until`` per ticket, copies the landed rows into its
+    pool, and acknowledges so the producer frees its source pages.
+    ``stats()["handoff_quiets"]`` stays 0 — the per-transfer drain IS
+    the point."""
+
+    def __init__(self, params, cfg, ctx, scfg: ServeConfig, *,
+                 n_prefill: int = 1, n_decode: int = 1,
+                 pes_per_cell: int = 1, engines=None,
+                 delivery_seed: Optional[int] = 0,
+                 n_ticket_words: Optional[int] = None):
+        self.scfg = scfg
+        self.cells = make_cells(n_prefill, n_decode, pes_per_cell)
+        n_cells = len(self.cells)
+        if engines is None:
+            engines = [
+                ServeEngine(params, cfg, ctx, scfg, role=c.role,
+                            my_pe=c.pes[0])
+                for c in self.cells
+            ]
+        if len(engines) != n_cells:
+            raise ValueError(f"{len(engines)} engines for {n_cells} cells")
+        for e, c in zip(engines, self.cells):
+            if e.role != c.role:
+                raise ValueError(f"cell {c.cell} is {c.role} but its "
+                                 f"engine is {e.role}")
+        self.engines = list(engines)
+        self.router = CellRouter(self.engines, self.cells)
+
+        # the handoff mailbox: symmetric objects over the cell space.
+        # The page-row shape comes from the exec substrate (a mesh cell
+        # hands off its pages as stacked per-TP-rank shards), so the
+        # mailbox works for any pool layout.
+        kv0 = self.engines[0].kv
+        e0 = self.engines[0]
+        row0 = np.asarray(e0.exec.read_pages(e0.pool, [0]))
+        mail_heap = SymmetricHeap(("cells",))
+        self._kv_mail = mail_heap.alloc(
+            "kv_mail", (kv0.n_pages,) + row0.shape[1:], row0.dtype)
+        n_words = n_ticket_words or max(2 * scfg.max_batch, 4)
+        self.pad = SignalPad(mail_heap, n_words)
+        self._mail_state = {
+            "kv_mail": np.zeros((n_cells,) + self._kv_mail.shape,
+                                self._kv_mail.dtype),
+            self.pad.handle.name:
+                np.zeros((n_cells, self.pad.n), self.pad.handle.dtype),
+        }
+        self.hq = CommQueue("cells", self._mail_state,
+                            transport=LocalTransport(n_cells),
+                            delivery_seed=delivery_seed)
+        # a ticket word is reused only after its ticket was adopted —
+        # per consumer cell, so concurrent handoffs never share a word
+        self._free_words = {c: deque(range(self.pad.n))
+                            for c in self.router.decode}
+        self._inbox = {c: deque() for c in self.router.decode}
+        self._tickets = 0
+        self.ticks = 0
+        self.handoff = {"handoff_tickets": 0, "handoff_pages": 0,
+                        "handoff_deferred": 0}
+
+    # ------------------------------------------------------------------
+    @property
+    def finished(self) -> list:
+        out = []
+        for e in self.engines:
+            out.extend(e.finished)
+        return out
+
+    def has_work(self) -> bool:
+        return (any(e.sched.has_work() for e in self.engines)
+                or any(e.handoff_ready for e in self.engines)
+                or any(self._inbox.values()))
+
+    def submit(self, req: Request) -> None:
+        self.engines[self.router.route_prompt(req)].submit(req)
+
+    # ------------------------------------------------------------------
+    def tick(self, now: float = 0.0) -> None:
+        """One topology tick: prefill cells advance, finished prefills
+        ticket out (put-with-signal per page), decode cells drain their
+        inbox on signal fire, adopt, acknowledge, then advance."""
+        self.ticks += 1
+        for c in self.router.prefill:
+            e = self.engines[c]
+            if e.sched.has_work():
+                e.tick(now)
+        for c in self.router.prefill:
+            self._issue_handoffs(c)
+        for c in self.router.decode:
+            self._drain_inbox(c, now)
+            e = self.engines[c]
+            if e.sched.has_work():
+                e.tick(now)
+
+    def _issue_handoffs(self, src_cell: int) -> None:
+        src = self.engines[src_cell]
+        parked = []
+        while src.handoff_ready:
+            req = src.handoff_ready.pop(0)
+            dst_cell = self.router.route_handoff(req)
+            if dst_cell is None or not self._free_words[dst_cell]:
+                # backpressure: every decode batch (or the word pad) is
+                # full; the sequence stays parked, its pages resident
+                parked.append(req)
+                self.handoff["handoff_deferred"] += 1
+                continue
+            src_pages = src.kv.export_seq(req.rid)
+            dst_pages = self.engines[dst_cell].kv.adopt_seq(
+                req.rid, len(src_pages))
+            if dst_pages is None:            # consumer pool dry
+                src.kv.attach_seq(req.rid, src_pages)
+                src.kv.stats["exported_pages"] -= len(src_pages)
+                parked.append(req)
+                self.handoff["handoff_deferred"] += 1
+                continue
+            t = HandoffTicket(self._tickets, req, src_cell, dst_cell,
+                              src_pages, dst_pages,
+                              self._free_words[dst_cell].popleft())
+            self._tickets += 1
+            self._put_pages(t)
+            self.router.inbound[dst_cell] += 1
+            self._inbox[dst_cell].append(t)
+            self.handoff["handoff_tickets"] += 1
+            self.handoff["handoff_pages"] += len(src_pages)
+        src.handoff_ready.extend(parked)
+
+    def _put_pages(self, t: HandoffTicket) -> None:
+        """Stream one ticket's pages: every page is a put-with-signal
+        into the consumer's mailbox at its LANDING page id, all guarded
+        by the ticket's word (SIGNAL_SET of ``ticket + 1`` — the same
+        value per page, so the settled word is shuffle-invariant)."""
+        src = self.engines[t.src_cell]
+        rows = np.asarray(src.exec.read_pages(src.pool, t.src_pages))
+        n_cells = len(self.cells)
+        pairs = [(t.src_cell, t.dst_cell)]
+        for row, dp in zip(rows, t.dst_pages):
+            data = np.zeros((n_cells, 1) + row.shape, row.dtype)
+            data[t.src_cell, 0] = row
+            # drained per-transfer by _drain_inbox's signal_wait_until
+            self.hq.put_signal_nbi(  # shmem: deferred-drain
+                self._kv_mail, data, pairs, self.pad.handle,
+                t.ticket + 1, offset=dp, sig_offset=t.word)
+
+    def _drain_inbox(self, cell: int, now: float) -> None:
+        """Adopt every deliverable ticket: ONE ``signal_wait_until`` on
+        the ticket's word retires exactly its pages (never a quiet),
+        then the landed rows are copied into the cell pool and the
+        producer is acknowledged (frees its source pages, recycles the
+        word)."""
+        dst = self.engines[cell]
+        inbox = self._inbox[cell]
+        while inbox:
+            t = inbox[0]
+            st = self.hq.signal_wait_until(
+                self.pad.handle, CMP_EQ, t.ticket + 1,
+                sig_offset=t.word, pe=cell)
+            inbox.popleft()
+            rows = st["kv_mail"][cell][np.asarray(t.dst_pages)]
+            dst.pool = dst.exec.write_pages(dst.pool, t.dst_pages, rows)
+            dst.adopt_request(t.req, dst.kv.tables.pop(t.req.rid), now)
+            # ack: the producer's copy served its purpose
+            self.engines[t.src_cell].kv.release_pages(t.src_pages)
+            self.router.inbound[cell] -= 1
+            # the word only recycles once its ticket is fully retired
+            self._mail_state[self.pad.handle.name][cell, t.word] = 0
+            self._free_words[cell].append(t.word)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], *, clock: str = "tick",
+            max_ticks: int = 100_000) -> list:
+        """Replay an arrival trace to completion across the cells
+        (``clock`` as in ``ServeEngine.run``; the deterministic "tick"
+        clock is the default — it is what the parity suites compare)."""
+        import time
+        pending = sorted(requests, key=lambda r: r.t_arrive)
+        t0 = time.monotonic()
+        skipped = 0.0
+        for _ in range(max_ticks):
+            now = (self.ticks if clock == "tick"
+                   else time.monotonic() - t0 + skipped)
+            while pending and pending[0].t_arrive <= now:
+                self.submit(pending.pop(0))
+            if not self.has_work():
+                if not pending:
+                    return self.finished
+                if clock == "wall":
+                    skipped += pending[0].t_arrive - now
+                    now = time.monotonic() - t0 + skipped
+                self.submit(pending.pop(0))
+            self.tick(now)
+        raise RuntimeError(f"disagg loop did not converge in {max_ticks} "
+                           f"ticks ({len(self.finished)} finished)")
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Handoff-path counters.  ``handoff_signals`` counts
+        put-with-signal transfers and per-transfer waits on the mailbox
+        queue; ``handoff_quiets`` counts tick-global barriers on it —
+        the disagg contract is that it stays ZERO."""
+        hs = self.hq.stats()
+        out = dict(self.handoff)
+        out["handoff_signals"] = hs["signal_puts"]
+        out["handoff_waits"] = hs["signal_waits"]
+        out["handoff_quiets"] = hs["quiets"] + hs["fences"]
+        return out
+
+    def reset_metrics(self) -> None:
+        for e in self.engines:
+            e.reset_metrics()
+        self.ticks = 0
+        for k in self.handoff:
+            self.handoff[k] = 0
+        for k in self.hq._stats:
+            self.hq._stats[k] = 0
+
+    def metrics(self) -> dict:
+        """The colocated engine's summary shape, aggregated over cells,
+        plus the handoff counters and a per-cell breakdown."""
+        done = self.finished
+        lat = np.array([r.t_finish - r.t_arrive for r in done])
+        ttft = np.array([r.t_first - r.t_arrive for r in done
+                         if r.t_first is not None])
+        dec = np.asarray([g for e in self.engines for g in e.itl])
+        toks = sum(len(r.out) for r in done)
+        span = max((r.t_finish for r in done), default=0.0) \
+            - min((r.t_arrive for r in done), default=0.0)
+        pct = (lambda a, p: float(np.percentile(a, p)) if a.size else 0.0)
+
+        def agg(dicts):
+            out: dict = {}
+            for d in dicts:
+                for k, v in d.items():
+                    out[k] = out.get(k, 0) + v
+            return out
+
+        sched = agg(e.sched.stats for e in self.engines)
+        kv = agg(e.kv.stats for e in self.engines)
+        sp = agg(e.spec_stats for e in self.engines)
+        sp["accept_rate"] = (sp["accepted"] / sp["drafted"]
+                             if sp.get("drafted") else 0.0)
+        sp["tokens_per_tick"] = (sp["emitted"] / sp["verify_seqs"]
+                                 if sp.get("verify_seqs") else 0.0)
+        return {
+            "requests": len(done),
+            "tokens_out": int(toks),
+            "span_s": float(span),
+            "throughput_tok_s": toks / span if span > 0 else 0.0,
+            "latency_p50_s": pct(lat, 50), "latency_p99_s": pct(lat, 99),
+            "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+            "decode_p50_s": pct(dec, 50), "decode_p99_s": pct(dec, 99),
+            "ticks": self.ticks,
+            "sched": sched,
+            "kv": kv,
+            "spec": sp,
+            "handoff": self.stats(),
+            "cells": [{"cell": c.cell, "role": c.role, "pes": list(c.pes),
+                       "sched": dict(e.sched.stats),
+                       "kv": dict(e.kv.stats)}
+                      for c, e in zip(self.cells, self.engines)],
+        }

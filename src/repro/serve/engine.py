@@ -357,6 +357,18 @@ class LocalExec:
                                        migrations, system=True)
         return jnp.asarray(out[self.kv.handle.name][0])
 
+    # pool-layout hooks for the disaggregated handoff (serve.disagg):
+    # a page "row" here is the plain pool row; mesh substrates override
+    # these to expose their (replica, tp) layout as (page, tp-shard)
+    def read_pages(self, pool, pages):
+        """Host copies of pool rows ``pages`` — the handoff payload."""
+        return np.asarray(pool)[np.asarray(pages, np.int64)]
+
+    def write_pages(self, pool, pages, rows):
+        """Land handed-off ``rows`` at pool rows ``pages``."""
+        return pool.at[jnp.asarray(np.asarray(pages, np.int64))].set(
+            jnp.asarray(rows))
+
 
 # ======================================================================
 # the driver
@@ -369,8 +381,18 @@ class ServeEngine:
     def __init__(self, params, cfg, ctx: ParallelCtx, scfg: ServeConfig,
                  *, heap: Optional[SymmetricHeap] = None,
                  kv: Optional[PagedKVCache] = None, exec_=None,
-                 proposer=None, my_pe: int = 0):
+                 proposer=None, my_pe: int = 0, role: str = "both"):
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"unknown engine role {role!r}")
         self.cfg, self.ctx, self.scfg = cfg, ctx, scfg
+        # disaggregated cells (serve.disagg): a "prefill" engine stops
+        # at the first token and parks the finished sequence on
+        # ``handoff_ready``; a "decode" engine receives sequences via
+        # ``adopt_request`` (it can still re-prefill its own preemption
+        # victims — the counter-RNG sampler keeps streams identical
+        # wherever a position is recomputed)
+        self.role = role
+        self.handoff_ready: list = []
         if kv is None:
             heap = heap or SymmetricHeap(
                 (ctx.tp_axis,) if ctx.tp_size > 1 else ("data",))
@@ -461,11 +483,34 @@ class ServeEngine:
             self.sched.note_chunk(r, n, int(toks[i]), now)
             if not r.is_prefilling():
                 done.add(r.rid)
+                if self.role == "prefill" and not r.finished():
+                    # prefill cell: this sequence's life here ends with
+                    # its first token — park it for the page handoff
+                    # (pages stay resident as the put-signal payload
+                    # source until the decode cell acknowledges)
+                    self.sched.release(r)
+                    self.handoff_ready.append(r)
+                    continue
                 self._last_tok[r.rid] = now
                 self._maybe_finish(r, now)
         return done
 
+    def adopt_request(self, req: Request, pages, now: float = 0.0) -> None:
+        """Decode-cell half of a disaggregated handoff: attach the
+        landing pages (already filled by the producer's put-with-signal
+        stream, drained by the router's ``signal_wait_until``) and enter
+        the sequence into this cell's scheduler mid-life."""
+        if self.role == "prefill":
+            raise RuntimeError("a prefill cell cannot adopt sequences")
+        self.kv.attach_seq(req.rid, pages)
+        self.sched.adopt(req)
+        # its first token was emitted on the producer cell; the next
+        # inter-token gap is measured from adoption
+        self._last_tok[req.rid] = now
+
     def _decode_tick(self, skip_rids, now):
+        if self.role == "prefill":
+            return
         batch = [r for r in self.sched.running
                  if not r.is_prefilling() and r.rid not in skip_rids]
         if not batch:

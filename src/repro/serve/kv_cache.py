@@ -82,7 +82,8 @@ class PagedKVCache:
         self.pin_budget = max((n_pages - 1) // 4, 2)
         self.pinned_pages = 0
         self.stats = {"page_allocs": 0, "page_frees": 0, "migrations": 0,
-                      "prefix_hits": 0, "rewound_pages": 0}
+                      "prefix_hits": 0, "rewound_pages": 0,
+                      "exported_pages": 0, "adopted_pages": 0}
 
     # ------------------------------------------------------------------
     # geometry
@@ -166,6 +167,35 @@ class PagedKVCache:
             return None
         self.stats["page_allocs"] += n
         return [self._free.pop() for _ in range(n)]
+
+    # ------------------------------------------------------------------
+    # cross-pool handoff (disaggregated prefill/decode cells)
+    # ------------------------------------------------------------------
+    def export_seq(self, seq_id) -> list[int]:
+        """Detach a sequence's block table for a cross-cell handoff:
+        the pages leave the table but NOT the pool — they stay resident
+        (and readable as the put-with-signal payload source) until the
+        consumer cell acknowledges adoption, at which point the
+        producer returns them with ``release_pages``.  Returns the page
+        ids in table order."""
+        pages = self.tables.pop(seq_id)
+        self.stats["exported_pages"] += len(pages)
+        return pages
+
+    def adopt_seq(self, seq_id, n: int) -> Optional[list[int]]:
+        """The consumer half of a handoff: carve ``n`` landing pages
+        from this pool and attach them as ``seq_id``'s block table.
+        The LANDING ids are this pool's own — the block-table remap a
+        cross-cell move needs happens here, not in the payload (page
+        contents are position-independent rows).  All-or-nothing: None
+        when the pool cannot cover the sequence (the router keeps the
+        ticket pending)."""
+        pages = self.take_pages(n)
+        if pages is None:
+            return None
+        self.attach_seq(seq_id, pages)
+        self.stats["adopted_pages"] += n
+        return pages
 
     def release_pages(self, pages: Sequence[int]) -> None:
         self.stats["page_frees"] += len(pages)

@@ -140,7 +140,8 @@ class FCFSScheduler:
         self._admit_seq = itertools.count()
         self._admit_idx: dict = {}       # rid -> admission ticket
         self.stats = {"admitted": 0, "resumed": 0, "preempted": 0,
-                      "finished": 0, "ticks": 0, "prefill_tokens": 0}
+                      "finished": 0, "ticks": 0, "prefill_tokens": 0,
+                      "released": 0, "adopted": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -304,6 +305,30 @@ class FCFSScheduler:
     def _start(self, req: Request) -> None:
         self.running.append(req)
         self._admit_idx[req.rid] = next(self._admit_seq)
+
+    # ------------------------------------------------------------------
+    # disaggregated handoff (serve.disagg): a sequence leaves one cell's
+    # scheduler mid-life and joins another's
+    # ------------------------------------------------------------------
+    def release(self, req: Request) -> None:
+        """Hand a sequence off: remove it from this cell's running set
+        WITHOUT freeing pages or resetting progress (contrast
+        ``_preempt``) — its KV stays resident as the handoff payload
+        source until the consumer cell acknowledges adoption."""
+        self.running.remove(req)             # identity (eq=False)
+        self.stats["released"] += 1
+
+    def adopt(self, req: Request) -> None:
+        """Receive a handed-off sequence: it enters this cell's running
+        set mid-life (prompt consumed, first token emitted), youngest in
+        eviction order like any fresh admission.  The caller has already
+        attached its landing pages (``PagedKVCache.adopt_seq``)."""
+        if len(self.running) >= self.max_batch:
+            raise RuntimeError(
+                f"adopt of {req.rid}: cell batch is full "
+                f"({self.max_batch}) — the router must gate on slots")
+        self._start(req)
+        self.stats["adopted"] += 1
 
     # ------------------------------------------------------------------
     def advance(self, req: Request, token: int, now: float = 0.0) -> None:

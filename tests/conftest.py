@@ -5,8 +5,9 @@ With ``REPRO_SHMEMCHECK=1`` every test runs under
 before each test, and any finding it accumulated fails the owning test
 at teardown — so a race is attributed to the test that raced, not to a
 global end-of-session report.  All findings are additionally written to
-``shmemcheck-report.json`` (path overridable via
-``REPRO_SHMEMCHECK_REPORT``) for CI artifact upload.
+``shmemcheck-report.json`` under pytest's session tmp dir — never the
+CWD — with the full path overridable via ``REPRO_SHMEMCHECK_REPORT``
+for CI artifact upload.
 
 Tests that *deliberately* exercise racy or pending-state behaviour —
 the ordering property tests replay many legal interleavings of
@@ -64,11 +65,22 @@ def pytest_runtest_teardown(item, nextitem):
         pytrace=False)
 
 
+def _report_path(config) -> str:
+    override = os.environ.get("REPRO_SHMEMCHECK_REPORT")
+    if override:
+        return override
+    try:
+        base = str(config._tmp_path_factory.getbasetemp())
+    except Exception:
+        import tempfile
+        base = tempfile.gettempdir()
+    return os.path.join(base, "shmemcheck-report.json")
+
+
 def pytest_sessionfinish(session, exitstatus):
     if not _ENABLED:
         return
-    path = os.environ.get("REPRO_SHMEMCHECK_REPORT",
-                          "shmemcheck-report.json")
+    path = _report_path(session.config)
     try:
         with open(path, "w", encoding="utf-8") as fh:
             json.dump({"findings": _ALL, "count": len(_ALL)}, fh, indent=2)

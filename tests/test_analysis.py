@@ -315,6 +315,103 @@ def test_findings_cap_bounds_memory():
 
 
 # ======================================================================
+# put-with-signal rules: signal-race / raw-signal
+# ======================================================================
+SIG = SymHandle("sig", (4,), np.dtype(np.int64), 32, 32)
+
+
+def _sig_queue(seed=7):
+    return CommQueue("pe", {"buf": np.zeros((N_PE, 8), np.float32),
+                            "sig": np.zeros((N_PE, 4), np.int64)},
+                     transport=LocalTransport(N_PE), delivery_seed=seed)
+
+
+def test_signal_race_read_before_wait_flagged():
+    """Reading state while a guarded transfer is in flight is a
+    SIGNAL-race, not a generic wr-race: the fix is the wait, and the
+    message says so.  Both the payload and its signal word are
+    undefined until the wait returns."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.put_signal_nbi(HANDLE, _payload(5.0), [(0, 1)], SIG, 1,
+                         offset=2, sig_offset=0)
+        _ = q.state
+        q.signal_wait_until(SIG, "eq", 1, sig_offset=0, pe=1)
+    assert _rules(chk) == ["signal-race", "signal-race"]
+    assert "signal_wait_until" in chk.report()[0].message
+
+
+def test_signal_read_after_wait_clean():
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.put_signal_nbi(HANDLE, _payload(5.0), [(0, 1)], SIG, 1,
+                         offset=2, sig_offset=0)
+        q.signal_wait_until(SIG, "eq", 1, sig_offset=0, pe=1)
+        _ = q.state
+    assert chk.report() == []
+
+
+def test_wait_retires_exactly_its_guards():
+    """A wait on word 0 leaves word 1's ticket pending: a read after
+    it still races with ticket B (and ONLY ticket B)."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.put_signal_nbi(HANDLE, _payload(1.0), [(0, 1)], SIG, 1,
+                         offset=0, sig_offset=0)
+        q.put_signal_nbi(HANDLE, _payload(2.0), [(0, 1)], SIG, 2,
+                         offset=4, sig_offset=1)
+        q.signal_wait_until(SIG, "eq", 1, sig_offset=0, pe=1)
+        _ = q.state
+        q.signal_wait_until(SIG, "eq", 2, sig_offset=1, pe=1)
+    rules = _rules(chk)
+    assert rules == ["signal-race", "signal-race"]
+    # both findings belong to ticket B (word 1), none to the retired A
+    assert all("'sig'+1" in f.message for f in chk.report())
+
+
+def test_raw_signal_put_on_signal_word_flagged():
+    """A plain put_nbi to a word that put_signal traffic guards races
+    with signal delivery no wait can see — its own rule."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.put_signal_nbi(HANDLE, _payload(1.0), [(0, 1)], SIG, 1,
+                         offset=0, sig_offset=2)
+        q.signal_wait_until(SIG, "eq", 1, sig_offset=2, pe=1)
+        q.put_nbi(SIG, np.ones((N_PE, 1), np.int64), [(0, 1)], offset=2)
+        q.quiet()
+    assert "raw-signal" in _rules(chk)
+
+
+def test_raw_signal_other_offset_clean():
+    """Plain puts to the REST of a signal pad are ordinary data."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.put_signal_nbi(HANDLE, _payload(1.0), [(0, 1)], SIG, 1,
+                         offset=0, sig_offset=2)
+        q.signal_wait_until(SIG, "eq", 1, sig_offset=2, pe=1)
+        q.put_nbi(SIG, np.ones((N_PE, 1), np.int64), [(0, 1)], offset=0)
+        q.quiet()
+    assert chk.report() == []
+
+
+def test_multi_page_ticket_same_word_no_ww_race():
+    """The handoff idiom — several put_signal_nbi guarded by ONE word
+    (same SET value) — must not be read as the signal word ww-racing
+    itself; and a fence covering the pairs retires the guards too."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        for i in range(3):
+            q.put_signal_nbi(HANDLE, _payload(float(i)), [(0, 1)], SIG,
+                             7, offset=i, sig_offset=3)
+        q.signal_wait_until(SIG, "eq", 7, sig_offset=3, pe=1)
+        q.put_signal_nbi(HANDLE, _payload(9.0), [(0, 2)], SIG, 8,
+                         offset=0, sig_offset=3)
+        q.fence()                        # covering drain is also legal
+        _ = q.state
+    assert chk.report() == []
+
+
+# ======================================================================
 # lint fixtures — one per rule, both polarities
 # ======================================================================
 def _lint(src, relpath="repro/serve/fixture.py"):
@@ -473,6 +570,51 @@ def test_lint_plain_callback_clean():
             return r
     """)
     assert errs == []
+
+
+def test_lint_put_signal_drained_by_wait_clean():
+    """signal_wait_until is a first-class drain for the nbi rule — the
+    put-with-signal idiom needs no quiet."""
+    errs = _lint("""
+        def handoff(q, h, x, pairs, sig):
+            q.put_signal_nbi(h, x, pairs, sig, 1, sig_offset=0)
+            q.signal_wait_until(sig, "eq", 1, sig_offset=0, pe=1)
+            return q.state
+    """)
+    assert errs == []
+
+
+def test_lint_put_signal_without_wait_flagged():
+    errs = _lint("""
+        def leak(q, h, x, pairs, sig):
+            q.put_signal_nbi(h, x, pairs, sig, 1, sig_offset=0)
+            return q.state
+    """)
+    assert [e.rule for e in errs] == ["nbi-drain"]
+
+
+def test_lint_put_signal_deferred_drain_suppresses():
+    """The producer/consumer split: issue here, wait elsewhere — the
+    annotation carries that contract (disagg's _put_pages idiom)."""
+    errs = _lint("""
+        def issue(q, h, x, pairs, sig, t):
+            q.put_signal_nbi(  # shmem: deferred-drain
+                h, x, pairs, sig, t + 1, sig_offset=0)
+    """)
+    assert errs == []
+
+
+def test_lint_signal_wait_in_callback_flagged():
+    """A blocking signal wait inside completion handling deadlocks the
+    same way quiet does — drain-callback covers it."""
+    errs = _lint("""
+        def bad(q, g, sig):
+            r = q.allreduce_nbi(
+                g, lambda x: (q.signal_wait_until(sig, "eq", 1), x)[1])
+            q.quiet()
+            return r
+    """)
+    assert [e.rule for e in errs] == ["drain-callback"]
 
 
 def test_lint_src_tree_is_clean():

@@ -267,6 +267,50 @@ def test_attn_pair_gate_requires_smoke_kernel_row():
     assert cb.attn_pair_fails(_payload(smoke=dict(ROW))) == []
 
 
+def test_disagg_pair_gate_requires_topology_pair():
+    """Real serve payloads (rows carry ``topology``) must keep both
+    halves of the colocated/disagg_2p2d pair; synthetic fixtures
+    without the field are exempt."""
+    cb = _load_check_bench()
+    disagg = dict(ROW, topology="2+2", handoff_signals=11,
+                  handoff_waits=8, handoff_quiets=0)
+    ok = _payload(colocated=dict(ROW, topology="colocated"),
+                  disagg_2p2d=dict(disagg))
+    assert cb.disagg_pair_fails(ok) == []
+    missing = _payload(colocated=dict(ROW, topology="colocated"))
+    fails = cb.disagg_pair_fails(missing)
+    assert len(fails) == 1 and "disagg_2p2d" in fails[0]
+    wrong = _payload(colocated=dict(ROW, topology="1+1"),
+                     disagg_2p2d=dict(disagg))
+    assert any("expected 'colocated'" in f
+               for f in cb.disagg_pair_fails(wrong))
+    # fixtures without topology anywhere: gate stays silent
+    assert cb.disagg_pair_fails(_payload(smoke=dict(ROW))) == []
+
+
+def test_disagg_gate_pins_zero_handoff_quiets():
+    """The acceptance bar's drain contract, enforced on every disagg
+    row: one tick-global quiet on the handoff queue fails the gate, as
+    does a disagg row that moved no pages."""
+    cb = _load_check_bench()
+    base = dict(ROW, topology="2+2", handoff_signals=11,
+                handoff_quiets=0)
+    ok = _payload(colocated=dict(ROW, topology="colocated"),
+                  disagg_2p2d=dict(base),
+                  smoke_disagg=dict(ROW, topology="1+1",
+                                    handoff_signals=3,
+                                    handoff_quiets=0))
+    assert cb.disagg_pair_fails(ok) == []
+    quiety = _payload(colocated=dict(ROW, topology="colocated"),
+                      disagg_2p2d=dict(base, handoff_quiets=2))
+    fails = cb.disagg_pair_fails(quiety)
+    assert len(fails) == 1 and "signal_wait_until" in fails[0]
+    idle = _payload(colocated=dict(ROW, topology="colocated"),
+                    disagg_2p2d=dict(base, handoff_signals=0))
+    fails = cb.disagg_pair_fails(idle)
+    assert len(fails) == 1 and "handoff_signals" in fails[0]
+
+
 ATTN_ROW = dict(impl="kernel", us_per_call=500.0, max_err_vs_ref=1e-7,
                 err_tol=1e-5)
 

@@ -388,6 +388,297 @@ def test_allreduce_nbi_issue_order_and_barrier():
 
 
 # ======================================================================
+# put-with-signal: payload-before-signal + the per-transfer drain,
+# property-tested against the same maximal-write oracle
+# ======================================================================
+N_SIG = 4
+SIG_HANDLE = SymHandle("sig", (N_SIG,), np.dtype(np.int64), 256,
+                       N_SIG * 8)
+# payload rows are partitioned so the property's assertions are exact:
+# plain puts write rows [0, _SIG_ROW0), each put-with-signal owns ONE
+# unique row in [_SIG_ROW0, OBJ_LEN)
+_SIG_ROW0 = 3
+
+
+def gen_signal_sequence(rng: random.Random):
+    """Random issue sequence mixing plain puts, fences and
+    put-with-signals (unique payload row per put-signal, signal words
+    drawn from a small pad, value always 1)."""
+    events = []
+    val = 0
+    sig_rows = list(range(_SIG_ROW0, OBJ_LEN))
+    rng.shuffle(sig_rows)
+    for _ in range(rng.randint(2, 12)):
+        kind = rng.choices(["put", "fence", "putsig"],
+                           weights=[5, 2, 4])[0]
+        if kind == "putsig" and not sig_rows:
+            kind = "put"
+        if kind == "put":
+            k = rng.randint(1, N_PE)
+            pairs = list(zip(rng.sample(range(N_PE), k),
+                             rng.sample(range(N_PE), k)))
+            offset = rng.randrange(_SIG_ROW0)
+            rows = rng.randint(1, _SIG_ROW0 - offset)
+            val += 1
+            values = {s: 100.0 * val + s for s, _ in pairs}
+            events.append(("put", pairs, offset, rows, values))
+        elif kind == "fence":
+            events.append(("fence", rng.choice([None] +
+                                               list(range(N_PE)))))
+        else:
+            k = rng.randint(1, N_PE)
+            pairs = list(zip(rng.sample(range(N_PE), k),
+                             rng.sample(range(N_PE), k)))
+            val += 1
+            values = {s: 100.0 * val + s for s, _ in pairs}
+            events.append(("putsig", pairs, sig_rows.pop(), values,
+                           rng.randrange(N_SIG)))
+    return events
+
+
+def _as_put_events(events):
+    """The oracle's view: a put-with-signal's payload is a 1-row put
+    (the signal word lives in a different object the buf oracle never
+    sees)."""
+    out = []
+    for e in events:
+        if e[0] == "putsig":
+            _, pairs, off, values, _word = e
+            out.append(("put", pairs, off, 1, values))
+        else:
+            out.append(e)
+    return out
+
+
+def check_signal_sequence(events):
+    """Replay per seed; fire ONE signal_wait_until mid-stream and pin
+    its contract — the guarded payloads (and only they) become
+    visible — then quiet and check the final state against the PR-2
+    maximal-write oracle."""
+    cands = oracle_candidates(_as_put_events(events))
+    finals = {}
+    for seed in SEEDS:
+        state = {"buf": np.zeros((N_PE, OBJ_LEN), np.float32),
+                 "sig": np.zeros((N_PE, N_SIG), np.int64)}
+        q = CommQueue("pe", state, transport=LocalTransport(N_PE),
+                      delivery_seed=seed)
+        pend = []                        # mirror of the queue's pending ops
+        for e in events:
+            if e[0] == "put":
+                _, pairs, offset, rows, values = e
+                data = np.zeros((N_PE, rows), np.float32)
+                for s, _ in pairs:
+                    data[s] = values[s] + \
+                        np.arange(rows, dtype=np.float32) / 16.0
+                q.put_nbi(HANDLE, data, pairs, offset=offset)
+                data.fill(-999.0)        # local completion
+                pend.append(e)
+            elif e[0] == "fence":
+                q.fence(e[1])
+                pend = [p for p in pend
+                        if e[1] is not None
+                        and e[1] not in {d for _, d in p[1]}]
+            else:
+                _, pairs, off, values, word = e
+                data = np.zeros((N_PE, 1), np.float32)
+                for s, _ in pairs:
+                    data[s] = values[s]
+                q.put_signal_nbi(HANDLE, data, pairs, SIG_HANDLE, 1,
+                                 offset=off, sig_offset=word)
+                data.fill(-999.0)        # local completion
+                pend.append(e)
+        guarded = [p for p in pend if p[0] == "putsig"]
+        if guarded:
+            word = guarded[0][4]
+            mine = [p for p in guarded if p[4] == word]
+            before = {k: np.array(v) for k, v in q.state.items()}
+            pe = mine[0][1][0][1]        # a dst of a guarded put
+            q.signal_wait_until(SIG_HANDLE, "ne", 0, sig_offset=word,
+                                pe=pe)
+            after = q.state
+            # the guarded payloads are visible ...
+            touched_buf, touched_sig = set(), set()
+            for _, pairs, off, values, _w in mine:
+                for s, d in pairs:
+                    assert after["buf"][d, off] == values[s], \
+                        f"seed {seed}: guarded payload not visible"
+                    assert after["sig"][d, word] == 1
+                    touched_buf.add((d, off))
+                    touched_sig.add((d, word))
+            # ... and ONLY they: nothing else moved at the wait
+            diff_buf = {tuple(i) for i in
+                        np.argwhere(before["buf"] != after["buf"])}
+            diff_sig = {tuple(i) for i in
+                        np.argwhere(before["sig"] != after["sig"])}
+            assert diff_buf <= touched_buf, (seed, diff_buf, touched_buf)
+            assert diff_sig <= touched_sig, (seed, diff_sig, touched_sig)
+        buf = np.asarray(q.quiet()["buf"])
+        assert q.pending_ops() == 0
+        finals[seed] = buf
+        for d in range(N_PE):
+            for elem in range(OBJ_LEN):
+                got = float(buf[d, elem])
+                allowed = cands.get((d, elem))
+                if allowed is None:
+                    assert got == 0.0, (d, elem, got)
+                else:
+                    assert got in allowed, \
+                        f"dst {d} elem {elem}: {got} not in {allowed} " \
+                        f"(seed {seed})"
+    for (d, elem), allowed in cands.items():
+        if len(allowed) == 1:
+            vals = {float(finals[s][d, elem]) for s in SEEDS}
+            assert len(vals) == 1, (d, elem, vals)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.shmem_racy        # replays deliberately-racy sequences
+    @settings(max_examples=220, deadline=None)
+    @given(st.integers(0, 2 ** 32 - 1))
+    def test_put_signal_model_property(seed):
+        check_signal_sequence(gen_signal_sequence(random.Random(seed)))
+else:
+    @pytest.mark.shmem_racy        # replays deliberately-racy sequences
+    @pytest.mark.parametrize("chunk", range(11))
+    def test_put_signal_model_property(chunk):
+        # 11 chunks x 20 sequences = 220 examples, hypothesis-free
+        for i in range(20):
+            check_signal_sequence(
+                gen_signal_sequence(random.Random(7000 + chunk * 20 + i)))
+
+
+class _RecordingTransport(LocalTransport):
+    """LocalTransport that logs the actual delivery order."""
+
+    def __init__(self, n_pe):
+        super().__init__(n_pe)
+        self.log = []
+
+    def put(self, state, handle, data, pairs, team, offset):
+        self.log.append(("put", handle.name, int(offset),
+                         int(np.shape(data)[-1])))
+        return super().put(state, handle, data, pairs, team, offset)
+
+    def put_signal(self, state, handle, value, pairs, team, offset, op):
+        self.log.append(("signal", handle.name, int(offset)))
+        return super().put_signal(state, handle, value, pairs, team,
+                                  offset, op)
+
+
+def _sig_queue(seed=None, transport=None):
+    state = {"buf": np.zeros((N_PE, OBJ_LEN), np.float32),
+             "sig": np.zeros((N_PE, N_SIG), np.int64)}
+    return CommQueue("pe", state,
+                     transport=transport or LocalTransport(N_PE),
+                     delivery_seed=seed)
+
+
+def test_payload_delivered_before_signal_every_shuffle():
+    """The one ordering edge put-with-signal adds: within any drain,
+    for every legal delivery shuffle, the signal word lands AFTER its
+    payload (everything else still shuffles freely)."""
+    for seed in list(range(30)) + [None]:
+        tr = _RecordingTransport(N_PE)
+        q = _sig_queue(seed, transport=tr)
+        for w in range(OBJ_LEN - _SIG_ROW0):
+            q.put_nbi(HANDLE, _payload(0, 50.0 + w), [(0, 1)], offset=0)
+            q.put_signal_nbi(HANDLE, _payload(0, 1.0 + w), [(0, 1)],
+                             SIG_HANDLE, 1, offset=_SIG_ROW0 + w,
+                             sig_offset=w)
+        q.quiet()
+        for w in range(OBJ_LEN - _SIG_ROW0):
+            # coalescing may fold the payload into a wider run; find
+            # the delivery that covers its row
+            pay = next(i for i, e in enumerate(tr.log)
+                       if e[0] == "put" and e[1] == "buf"
+                       and e[2] <= _SIG_ROW0 + w < e[2] + e[3])
+            sig = tr.log.index(("signal", "sig", w))
+            assert pay < sig, (seed, w, tr.log)
+
+
+@pytest.mark.shmem_racy            # reads state with puts in flight
+def test_signal_wait_drains_only_the_guarded_transfer():
+    """signal_wait_until is PER-TRANSFER completion: the guarded
+    payload+signal deliver, every unrelated pending put stays pending
+    (no hidden quiet)."""
+    for seed in SEEDS:
+        q = _sig_queue(seed)
+        q.put_nbi(HANDLE, _payload(0, 9.0), [(0, 2)], offset=0)
+        q.put_signal_nbi(HANDLE, _payload(0, 5.0), [(0, 1)], SIG_HANDLE,
+                         7, offset=3, sig_offset=1)
+        q.put_signal_nbi(HANDLE, _payload(0, 6.0), [(0, 1)], SIG_HANDLE,
+                         8, offset=4, sig_offset=2)
+        q.signal_wait_until(SIG_HANDLE, "eq", 7, sig_offset=1, pe=1)
+        buf = np.asarray(q.state["buf"])
+        sig = np.asarray(q.state["sig"])
+        assert buf[1, 3] == 5.0 and sig[1, 1] == 7    # guarded: visible
+        assert buf[2, 0] == 0.0                       # plain put: pending
+        assert buf[1, 4] == 0.0 and sig[1, 2] == 0    # other ticket: pending
+        assert q.pending_ops() == 3                   # put + other pair
+        q.quiet()
+        assert np.asarray(q.state["buf"])[2, 0] == 9.0
+        assert np.asarray(q.state["sig"])[1, 2] == 8
+
+
+def test_signal_wait_without_pending_guard():
+    """A wait on an already-satisfied word (its guard drained earlier
+    by a covering fence/quiet) returns immediately; an unsatisfiable
+    wait raises instead of spinning forever."""
+    q = _sig_queue()
+    q.put_signal_nbi(HANDLE, _payload(0, 2.0), [(0, 1)], SIG_HANDLE, 3,
+                     offset=3, sig_offset=0)
+    q.quiet()                        # drains payload AND signal
+    st = q.signal_wait_until(SIG_HANDLE, "eq", 3, sig_offset=0, pe=1)
+    assert st["buf"][1, 3] == 2.0
+    with pytest.raises(RuntimeError, match="block forever"):
+        q.signal_wait_until(SIG_HANDLE, "eq", 99, sig_offset=0, pe=1)
+
+
+def test_signal_add_accumulates_per_page_idiom():
+    """SIGNAL_ADD: one word counts N guarded transfers; the consumer
+    waits CMP_GE N (the multi-page handoff-ticket idiom)."""
+    for seed in SEEDS:
+        q = _sig_queue(seed)
+        for i in range(3):
+            q.put_signal_nbi(HANDLE, _payload(0, 10.0 + i), [(0, 2)],
+                             SIG_HANDLE, 1, offset=_SIG_ROW0 + i,
+                             sig_offset=3, sig_op="add")
+        st = q.signal_wait_until(SIG_HANDLE, "ge", 3, sig_offset=3, pe=2)
+        assert st["sig"][2, 3] == 3
+        np.testing.assert_allclose(st["buf"][2, _SIG_ROW0:_SIG_ROW0 + 3],
+                                   [10.0, 11.0, 12.0])
+
+
+def test_signal_stats_and_free_functions():
+    from repro.core import (CMP_EQ, SignalPad, put_signal_nbi,
+                            signal_wait_until)
+    q = _sig_queue()
+    put_signal_nbi(q, HANDLE, _payload(0, 1.0), [(0, 1)], SIG_HANDLE, 1,
+                   offset=3, sig_offset=0)
+    signal_wait_until(q, SIG_HANDLE, CMP_EQ, 1, sig_offset=0, pe=1)
+    st = q.stats()
+    assert st["signal_puts"] == 1 and st["signal_waits"] == 1
+    assert st["quiets"] == 0         # per-transfer drain, no barrier
+    assert st["drained"] == 2        # payload + signal word
+    assert q.pending_ops() == 0
+    # SignalPad: symmetric words, identical offsets across
+    # identically-driven heaps (Fact 1), round-robin ticket words
+    pads = []
+    for _ in range(2):
+        h = SymmetricHeap(("data",), capacity_bytes=1 << 20)
+        h.alloc("kv", (8, 4), np.float32)
+        pads.append(SignalPad(h, 6))
+    assert pads[0].handle.offset == pads[1].handle.offset
+    assert pads[0].word(2) == 2 and pads[0].word(8) == 2
+    assert pads[0].zeros().shape == (6,)
+    with pytest.raises(ValueError):
+        q.put_signal_nbi(HANDLE, _payload(0, 1.0), [(0, 1)], SIG_HANDLE,
+                         1, sig_op="bogus")
+    with pytest.raises(ValueError, match="unknown signal comparison"):
+        q.signal_wait_until(SIG_HANDLE, "??", 0, sig_offset=0, pe=0)
+
+
+# ======================================================================
 # heap addressing used by the queue: O(log n) resolve, boundary-exact
 # ======================================================================
 def test_resolve_bisect_boundaries():
