@@ -27,9 +27,15 @@ and trace served monolithically vs split 2 prefill + 2 decode cells
 with put-with-signal page handoff — disagg rows carry
 ``handoff_signals``/``handoff_quiets`` counters, and check_bench pins
 ``handoff_quiets`` to ZERO (per-transfer completion carries the whole
-handoff load).  ``--smoke`` runs the smallest cases — one greedy, one
+handoff load).  The CONTROL-PLANE pair (``router_host``/``router_amo``)
+runs the same 2+2 disagg shape and trace with the router as the only
+knob — host Python-loop scheduling vs lock-free CAS admission rings +
+claim-word mailbox + symmetric page pool — and its amo row carries
+``router_amos``/``router_quiets``/``steals``/``alloc_cas_retries``
+(check_bench enforces the pair, equal token counts, and zero quiets on
+the AMO path).  ``--smoke`` runs the smallest cases — one greedy, one
 with the Pallas paged-attention KERNELS, one SAMPLED, one SPECULATIVE,
-one DISAGGREGATED — so the `make verify` freshness
+one DISAGGREGATED, plus the router pair — so the `make verify` freshness
 gate covers all serving modes end-to-end; the full sweep emits
 the same smoke rows under the same case names, which is what lets
 ``scripts/check_bench.py`` match fresh smoke rows against the
@@ -80,19 +86,45 @@ def repeated_requests(n_requests, vocab, rate, seed, *, max_new=16,
     return reqs
 
 
+def audit_case_isolation(eng):
+    """Per-case pool isolation: every case re-constructs its engine,
+    and the engine's page pools must end SELF-CONTAINED — each cell's
+    pages all back on its own free list/stack (or parked in that cell's
+    prefix index), so a bench row can never alias page ids into the
+    next case's freshly-built pools.  Runs after metrics are read and
+    fails the bench loudly on a leak (a quiet leak here is exactly the
+    cross-case aliasing the topology/router pairs would then measure)."""
+    for cell in getattr(eng, "engines", [eng]):
+        kv = cell.kv
+        parked = sum(len(pages) for _, pages in kv._prefix.values())
+        free = kv.n_free()
+        if free + parked != kv.n_pages - 1:
+            raise SystemExit(
+                f"serve_bench: case left a non-conserved pool on a "
+                f"{cell.role} cell — {free} free + {parked} prefix-"
+                f"parked != {kv.n_pages - 1} grantable pages")
+
+
 def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
              max_batch, n_requests, rate, seed, *, sampling="greedy",
              prefill_chunk=8, tick_tokens=0, long_frac=0.25,
-             spec_k=0, workload="poisson", warmup=True, disagg=""):
+             spec_k=0, workload="poisson", warmup=True, disagg="",
+             router="host"):
     from repro import serve
+    from repro.analysis import shmemcheck
     from repro.launch.serve import build_engine
 
+    # isolate the (module-global) shmemcheck hooks per case: the
+    # previous case's engine is garbage by now and CPython recycles
+    # object ids, so stale per-queue checker state could alias onto
+    # this case's freshly-built pool/mailbox queues
+    shmemcheck.reset()
     eng, cfg = build_engine(arch, backend=backend,
                             page_tokens=page_tokens, n_pages=n_pages,
                             max_batch=max_batch, attn_impl=attn_impl,
                             prefill_chunk=prefill_chunk,
                             tick_tokens=tick_tokens, seed=seed,
-                            spec_k=spec_k, disagg=disagg)
+                            spec_k=spec_k, disagg=disagg, router=router)
     temp, top_k, top_p = SAMPLING[sampling]
 
     def trace(seed_, n):
@@ -143,25 +175,35 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "spec_drafted": m["spec"]["drafted"],
         "spec_emitted": m["spec"]["emitted"],
         "topology": disagg or "colocated",
+        "router": router,
     }
     if disagg:
         # handoff counters only exist on disagg rows — check_bench
-        # keys its topology gate off their presence
+        # keys its topology gate off their presence.  The router/
+        # allocator counters ride along (all zero in host mode): the
+        # amo row's router_quiets is the lock-free no-barrier pin, and
+        # steals/alloc_cas_retries are the contention trajectory
         h = m["handoff"]
         row.update(handoff_tickets=h["handoff_tickets"],
                    handoff_pages=h["handoff_pages"],
                    handoff_signals=h["handoff_signals"],
                    handoff_waits=h["handoff_waits"],
-                   handoff_quiets=h["handoff_quiets"])
+                   handoff_quiets=h["handoff_quiets"],
+                   router_amos=h["router_amos"],
+                   router_quiets=h["router_quiets"],
+                   steals=h["steals"],
+                   alloc_cas_retries=h["alloc_cas_retries"])
+    audit_case_isolation(eng)
     return row
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="three tiny cases — greedy, sampled, "
-                         "speculative — refreshed IN PLACE inside the "
-                         "committed file (verify-gate freshness)")
+                    help="tiny cases — greedy, kernel, sampled, "
+                         "speculative, disagg, router host/amo pair — "
+                         "refreshed IN PLACE inside the committed file "
+                         "(verify-gate freshness)")
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=16.0)
@@ -199,6 +241,17 @@ def main():
         # handoff_quiets counter is what check_bench pins to zero
         ("smoke_disagg", "xla", "ref", 4, 32, 3, 6, "greedy",
          {"disagg": "1+1"}),
+        # the control-plane pair: identical 2+2 topology and trace,
+        # the router is the ONLY knob — host Python-loop scheduling
+        # vs CAS-arbitrated admission rings + claim-word mailbox +
+        # symmetric page pools.  Token streams are bit-identical
+        # (tier-1 pins the streams themselves; check_bench pins pair
+        # presence, equal token counts, and zero quiets on both the
+        # handoff and the router/allocator queues of the amo row)
+        ("router_host", "xla", "ref", 4, 48, 3, 6, "greedy",
+         {"disagg": "2+2"}),
+        ("router_amo", "xla", "ref", 4, 48, 3, 6, "greedy",
+         {"disagg": "2+2", "router": "amo"}),
     ]
     if args.smoke:
         cases = SMOKE_CASES
@@ -275,6 +328,10 @@ def main():
             spec += (f"  [{row['topology']}] signals "
                      f"{row['handoff_signals']} quiets "
                      f"{row['handoff_quiets']}")
+        if row["router"] == "amo":
+            spec += (f"  [amo] amos {row.get('router_amos', 0)} "
+                     f"steals {row.get('steals', 0)} "
+                     f"cas_retries {row.get('alloc_cas_retries', 0)}")
         print(f"{case:>22}: {row['throughput_tok_s']:8.1f} tok/s  "
               f"p50 {row['latency_p50_s']*1e3:7.1f} ms  "
               f"p99 {row['latency_p99_s']*1e3:7.1f} ms  "

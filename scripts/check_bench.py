@@ -27,6 +27,16 @@ every disaggregated row must report ``handoff_quiets == 0`` with
 ``handoff_signals > 0`` — the put-with-signal page handoff completing
 per transfer, never through a tick-global quiet.
 
+A control-plane (router) gate rides along too: payloads whose rows
+carry ``router`` must keep the ``router_host``/``router_amo`` pair
+(same topology and trace, the router the only knob), the pair's token
+counts must be EQUAL (the streams are bit-identical by contract, so
+``tokens_out``/``requests`` moving apart means the lock-free control
+plane changed a scheduling decision), and the amo row must show real
+lock-free work (``router_amos > 0``) with ``router_quiets == 0`` and
+``handoff_quiets == 0`` — neither the CAS admission rings, the page
+pools, nor the mailbox may fall back to a tick-global barrier.
+
 Two attention-kernel gates ride along:
 
   * serve rows must still carry the smoke ``attn_impl`` kernel/ref PAIR
@@ -71,6 +81,9 @@ SERVE_ATTN_PAIR = (("smoke", "ref"), ("smoke_kernel", "kernel"))
 # the disaggregation topology pair the full sweep must keep benching:
 # (case, required topology)
 SERVE_DISAGG_PAIR = (("colocated", "colocated"), ("disagg_2p2d", "2+2"))
+
+# the control-plane pair: same shape/trace, router is the only knob
+SERVE_ROUTER_PAIR = (("router_host", "host"), ("router_amo", "amo"))
 
 
 def load_baseline(path: str | None, fname: str = "BENCH_serve.json") -> dict:
@@ -192,6 +205,61 @@ def disagg_pair_fails(fresh: dict) -> list:
     return fails
 
 
+def router_pair_fails(fresh: dict) -> list:
+    """The sweep must keep benching the ``router_host``/``router_amo``
+    control-plane pair, their token counts must match (streams are
+    bit-identical by contract — tier-1 pins the streams, this pins the
+    row-level evidence), and the amo half must have done real lock-free
+    work without a single global barrier: ``router_amos > 0`` and
+    ``router_quiets == 0`` (CAS rings + page pools) on top of the
+    ``handoff_quiets == 0`` the disagg gate already pins.  Only
+    enforced on payloads whose rows carry ``router`` (real serve-bench
+    files); synthetic unit fixtures are unaffected."""
+    rows = by_case(fresh)
+    if not any("router" in r for r in rows.values()):
+        return []
+    fails = []
+    for case, mode in SERVE_ROUTER_PAIR:
+        r = rows.get(case)
+        if r is None:
+            fails.append(
+                f"router pair: serve case '{case}' missing — the "
+                f"router={mode} half of the host/amo control-plane "
+                f"pair must always be benched")
+        elif r.get("router") != mode:
+            fails.append(
+                f"router pair: serve case '{case}' has router="
+                f"{r.get('router')!r}, expected {mode!r}")
+    host = rows.get("router_host")
+    amo = rows.get("router_amo")
+    if host is not None and amo is not None:
+        for key in ("tokens_out", "requests"):
+            if host.get(key) != amo.get(key):
+                fails.append(
+                    f"router pair: {key} differs — host "
+                    f"{host.get(key)} vs amo {amo.get(key)}; the "
+                    f"control plane must not change token streams")
+    for case, r in sorted(rows.items()):
+        if r.get("router", "host") != "amo":
+            continue
+        if int(r.get("router_quiets", 0)) != 0:
+            fails.append(
+                f"{case}: router_quiets={r['router_quiets']} — the "
+                f"lock-free control plane (admission rings + page "
+                f"pools) must never fall back to a global quiet/fence")
+        if int(r.get("router_amos", 0)) <= 0:
+            fails.append(
+                f"{case}: router_amos={r.get('router_amos')} — an amo "
+                f"row whose router issued no AMOs benched the host "
+                f"loop twice")
+        if int(r.get("handoff_quiets", 0)) != 0:
+            fails.append(
+                f"{case}: handoff_quiets={r['handoff_quiets']} on the "
+                f"AMO path — claim-word mailbox slots must complete "
+                f"per transfer, never via a tick-global quiet")
+    return fails
+
+
 def compare_attn(base: dict, fresh: dict, *, factor: float,
                  floor_us: float) -> list:
     """Gate the BENCH_attn.json microbench trajectory: kernel/ref row
@@ -265,6 +333,7 @@ def main() -> int:
                     floor_s=args.floor_s)
     fails += attn_pair_fails(fresh)
     fails += disagg_pair_fails(fresh)
+    fails += router_pair_fails(fresh)
     n = len(set(by_case(base)) & set(by_case(fresh)))
     if args.attn_fresh:
         with open(args.attn_fresh) as f:

@@ -4,7 +4,8 @@ Four rules, each encoding a convention the substrate's correctness
 arguments lean on but that nothing enforced mechanically until now:
 
   nbi-drain           every ``*_nbi`` issue must be dominated by a
-                      ``fence``/``quiet``/``signal_wait_until`` on all
+                      ``fence``/``quiet``/``signal_wait_until``/
+                      ``amo_wait`` on all
                       paths to the end of its function: a function that
                       issues and returns with the op still pending has
                       silently widened its contract to "caller must
@@ -63,9 +64,13 @@ LAX_COLLECTIVES = frozenset({
 # drain point (core.signals): it validly completes the guarded
 # put_signal_nbi, so the nbi-drain walk accepts it next to fence/quiet
 # — and, being a drain, it is just as illegal inside a drain callback.
-DRAIN_NAMES = frozenset({"fence", "quiet", "signal_wait_until"})
+# amo_wait is the same per-word completion point for atomics
+# (core.atomics): amo_nbi issues retire under it without a fence.
+DRAIN_NAMES = frozenset({"fence", "quiet", "signal_wait_until",
+                         "amo_wait"})
 DRAIN_CALLBACK_FORBIDDEN = frozenset(
-    {"fence", "quiet", "barrier", "barrier_all", "signal_wait_until"})
+    {"fence", "quiet", "barrier", "barrier_all", "signal_wait_until",
+     "amo_wait"})
 
 # path-status lattice for the post-dominator scan
 _DRAINED, _BAD, _CONT = "drained", "bad", "continue"

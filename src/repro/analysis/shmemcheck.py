@@ -37,7 +37,18 @@ code.  This module is that checker for the shmem substrate:
     its guard is still pending is a **signal-race** (the wait, not the
     issue, is the completion point); and writing a registered signal
     word with a plain ``put_nbi`` is a **raw-signal** (the word's
-    payload-before-signal guarantee only holds for signal updates).
+    payload-before-signal guarantee only holds for signal updates);
+  * queue AMOs (``CommQueue.amo_nbi``) add the linearization edge: an
+    AMO is its own linearization point, so two pending AMOs on one
+    word are NEVER a race (the drain order linearizes them) and
+    ``amo_wait`` retires exactly the word's pending AMOs — but a plain
+    ``put_nbi`` overlapping a registered ATOMIC word (or an AMO on a
+    word with a plain put pending) is an **amo-race**: the shuffle
+    decides whether the blind write lands before or after the
+    read-modify-write, so the fetched value is undefined;
+  * ``signal_reset`` (the queue-visible word-recycling path) is only
+    legal on a retired word — resetting while guarded transfers are
+    still pending is flagged as a **signal-race**.
 
 Findings are *reports*, not exceptions: each carries the rule, a
 message, and the source locations of both conflicting events, so a CI
@@ -94,6 +105,7 @@ class Finding:
                               # | "double-free" | "stale-handle"
                               # | "offset-asymmetry" | "nested-drain"
                               # | "signal-race" | "raw-signal"
+                              # | "amo-race"
     message: str
     loc: str                  # source location of the flagged access
     other_loc: Optional[str] = None   # the conflicting earlier event
@@ -119,6 +131,9 @@ class _PendingWrite:
     sig_key: Optional[tuple] = None   # (sig name, word offset) guarding
                                       # this write; retired by the wait
     is_sig_word: bool = False         # the signal-word update itself
+    amo_key: Optional[tuple] = None   # (name, word offset) of a pending
+                                      # AMO; retired by amo_wait — AMOs
+                                      # never ww-race each other
 
 
 def _overlap(a: _PendingWrite, lo, hi) -> bool:
@@ -140,6 +155,10 @@ class ShmemChecker:
         # queue id -> registered signal words {(name, offset)}: a word
         # becomes a signal word at its first put_signal or wait
         self._sig_words: dict[int, set] = {}
+        # queue id -> registered atomic words {(name, offset)}: a word
+        # becomes atomic at its first amo_nbi/amo_wait; plain puts
+        # touching it afterwards are amo-races
+        self._amo_words: dict[int, set] = {}
         self._draining: set[int] = set()
         # heap object lifetime, keyed by symmetric NAME: extents are
         # (offset, nbytes) tuples; a Counter because several heaps may
@@ -178,12 +197,14 @@ class ShmemChecker:
         except Exception:
             lo = hi = None
         self._check_raw_signal(queue, handle, lo, hi, seq, loc)
+        self._check_amo_word(queue, handle, lo, hi, seq, loc)
         pend = self._pending.setdefault(id(queue), [])
         byte = self._row_bytes(handle)
         for dst in sorted({int(d) for _, d in pairs}):
             for w in pend:
                 if w.dst == dst and w.name == handle.name \
-                        and not w.is_sig_word and _overlap(w, lo, hi):
+                        and not w.is_sig_word and w.amo_key is None \
+                        and _overlap(w, lo, hi):
                     olo, ohi = max(w.lo, lo), min(w.hi, hi)
                     brange = (f"bytes [{olo * byte}, {ohi * byte})"
                               if byte else f"rows [{olo}, {ohi})")
@@ -212,6 +233,85 @@ class ShmemChecker:
                     f"'{name}'+{off}: signal words carry the "
                     f"payload-before-signal guarantee and must only be "
                     f"written through put_signal_nbi", loc)
+
+    def _check_amo_word(self, queue, handle, lo, hi, seq,
+                        loc: str) -> None:
+        """A plain put overlapping a registered atomic word races the
+        read-modify-write cycle: the shuffle decides whether the blind
+        write lands before or after the AMO, so the fetched value (and
+        the settled word) is undefined."""
+        words = self._amo_words.get(id(queue))
+        if not words or lo is None:
+            return
+        for name, off in sorted(words):
+            if name == handle.name and lo <= off < hi:
+                self._report(
+                    "amo-race",
+                    f"plain put_nbi (seq {seq}) writes atomic word "
+                    f"'{name}'+{off}: words carrying AMO traffic are "
+                    f"linearized by the drain order and must only be "
+                    f"updated through amo_nbi", loc)
+
+    def on_amo(self, queue, handle, offset, pairs, seq, op) -> None:
+        """One queue AMO issued.  The word becomes a registered atomic
+        word; the AMO joins the pending set tagged ``amo_key`` (retired
+        by ``amo_wait``).  Pending AMOs on the same word are NOT
+        checked against each other — each is its own linearization
+        point — but a pending PLAIN put covering the word is an
+        amo-race (the mirror of ``_check_amo_word``)."""
+        loc = _loc()
+        self._check_handle_live(handle, "amo_nbi", loc)
+        key = (handle.name, int(offset))
+        self._amo_words.setdefault(id(queue), set()).add(key)
+        pend = self._pending.setdefault(id(queue), [])
+        lo, hi = int(offset), int(offset) + 1
+        for dst in sorted({int(d) for _, d in pairs}):
+            for w in pend:
+                if w.dst == dst and w.name == handle.name \
+                        and w.amo_key is None and not w.is_sig_word \
+                        and _overlap(w, lo, hi):
+                    self._report(
+                        "amo-race",
+                        f"amo_nbi ({op}, seq {seq}) on '{handle.name}'"
+                        f"+{int(offset)} while a plain put (seq {w.seq}) "
+                        f"covering the word is pending: the shuffle "
+                        f"decides whether the blind write lands before "
+                        f"or after the read-modify-write", loc, w.loc)
+            pend.append(_PendingWrite(dst, handle.name, lo, hi, seq, loc,
+                                      amo_key=key))
+
+    def on_amo_wait(self, queue, handle, offset) -> None:
+        """The AMO linearization edge: retire exactly the pending AMOs
+        on the named word — everything else stays pending."""
+        self._check_reentry(queue,
+                            f"amo_wait({handle.name}+{offset})")
+        key = (handle.name, int(offset))
+        self._amo_words.setdefault(id(queue), set()).add(key)
+        pend = self._pending.get(id(queue))
+        if pend:
+            pend[:] = [w for w in pend if w.amo_key != key]
+
+    def on_signal_reset(self, queue, sig_handle, sig_offset,
+                        pairs) -> None:
+        """Word recycling through the queue.  Legal only on a RETIRED
+        word: pending transfers still guarded by it would have their
+        completion evidence wiped before the wait could observe it."""
+        loc = _loc()
+        self._check_handle_live(sig_handle, "signal_reset", loc)
+        key = (sig_handle.name, int(sig_offset))
+        self._sig_words.setdefault(id(queue), set()).add(key)
+        pend = self._pending.get(id(queue))
+        if not pend:
+            return
+        for w in pend:
+            if w.sig_key == key:
+                self._report(
+                    "signal-race",
+                    f"signal_reset of '{key[0]}'+{key[1]} while a "
+                    f"transfer guarded by it (seq {w.seq}) is still "
+                    f"pending: recycle a word only after its wait "
+                    f"retired every guarded put", loc, w.loc)
+                break
 
     def on_put_signal(self, queue, handle, data, pairs, offset,
                       payload_seq, sig_handle, sig_offset,

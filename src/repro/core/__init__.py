@@ -21,10 +21,15 @@ Public API (mirrors OpenSHMEM 1.0 naming where meaningful):
     reduce_scatter, alltoall        collectives on p2p (§4.5)
     atomic_fadd/swap/cswap,
     TicketLock                      §4.6 adaptation (owner-computes)
+    atomic_*_nbi, amo_wait          §4.6 on the queue path: nonblocking
+                                    fetch-&-op, its own linearization
+                                    point, drained like a signal
     Team, ActiveSet                 PE addressing (§4.7)
     safe_mode, debug_mode           _SAFE/_DEBUG compile modes (§4.7)
 """
-from .atomics import TicketLock, atomic_cswap, atomic_fadd, atomic_swap
+from .atomics import (TicketLock, amo_wait, atomic_cswap,
+                      atomic_cswap_nbi, atomic_fadd, atomic_fadd_nbi,
+                      atomic_fetch_nbi, atomic_swap, atomic_swap_nbi)
 from .collectives import (allreduce, alltoall, barrier_all, broadcast,
                           fcollect, reduce, reduce_scatter)
 from .heap import HeapState, SymHandle, SymmetricHeap
@@ -49,6 +54,8 @@ __all__ = [
     "barrier_all", "broadcast", "fcollect", "reduce", "allreduce",
     "reduce_scatter", "alltoall",
     "atomic_fadd", "atomic_swap", "atomic_cswap", "TicketLock",
+    "atomic_fetch_nbi", "atomic_fadd_nbi", "atomic_swap_nbi",
+    "atomic_cswap_nbi", "amo_wait",
     "Team", "ActiveSet", "TeamAxes", "my_pe", "team_size",
     "safe_mode", "debug_mode", "is_safe", "is_debug", "PoshSafetyError",
 ]

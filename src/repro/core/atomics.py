@@ -16,6 +16,15 @@ deterministic SPMD; `TicketLock` is provided for API parity and as the
 reference model in tests.
 
 All functions run inside shard_map; `owner` is a static virtual rank.
+
+A second, host-side family rides on the :class:`~repro.core.ordering
+.CommQueue` pipeline: ``atomic_*_nbi`` below wrap ``CommQueue.amo_nbi``
+— nonblocking fetch-&-op records drained like signals (``amo_wait`` on
+the word, or any covering fence/quiet), each AMO its own linearization
+point inside the delivery shuffle.  This is the POSH §4.6 lock-free
+substrate the serving control plane builds on (symmetric page
+allocator, cell router, handoff mailbox): arbitration happens on
+symmetric counter words instead of a host-serial Python loop.
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ import jax.numpy as jnp
 
 from . import collectives, safety
 from .heap import HeapState, SymHandle
+from .ordering import CommQueue, NbiValue, Pairs
 from .teams import ActiveSet, Team, TeamAxes
 
 
@@ -146,6 +156,44 @@ def atomic_cswap(state: HeapState, handle: SymHandle, index, cond, value,
         out[handle.name] = jnp.where(is_owner, flat, buf.ravel()).reshape(buf.shape)
         return out, jnp.where(participate & member, old_mine,
                               jnp.zeros_like(old_mine))
+
+
+# ======================================================================
+# queue-integrated AMOs — nonblocking fetch-&-op on the CommQueue
+# ======================================================================
+def atomic_fetch_nbi(queue: CommQueue, handle: SymHandle, pairs: Pairs,
+                     offset=0) -> NbiValue:
+    """``shmem_atomic_fetch_nbi`` — read one symmetric word atomically.
+    Readable after ``amo_wait`` on the word (or fence/quiet)."""
+    return queue.amo_nbi(handle, "fetch", pairs, offset=offset)  # shmem: deferred-drain
+
+
+def atomic_fadd_nbi(queue: CommQueue, handle: SymHandle, value,
+                    pairs: Pairs, offset=0) -> NbiValue:
+    """``shmem_atomic_fetch_add_nbi`` — fetch-&-add on one word."""
+    return queue.amo_nbi(handle, "fadd", pairs, value=value,  # shmem: deferred-drain
+                         offset=offset)
+
+
+def atomic_swap_nbi(queue: CommQueue, handle: SymHandle, value,
+                    pairs: Pairs, offset=0) -> NbiValue:
+    """``shmem_atomic_swap_nbi`` — unconditional fetch-&-write."""
+    return queue.amo_nbi(handle, "swap", pairs, value=value,  # shmem: deferred-drain
+                         offset=offset)
+
+
+def atomic_cswap_nbi(queue: CommQueue, handle: SymHandle, cond, value,
+                     pairs: Pairs, offset=0) -> NbiValue:
+    """``shmem_atomic_compare_swap_nbi`` — write ``value`` iff the word
+    equals ``cond``; the fetched pre-op value tells whether it won."""
+    return queue.amo_nbi(handle, "cswap", pairs, value=value,  # shmem: deferred-drain
+                         cond=cond, offset=offset)
+
+
+def amo_wait(queue: CommQueue, handle: SymHandle, *, offset=0):
+    """The AMO drain point — delivers exactly the pending AMOs on the
+    named word (see ``CommQueue.amo_wait``)."""
+    return queue.amo_wait(handle, offset=offset)
 
 
 @dataclasses.dataclass

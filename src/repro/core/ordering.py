@@ -120,6 +120,37 @@ class PendingGet:
 
 
 @dataclasses.dataclass
+class PendingAmo:
+    """One issued-but-undelivered atomic memory operation
+    (``CommQueue.amo_nbi`` — the §4.6 fetch-&-op family on the queue
+    path).  An AMO is its own linearization point: within a drain it is
+    shuffled with the puts like any other op, and the drain order IS
+    the linearization order — two AMOs on the same word are never a
+    race, whichever lands first simply linearizes first.  ``result``
+    receives the fetched (pre-op) value at delivery.  Drained like a
+    signal: ``amo_wait`` on the word retires exactly the AMOs guarding
+    it (or any covering fence/quiet).
+
+    ``signal``/``signal_of`` exist only so the drain machinery
+    (shuffle fixup, coalescer) can treat the three op classes
+    uniformly; an AMO never participates in either."""
+
+    seq: int
+    handle: SymHandle
+    offset: int
+    pairs: list[tuple[int, int]]
+    op: str                               # "fadd"|"swap"|"cswap"|"fetch"
+    value: Any = None
+    cond: Any = None
+    result: Optional["NbiValue"] = None
+    signal: Optional[tuple] = None        # never set; drain-shape parity
+    signal_of: Optional[int] = None
+
+    def dsts(self) -> set[int]:
+        return {d for _, d in self.pairs}
+
+
+@dataclasses.dataclass
 class PendingReduce:
     """A nonblocking collective reduction (the train-loop user of the
     queue).  Delivered at ``quiet()`` in issue order — reductions are
@@ -192,6 +223,15 @@ class Transport:
         (fetch-accumulate, SHMEM_SIGNAL_ADD)."""
         raise NotImplementedError
 
+    def amo(self, state: HeapState, handle: SymHandle, op: str, value,
+            cond, pairs: Pairs, team: Team, offset):
+        """Deliver one atomic memory operation on ``handle[offset]`` of
+        the owner PE (the ``dst`` of the single pair) and return
+        ``(new_state, old_value)`` — the fetched pre-op value the
+        requester observes.  ``op``: ``"fadd"``/``"swap"``/``"cswap"``
+        (``cond`` used)/``"fetch"`` (read-only)."""
+        raise NotImplementedError
+
     def put_rows(self, data) -> Optional[int]:
         return None                       # unknown layout: no coalescing
 
@@ -220,6 +260,15 @@ class PermuteTransport(Transport):
                 "PermuteTransport delivers 'set' signals only")
         data = jnp.full((1,), value, handle.dtype)
         return p2p.heap_put(state, handle, data, pairs, team, offset=offset)
+
+    def amo(self, state, handle, op, value, cond, pairs, team, offset):
+        # a queue AMO is a remote read-modify-write round trip; the
+        # permute path is write-only one round.  The SPMD mesh gets its
+        # linearizable atomics from the owner-computes collectives in
+        # core.atomics (same precedent as the 'add' signal above).
+        raise NotImplementedError(
+            "PermuteTransport has no AMO round — use the owner-computes "
+            "atomics in repro.core.atomics inside shard_map")
 
     def put_rows(self, data):
         shape = getattr(data, "shape", None)
@@ -265,6 +314,23 @@ class LocalTransport(Transport):
             else:
                 buf[d, offset] = value
         return out
+
+    def amo(self, state, handle, op, value, cond, pairs, team, offset):
+        out = dict(state)
+        out[handle.name] = buf = np.array(state[handle.name])
+        flat = buf.reshape(buf.shape[0], -1)
+        (_, owner), = pairs               # one requester, one owner
+        old = flat[owner, offset].item()
+        if op == "fadd":
+            flat[owner, offset] = old + value
+        elif op == "swap":
+            flat[owner, offset] = value
+        elif op == "cswap":
+            if old == cond:
+                flat[owner, offset] = value
+        elif op != "fetch":
+            raise ValueError(f"unknown AMO op {op!r}")
+        return out, old
 
     def put_rows(self, data):
         data = np.asarray(data)
@@ -319,11 +385,15 @@ class CommQueue:
         # retires.  signal_wait_until pops its key — per-transfer
         # completion, the third drain class next to fence/quiet.
         self._sig_guards: dict[tuple[str, int], list[int]] = {}
+        # AMO guard map, same shape: (object name, word offset) -> the
+        # pending AMO seqs an amo_wait on that word retires.
+        self._amo_guards: dict[tuple[str, int], list[int]] = {}
         self._seq = 0
         self._stats = {"puts": 0, "gets": 0, "reduces": 0, "fences": 0,
                        "quiets": 0, "drained": 0, "max_pending": 0,
                        "coalesced": 0, "signal_puts": 0,
-                       "signal_waits": 0}
+                       "signal_waits": 0, "signal_resets": 0,
+                       "amos": 0, "amo_waits": 0}
 
     # ------------------------------------------------------------------
     # issue side — returns immediately (local completion)
@@ -382,6 +452,47 @@ class CommQueue:
                                    payload.seq, sig_handle,
                                    int(sig_offset), sig.seq)
         return payload.seq
+
+    def amo_nbi(self, handle: SymHandle, op: str, pairs: Pairs, *,
+                value=None, cond=None, offset=0) -> NbiValue:
+        """Enqueue one atomic memory operation (§4.6 fetch-&-op on the
+        queue path): ``op`` is ``"fadd"`` (add ``value``), ``"swap"``
+        (write ``value``), ``"cswap"`` (write ``value`` iff the word
+        equals ``cond``) or ``"fetch"`` (read only).  ``pairs`` is ONE
+        ``(requester, owner)`` pair — the word ``handle[offset]`` on
+        the owner's heap is the linearization cell.
+
+        Completion semantics: the AMO is its own linearization point.
+        It is delivered — atomically, at one place in the intra-drain
+        shuffle — by the next ``amo_wait`` on its word, or by any
+        covering ``fence``/``quiet``; the returned :class:`NbiValue`
+        then holds the fetched pre-op value.  Two pending AMOs on one
+        word are NOT a race (the drain order linearizes them); an AMO
+        overlapping a plain ``put_nbi`` IS (shmemcheck's ``amo-race``).
+        """
+        pairs = [(int(s), int(d)) for s, d in pairs]
+        if len(pairs) != 1:
+            raise ValueError(
+                f"amo_nbi[{handle.name}]: an AMO targets exactly one "
+                f"(requester, owner) pair, got {len(pairs)}")
+        if op not in ("fadd", "swap", "cswap", "fetch"):
+            raise ValueError(f"amo_nbi: unknown op {op!r} (want fadd/"
+                             "swap/cswap/fetch)")
+        if op == "cswap" and cond is None:
+            raise ValueError("amo_nbi: cswap needs cond")
+        if op in ("fadd", "swap", "cswap") and value is None:
+            raise ValueError(f"amo_nbi: {op} needs value")
+        res = NbiValue(f"amo_nbi[{handle.name}:{op}]")
+        amo = PendingAmo(self._next_seq(), handle, int(offset), pairs,
+                         op, value, cond, res)
+        self._puts.append(amo)
+        self._stats["amos"] += 1
+        self._amo_guards.setdefault((handle.name, int(offset)),
+                                    []).append(amo.seq)
+        self._track_pending()
+        if _checker is not None:
+            _checker.on_amo(self, handle, int(offset), pairs, amo.seq, op)
+        return res
 
     def get_nbi(self, handle: SymHandle, pairs: Pairs, offset=0,
                 size: Optional[int] = None) -> NbiValue:
@@ -464,6 +575,7 @@ class CommQueue:
         self._stats["quiets"] += 1
         todo, self._puts = self._puts, []
         self._sig_guards.clear()          # everything delivers below
+        self._amo_guards.clear()
         self._deliver_puts(todo)
         gets, self._gets = self._gets, []
         for g in gets:
@@ -521,10 +633,55 @@ class CommQueue:
                     "forever")
         return self._state
 
+    def amo_wait(self, handle: SymHandle, *, offset=0) -> HeapState:
+        """The AMO drain point, ``signal_wait_until``'s sibling:
+        delivers EXACTLY the pending AMOs targeting the named word —
+        shuffled among themselves, each one an atomic linearization
+        point — and nothing else.  Every unrelated pending op stays
+        pending, so completing an allocator's counter traffic never
+        costs a tick-global quiet (the lock-free-scheduling contract:
+        ``stats()["quiets"]`` stays 0 on an allocator queue).  After
+        the call every retired AMO's :class:`NbiValue` is readable.
+        Returns the heap state."""
+        if _checker is not None:
+            _checker.on_amo_wait(self, handle, int(offset))
+        self._stats["amo_waits"] += 1
+        seqs = set(self._amo_guards.pop((handle.name, int(offset)), ()))
+        if seqs:
+            todo = [p for p in self._puts if p.seq in seqs]
+            self._puts = [p for p in self._puts if p.seq not in seqs]
+            self._deliver_puts(todo)
+        return self._state
+
+    def signal_reset(self, sig_handle: SymHandle, pairs: Pairs, *,
+                     sig_offset=0, value=0) -> HeapState:
+        """Recycle a retired signal/counter word: write ``value``
+        (default 0) THROUGH the transport, immediately — not by
+        host-side mutation of the state dict, so the write exists in
+        the queue's memory model and shmemcheck sees it.  Only legal
+        once the word's guarded transfers are all retired (resetting
+        under in-flight guards is the signal-race shmemcheck flags).
+        Counted under ``signal_resets``, never ``signal_puts`` — a
+        reset is word housekeeping, not a transfer."""
+        pairs = [(int(s), int(d)) for s, d in pairs]
+        if _checker is not None:
+            _checker.on_signal_reset(self, sig_handle, int(sig_offset),
+                                     pairs)
+        self._stats["signal_resets"] += 1
+        self._state = self.transport.put_signal(
+            self._state, sig_handle, value, pairs, self.team,
+            int(sig_offset), "set")
+        return self._state
+
     # ------------------------------------------------------------------
     def _deliver_puts(self, ops: list[PendingPut]) -> None:
         for op in self._coalesce(self._drain_order(ops)):
-            if op.signal is not None:
+            if isinstance(op, PendingAmo):
+                self._state, old = self.transport.amo(
+                    self._state, op.handle, op.op, op.value, op.cond,
+                    op.pairs, self.team, op.offset)
+                op.result._deliver(old)
+            elif op.signal is not None:
                 sig_op, val = op.signal
                 self._state = self.transport.put_signal(
                     self._state, op.handle, val, op.pairs, self.team,
@@ -565,9 +722,9 @@ class CommQueue:
             run, run_rows = [], 0
 
         for op in ops:
-            if op.signal is not None:     # signal words never coalesce
-                flush()
-                out.append(op)
+            if isinstance(op, PendingAmo) or op.signal is not None:
+                flush()                   # AMOs and signal words are
+                out.append(op)            # their own rounds, never merged
                 continue
             rows = (self.transport.put_rows(op.data)
                     if isinstance(op.offset, (int, np.integer)) else None)

@@ -52,7 +52,8 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
                  attn_impl: str = "ref", prefix_keep: bool = False,
                  prefill_chunk: int = 8, tick_tokens: int = 0,
                  sample_seed: int = 0, seed: int = 0, spec_k: int = 0,
-                 draft: str = "ngram", disagg: str = ""):
+                 draft: str = "ngram", disagg: str = "",
+                 router: str = "host"):
     cfg = configs.get_smoke(arch)
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
                       backend=backend, param_dtype=jnp.float32,
@@ -67,11 +68,13 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
         # scfg.draft only names parameterless proposers; a draft ARCH
         # becomes an explicit DraftModelProposer below
         spec_k=spec_k, draft="ngram")
+    if router not in ("host", "amo"):
+        raise SystemExit(f"--router wants 'host' or 'amo', got {router!r}")
     if disagg:
         n_prefill, n_decode = parse_disagg(disagg)
         return serve.DisaggEngine(params, cfg, ctx, scfg,
                                   n_prefill=n_prefill,
-                                  n_decode=n_decode), cfg
+                                  n_decode=n_decode, router=router), cfg
     if spec_k > 0 and draft != "ngram":
         # --draft <arch>: a registry-backed small draft model on the
         # same mesh and page geometry (vocabularies must match); the
@@ -87,9 +90,16 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
             jax.random.PRNGKey(seed + 1), dcfg, ctx)
         proposer = serve.DraftModelProposer(dparams, dcfg, ctx, scfg, kv,
                                             target_vocab=cfg.vocab)
-        return serve.ServeEngine(params, cfg, ctx, scfg, kv=kv,
-                                 proposer=proposer), cfg
-    return serve.ServeEngine(params, cfg, ctx, scfg), cfg
+        eng = serve.ServeEngine(params, cfg, ctx, scfg, kv=kv,
+                                proposer=proposer)
+    else:
+        eng = serve.ServeEngine(params, cfg, ctx, scfg)
+    if router == "amo":
+        # colocated 'amo' means the page allocator: the engine's free
+        # list moves onto symmetric counter words (identical page-id
+        # grants, so token streams cannot move)
+        eng.kv.attach_pool(serve.SymmetricPagePool(eng.kv.n_pages))
+    return eng, cfg
 
 
 def main():
@@ -136,6 +146,13 @@ def main():
                          "prefill cells + D decode cells with "
                          "put-with-signal page handoff (empty = "
                          "colocated single engine)")
+    ap.add_argument("--router", default="host", choices=["host", "amo"],
+                    help="scheduling control plane: 'host' (Python-loop "
+                         "admission/handoff routing and page free list) "
+                         "or 'amo' (lock-free: CAS-arbitrated admission "
+                         "rings, claim-word mailbox slots, and a "
+                         "symmetric fetch-add/CAS page pool — token "
+                         "streams are bit-identical across both)")
     ap.add_argument("--trace", action="store_true",
                     help="print the per-request decode trace")
     args = ap.parse_args()
@@ -146,7 +163,7 @@ def main():
         attn_impl=args.attn_impl, prefill_chunk=args.prefill_chunk,
         tick_tokens=args.tick_tokens, sample_seed=args.sample_seed,
         seed=args.seed, spec_k=args.spec_k, draft=args.draft,
-        disagg=args.disagg)
+        disagg=args.disagg, router=args.router)
     tcfg = serve.TrafficConfig(n_requests=args.requests, rate=args.rate,
                                vocab=cfg.vocab, seed=args.seed,
                                temperature=args.temperature,
@@ -158,7 +175,8 @@ def main():
           f"sampling=(T={args.temperature} k={args.top_k} "
           f"p={args.top_p}) spec=(k={args.spec_k} "
           f"draft={args.draft}) "
-          f"topology={args.disagg or 'colocated'} requests={len(reqs)}")
+          f"topology={args.disagg or 'colocated'} router={args.router} "
+          f"requests={len(reqs)}")
     done = eng.run(reqs)
     if args.trace:
         for r in sorted(done, key=lambda r: r.rid):

@@ -26,11 +26,13 @@ completion, zero tick-global quiets on the handoff path.
     done = eng.run(serve.make_requests(serve.TrafficConfig()))
     eng.metrics()
 """
+from .amo_router import AmoCellRouter
 from .disagg import (CellRouter, CellSpec, DisaggEngine, HandoffTicket,
                      make_cells)
 from .engine import LocalExec, ServeConfig, ServeEngine, make_decode_step, \
     make_prefill, make_verify
 from .kv_cache import NULL_PAGE, PagedKVCache, PageMigration
+from .page_pool import SymmetricPagePool
 from .sampling import (GREEDY, SamplingParams, batch_state,
                        sample_from_candidates, sample_tokens,
                        sample_window_tokens)
@@ -41,10 +43,10 @@ from .traffic import TrafficConfig, make_requests
 
 __all__ = [
     "ServeConfig", "ServeEngine", "LocalExec",
-    "DisaggEngine", "CellRouter", "CellSpec", "HandoffTicket",
-    "make_cells",
+    "DisaggEngine", "CellRouter", "AmoCellRouter", "CellSpec",
+    "HandoffTicket", "make_cells",
     "make_decode_step", "make_prefill", "make_verify",
-    "PagedKVCache", "PageMigration", "NULL_PAGE",
+    "PagedKVCache", "PageMigration", "NULL_PAGE", "SymmetricPagePool",
     "FCFSScheduler", "Request", "TickPlan",
     "TrafficConfig", "make_requests",
     "SamplingParams", "GREEDY", "batch_state",

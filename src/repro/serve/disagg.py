@@ -135,6 +135,11 @@ class CellRouter:
             return None
         return c
 
+    def inbound_add(self, cell: int, delta: int) -> None:
+        """Inbound-ticket accounting hook (the AMO router overrides
+        this with a ``fadd`` on the cell's inbound word)."""
+        self.inbound[cell] += delta
+
 
 class DisaggEngine:
     """P prefill + D decode ``ServeEngine`` cells behind one submit/run
@@ -156,8 +161,13 @@ class DisaggEngine:
                  n_prefill: int = 1, n_decode: int = 1,
                  pes_per_cell: int = 1, engines=None,
                  delivery_seed: Optional[int] = 0,
-                 n_ticket_words: Optional[int] = None):
+                 n_ticket_words: Optional[int] = None,
+                 router: str = "host"):
+        if router not in ("host", "amo"):
+            raise ValueError(f"router must be 'host' or 'amo', "
+                             f"got {router!r}")
         self.scfg = scfg
+        self.router_mode = router
         self.cells = make_cells(n_prefill, n_decode, pes_per_cell)
         n_cells = len(self.cells)
         if engines is None:
@@ -173,7 +183,24 @@ class DisaggEngine:
                 raise ValueError(f"cell {c.cell} is {c.role} but its "
                                  f"engine is {e.role}")
         self.engines = list(engines)
-        self.router = CellRouter(self.engines, self.cells)
+        self.pools: list = []
+        if router == "amo":
+            # the whole control plane goes lock-free: CAS-arbitrated
+            # admission/handoff routing AND a symmetric page pool
+            # behind every cell's allocator (identical grant order, so
+            # token streams cannot move)
+            from .amo_router import AmoCellRouter
+            from .page_pool import SymmetricPagePool
+            self.router = AmoCellRouter(self.engines, self.cells,
+                                        delivery_seed=delivery_seed)
+            for i, e in enumerate(self.engines):
+                pool = SymmetricPagePool(e.kv.n_pages,
+                                         delivery_seed=delivery_seed,
+                                         name=f"pool_words_{i}")
+                e.kv.attach_pool(pool)
+                self.pools.append(pool)
+        else:
+            self.router = CellRouter(self.engines, self.cells)
 
         # the handoff mailbox: symmetric objects over the cell space.
         # The page-row shape comes from the exec substrate (a mesh cell
@@ -187,11 +214,18 @@ class DisaggEngine:
             "kv_mail", (kv0.n_pages,) + row0.shape[1:], row0.dtype)
         n_words = n_ticket_words or max(2 * scfg.max_batch, 4)
         self.pad = SignalPad(mail_heap, n_words)
+        # mailbox-slot claim words (same carve as the signal pad): in
+        # AMO mode a producer owns word w of a consumer's pad iff it
+        # won cswap(claim[w], 0 -> ticket+1) on that cell
+        self._claim = SignalPad(mail_heap, n_words, name="mail_claim")
         self._mail_state = {
             "kv_mail": np.zeros((n_cells,) + self._kv_mail.shape,
                                 self._kv_mail.dtype),
             self.pad.handle.name:
                 np.zeros((n_cells, self.pad.n), self.pad.handle.dtype),
+            self._claim.handle.name:
+                np.zeros((n_cells, self._claim.n),
+                         self._claim.handle.dtype),
         }
         self.hq = CommQueue("cells", self._mail_state,
                             transport=LocalTransport(n_cells),
@@ -217,10 +251,17 @@ class DisaggEngine:
     def has_work(self) -> bool:
         return (any(e.sched.has_work() for e in self.engines)
                 or any(e.handoff_ready for e in self.engines)
-                or any(self._inbox.values()))
+                or any(self._inbox.values())
+                or (self.router_mode == "amo"
+                    and self.router.pending() > 0))
 
     def submit(self, req: Request) -> None:
-        self.engines[self.router.route_prompt(req)].submit(req)
+        if self.router_mode == "amo":
+            # publish into an admission ring; a cell claims it by CAS
+            # at the next tick (same-tick admission, like host mode)
+            self.router.submit(req)
+        else:
+            self.engines[self.router.route_prompt(req)].submit(req)
 
     # ------------------------------------------------------------------
     def tick(self, now: float = 0.0) -> None:
@@ -228,6 +269,8 @@ class DisaggEngine:
         ticket out (put-with-signal per page), decode cells drain their
         inbox on signal fire, adopt, acknowledge, then advance."""
         self.ticks += 1
+        if self.router_mode == "amo":
+            self.router.admit()
         for c in self.router.prefill:
             e = self.engines[c]
             if e.sched.has_work():
@@ -239,6 +282,39 @@ class DisaggEngine:
             e = self.engines[c]
             if e.sched.has_work():
                 e.tick(now)
+        if self.router_mode == "amo":
+            self.router.publish_loads()
+
+    def _claim_word(self, cell: int) -> Optional[int]:
+        """Claim a free mailbox word on ``cell``.  Host mode pops the
+        FIFO recycle deque; AMO mode scans the claim words and owns the
+        first one it wins with ``cswap(0 -> ticket+1)``."""
+        if self.router_mode != "amo":
+            fw = self._free_words[cell]
+            return fw.popleft() if fw else None
+        for w in range(self._claim.n):
+            old = self.hq.amo_nbi(  # shmem: deferred-drain
+                self._claim.handle, "cswap", [(cell, cell)],
+                value=self._tickets + 1, cond=0, offset=w)
+            self.hq.amo_wait(self._claim.handle, offset=w)
+            if int(old.value()) == 0:
+                return w
+        return None
+
+    def _release_word(self, cell: int, word: int, *,
+                      to_front: bool = False) -> None:
+        """Return a mailbox word: AMO mode clears the claim word (an
+        atomic swap, so shmemcheck sees it); host mode requeues —
+        ``to_front`` restores a claim that was rolled back before use."""
+        if self.router_mode == "amo":
+            self.hq.amo_nbi(  # shmem: deferred-drain
+                self._claim.handle, "swap", [(cell, cell)], value=0,
+                offset=word)
+            self.hq.amo_wait(self._claim.handle, offset=word)
+        elif to_front:
+            self._free_words[cell].appendleft(word)
+        else:
+            self._free_words[cell].append(word)
 
     def _issue_handoffs(self, src_cell: int) -> None:
         src = self.engines[src_cell]
@@ -246,7 +322,8 @@ class DisaggEngine:
         while src.handoff_ready:
             req = src.handoff_ready.pop(0)
             dst_cell = self.router.route_handoff(req)
-            if dst_cell is None or not self._free_words[dst_cell]:
+            word = None if dst_cell is None else self._claim_word(dst_cell)
+            if word is None:
                 # backpressure: every decode batch (or the word pad) is
                 # full; the sequence stays parked, its pages resident
                 parked.append(req)
@@ -258,15 +335,15 @@ class DisaggEngine:
             if dst_pages is None:            # consumer pool dry
                 src.kv.attach_seq(req.rid, src_pages)
                 src.kv.stats["exported_pages"] -= len(src_pages)
+                self._release_word(dst_cell, word, to_front=True)
                 parked.append(req)
                 self.handoff["handoff_deferred"] += 1
                 continue
             t = HandoffTicket(self._tickets, req, src_cell, dst_cell,
-                              src_pages, dst_pages,
-                              self._free_words[dst_cell].popleft())
+                              src_pages, dst_pages, word)
             self._tickets += 1
             self._put_pages(t)
-            self.router.inbound[dst_cell] += 1
+            self.router.inbound_add(dst_cell, 1)
             self._inbox[dst_cell].append(t)
             self.handoff["handoff_tickets"] += 1
             self.handoff["handoff_pages"] += len(src_pages)
@@ -308,10 +385,14 @@ class DisaggEngine:
             dst.adopt_request(t.req, dst.kv.tables.pop(t.req.rid), now)
             # ack: the producer's copy served its purpose
             self.engines[t.src_cell].kv.release_pages(t.src_pages)
-            self.router.inbound[cell] -= 1
-            # the word only recycles once its ticket is fully retired
-            self._mail_state[self.pad.handle.name][cell, t.word] = 0
-            self._free_words[cell].append(t.word)
+            self.router.inbound_add(cell, -1)
+            # the word only recycles once its ticket is fully retired —
+            # zeroed THROUGH the queue (signal_reset), so the recycle
+            # write is part of the traced protocol shmemcheck verifies,
+            # not a host-side mutation behind its back
+            self.hq.signal_reset(self.pad.handle, [(cell, cell)],
+                                 sig_offset=t.word)
+            self._release_word(cell, t.word)
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], *, clock: str = "tick",
@@ -344,12 +425,34 @@ class DisaggEngine:
         """Handoff-path counters.  ``handoff_signals`` counts
         put-with-signal transfers and per-transfer waits on the mailbox
         queue; ``handoff_quiets`` counts tick-global barriers on it —
-        the disagg contract is that it stays ZERO."""
+        the disagg contract is that it stays ZERO.  In ``--router amo``
+        mode the router/allocator counters ride along: ``router_quiets``
+        (barriers on the router queue AND every cell's pool queue — the
+        lock-free contract pins it to zero too), ``steals``, and
+        ``alloc_cas_retries``."""
         hs = self.hq.stats()
         out = dict(self.handoff)
         out["handoff_signals"] = hs["signal_puts"]
         out["handoff_waits"] = hs["signal_waits"]
         out["handoff_quiets"] = hs["quiets"] + hs["fences"]
+        out["handoff_amos"] = hs["amos"]
+        if self.router_mode == "amo":
+            rs = self.router.queue_stats()
+            out["router_amos"] = rs["amos"]
+            out["router_quiets"] = rs["quiets"] + rs["fences"]
+            out["steals"] = self.router.stats["steals"]
+            out["router_cas_retries"] = self.router.stats["cas_retries"]
+            out["alloc_cas_retries"] = sum(p.stats["cas_retries"]
+                                           for p in self.pools)
+            for p in self.pools:
+                ps = p.queue_stats()
+                out["router_quiets"] += ps["quiets"] + ps["fences"]
+        else:
+            out["router_amos"] = 0
+            out["router_quiets"] = 0
+            out["steals"] = 0
+            out["router_cas_retries"] = 0
+            out["alloc_cas_retries"] = 0
         return out
 
     def reset_metrics(self) -> None:
@@ -360,6 +463,16 @@ class DisaggEngine:
             self.handoff[k] = 0
         for k in self.hq._stats:
             self.hq._stats[k] = 0
+        if self.router_mode == "amo":
+            for k in self.router.q._stats:
+                self.router.q._stats[k] = 0
+            for k in self.router.stats:
+                self.router.stats[k] = 0
+            for p in self.pools:
+                for k in p.q._stats:
+                    p.q._stats[k] = 0
+                for k in p.stats:
+                    p.stats[k] = 0
 
     def metrics(self) -> dict:
         """The colocated engine's summary shape, aggregated over cells,

@@ -70,8 +70,11 @@ class PagedKVCache:
         self.handle: SymHandle = heap.alloc(
             name, (n_pages, 2, n_layers, page_tokens, kv_heads, head_dim),
             dtype)
-        # LIFO free list over real pages (1..n-1); page 0 stays null
+        # LIFO free list over real pages (1..n-1); page 0 stays null.
+        # ``attach_pool`` swaps this host list for a lock-free
+        # SymmetricPagePool with the identical grant order.
         self._free: list[int] = list(range(n_pages - 1, 0, -1))
+        self._pool = None                 # SymmetricPagePool when attached
         self.tables: dict = {}            # seq id -> list[int] page ids
         # prefix index: tuple(prompt tokens of k full pages) ->
         # (owner_pe, [page ids on the owner]) — the migration source.
@@ -93,10 +96,52 @@ class PagedKVCache:
         return self.handle.shape[0]
 
     def n_free(self) -> int:
-        return len(self._free)
+        return self._pool.n_free() if self._pool is not None \
+            else len(self._free)
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-int(n_tokens) // self.page_tokens)
+
+    # ------------------------------------------------------------------
+    # free-list backend — host list, or an attached SymmetricPagePool
+    # ------------------------------------------------------------------
+    def attach_pool(self, pool) -> None:
+        """Swap the host free list for a lock-free
+        :class:`~repro.serve.page_pool.SymmetricPagePool`.  Legal only
+        on a pristine cache (no tables, full free list): the pool
+        starts from its own virgin state and the two free-list
+        implementations grant identical page-id sequences ONLY from the
+        same starting point."""
+        if self.tables or len(self._free) != self.n_pages - 1:
+            raise ValueError(
+                "attach_pool needs a pristine cache (no live tables, "
+                "full free list)")
+        if pool.n_pages != self.n_pages:
+            raise ValueError(
+                f"pool covers {pool.n_pages} pages, cache has "
+                f"{self.n_pages}")
+        self._pool = pool
+        self._free = []
+
+    def _pop_page(self) -> Optional[int]:
+        if self._pool is not None:
+            return self._pool.pop_page()
+        return self._free.pop() if self._free else None
+
+    def _pop_pages(self, n: int) -> Optional[list[int]]:
+        """All-or-nothing claim; restores the free list on shortfall."""
+        if self._pool is not None:
+            return self._pool.pop_pages(n)
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def _push_pages(self, pages: Sequence[int]) -> None:
+        """LIFO return: ``pages[0]`` ends on top on either backend."""
+        if self._pool is not None:
+            self._pool.push_pages(list(pages))
+        else:
+            self._free.extend(reversed(list(pages)))
 
     # ------------------------------------------------------------------
     # allocation — trace-time, host side
@@ -107,9 +152,10 @@ class PagedKVCache:
         need = max(self.pages_for(n_tokens), 1)
         if seq_id in self.tables:
             raise ValueError(f"sequence {seq_id!r} already has pages")
-        if need > len(self._free):
+        pages = self._pop_pages(need)
+        if pages is None:
             return False
-        self.tables[seq_id] = [self._free.pop() for _ in range(need)]
+        self.tables[seq_id] = pages
         self.stats["page_allocs"] += need
         return True
 
@@ -119,9 +165,10 @@ class PagedKVCache:
         scheduler then preempts someone."""
         table = self.tables[seq_id]
         while len(table) * self.page_tokens < n_tokens:
-            if not self._free:
+            page = self._pop_page()
+            if page is None:
                 return False
-            table.append(self._free.pop())
+            table.append(page)
             self.stats["page_allocs"] += 1
         return True
 
@@ -143,7 +190,7 @@ class PagedKVCache:
         freed = table[keep:]
         if freed:
             del table[keep:]
-            self._free.extend(reversed(freed))
+            self._push_pages(freed)
             self.stats["page_frees"] += len(freed)
             self.stats["rewound_pages"] += len(freed)
         return len(freed)
@@ -152,7 +199,7 @@ class PagedKVCache:
         pages = self.tables.pop(seq_id)
         self.stats["page_frees"] += len(pages)
         # LIFO, most-recently-used first
-        self._free.extend(reversed(pages))
+        self._push_pages(pages)
 
     def attach_seq(self, seq_id, pages: Sequence[int]) -> None:
         """Adopt already-filled pages (e.g. migrated prefix pages) as
@@ -163,10 +210,11 @@ class PagedKVCache:
 
     def take_pages(self, n: int) -> Optional[list[int]]:
         """Pop ``n`` pages ownerless (migration landing zone)."""
-        if n > len(self._free):
+        pages = self._pop_pages(n)
+        if pages is None:
             return None
         self.stats["page_allocs"] += n
-        return [self._free.pop() for _ in range(n)]
+        return pages
 
     # ------------------------------------------------------------------
     # cross-pool handoff (disaggregated prefill/decode cells)
@@ -199,7 +247,7 @@ class PagedKVCache:
 
     def release_pages(self, pages: Sequence[int]) -> None:
         self.stats["page_frees"] += len(pages)
-        self._free.extend(reversed(list(pages)))
+        self._push_pages(list(pages))
 
     # ------------------------------------------------------------------
     # block tables as arrays (what the step functions consume)
@@ -302,7 +350,10 @@ class PagedKVCache:
         new_n = old_shape[0] + int(extra_pages)
         self.handle = self.heap.realloc(self.handle,
                                         (new_n,) + old_shape[1:])
-        self._free.extend(range(new_n - 1, old_shape[0] - 1, -1))
+        if self._pool is not None:
+            self._pool.grow_pages(range(old_shape[0], new_n))
+        else:
+            self._free.extend(range(new_n - 1, old_shape[0] - 1, -1))
         if pool is None:
             return self.zeros()
         pad = [(0, new_n - old_shape[0])] + [(0, 0)] * (pool.ndim - 1)

@@ -1,0 +1,191 @@
+"""Queue-AMO substrate at 8-PE scale — subprocess worker (8 fake CPU
+devices), invoked by tests/test_page_pool.py.
+
+Four suites:
+
+  1. AMO linearization with 8 requesters: concurrent fetch-add chains
+     and competing cswaps on one word, swept over 40+ delivery seeds —
+     the fetched pre-op values must always form a valid linearization
+     (and the shuffle must actually produce different ones).
+  2. The two §4.6 substrates agree: the owner-computes ``atomic_fadd``
+     on the REAL 8-PE mesh (rank-order linearization inside shard_map)
+     and the queue AMO path (issue-order drain) produce identical
+     fetched values and final cell — the bridge between the SPMD and
+     the host-control-plane atomics.
+  3. SymmetricPagePool with 8 actors: random alloc/free interleavings
+     never double-grant or leak, pages conserve exactly, and the pool
+     queue finishes with zero quiets/fences.
+  4. Single-actor pool traces at serving scale (32 pages) stay
+     bit-identical to the host LIFO free list (the attach_pool
+     contract run_disagg.py leans on).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro import core as posh
+from repro.analysis import shmemcheck
+from repro.core import CommQueue, LocalTransport
+from repro.core.heap import SymHandle
+from repro.serve.page_pool import SymmetricPagePool
+
+N = 8
+CTR = SymHandle("ctr", (2,), np.dtype(np.int64), 0, 16)
+mesh1d = compat.make_mesh((N,), ("pe",))
+
+
+def smap(fn, in_specs=P("pe"), out_specs=P("pe")):
+    return compat.shard_map(fn, mesh=mesh1d, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)
+
+
+def _ctr_queue(seed):
+    state = {"ctr": np.zeros((N, 2), np.int64)}
+    return CommQueue("pe", state, transport=LocalTransport(N),
+                     delivery_seed=seed)
+
+
+# ======================================================================
+# 1. 8-requester linearization under the delivery shuffle
+# ======================================================================
+def check_amo_linearization():
+    fadd_orders, cswap_winners = set(), set()
+    for seed in list(range(40)) + [None]:
+        q = _ctr_queue(seed)
+        adds = [q.amo_nbi(CTR, "fadd", [(s, 5)], value=1)
+                for s in range(N)]
+        cas = [q.amo_nbi(CTR, "cswap", [(s, 5)], value=100 + s, cond=0,
+                         offset=1) for s in range(N)]
+        q.amo_wait(CTR)
+        q.amo_wait(CTR, offset=1)
+        olds = [int(r.value()) for r in adds]
+        assert sorted(olds) == list(range(N)), (seed, olds)
+        assert int(np.asarray(q.state["ctr"])[5, 0]) == N
+        fadd_orders.add(tuple(olds))
+        wins = [s for s in range(N) if int(cas[s].value()) == 0]
+        assert len(wins) == 1, (seed, wins)
+        w = wins[0]
+        assert int(np.asarray(q.state["ctr"])[5, 1]) == 100 + w
+        assert all(int(cas[s].value()) == 100 + w
+                   for s in range(N) if s != w)
+        cswap_winners.add(w)
+        st = q.stats()
+        assert st["quiets"] == 0 and st["amos"] == 2 * N
+        assert st["amo_waits"] == 2
+    assert len(fadd_orders) > 1          # the shuffle linearizes
+    assert len(cswap_winners) > 1        # ... and moves the CAS winner
+    print(f"  8-PE AMO linearization ok ({len(fadd_orders)} fadd "
+          f"orders, winners {sorted(cswap_winners)})")
+
+
+# ======================================================================
+# 2. owner-computes (mesh) == queue AMO path, §4.6 both ways
+# ======================================================================
+def check_substrates_agree():
+    heap = posh.SymmetricHeap(("pe",))
+    h = heap.alloc("cells", (2,), jnp.float32)
+    xs = (jnp.arange(N, dtype=jnp.float32) + 1.0).reshape(N, 1)
+
+    def fadd_all(x):
+        state = {"cells": jnp.zeros((2,), jnp.float32)}
+        st, old = posh.atomic_fadd(state, h, 0, x[0, 0], "pe", owner=2)
+        return old[None, None], st["cells"][None]
+
+    old, cells = smap(fadd_all, out_specs=(P("pe"), P("pe")))(xs)
+    mesh_olds = [int(v) for v in np.asarray(old).ravel()]
+    mesh_final = int(np.asarray(cells).reshape(N, 2)[2, 0])
+    # queue path: issue in rank order, seed None = issue-order drain —
+    # the same linearization the mesh fixes by rank
+    q = _ctr_queue(None)
+    rs = [q.amo_nbi(CTR, "fadd", [(s, 2)], value=s + 1)
+          for s in range(N)]
+    q.amo_wait(CTR)
+    assert [int(r.value()) for r in rs] == mesh_olds, mesh_olds
+    assert int(np.asarray(q.state["ctr"])[2, 0]) == mesh_final == 36
+    print(f"  owner-computes == queue AMOs (olds {mesh_olds})")
+
+
+# ======================================================================
+# 3. pool invariants with 8 actors
+# ======================================================================
+def check_pool_invariants():
+    for case in range(12):
+        rng = random.Random(1000 + case)
+        n = rng.randint(9, 24)
+        pool = SymmetricPagePool(n, n_actors=N, delivery_seed=case)
+        held = {a: [] for a in range(N)}
+        for _ in range(rng.randint(20, 80)):
+            a = rng.randrange(N)
+            if rng.random() < 0.6:
+                p = pool.pop_page(actor=a)
+                if p is not None:
+                    held[a].append(p)
+            elif held[a]:
+                k = rng.randint(1, len(held[a]))
+                back, held[a] = held[a][:k], held[a][k:]
+                pool.push_pages(back, actor=a)
+            out = [p for ps in held.values() for p in ps]
+            assert len(out) == len(set(out)), out       # no double grant
+            assert pool.n_free() == (n - 1) - len(out)  # no leak
+        for a, ps in held.items():
+            pool.push_pages(ps, actor=a)
+        got = sorted(iter(lambda: pool.pop_page(
+            actor=rng.randrange(N)), None))
+        assert got == list(range(1, n))                 # conservation
+        qs = pool.queue_stats()
+        assert qs["quiets"] == 0 and qs["fences"] == 0
+    print("  8-actor pool invariants ok (12 interleavings)")
+
+
+# ======================================================================
+# 4. serving-scale host-LIFO parity (the attach_pool contract)
+# ======================================================================
+def check_pool_host_parity():
+    n = 32
+    pool = SymmetricPagePool(n, delivery_seed=7)
+    free = list(range(n - 1, 0, -1))                    # host oracle
+    held = []
+    rng = random.Random(99)
+    for _ in range(300):
+        if rng.random() < 0.55:
+            want = free.pop() if free else None
+            got = pool.pop_page()
+            assert got == want, (got, want)
+            if got is not None:
+                held.append(got)
+        elif held:
+            k = rng.randint(1, min(4, len(held)))
+            back, held = held[:k], held[k:]
+            pool.push_pages(back)
+            free.extend(reversed(back))
+        assert pool.n_free() == len(free)
+    qs = pool.queue_stats()
+    assert qs["quiets"] == 0 and qs["fences"] == 0
+    print(f"  pool == host LIFO over 300 ops ({qs['amos']} AMOs, "
+          f"0 quiets)")
+
+
+def main():
+    checked = os.environ.get("REPRO_SHMEMCHECK") == "1"
+    if checked:
+        shmemcheck.enable().reset()
+    check_amo_linearization()
+    check_substrates_agree()
+    check_pool_invariants()
+    check_pool_host_parity()
+    if checked:
+        findings = shmemcheck.report()
+        for f in findings:
+            print(f"  SHMEMCHECK {f}")
+        assert not findings, f"{len(findings)} memory-model finding(s)"
+    print("ATOMICS_PASS")
+
+
+if __name__ == "__main__":
+    main()

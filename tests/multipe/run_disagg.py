@@ -173,7 +173,7 @@ def build_cell_engine(cfg, ctx, api, params, scfg, role, my_pe, backend):
                              my_pe=my_pe, role=role)
 
 
-def build_disagg(backend, spec_k=0):
+def build_disagg(backend, spec_k=0, router="host"):
     cfg, ctx, api, params = build_cfg_ctx(backend)
     scfg = make_scfg(spec_k)
     cells = serve.make_cells(N_PREFILL, N_DECODE, pes_per_cell=TP)
@@ -182,7 +182,8 @@ def build_disagg(backend, spec_k=0):
                for c in cells]
     return serve.DisaggEngine(params, cfg, ctx, scfg,
                               n_prefill=N_PREFILL, n_decode=N_DECODE,
-                              pes_per_cell=TP, engines=engines)
+                              pes_per_cell=TP, engines=engines,
+                              router=router)
 
 
 def build_colocated(backend, spec_k=0):
@@ -213,25 +214,37 @@ def check_topology_parity():
                 ref = {r.rid: list(r.out)
                        for r in colo.run(make_reqs(sampling),
                                          clock="tick")}
-                eng = build_disagg(backend, spec_k)
-                done = eng.run(make_reqs(sampling), clock="tick")
-                got = {r.rid: list(r.out) for r in done}
-                assert got == ref, (backend, tag, spec_k, got, ref)
-                if want is None:
-                    want = got
-                assert got == want, (backend, tag, spec_k)
-                hs = eng.stats()
-                assert hs["handoff_quiets"] == 0, hs
-                assert hs["handoff_signals"] == hs["handoff_pages"] > 0
-                assert hs["handoff_waits"] == hs["handoff_tickets"] \
-                    == len(PROMPTS)
-                assert eng.hq.pending_ops() == 0
-                if spec_k:
-                    dec = [eng.engines[c] for c in eng.router.decode]
-                    assert sum(e.spec_stats["verify_ticks"]
-                               for e in dec) > 0
+                for router in ("host", "amo"):
+                    eng = build_disagg(backend, spec_k, router)
+                    done = eng.run(make_reqs(sampling), clock="tick")
+                    got = {r.rid: list(r.out) for r in done}
+                    assert got == ref, (backend, tag, spec_k, router,
+                                        got, ref)
+                    if want is None:
+                        want = got
+                    assert got == want, (backend, tag, spec_k, router)
+                    hs = eng.stats()
+                    assert hs["handoff_quiets"] == 0, hs
+                    # the lock-free control plane never issues a
+                    # tick-global barrier either
+                    assert hs["router_quiets"] == 0, hs
+                    assert hs["handoff_signals"] == hs["handoff_pages"] > 0
+                    assert hs["handoff_waits"] == hs["handoff_tickets"] \
+                        == len(PROMPTS)
+                    assert eng.hq.pending_ops() == 0
+                    if router == "amo":
+                        assert hs["router_amos"] > 0, hs
+                        assert hs["handoff_amos"] > 0, hs
+                        for p in eng.pools:
+                            ps = p.queue_stats()
+                            assert ps["quiets"] == ps["fences"] == 0
+                    if spec_k:
+                        dec = [eng.engines[c] for c in eng.router.decode]
+                        assert sum(e.spec_stats["verify_ticks"]
+                                   for e in dec) > 0
             print(f"  2P+2D {tag} spec_k={spec_k} streams == colocated "
-                  f"across xla/posh/pallas (signals-only drain)")
+                  f"across xla/posh/pallas x router host/amo "
+                  f"(signals-only drain, zero router quiets)")
 
 
 def check_shard_motion():

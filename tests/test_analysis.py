@@ -412,6 +412,74 @@ def test_multi_page_ticket_same_word_no_ww_race():
 
 
 # ======================================================================
+# AMO rules: amo-race, both directions, and the per-word retire
+# ======================================================================
+def test_amo_race_plain_put_on_atomic_word_flagged():
+    """A blind put onto a word carrying AMO traffic races the
+    read-modify-write cycle — its own rule, naming amo_nbi as the fix."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.amo_nbi(SIG, "fadd", [(0, 1)], value=1, offset=2)
+        q.amo_wait(SIG, offset=2)
+        q.put_nbi(SIG, np.ones((N_PE, 1), np.int64), [(0, 1)], offset=2)
+        q.quiet()
+    assert "amo-race" in _rules(chk)
+    assert "amo_nbi" in chk.report()[0].message
+
+
+def test_amo_race_amo_over_pending_put_flagged():
+    """The mirror: an AMO issued while a plain put covering the word is
+    still pending — the shuffle decides which side of the
+    read-modify-write the blind write lands on.  Both locations carried."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.put_nbi(SIG, np.ones((N_PE, 1), np.int64), [(0, 1)], offset=2)
+        q.amo_nbi(SIG, "fadd", [(0, 1)], value=1, offset=2)
+        q.amo_wait(SIG, offset=2)
+        q.quiet()
+    assert _rules(chk) == ["amo-race"]
+    assert chk.report()[0].other_loc is not None
+
+
+def test_amo_plain_put_other_word_clean():
+    """Plain puts to the REST of an atomic-word pad are ordinary data."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.amo_nbi(SIG, "fadd", [(0, 1)], value=1, offset=2)
+        q.amo_wait(SIG, offset=2)
+        q.put_nbi(SIG, np.ones((N_PE, 1), np.int64), [(0, 1)], offset=0)
+        q.quiet()
+    assert chk.report() == []
+
+
+def test_concurrent_amos_same_word_clean():
+    """Pending AMOs on one word are NOT races — each is its own
+    linearization point; the shuffle only picks the order."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        for src in range(3):
+            q.amo_nbi(SIG, "fadd", [(src, 1)], value=1, offset=2)
+        q.amo_wait(SIG, offset=2)
+    assert chk.report() == []
+
+
+def test_amo_wait_retires_exactly_its_word():
+    """amo_wait on word 2 must leave word 3's pending AMO alone: a
+    plain put over word 3 afterwards still finds it pending (mirror
+    amo-race), while word 2 is fully retired."""
+    with fresh_checker() as chk:
+        q = _sig_queue()
+        q.amo_nbi(SIG, "fadd", [(0, 1)], value=1, offset=2)
+        q.amo_nbi(SIG, "fadd", [(0, 1)], value=1, offset=3)
+        q.amo_wait(SIG, offset=2)
+        pend = chk._pending[id(q)]
+        assert [w.amo_key for w in pend] == [("sig", 3)]
+        q.amo_wait(SIG, offset=3)
+        assert chk._pending[id(q)] == []
+    assert chk.report() == []
+
+
+# ======================================================================
 # lint fixtures — one per rule, both polarities
 # ======================================================================
 def _lint(src, relpath="repro/serve/fixture.py"):
@@ -611,6 +679,40 @@ def test_lint_signal_wait_in_callback_flagged():
         def bad(q, g, sig):
             r = q.allreduce_nbi(
                 g, lambda x: (q.signal_wait_until(sig, "eq", 1), x)[1])
+            q.quiet()
+            return r
+    """)
+    assert [e.rule for e in errs] == ["drain-callback"]
+
+
+def test_lint_amo_drained_by_amo_wait_clean():
+    """amo_wait is a first-class drain for the nbi rule — the queue-AMO
+    idiom needs no quiet."""
+    errs = _lint("""
+        def bump(q, h, pairs):
+            q.amo_nbi(h, "fadd", pairs, value=1, offset=0)
+            q.amo_wait(h, offset=0)
+            return q.state
+    """)
+    assert errs == []
+
+
+def test_lint_amo_without_drain_flagged():
+    errs = _lint("""
+        def leak(q, h, pairs):
+            q.amo_nbi(h, "fadd", pairs, value=1, offset=0)
+            return q.state
+    """)
+    assert [e.rule for e in errs] == ["nbi-drain"]
+
+
+def test_lint_amo_wait_in_callback_flagged():
+    """A blocking AMO drain inside completion handling deadlocks the
+    same way quiet does — drain-callback covers it."""
+    errs = _lint("""
+        def bad(q, g, h):
+            r = q.allreduce_nbi(
+                g, lambda x: (q.amo_wait(h, offset=0), x)[1])
             q.quiet()
             return r
     """)

@@ -311,6 +311,56 @@ def test_disagg_gate_pins_zero_handoff_quiets():
     assert len(fails) == 1 and "handoff_signals" in fails[0]
 
 
+ROUTER_HOST = dict(ROW, topology="2+2", router="host", tokens_out=96,
+                   requests=6)
+ROUTER_AMO = dict(ROW, topology="2+2", router="amo", tokens_out=96,
+                  requests=6, router_amos=200, router_quiets=0,
+                  handoff_quiets=0, steals=1, alloc_cas_retries=0)
+
+
+def test_router_pair_gate_requires_host_amo_pair():
+    """Real serve payloads (rows carry ``router``) must keep both
+    halves of the router_host/router_amo control-plane pair; synthetic
+    fixtures without the field are exempt."""
+    cb = _load_check_bench()
+    ok = _payload(router_host=dict(ROUTER_HOST),
+                  router_amo=dict(ROUTER_AMO))
+    assert cb.router_pair_fails(ok) == []
+    missing = _payload(router_host=dict(ROUTER_HOST))
+    fails = cb.router_pair_fails(missing)
+    assert len(fails) == 1 and "router_amo" in fails[0]
+    wrong = _payload(router_host=dict(ROUTER_HOST, router="amo"),
+                     router_amo=dict(ROUTER_AMO))
+    assert any("expected 'host'" in f
+               for f in cb.router_pair_fails(wrong))
+    # fixtures without router anywhere: gate stays silent
+    assert cb.router_pair_fails(_payload(smoke=dict(ROW))) == []
+
+
+def test_router_gate_pins_streams_and_zero_quiets():
+    """The lock-free control plane may not move a token stream or fall
+    back to a global barrier: unequal pair token counts, any
+    router_quiets, an idle router, or a mailbox quiet on the AMO path
+    each fail the gate."""
+    cb = _load_check_bench()
+    moved = _payload(router_host=dict(ROUTER_HOST),
+                     router_amo=dict(ROUTER_AMO, tokens_out=95))
+    fails = cb.router_pair_fails(moved)
+    assert len(fails) == 1 and "tokens_out" in fails[0]
+    quiety = _payload(router_host=dict(ROUTER_HOST),
+                      router_amo=dict(ROUTER_AMO, router_quiets=3))
+    fails = cb.router_pair_fails(quiety)
+    assert len(fails) == 1 and "router_quiets" in fails[0]
+    idle = _payload(router_host=dict(ROUTER_HOST),
+                    router_amo=dict(ROUTER_AMO, router_amos=0))
+    fails = cb.router_pair_fails(idle)
+    assert len(fails) == 1 and "router_amos" in fails[0]
+    mailbox = _payload(router_host=dict(ROUTER_HOST),
+                       router_amo=dict(ROUTER_AMO, handoff_quiets=1))
+    fails = cb.router_pair_fails(mailbox)
+    assert len(fails) == 1 and "handoff_quiets" in fails[0]
+
+
 ATTN_ROW = dict(impl="kernel", us_per_call=500.0, max_err_vs_ref=1e-7,
                 err_tol=1e-5)
 

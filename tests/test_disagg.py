@@ -224,6 +224,68 @@ def test_handoff_frees_producer_pages_after_ack(smoke_model):
     assert prod.stats["page_frees"] >= prod.stats["exported_pages"]
 
 
+@pytest.mark.parametrize("spec_k", [0, 2])
+@pytest.mark.parametrize("topology", [(1, 1), (2, 2)])
+def test_amo_router_streams_match_host(smoke_model, topology, spec_k):
+    """PR-9 tentpole bar: ``--router amo`` (CAS admission rings +
+    claim-word mailbox + symmetric page pools) produces the host
+    router's exact token streams — greedy and sampled, speculation off
+    and on — while the entire control plane drains without ONE
+    tick-global quiet (router queue AND every cell's pool queue)."""
+    params, cfg, ctx = smoke_model
+    n_prefill, n_decode = topology
+
+    def build(router):
+        scfg = ServeConfig(page_tokens=4, n_pages=48, max_batch=3,
+                           max_seq=48, spec_k=spec_k, attn_impl="ref")
+        return DisaggEngine(params, cfg, ctx, scfg, n_prefill=n_prefill,
+                            n_decode=n_decode, router=router)
+
+    host = build("host")
+    ref = {r.rid: list(r.out)
+           for r in host.run(_mixed_requests(), clock="tick")}
+    eng = build("amo")
+    got = {r.rid: list(r.out)
+           for r in eng.run(_mixed_requests(), clock="tick")}
+    assert got == ref, (topology, spec_k)
+    hs = eng.stats()
+    assert hs["handoff_quiets"] == 0
+    assert hs["router_quiets"] == 0          # router + pool queues
+    assert hs["router_amos"] > 0 and hs["handoff_amos"] > 0
+    assert hs["handoff_signals"] == hs["handoff_pages"] > 0
+    assert hs["handoff_waits"] == hs["handoff_tickets"]
+    for pool in eng.pools:
+        qs = pool.queue_stats()
+        assert qs["quiets"] == 0 and qs["fences"] == 0
+        assert qs["amos"] > 0
+    # host mode reports the amo counters as zeros (one stats schema)
+    hh = host.stats()
+    assert hh["router_amos"] == hh["router_quiets"] == 0
+    assert hh["steals"] == hh["alloc_cas_retries"] == 0
+
+
+def test_colocated_amo_pool_is_invisible(smoke_model):
+    """``--router amo`` without cells attaches a SymmetricPagePool to
+    the single engine's cache: identical page grants, identical
+    streams, zero quiets on the pool queue."""
+    params, cfg, ctx = smoke_model
+
+    def scfg():
+        return ServeConfig(page_tokens=4, n_pages=48, max_batch=3,
+                           max_seq=48, attn_impl="ref")
+
+    host = ServeEngine(params, cfg, ctx, scfg())
+    ref = {r.rid: list(r.out)
+           for r in host.run(_mixed_requests(), clock="tick")}
+    eng = ServeEngine(params, cfg, ctx, scfg())
+    eng.kv.attach_pool(serve.SymmetricPagePool(eng.kv.n_pages))
+    got = {r.rid: list(r.out)
+           for r in eng.run(_mixed_requests(), clock="tick")}
+    assert got == ref
+    qs = eng.kv._pool.queue_stats()
+    assert qs["quiets"] == 0 and qs["fences"] == 0 and qs["amos"] > 0
+
+
 def test_disagg_cli_spec_and_builder():
     from repro.launch.serve import build_engine, parse_disagg
     assert parse_disagg("2+2") == (2, 2)
@@ -235,6 +297,18 @@ def test_disagg_cli_spec_and_builder():
                             disagg="1+1")
     assert isinstance(eng, DisaggEngine)
     assert [c.role for c in eng.cells] == ["prefill", "decode"]
+    # --router wiring: amo builds the lock-free control plane
+    eng, _ = build_engine("qwen3-8b", n_pages=32, max_batch=2,
+                          disagg="1+1", router="amo")
+    assert eng.router_mode == "amo"
+    assert isinstance(eng.router, serve.AmoCellRouter)
+    assert len(eng.pools) == len(eng.engines)
+    eng, _ = build_engine("qwen3-8b", n_pages=32, max_batch=2,
+                          router="amo")          # colocated: pool only
+    assert isinstance(eng, ServeEngine)
+    assert isinstance(eng.kv._pool, serve.SymmetricPagePool)
+    with pytest.raises(SystemExit):
+        build_engine("qwen3-8b", router="bogus")
 
 
 # ======================================================================

@@ -679,6 +679,281 @@ def test_signal_stats_and_free_functions():
 
 
 # ======================================================================
+# queue AMOs (§4.6): each op its own linearization point inside the
+# delivery shuffle, drained per-word by amo_wait — property-tested
+# against the same maximal-write oracle plus a brute-force
+# linearizability check on every counter cell
+# ======================================================================
+N_CTR = 4
+CTR_HANDLE = SymHandle("ctr", (N_CTR,), np.dtype(np.int64), 512,
+                       N_CTR * 8)
+
+
+def gen_amo_sequence(rng: random.Random):
+    """Random issue sequence mixing plain puts (buf), fences and AMOs
+    on counter words (ctr) — at most 5 AMOs per (owner, word) cell so
+    the linearizability check can brute-force every order."""
+    events = []
+    val = 0
+    per_cell: dict = {}
+    for _ in range(rng.randint(2, 14)):
+        kind = rng.choices(["put", "fence", "amo"], weights=[4, 2, 5])[0]
+        if kind == "put":
+            k = rng.randint(1, N_PE)
+            pairs = list(zip(rng.sample(range(N_PE), k),
+                             rng.sample(range(N_PE), k)))
+            offset = rng.randint(0, OBJ_LEN - 1)
+            rows = rng.randint(1, OBJ_LEN - offset)
+            val += 1
+            values = {s: 100.0 * val + s for s, _ in pairs}
+            events.append(("put", pairs, offset, rows, values))
+        elif kind == "fence":
+            events.append(("fence", rng.choice([None] +
+                                               list(range(N_PE)))))
+        else:
+            word = rng.randrange(N_CTR)
+            owner = rng.randrange(N_PE)
+            if per_cell.get((owner, word), 0) >= 5:
+                continue
+            per_cell[(owner, word)] = per_cell.get((owner, word), 0) + 1
+            op = rng.choice(["fadd", "swap", "cswap", "fetch"])
+            value = rng.randint(1, 9) if op != "fetch" else None
+            cond = rng.randint(0, 9) if op == "cswap" else None
+            events.append(("amo", op, (rng.randrange(N_PE), owner),
+                           word, value, cond))
+    return events
+
+
+def _amo_apply(cur, op, value, cond):
+    if op == "fadd":
+        return cur + value
+    if op == "swap":
+        return value
+    if op == "cswap":
+        return value if cur == cond else cur
+    return cur                             # fetch
+
+
+def _linearizable(history, final):
+    """Does SOME total order of ``history`` (op, value, cond, old)
+    starting from 0 reproduce every fetched old value and the final
+    cell?  len(history) <= 5, so brute force is cheap."""
+    import itertools
+    for perm in itertools.permutations(range(len(history))):
+        cur = 0
+        for i in perm:
+            op, value, cond, old = history[i]
+            if old != cur:
+                break
+            cur = _amo_apply(cur, op, value, cond)
+        else:
+            if cur == final:
+                return True
+    return False
+
+
+def check_amo_sequence(events):
+    cands = oracle_candidates(
+        [e for e in events if e[0] in ("put", "fence")])
+    finals = {}
+    for seed in SEEDS:
+        state = {"buf": np.zeros((N_PE, OBJ_LEN), np.float32),
+                 "ctr": np.zeros((N_PE, N_CTR), np.int64)}
+        q = CommQueue("pe", state, transport=LocalTransport(N_PE),
+                      delivery_seed=seed)
+        issued = []                # (owner, word, op, value, cond, res)
+        for e in events:
+            if e[0] == "put":
+                _, pairs, offset, rows, values = e
+                data = np.zeros((N_PE, rows), np.float32)
+                for s, _ in pairs:
+                    data[s] = values[s] + \
+                        np.arange(rows, dtype=np.float32) / 16.0
+                q.put_nbi(HANDLE, data, pairs, offset=offset)
+                data.fill(-999.0)
+            elif e[0] == "fence":
+                q.fence(e[1])
+            else:
+                _, op, (src, owner), word, value, cond = e
+                r = q.amo_nbi(CTR_HANDLE, op, [(src, owner)],
+                              value=value, cond=cond, offset=word)
+                issued.append((owner, word, op, value, cond, r))
+        for word in range(N_CTR):
+            q.amo_wait(CTR_HANDLE, offset=word)
+        # per-word waits retired EVERY amo — readable before the quiet
+        assert all(r.ready for *_ignored, r in issued), seed
+        buf = np.asarray(q.quiet()["buf"])
+        ctr = np.asarray(q.state["ctr"])
+        finals[seed] = buf
+        hist: dict = {}
+        for owner, word, op, value, cond, r in issued:
+            hist.setdefault((owner, word), []).append(
+                (op, value, cond, int(r.value())))
+        for (owner, word), h in hist.items():
+            assert _linearizable(h, int(ctr[owner, word])), \
+                f"seed {seed} cell ({owner},{word}): {h} final " \
+                f"{int(ctr[owner, word])} not linearizable"
+        for d in range(N_PE):
+            for elem in range(OBJ_LEN):
+                got = float(buf[d, elem])
+                allowed = cands.get((d, elem))
+                if allowed is None:
+                    assert got == 0.0, (d, elem, got)
+                else:
+                    assert got in allowed, \
+                        f"dst {d} elem {elem}: {got} not in {allowed} " \
+                        f"(seed {seed})"
+    for (d, elem), allowed in cands.items():
+        if len(allowed) == 1:
+            vals = {float(finals[s][d, elem]) for s in SEEDS}
+            assert len(vals) == 1, (d, elem, vals)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.shmem_racy        # replays deliberately-racy sequences
+    @settings(max_examples=220, deadline=None)
+    @given(st.integers(0, 2 ** 32 - 1))
+    def test_amo_model_property(seed):
+        check_amo_sequence(gen_amo_sequence(random.Random(seed)))
+else:
+    @pytest.mark.shmem_racy        # replays deliberately-racy sequences
+    @pytest.mark.parametrize("chunk", range(11))
+    def test_amo_model_property(chunk):
+        # 11 chunks x 20 sequences = 220 examples, hypothesis-free
+        for i in range(20):
+            check_amo_sequence(
+                gen_amo_sequence(random.Random(9000 + chunk * 20 + i)))
+
+
+def _ctr_queue(seed=None):
+    state = {"buf": np.zeros((N_PE, OBJ_LEN), np.float32),
+             "ctr": np.zeros((N_PE, N_CTR), np.int64)}
+    return CommQueue("pe", state, transport=LocalTransport(N_PE),
+                     delivery_seed=seed)
+
+
+def test_amo_fadd_chain_linearizes_every_shuffle():
+    """K pending fadd(+1) on one word: for every delivery seed the
+    fetched old values are a permutation of 0..K-1 and the cell ends at
+    K — and the shuffle really is the linearization (different seeds
+    produce different permutations)."""
+    orders = set()
+    for seed in list(range(30)) + [None]:
+        q = _ctr_queue(seed)
+        rs = [q.amo_nbi(CTR_HANDLE, "fadd", [(s, 2)], value=1)
+              for s in range(N_PE)] + \
+             [q.amo_nbi(CTR_HANDLE, "fadd", [(0, 2)], value=1)
+              for _ in range(2)]
+        assert not any(r.ready for r in rs)
+        q.amo_wait(CTR_HANDLE)
+        olds = [int(r.value()) for r in rs]
+        assert sorted(olds) == list(range(len(rs))), (seed, olds)
+        assert int(np.asarray(q.state["ctr"])[2, 0]) == len(rs)
+        orders.add(tuple(olds))
+    assert len(orders) > 1             # the shuffle linearizes
+
+
+def test_amo_cswap_exactly_one_winner():
+    """Competing cswaps with the same cond: exactly one observes the
+    pristine word; the final value is the winner's, every shuffle."""
+    for seed in SEEDS:
+        q = _ctr_queue(seed)
+        rs = [q.amo_nbi(CTR_HANDLE, "cswap", [(s, 1)], value=10 + s,
+                        cond=0, offset=2) for s in range(N_PE)]
+        q.amo_wait(CTR_HANDLE, offset=2)
+        olds = [int(r.value()) for r in rs]
+        winners = [s for s, old in enumerate(olds) if old == 0]
+        assert len(winners) == 1, (seed, olds)
+        w = winners[0]
+        assert int(np.asarray(q.state["ctr"])[1, 2]) == 10 + w
+        # every loser fetched the winner's published value
+        assert all(olds[s] == 10 + w for s in range(N_PE) if s != w)
+
+
+@pytest.mark.shmem_racy            # reads state with ops in flight
+def test_amo_wait_retires_only_its_word():
+    """amo_wait is per-word completion: AMOs on other words and plain
+    puts stay pending — the zero-quiet allocator contract."""
+    q = _ctr_queue(0)
+    q.put_nbi(HANDLE, _payload(0, 4.0), [(0, 2)])
+    r0 = q.amo_nbi(CTR_HANDLE, "fadd", [(0, 1)], value=5, offset=0)
+    r1 = q.amo_nbi(CTR_HANDLE, "fadd", [(0, 1)], value=7, offset=1)
+    q.amo_wait(CTR_HANDLE, offset=0)
+    assert r0.ready and int(r0.value()) == 0
+    assert not r1.ready
+    assert q.pending_ops() == 2        # put + word-1 AMO untouched
+    assert np.asarray(q.state["buf"])[2, 0] == 0.0
+    assert np.asarray(q.state["ctr"])[1, 1] == 0
+    q.quiet()                          # covering drain retires the rest
+    assert int(r1.value()) == 0
+    assert np.asarray(q.state["ctr"])[1, 1] == 7
+    assert np.asarray(q.state["buf"])[2, 0] == 4.0
+
+
+def test_amo_validation_errors():
+    q = _ctr_queue()
+    with pytest.raises(ValueError, match="exactly one"):
+        q.amo_nbi(CTR_HANDLE, "fadd", [(0, 1), (1, 2)], value=1)
+    with pytest.raises(ValueError, match="unknown op"):
+        q.amo_nbi(CTR_HANDLE, "xadd", [(0, 1)], value=1)
+    with pytest.raises(ValueError, match="cswap needs cond"):
+        q.amo_nbi(CTR_HANDLE, "cswap", [(0, 1)], value=1)
+    with pytest.raises(ValueError, match="needs value"):
+        q.amo_nbi(CTR_HANDLE, "swap", [(0, 1)])
+    r = q.amo_nbi(CTR_HANDLE, "fetch", [(0, 1)])
+    with pytest.raises(RuntimeError, match="before quiet"):
+        r.value()                      # undefined before the drain
+    q.quiet()
+    assert int(r.value()) == 0
+
+
+def test_amo_stats_and_free_functions():
+    """The stats contract the serve-layer zero-quiet assertions key on:
+    amos / amo_waits count issue and drain, a pure AMO workload leaves
+    quiets at 0, and the core free functions round-trip."""
+    from repro.core import (amo_wait, atomic_cswap_nbi, atomic_fadd_nbi,
+                            atomic_fetch_nbi, atomic_swap_nbi)
+    q = _ctr_queue()
+    ra = atomic_fadd_nbi(q, CTR_HANDLE, 3, [(0, 1)])
+    rb = atomic_swap_nbi(q, CTR_HANDLE, 9, [(1, 1)])
+    amo_wait(q, CTR_HANDLE)
+    rc = atomic_cswap_nbi(q, CTR_HANDLE, 9, 11, [(2, 1)])
+    rd = atomic_fetch_nbi(q, CTR_HANDLE, [(0, 1)])
+    amo_wait(q, CTR_HANDLE)
+    st = q.stats()
+    assert st["amos"] == 4 and st["amo_waits"] == 2
+    assert st["quiets"] == 0 and st["fences"] == 0
+    assert st["drained"] == 4 and st["pending_by_dst"] == {}
+    assert {int(ra.value()), int(rb.value())} <= {0, 3}
+    assert int(rc.value()) == 9        # swap's 9 published before cswap
+    assert int(rd.value()) == 11
+    assert q.pending_ops() == 0
+
+
+def test_signal_reset_goes_through_the_transport():
+    """signal_reset recycles a word THROUGH the queue (immediate
+    transport write, counted under signal_resets) — the mailbox
+    recycling path; host-side dict mutation would diverge from the
+    transport's state copy."""
+    q = _sig_queue()
+    q.put_signal_nbi(HANDLE, _payload(0, 2.0), [(0, 1)], SIG_HANDLE, 5,
+                     offset=3, sig_offset=2)
+    q.signal_wait_until(SIG_HANDLE, "eq", 5, sig_offset=2, pe=1)
+    assert np.asarray(q.state["sig"])[1, 2] == 5
+    q.signal_reset(SIG_HANDLE, [(1, 1)], sig_offset=2)
+    assert np.asarray(q.state["sig"])[1, 2] == 0    # immediate
+    st = q.stats()
+    assert st["signal_resets"] == 1
+    assert st["signal_puts"] == 1      # a reset is not a transfer
+    assert st["quiets"] == 0
+    # re-arm: the recycled word carries a fresh guarded transfer
+    q.put_signal_nbi(HANDLE, _payload(0, 6.0), [(0, 1)], SIG_HANDLE, 1,
+                     offset=4, sig_offset=2)
+    q.signal_wait_until(SIG_HANDLE, "eq", 1, sig_offset=2, pe=1)
+    assert np.asarray(q.state["buf"])[1, 4] == 6.0
+
+
+# ======================================================================
 # heap addressing used by the queue: O(log n) resolve, boundary-exact
 # ======================================================================
 def test_resolve_bisect_boundaries():

@@ -1,0 +1,371 @@
+"""SymmetricPagePool linearizability (paper §4.6 applied to paging).
+
+The lock-free allocator must be indistinguishable from the host LIFO
+free list it replaces — ``PagedKVCache.attach_pool`` swaps it in under
+the serving stack, so a single page-id divergence moves block tables
+and (via placement) token streams.  Three layers of evidence:
+
+  * a property test replays random alloc/free/rollback/grow traces
+    against the host-list oracle and demands BIT-IDENTICAL grants for
+    every delivery seed (the attach_pool contract);
+  * seeded multi-actor interleavings (complete ops shuffled across
+    actors, plus issue-level concurrent bump reservations) pin the
+    allocator invariants no oracle can state per-trace: no double
+    grant, no leak, page conservation;
+  * directed tests build the classic lock-free failure modes by hand —
+    the ABA interleaving the tag guard exists for, a mid-``pop_page``
+    CAS defeat that must retry (not double-grant), empty-pool and
+    all-or-nothing rollback boundaries.
+
+Every test also pins the completion discipline: the pool queue drains
+AMOs per-word only — ``quiets == fences == 0`` always.
+"""
+import os
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.serve.page_pool import (W_BUMP, W_NEXT, W_TOP,
+                                   _PAGE_MASK, _TAG_SHIFT,
+                                   SymmetricPagePool)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ======================================================================
+# the host-LIFO oracle (PagedKVCache's free list, verbatim semantics)
+# ======================================================================
+class HostList:
+    """The host free list the pool must be bit-identical to: pages
+    ``1..n-1`` popped from the tail, frees ``extend(reversed(...))``."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.free = list(range(n_pages - 1, 0, -1))
+
+    def pop_page(self):
+        return self.free.pop() if self.free else None
+
+    def pop_pages(self, n):
+        if n > len(self.free):
+            return None
+        return [self.free.pop() for _ in range(n)]
+
+    def push_pages(self, pages):
+        self.free.extend(reversed(list(pages)))
+
+    def n_free(self):
+        return len(self.free)
+
+    def grow_pages(self, new_ids):
+        ids = sorted(new_ids)
+        self.n_pages += len(ids)
+        self.free.extend(reversed(ids))
+
+
+def _zero_quiet(pool):
+    qs = pool.queue_stats()
+    assert qs["quiets"] == 0 and qs["fences"] == 0, qs
+    assert qs["amos"] > 0 and qs["amo_waits"] > 0
+
+
+# ======================================================================
+# property: single-actor traces are bit-identical to the host list
+# ======================================================================
+def run_trace(rng: random.Random, delivery_seed: int):
+    n = rng.randint(4, 12)
+    pool = SymmetricPagePool(n, delivery_seed=delivery_seed)
+    host = HostList(n)
+    held_p, held_h = [], []
+    for _ in range(rng.randint(5, 40)):
+        op = rng.choices(["pop", "popn", "push", "grow"],
+                         weights=[5, 2, 4, 1])[0]
+        if op == "pop":
+            gp, gh = pool.pop_page(), host.pop_page()
+            assert gp == gh, (gp, gh)
+            if gp is not None:
+                held_p.append(gp)
+                held_h.append(gh)
+        elif op == "popn":
+            k = rng.randint(1, 4)
+            gp, gh = pool.pop_pages(k), host.pop_pages(k)
+            assert gp == gh, (gp, gh)       # incl. None==None rollback
+            if gp is not None:
+                held_p.extend(gp)
+                held_h.extend(gh)
+        elif op == "push" and held_p:
+            k = rng.randint(1, len(held_p))
+            idx = rng.sample(range(len(held_p)), k)
+            back = [held_p[i] for i in idx]
+            assert back == [held_h[i] for i in idx]
+            pool.push_pages(back)
+            host.push_pages(back)
+            held_p = [p for i, p in enumerate(held_p) if i not in idx]
+            held_h = [p for i, p in enumerate(held_h) if i not in idx]
+        elif op == "grow":
+            k = rng.randint(1, 3)
+            ids = range(pool.n_pages, pool.n_pages + k)
+            pool.grow_pages(ids)
+            host.grow_pages(ids)
+        assert pool.n_free() == host.n_free()
+    # drain both dry: every remaining page granted once, same order
+    rest_p, rest_h = [], []
+    while True:
+        gp, gh = pool.pop_page(), host.pop_page()
+        assert gp == gh
+        if gp is None:
+            break
+        rest_p.append(gp)
+    outstanding = held_p + rest_p
+    assert sorted(outstanding) == list(range(1, pool.n_pages))
+    assert pool.n_free() == 0
+    _zero_quiet(pool)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=150, deadline=None)
+    @given(st.integers(0, 2 ** 32 - 1), st.integers(0, 35))
+    def test_pool_matches_host_lifo_property(seed, dseed):
+        run_trace(random.Random(seed), dseed)
+else:
+    @pytest.mark.parametrize("chunk", range(10))
+    def test_pool_matches_host_lifo_property(chunk):
+        # 10 chunks x 15 traces, delivery seed swept 0..35 with them
+        for i in range(15):
+            k = chunk * 15 + i
+            run_trace(random.Random(k), k % 36)
+
+
+# ======================================================================
+# multi-actor interleavings: allocator invariants under the shuffle
+# ======================================================================
+N_ACTORS = 4
+
+
+def run_concurrent_trace(rng: random.Random, delivery_seed: int):
+    n = rng.randint(6, 16)
+    pool = SymmetricPagePool(n, n_actors=N_ACTORS,
+                             delivery_seed=delivery_seed)
+    held = {a: [] for a in range(N_ACTORS)}
+    for _ in range(rng.randint(10, 60)):
+        a = rng.randrange(N_ACTORS)
+        if rng.random() < 0.6:
+            p = pool.pop_page(actor=a)
+            if p is not None:
+                held[a].append(p)
+        elif held[a]:
+            k = rng.randint(1, len(held[a]))
+            back, held[a] = held[a][:k], held[a][k:]
+            pool.push_pages(back, actor=a)
+        # invariants after EVERY step: grants unique across actors
+        # (no double grant), accounting exact (no leak)
+        out = [p for ps in held.values() for p in ps]
+        assert len(out) == len(set(out)), out
+        assert pool.n_free() == (n - 1) - len(out)
+    # conservation: return everything, then drain — each page once
+    for a, ps in held.items():
+        pool.push_pages(ps, actor=a)
+    assert pool.n_free() == n - 1
+    got = sorted(iter(lambda: pool.pop_page(actor=rng.randrange(N_ACTORS)),
+                      None))
+    assert got == list(range(1, n))
+    _zero_quiet(pool)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=120, deadline=None)
+    @given(st.integers(0, 2 ** 32 - 1), st.integers(0, 35))
+    def test_pool_concurrent_invariants_property(seed, dseed):
+        run_concurrent_trace(random.Random(seed), dseed)
+else:
+    @pytest.mark.parametrize("chunk", range(8))
+    def test_pool_concurrent_invariants_property(chunk):
+        for i in range(15):
+            k = chunk * 15 + i
+            run_concurrent_trace(random.Random(5000 + k), k % 36)
+
+
+def test_concurrent_bump_reservations_grant_unique_pages():
+    """Issue-level concurrency: every actor's bump fetch-add is IN
+    FLIGHT before any drains — one amo_wait linearizes them all and
+    each actor still receives a distinct fresh page, for 30+ shuffle
+    seeds (the no-double-grant core of the allocator)."""
+    for dseed in list(range(34)) + [None]:
+        pool = SymmetricPagePool(2 * N_ACTORS + 1, n_actors=N_ACTORS,
+                                 delivery_seed=dseed)
+        pend = [pool.amo_issue("fadd", W_BUMP, 1, actor=a)
+                for a in range(N_ACTORS)]
+        assert not any(r.ready for r in pend)
+        pool.amo_drain(W_BUMP)
+        ks = [int(r.value()) for r in pend]
+        pages = [1 + k for k in ks]
+        assert sorted(ks) == list(range(N_ACTORS)), (dseed, ks)
+        assert len(set(pages)) == N_ACTORS
+        _zero_quiet(pool)
+
+
+# ======================================================================
+# directed: the classic failure modes, built by hand
+# ======================================================================
+def test_aba_tag_guard_fails_the_stale_cas():
+    """The ABA interleaving: actor 1 snapshots TOP (page X) and
+    NEXT[X]; actor 0 pops X and pushes it back (same page on top,
+    NEW tag).  Actor 1's stale cswap MUST fail — an untagged stack
+    would let it through and double-grant X's old next link."""
+    pool = SymmetricPagePool(8, n_actors=2)
+    a = pool.pop_page(actor=0)
+    b = pool.pop_page(actor=0)
+    pool.push_pages([a, b], actor=0)       # stack: a -> b
+    # actor 1 snapshots the stack head
+    top = pool._amo("fetch", W_TOP, actor=1)
+    page, tag = top & _PAGE_MASK, top >> _TAG_SHIFT
+    assert page == a
+    nxt = pool._amo("fetch", W_NEXT + page, actor=1)
+    assert nxt == b
+    # actor 0 interferes: pop a, pop b, push a back — head shows page a
+    # again, but the tag moved
+    assert pool.pop_page(actor=0) == a
+    assert pool.pop_page(actor=0) == b
+    pool.push_pages([a], actor=0)
+    top2 = pool._amo("fetch", W_TOP, actor=1)
+    assert top2 & _PAGE_MASK == a          # same page value...
+    assert top2 != top                     # ...different word: tag moved
+    # actor 1 replays its stale pop CAS — the tag must defeat it
+    old = pool._amo("cswap", W_TOP, value=((tag + 1) << _TAG_SHIFT) | nxt,
+                    cond=top, actor=1)
+    assert old != top                      # CAS failed: no ABA pop of b
+    # the pool is undamaged: a is still on top, b stays granted
+    assert pool.pop_page(actor=1) == a
+    assert pool.n_free() == pool.n_pages - 1 - 2    # a + b outstanding
+    _zero_quiet(pool)
+
+
+def test_pop_page_retries_after_cas_defeat():
+    """A competing pop lands between ``pop_page``'s TOP snapshot and
+    its claim CAS: the loser must RETRY (counted in cas_retries) and
+    come back with a different page — never the one the winner took."""
+    pool = SymmetricPagePool(8, n_actors=2)
+    p1, p2 = pool.pop_page(actor=0), pool.pop_page(actor=0)
+    pool.push_pages([p1, p2], actor=0)     # stack: p1 -> p2
+    stolen = []
+    orig = pool._amo
+
+    def interfere(op, word, value=None, cond=None, *, actor=0):
+        # after actor 1 first snapshots TOP, actor 0 races a full pop
+        if (op == "fetch" and word == W_TOP and actor == 1
+                and not stolen):
+            out = orig(op, word, value, cond, actor=actor)
+            pool._amo = orig               # interfere exactly once
+            stolen.append(pool.pop_page(actor=0))
+            return out
+        return orig(op, word, value, cond, actor=actor)
+
+    pool._amo = interfere
+    got = pool.pop_page(actor=1)
+    assert stolen == [p1]                  # the winner took the head
+    assert got == p2                       # loser retried onto the next
+    assert pool.stats["cas_retries"] >= 1
+    outstanding = {p1, p2}
+    assert pool.n_free() == pool.n_pages - 1 - len(outstanding)
+    _zero_quiet(pool)
+
+
+def test_empty_pool_and_rollback_boundaries():
+    pool = SymmetricPagePool(4)
+    host = HostList(4)
+    got = [pool.pop_page() for _ in range(3)]
+    assert got == [host.pop_page() for _ in range(3)] == [1, 2, 3]
+    assert pool.pop_page() is None and pool.n_free() == 0
+    assert pool.pop_pages(1) is None
+    # all-or-nothing: a shortfall restores the EXACT pre-call state
+    pool.push_pages(got[:2])
+    host.push_pages(got[:2])
+    assert pool.pop_pages(3) is None and pool.n_free() == 2
+    assert pool.pop_pages(2) == host.pop_pages(2)
+    assert pool.pop_page() is None
+    # bump counter stayed conservative through the exhausted probes
+    assert pool._amo("fetch", W_BUMP) == 3
+    _zero_quiet(pool)
+
+
+def test_grow_matches_host_growth_order():
+    pool = SymmetricPagePool(3)
+    host = HostList(3)
+    assert pool.pop_pages(2) == host.pop_pages(2) == [1, 2]
+    pool.grow_pages(range(3, 6))
+    host.grow_pages(range(3, 6))
+    assert pool.n_free() == host.n_free() == 3
+    got = [pool.pop_page() for _ in range(4)]
+    assert got == [host.pop_page() for _ in range(4)]
+    assert got == [3, 4, 5, None]
+    _zero_quiet(pool)
+
+
+def test_constructor_and_push_validation():
+    with pytest.raises(ValueError, match=">= 2 pages"):
+        SymmetricPagePool(1)
+    pool = SymmetricPagePool(4)
+    with pytest.raises(ValueError, match="outside pool"):
+        pool.push_pages([0])               # the null page is never free
+    with pytest.raises(ValueError, match="outside pool"):
+        pool.push_pages([4])
+    p = pool.pop_page()
+    pool.push_pages([p])                   # legal ids round-trip
+    assert pool.n_free() == 3
+
+
+def test_attach_pool_is_invisible_to_the_kv_cache():
+    """The end-to-end contract: a PagedKVCache driven through an
+    attached pool grants the same pages as the host list — tables,
+    rollbacks and growth included."""
+    from repro.core.heap import SymmetricHeap
+    from repro.serve.kv_cache import PagedKVCache
+
+    def make(attach):
+        kv = PagedKVCache(SymmetricHeap(("data",)), n_layers=1,
+                          kv_heads=1, head_dim=4, n_pages=8,
+                          page_tokens=4)
+        if attach:
+            kv.attach_pool(SymmetricPagePool(kv.n_pages,
+                                             name="pool_words_t"))
+        return kv
+
+    kvs = [make(False), make(True)]
+    for step in (lambda kv: kv.alloc_seq("a", 6),
+                 lambda kv: kv.alloc_seq("b", 9),
+                 lambda kv: kv.ensure("a", 12),
+                 lambda kv: kv.free_seq("b"),
+                 lambda kv: kv.take_pages(2),
+                 lambda kv: kv.alloc_seq("c", 30),   # must fail both
+                 lambda kv: kv.n_free()):
+        r0, r1 = step(kvs[0]), step(kvs[1])
+        assert r0 == r1, (r0, r1)
+    assert kvs[0].tables == kvs[1].tables
+    _zero_quiet(kvs[1]._pool)
+
+
+# ======================================================================
+# the multi-PE suite (8 requesters, mesh==queue substrate parity)
+# ======================================================================
+def test_atomics_8pe():
+    if os.environ.get("REPRO_MULTIPE_EXPLICIT"):
+        pytest.skip("multipe workers run explicitly (scripts/verify.sh)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "multipe", "run_atomics.py")],
+        capture_output=True, text=True, env=env, timeout=2400)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ATOMICS_PASS" in r.stdout
