@@ -33,9 +33,33 @@ knob — host Python-loop scheduling vs lock-free CAS admission rings +
 claim-word mailbox + symmetric page pool — and its amo row carries
 ``router_amos``/``router_quiets``/``steals``/``alloc_cas_retries``
 (check_bench enforces the pair, equal token counts, and zero quiets on
-the AMO path).  ``--smoke`` runs the smallest cases — one greedy, one
+the AMO path).
+
+SLO rows (PR 10): the SATURATION sweep serves a fixed fleet-like class
+mix (40% interactive / 20% batch / 40% best_effort, two tenants, tick-
+unit deadlines) on the TICK clock at ramped arrival rates —
+``sat_low`` .. ``sat_overload`` smoke endpoints, ``sat_r1/r2/r4`` ramp
+rows in the full sweep — each row carrying per-class
+``slo_attained_*`` / ``shed_*`` fields.  Because the tick clock makes
+the whole schedule deterministic, check_bench gates these HARD:
+interactive attainment >= 0.99 on every row (the protected SLO holds
+through overload) and sheds land on best_effort ONLY; the full sweep
+also records ``meta["saturation_knee_rate"]``, the rate where
+best-effort shedding begins.  The HOT-SWAP pair
+(``hot_swap_off``/``hot_swap_on``) serves one trace twice with the
+in-flight weight swap as the only knob: the on row streams a second
+weight generation between serving ticks and flips mid-run, and
+check_bench pins equal token counts across the pair plus
+``swap_extra_quiets == 0`` (the swap queue retires on per-transfer
+signal/AMO waits, never a tick-global drain).  ``meta["sweep_cases"]``
+lists every full-sweep case name under BOTH modes, so check_bench can
+fail on committed rows the sweep no longer emits (RETIRED_CASES is the
+allowlist).
+
+``--smoke`` runs the smallest cases — one greedy, one
 with the Pallas paged-attention KERNELS, one SAMPLED, one SPECULATIVE,
-one DISAGGREGATED, plus the router pair — so the `make verify` freshness
+one DISAGGREGATED, the router pair, the saturation endpoints and the
+hot-swap pair — so the `make verify` freshness
 gate covers all serving modes end-to-end; the full sweep emits
 the same smoke rows under the same case names, which is what lets
 ``scripts/check_bench.py`` match fresh smoke rows against the
@@ -109,7 +133,8 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
              max_batch, n_requests, rate, seed, *, sampling="greedy",
              prefill_chunk=8, tick_tokens=0, long_frac=0.25,
              spec_k=0, workload="poisson", warmup=True, disagg="",
-             router="host"):
+             router="host", slo=None, slo_traffic=None, hot_swap=None,
+             clock="wall"):
     from repro import serve
     from repro.analysis import shmemcheck
     from repro.launch.serve import build_engine
@@ -124,7 +149,9 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
                             max_batch=max_batch, attn_impl=attn_impl,
                             prefill_chunk=prefill_chunk,
                             tick_tokens=tick_tokens, seed=seed,
-                            spec_k=spec_k, disagg=disagg, router=router)
+                            spec_k=spec_k, disagg=disagg, router=router,
+                            slo=(serve.SLOConfig(**slo)
+                                 if slo is not None else None))
     temp, top_k, top_p = SAMPLING[sampling]
 
     def trace(seed_, n):
@@ -135,7 +162,7 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
                                    vocab=cfg.vocab, seed=seed_,
                                    long_frac=long_frac,
                                    temperature=temp, top_k=top_k,
-                                   top_p=top_p)
+                                   top_p=top_p, **(slo_traffic or {}))
         return serve.make_requests(tcfg)
 
     if warmup:
@@ -145,10 +172,28 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         # compiles
         eng.run(trace(seed + 1, 3), clock="wall")
         eng.reset_metrics()
+    if hot_swap:
+        # the hot_swap_on row: stream a SECOND weight generation (a
+        # fresh init from seed+1000, the same derivation the CLI's
+        # --hot-swap uses) into the live engine while the measured
+        # trace is being served, flipping mid-run.  Token COUNTS must
+        # match the off row exactly (the swap never sheds or stalls a
+        # request) and the swap queue must retire on per-transfer
+        # waits alone: swap_extra_quiets stays 0
+        from repro.models import registry
+        import jax as _jax
+        ctx = getattr(eng, "ctx", None) or eng.engines[0].ctx
+        new_params = registry.build(cfg).init(
+            _jax.random.PRNGKey(seed + 1000), cfg, ctx)
+        eng.begin_hot_swap(new_params)
     t0 = time.perf_counter()
-    # explicit wall clock: ServeEngine and DisaggEngine default to
-    # different clocks, and a topology row pair must share one
-    eng.run(trace(seed, n_requests), clock="wall")
+    # explicit clock: ServeEngine and DisaggEngine default to different
+    # clocks, and a topology row pair must share one.  SLO/saturation
+    # and hot-swap rows run clock="tick" — deadlines and arrivals in
+    # scheduler ticks — so attainment/shed numbers are DETERMINISTIC
+    # and check_bench can gate them hard (>= 0.99), immune to CI wall-
+    # clock jitter
+    eng.run(trace(seed, n_requests), clock=clock)
     wall = time.perf_counter() - t0
     m = eng.metrics()
     row = {
@@ -176,7 +221,33 @@ def run_case(case, arch, backend, attn_impl, page_tokens, n_pages,
         "spec_emitted": m["spec"]["emitted"],
         "topology": disagg or "colocated",
         "router": router,
+        "clock": clock,
     }
+    if slo is not None:
+        # per-class SLO fields only exist on SLO rows — check_bench
+        # keys its saturation gate off slo_attained_interactive's
+        # presence.  Shed counters land per class so the gate can pin
+        # "sheds hit best_effort only"
+        s = m["slo"]
+        for cls in ("interactive", "batch", "best_effort"):
+            row[f"slo_attained_{cls}"] = round(
+                s["attained"].get(cls, 1.0), 4)
+            row[f"shed_{cls}"] = s["shed"].get(cls, 0)
+            row[f"finished_{cls}"] = s["finished"].get(cls, 0)
+        pol = s.get("policy") or {}
+        row["rate_deferred"] = pol.get("rate_deferred", 0)
+        row["degraded_chunks"] = pol.get("degraded_chunks", 0)
+    if hot_swap is not None:
+        # both rows of the hot_swap pair carry the swap counters (the
+        # off row all-zero): check_bench keys the pair gate off the
+        # "hot_swap" field's presence
+        sw = m["swap"]
+        row.update(hot_swap=int(bool(hot_swap)),
+                   swap_flips=sw["flips"],
+                   swap_ticks=sw["swap_ticks"],
+                   swap_batches=sw["swap_batches"],
+                   swap_bytes=sw["swap_bytes"],
+                   swap_extra_quiets=sw["swap_extra_quiets"])
     if disagg:
         # handoff counters only exist on disagg rows — check_bench
         # keys its topology gate off their presence.  The router/
@@ -226,6 +297,16 @@ def main():
     # committed full file always contains the rows a fresh --smoke run
     # is compared against.
     sampled = args.sampling if args.sampling != "greedy" else "top_p"
+    # the saturation sweep's shared SLO traffic shape: a fleet-like
+    # class mix on the TICK clock (rate = requests/tick, deadlines in
+    # ticks).  Interactive deadlines are the protected SLO; the tight
+    # best-effort deadline is the pressure valve that starts shedding
+    # once arrivals outrun capacity
+    SAT_TRAFFIC = {"interactive_frac": 0.4, "batch_frac": 0.2,
+                   "deadline_interactive": 100.0,
+                   "deadline_batch": 200.0,
+                   "deadline_best_effort": 6.0, "n_tenants": 2}
+    SAT_KW = {"slo": {}, "slo_traffic": SAT_TRAFFIC, "clock": "tick"}
     SMOKE_CASES = [
         ("smoke", "xla", "ref", 4, 32, 3, 6, "greedy", {}),
         # the attn_impl kernel/ref PAIR: same engine shape as "smoke"
@@ -252,12 +333,26 @@ def main():
          {"disagg": "2+2"}),
         ("router_amo", "xla", "ref", 4, 48, 3, 6, "greedy",
          {"disagg": "2+2", "router": "amo"}),
+        # the saturation pair the SLO gate rides on: the same class
+        # mix under light load (sat_low) and overload (sat_overload —
+        # arrivals far beyond tick capacity).  Interactive attainment
+        # must hold >= 0.99 on BOTH; sheds may only land on
+        # best_effort.  The full sweep ramps the rate between them
+        ("sat_low", "xla", "ref", 4, 32, 3, 12, "greedy",
+         dict(SAT_KW, rate=0.5)),
+        ("sat_overload", "xla", "ref", 4, 32, 3, 12, "greedy",
+         dict(SAT_KW, rate=8.0)),
+        # the hot-swap pair: identical shape and trace on the tick
+        # clock, the in-flight weight swap the ONLY knob.  check_bench
+        # pins equal token counts across the pair and zero extra
+        # global drains on the swap queue
+        ("hot_swap_off", "xla", "ref", 4, 32, 3, 6, "greedy",
+         {"hot_swap": False, "clock": "tick"}),
+        ("hot_swap_on", "xla", "ref", 4, 32, 3, 6, "greedy",
+         {"hot_swap": True, "clock": "tick"}),
     ]
-    if args.smoke:
-        cases = SMOKE_CASES
-    else:
-        n = args.requests
-        cases = SMOKE_CASES + [
+    n = args.requests
+    FULL_CASES = SMOKE_CASES + [
             ("p4_b2_ref", "xla", "ref", 4, 48, 2, n, "greedy", {}),
             ("p4_b4_ref", "xla", "ref", 4, 48, 4, n, "greedy", {}),
             ("p8_b4_ref", "xla", "ref", 8, 32, 4, n, "greedy", {}),
@@ -313,7 +408,24 @@ def main():
             ("colocated", "xla", "ref", 4, 48, 3, n, "greedy", {}),
             ("disagg_2p2d", "xla", "ref", 4, 48, 3, n, "greedy",
              {"disagg": "2+2"}),
+            # the saturation RAMP between the smoke endpoints: arrival
+            # rate doubles per row, same class mix/deadlines/shape.
+            # The knee — the first rate where best_effort starts
+            # shedding — lands in meta["saturation_knee_rate"]
+            ("sat_r1", "xla", "ref", 4, 32, 3, 12, "greedy",
+             dict(SAT_KW, rate=1.0)),
+            ("sat_r2", "xla", "ref", 4, 32, 3, 12, "greedy",
+             dict(SAT_KW, rate=2.0)),
+            ("sat_r4", "xla", "ref", 4, 32, 3, 12, "greedy",
+             dict(SAT_KW, rate=4.0)),
         ]
+    # the full sweep's case-name roster, emitted under BOTH modes: the
+    # stale-case gate in check_bench compares the committed file
+    # against this list, so retiring a case from the sweep without
+    # allowlisting it in RETIRED_CASES fails verify loudly instead of
+    # leaving a zombie row the gates still "check"
+    sweep_cases = [c[0] for c in FULL_CASES]
+    cases = SMOKE_CASES if args.smoke else FULL_CASES
     results = []
     for case, backend, impl, pt, np_, mb, nreq, sampling, extra in cases:
         extra = dict(extra)
@@ -332,6 +444,13 @@ def main():
             spec += (f"  [amo] amos {row.get('router_amos', 0)} "
                      f"steals {row.get('steals', 0)} "
                      f"cas_retries {row.get('alloc_cas_retries', 0)}")
+        if "slo_attained_interactive" in row:
+            spec += (f"  [slo] int {row['slo_attained_interactive']:.2f}"
+                     f" shed_be {row['shed_best_effort']}")
+        if "hot_swap" in row:
+            spec += (f"  [swap {'on' if row['hot_swap'] else 'off'}] "
+                     f"flips {row['swap_flips']} extra_quiets "
+                     f"{row['swap_extra_quiets']}")
         print(f"{case:>22}: {row['throughput_tok_s']:8.1f} tok/s  "
               f"p50 {row['latency_p50_s']*1e3:7.1f} ms  "
               f"p99 {row['latency_p99_s']*1e3:7.1f} ms  "
@@ -360,6 +479,20 @@ def main():
                 "warmup": True,
                 "note": "CPU rows measure engine/scheduler structure, "
                         "not accelerator decode throughput"}
+    meta["sweep_cases"] = sweep_cases
+    sat = sorted((r for r in results
+                  if r["case"].startswith("sat_")
+                  and "slo_attained_interactive" in r),
+                 key=lambda r: r["rate_req_s"])
+    if not args.smoke and sat:
+        # the knee: the lowest arrival rate at which the policy starts
+        # shedding best-effort traffic (interactive attainment is
+        # gated to hold across the WHOLE ramp, so the knee is where
+        # degradation begins, not where the protected SLO breaks)
+        knee = next((r["rate_req_s"] for r in sat
+                     if r["shed_best_effort"] > 0), None)
+        meta["saturation_knee_rate"] = knee
+        meta["saturation_rates"] = [r["rate_req_s"] for r in sat]
     with open(OUT, "w") as f:
         json.dump({"meta": meta, "results": results}, f, indent=1)
     print(f"wrote {OUT} ({len(results)} rows)")

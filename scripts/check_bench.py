@@ -37,6 +37,20 @@ lock-free work (``router_amos > 0``) with ``router_quiets == 0`` and
 ``handoff_quiets == 0`` — neither the CAS admission rings, the page
 pools, nor the mailbox may fall back to a tick-global barrier.
 
+SLO gates (PR 10, also runnable alone via ``--slo-only`` as
+verify.sh's dedicated slo-gate phase): payloads whose rows carry
+``slo_attained_interactive`` must keep the ``sat_low``/``sat_overload``
+endpoints, hold interactive attainment >= 0.99 on EVERY SLO row, shed
+only best_effort traffic, and shed at least once somewhere (the ramp
+actually reached overload); payloads whose rows carry ``hot_swap``
+must keep the ``hot_swap_off``/``hot_swap_on`` pair with equal token
+counts, a real flip (``swap_flips > 0``, ``swap_bytes > 0``) and
+``swap_extra_quiets == 0`` on the on row.  A STALE-CASE gate rides on
+``meta["sweep_cases"]``: committed case names the sweep can no longer
+emit fail loudly unless allowlisted in ``RETIRED_CASES`` — zombie rows
+would otherwise merge forward through every smoke refresh with numbers
+nothing can update.
+
 Two attention-kernel gates ride along:
 
   * serve rows must still carry the smoke ``attn_impl`` kernel/ref PAIR
@@ -84,6 +98,20 @@ SERVE_DISAGG_PAIR = (("colocated", "colocated"), ("disagg_2p2d", "2+2"))
 
 # the control-plane pair: same shape/trace, router is the only knob
 SERVE_ROUTER_PAIR = (("router_host", "host"), ("router_amo", "amo"))
+
+# the saturation endpoints the SLO gate must always find benched: the
+# same class mix under light load and under overload
+SERVE_SAT_PAIR = ("sat_low", "sat_overload")
+
+# the hot-swap pair: same shape/trace, the in-flight weight swap the
+# only knob — (case, expected hot_swap flag)
+SERVE_SWAP_PAIR = (("hot_swap_off", 0), ("hot_swap_on", 1))
+
+# full-sweep case names that were DELIBERATELY retired: committed rows
+# under these names may outlive the sweep (the stale-case gate's
+# allowlist — add a name here when a case is intentionally removed,
+# with a PR explaining why its trajectory ends)
+RETIRED_CASES: frozenset = frozenset()
 
 
 def load_baseline(path: str | None, fname: str = "BENCH_serve.json") -> dict:
@@ -260,6 +288,121 @@ def router_pair_fails(fresh: dict) -> list:
     return fails
 
 
+def slo_fails(fresh: dict) -> list:
+    """The saturation/SLO gate: every SLO row (presence-keyed on
+    ``slo_attained_interactive``) must hold the protected class's TTFT
+    SLO — attainment >= 0.99 — and sheds may land on best_effort ONLY.
+    At least one row must actually shed (the sweep reached overload;
+    a ramp that never saturates exercises no admission policy), and
+    the sat_low/sat_overload endpoints must both be benched.  The
+    numbers are deterministic (tick clock), so these are hard pins,
+    not noise-tolerant bands.  Synthetic unit fixtures without SLO
+    fields are unaffected."""
+    rows = by_case(fresh)
+    slo_rows = {c: r for c, r in rows.items()
+                if "slo_attained_interactive" in r}
+    if not slo_rows:
+        return []
+    fails = []
+    for case in SERVE_SAT_PAIR:
+        if case not in slo_rows:
+            fails.append(
+                f"slo: saturation case '{case}' missing — both the "
+                f"light-load and overload endpoints of the ramp must "
+                f"always be benched")
+    for case, r in sorted(slo_rows.items()):
+        att = float(r.get("slo_attained_interactive", 0.0))
+        if att < 0.99:
+            fails.append(
+                f"slo: {case}: slo_attained_interactive={att:g} < "
+                f"0.99 — the protected class's TTFT SLO must hold "
+                f"through overload (priority admission broke)")
+        for cls in ("interactive", "batch"):
+            shed = int(r.get(f"shed_{cls}", 0))
+            if shed != 0:
+                fails.append(
+                    f"slo: {case}: shed_{cls}={shed} — load shedding "
+                    f"may only ever hit best_effort traffic")
+    if not any(int(r.get("shed_best_effort", 0)) > 0
+               for r in slo_rows.values()):
+        fails.append(
+            "slo: no saturation row shed any best_effort traffic — "
+            "the ramp never reached overload, so the admission policy "
+            "went unexercised")
+    return fails
+
+
+def hot_swap_pair_fails(fresh: dict) -> list:
+    """The sweep must keep benching the ``hot_swap_off``/``hot_swap_on``
+    pair (presence-keyed on rows carrying ``hot_swap``): equal token
+    counts across the pair (a live weight swap must not drop, shed or
+    stall a single request), and the on row must show a real swap —
+    ``swap_flips > 0``, ``swap_bytes > 0`` — that retired on
+    per-transfer signal/AMO waits alone: ``swap_extra_quiets == 0``.
+    Synthetic unit fixtures without swap fields are unaffected."""
+    rows = by_case(fresh)
+    if not any("hot_swap" in r for r in rows.values()):
+        return []
+    fails = []
+    for case, on in SERVE_SWAP_PAIR:
+        r = rows.get(case)
+        if r is None:
+            fails.append(
+                f"hot-swap pair: serve case '{case}' missing — the "
+                f"hot_swap={on} half of the off/on pair must always "
+                f"be benched")
+        elif int(r.get("hot_swap", -1)) != on:
+            fails.append(
+                f"hot-swap pair: serve case '{case}' has hot_swap="
+                f"{r.get('hot_swap')!r}, expected {on}")
+    off, on_row = rows.get("hot_swap_off"), rows.get("hot_swap_on")
+    if off is not None and on_row is not None:
+        for key in ("tokens_out", "requests"):
+            if off.get(key) != on_row.get(key):
+                fails.append(
+                    f"hot-swap pair: {key} differs — off "
+                    f"{off.get(key)} vs on {on_row.get(key)}; an "
+                    f"in-flight weight swap must not change how many "
+                    f"requests/tokens the engine serves")
+    for case, r in sorted(rows.items()):
+        if not r.get("hot_swap"):
+            continue
+        if int(r.get("swap_flips", 0)) <= 0:
+            fails.append(
+                f"{case}: swap_flips={r.get('swap_flips')} — a "
+                f"hot_swap row whose generation never flipped benched "
+                f"the off row twice")
+        if int(r.get("swap_bytes", 0)) <= 0:
+            fails.append(
+                f"{case}: swap_bytes={r.get('swap_bytes')} — the swap "
+                f"row streamed no weight bytes")
+        if int(r.get("swap_extra_quiets", 0)) != 0:
+            fails.append(
+                f"{case}: swap_extra_quiets={r['swap_extra_quiets']} "
+                f"— the weight stream must retire on per-transfer "
+                f"signal/AMO waits, never a tick-global quiet/fence")
+    return fails
+
+
+def stale_case_fails(base: dict, fresh: dict) -> list:
+    """Committed rows the sweep can no longer emit are ZOMBIE rows:
+    every later smoke refresh would keep merging them forward and the
+    regression gates would keep 'checking' numbers nothing can ever
+    update.  The fresh payload's ``meta.sweep_cases`` (the full-sweep
+    case roster, emitted under --smoke too) is the source of truth;
+    a retired name must be allowlisted in ``RETIRED_CASES``.  Payloads
+    without the roster (unit fixtures, pre-PR-10 files) are exempt."""
+    sweep = (fresh.get("meta") or {}).get("sweep_cases")
+    if not sweep:
+        return []
+    known = set(sweep) | set(by_case(fresh)) | set(RETIRED_CASES)
+    return [
+        f"stale case: committed row '{c}' is no longer in the sweep's "
+        f"case roster (meta.sweep_cases) — restore the case or retire "
+        f"it explicitly via RETIRED_CASES"
+        for c in sorted(set(by_case(base)) - known)]
+
+
 def compare_attn(base: dict, fresh: dict, *, factor: float,
                  floor_us: float) -> list:
     """Gate the BENCH_attn.json microbench trajectory: kernel/ref row
@@ -324,16 +467,39 @@ def main() -> int:
     ap.add_argument("--attn-floor-us", type=float, default=50000.0,
                     help="us_per_call regressions below this absolute "
                          "value are interpreter/timer noise")
+    ap.add_argument("--slo-only", action="store_true",
+                    help="run ONLY the SLO gates — saturation "
+                         "attainment/shed, the hot-swap pair, and the "
+                         "stale-case roster — as verify.sh's dedicated "
+                         "slo-gate phase (distinct exit path from the "
+                         "regression compare)")
     args = ap.parse_args()
 
     with open(args.fresh) as f:
         fresh = json.load(f)
     base = load_baseline(args.baseline)
+    if args.slo_only:
+        fails = slo_fails(fresh)
+        fails += hot_swap_pair_fails(fresh)
+        fails += stale_case_fails(base, fresh)
+        n = sum(1 for r in fresh.get("results", [])
+                if "slo_attained_interactive" in r or "hot_swap" in r)
+        if fails:
+            print(f"CHECK_BENCH_SLO_FAIL ({len(fails)} violations "
+                  f"over {n} slo/hot-swap rows):")
+            for line in fails:
+                print(f"  {line}")
+            return 1
+        print(f"CHECK_BENCH_SLO_PASS ({n} slo/hot-swap rows gated)")
+        return 0
     fails = compare(base, fresh, factor=args.factor,
                     floor_s=args.floor_s)
     fails += attn_pair_fails(fresh)
     fails += disagg_pair_fails(fresh)
     fails += router_pair_fails(fresh)
+    fails += slo_fails(fresh)
+    fails += hot_swap_pair_fails(fresh)
+    fails += stale_case_fails(base, fresh)
     n = len(set(by_case(base)) & set(by_case(fresh)))
     if args.attn_fresh:
         with open(args.attn_fresh) as f:

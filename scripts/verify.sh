@@ -9,17 +9,25 @@
 #      (REPRO_MULTIPE_EXPLICIT) so each suite runs exactly once
 #      (tier-1 pins that invariant: tests/test_ci_gate.py), then
 #   3. the smoke serving bench refreshes BENCH_serve.json and the
-#      smoke attention microbench refreshes BENCH_attn.json, and
-#   4. scripts/check_bench.py gates the fresh rows of BOTH files
+#      smoke attention microbench refreshes BENCH_attn.json, then
+#   4. the SLO gate (scripts/check_bench.py --slo-only) pins the
+#      deterministic serving-quality rows — saturation attainment >=
+#      0.99 on interactive, sheds on best_effort only, the hot-swap
+#      pair's equal token counts + zero extra drains, and the
+#      stale-case roster — and
+#   5. scripts/check_bench.py gates the fresh rows of BOTH files
 #      against their pre-bench snapshots (>2x p99/throughput/us_per_call
 #      regression, missing attn kernel/ref pair rows, or a kernel
 #      parity error over tolerance all fail).
 #
 # Every phase is timed, and each phase fails with its OWN exit code +
-# a "VERIFY_FAIL phase=<name>" line, so a bench crash (exit 3), a
-# bench regression (exit 4) or a lint finding (exit 5) is
-# distinguishable from a tier-1 (exit 1) or multipe (exit 2) failure
-# straight from the log.
+# a "VERIFY_FAIL phase=<name>" line (annotated in CI by
+# .github/problem-matcher.json), so a bench crash (exit 3), a bench
+# regression (exit 4), a lint finding (exit 5) or an SLO/hot-swap
+# violation (exit 6) is distinguishable from a tier-1 (exit 1) or
+# multipe (exit 2) failure straight from the log.  A per-phase summary
+# table (phase, seconds, pass/FAIL) prints on EVERY exit, pass or
+# fail, so a long CI log ends with the one screen that matters.
 #
 # The lint phase (scripts/shmemlint.py, static comm-API invariants)
 # runs first in BOTH modes — it is seconds-cheap and fails fastest.
@@ -42,17 +50,34 @@ FAST=0
 [[ ${FAST} == 0 ]] && export REPRO_MULTIPE_EXPLICIT=1
 
 T_START=$(date +%s)
-PHASE_TIMES=()
+PHASE_ROWS=()          # "name|seconds|status" per completed phase
+BENCH_SNAP=""
+ATTN_SNAP=""
 phase_begin() { PHASE_NAME="$1"; PHASE_T0=$(date +%s); echo "== ${PHASE_NAME} =="; }
 phase_end() {
     local dt=$(( $(date +%s) - PHASE_T0 ))
-    PHASE_TIMES+=("${PHASE_NAME}: ${dt}s")
+    PHASE_ROWS+=("${PHASE_NAME}|${dt}|pass")
     echo "-- phase ${PHASE_NAME}: ${dt}s"
 }
 fail() {  # fail <exit-code> — named, coded, greppable
+    PHASE_ROWS+=("${PHASE_NAME}|$(( $(date +%s) - PHASE_T0 ))|FAIL")
     echo "VERIFY_FAIL phase=${PHASE_NAME}"
     exit "$1"
 }
+summary() {  # the per-phase table, printed on EVERY exit path
+    if [[ -n "${BENCH_SNAP}" ]]; then rm -f "${BENCH_SNAP}"; fi
+    if [[ -n "${ATTN_SNAP}" ]]; then rm -f "${ATTN_SNAP}"; fi
+    echo "== phase summary =="
+    printf '  %-22s %8s  %s\n' "phase" "seconds" "status"
+    local row
+    for row in "${PHASE_ROWS[@]:-}"; do
+        [[ -z "${row}" ]] && continue
+        IFS='|' read -r p s st <<<"${row}"
+        printf '  %-22s %8s  %s\n' "${p}" "${s}" "${st}"
+    done
+    echo "  total: $(( $(date +%s) - T_START ))s"
+}
+trap summary EXIT
 
 phase_begin "lint"
 python scripts/shmemlint.py || fail 5
@@ -85,7 +110,6 @@ if [[ ${FAST} == 0 ]]; then
     phase_begin "serve bench (smoke)"
     BENCH_SNAP=$(mktemp) || fail 3
     ATTN_SNAP=$(mktemp) || fail 3
-    trap 'rm -f "${BENCH_SNAP}" "${ATTN_SNAP}"' EXIT
     cp BENCH_serve.json "${BENCH_SNAP}" || fail 3
     python benchmarks/serve_bench.py --smoke || fail 3
     phase_end
@@ -98,6 +122,15 @@ if [[ ${FAST} == 0 ]]; then
     python benchmarks/attn_microbench.py --smoke || fail 3
     phase_end
 
+    # the deterministic serving-quality pins get their OWN phase and
+    # exit code: an SLO/hot-swap violation is a behavior change in the
+    # admission policy or swap path, not a performance regression, and
+    # the log should say which one broke
+    phase_begin "slo gate"
+    python scripts/check_bench.py --slo-only \
+        --baseline "${BENCH_SNAP}" || fail 6
+    phase_end
+
     phase_begin "check_bench"
     python scripts/check_bench.py --baseline "${BENCH_SNAP}" \
         --attn-fresh BENCH_attn.json --attn-baseline "${ATTN_SNAP}" \
@@ -105,7 +138,4 @@ if [[ ${FAST} == 0 ]]; then
     phase_end
 fi
 
-echo "== timing =="
-for t in "${PHASE_TIMES[@]}"; do echo "  ${t}"; done
-echo "  total: $(( $(date +%s) - T_START ))s"
 echo "VERIFY_PASS"

@@ -2,7 +2,12 @@
 
 The fault-tolerance substrate (§4.7 run-time environment adaptation):
 checkpoint/restart is how a TPU-pod job survives node failures.
+``hotswap`` streams a new checkpoint generation into a live serving
+engine between ticks (put-with-signal batches, an atomic generation
+flip, zero global drains).
 """
 from .checkpoint import (Checkpointer, load_checkpoint, save_checkpoint)
+from .hotswap import WeightStreamer
 
-__all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint"]
+__all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint",
+           "WeightStreamer"]

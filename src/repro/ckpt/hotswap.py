@@ -1,0 +1,208 @@
+"""Zero-downtime weight hot-swap over the symmetric heap.
+
+Serving fleets roll checkpoints continuously; taking the engine down
+to reload weights forfeits exactly the overlap POSH exists to prove
+out (§3.2: one-sided puts complete locally and drain lazily, so data
+motion rides UNDER compute).  The swap protocol here:
+
+  1. **Stage** — the new checkpoint generation is flattened to raw
+     bytes and carved into fixed-size row batches over a SECOND
+     symmetric allocation (``wstage_g<N>``), leaving the serving
+     weights untouched.
+  2. **Stream** — each serving tick issues ONE batch as a
+     ``put_signal_nbi`` to every PE and retires the PREVIOUS batch
+     with a per-transfer ``signal_wait_until`` — so batch ``i`` is in
+     flight while the tick that followed batch ``i-1`` computes.  No
+     ``fence``/``quiet`` is ever issued on the swap queue: the whole
+     stream is wrapped in a ``CommQueue.phase("swap")`` window and
+     ``extra_global_drains()`` (the bench row's ``swap_extra_quiets``)
+     reports the phase's fences+quiets, pinned to ZERO by the CI gate.
+  3. **Flip** — once every batch has landed on every PE, a generation
+     pointer word flips via ``atomic_cswap_nbi`` (one CAS per owner
+     PE, drained by ``amo_wait`` on the word — still no global drain).
+     The engine applies the reassembled weights at the next tick
+     boundary, so ALL PEs switch generations on the same tick.
+
+Because the sampler draws from counter-RNG streams keyed only by
+``(sample_seed, rid, position)`` and the step functions take ``params``
+as an explicit argument, token streams emitted after the flip are
+bit-identical to a cold start on the new weights — the property
+``tests/test_slo.py`` and the 8-PE ``run_slo.py`` worker pin across
+xla/posh/pallas.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.atomics import amo_wait, atomic_cswap_nbi
+from repro.core.heap import SymmetricHeap
+from repro.core.ordering import CommQueue, LocalTransport
+from repro.core.signals import CMP_GE, SignalPad, signal_wait_until
+
+
+def _pack(params) -> tuple:
+    """Flatten a parameter pytree to one byte payload + leaf specs."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    specs, chunks = [], []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        specs.append((arr.shape, arr.dtype))
+        chunks.append(arr.tobytes())
+    payload = b"".join(chunks)
+    return payload, specs, treedef
+
+
+def _unpack(payload: bytes, specs, treedef):
+    """Rebuild the pytree from staged bytes — the exact inverse of
+    ``_pack`` (byte-exact for every dtype, which is what makes the
+    post-flip streams provably cold-start-identical)."""
+    leaves, off = [], 0
+    for shape, dtype in specs:
+        n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        arr = np.frombuffer(payload[off:off + n],
+                            dtype=dtype).reshape(shape)
+        leaves.append(jax.numpy.asarray(arr))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class WeightStreamer:
+    """One in-flight hot swap: stages a new parameter generation,
+    streams it between serving ticks, flips the generation pointer.
+
+    ``step()`` is the per-tick hook (``ServeEngine.tick`` calls it
+    before scheduling): it advances the stream by one batch and
+    returns True on the tick the flip lands — ``result()`` then yields
+    the params REASSEMBLED FROM THE STAGED SYMMETRIC BYTES (not the
+    tree handed in), so what the engine serves after the flip is
+    literally what crossed the wire."""
+
+    def __init__(self, new_params, *, n_pe: int = 1, generation: int = 1,
+                 chunk_rows: int = 4, row_bytes: int = 1 << 14,
+                 delivery_seed: Optional[int] = 0):
+        self.n_pe = max(int(n_pe), 1)
+        self.generation = int(generation)
+        payload, self._specs, self._treedef = _pack(new_params)
+        self._nbytes = len(payload)
+        self.row_bytes = int(row_bytes)
+        n_rows = max(-(-self._nbytes // self.row_bytes), 1)
+        buf = np.zeros((n_rows, self.row_bytes), np.uint8)
+        buf.reshape(-1)[:self._nbytes] = np.frombuffer(payload, np.uint8)
+        self._rows = buf
+
+        heap = SymmetricHeap(
+            ("data",), capacity_bytes=max(4 * n_rows * self.row_bytes,
+                                          1 << 20))
+        self.handle = heap.alloc(f"wstage_g{self.generation}",
+                                 (n_rows, self.row_bytes), np.uint8)
+        self.gen = heap.alloc("wgen", (1,), np.int64)
+        # at most 2 batches are ever in flight (issue i, retire i-1),
+        # so a small recycled pad suffices; sig values strictly grow
+        # per word, waits use CMP_GE — no resets needed
+        self.pad = SignalPad(heap, 4, name="wswap_sig")
+        state = {
+            self.handle.name: np.zeros((self.n_pe,) + self.handle.shape,
+                                       np.uint8),
+            self.gen.name: np.full((self.n_pe, 1), self.generation - 1,
+                                   np.int64),
+            self.pad.handle.name: np.zeros((self.n_pe, self.pad.n),
+                                           np.int64),
+        }
+        self.q = CommQueue(("data",), state,
+                           transport=LocalTransport(self.n_pe),
+                           delivery_seed=delivery_seed)
+        chunk = max(int(chunk_rows), 1)
+        self._batches = [(r, min(chunk, n_rows - r))
+                         for r in range(0, n_rows, chunk)]
+        self._issued = 0
+        self._waited = 0
+        self.flipped = False
+        self.stats = {"batches": len(self._batches), "bytes": self._nbytes,
+                      "swap_ticks": 0, "flips": 0}
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Advance the swap by one serving tick: issue the next batch,
+        retire the previous one (per-transfer wait, never a quiet),
+        and — once everything has landed — flip the generation word.
+        Returns True exactly once, on the flip tick."""
+        if self.flipped:
+            return False
+        self.stats["swap_ticks"] += 1
+        with self.q.phase("swap"):
+            if self._issued < len(self._batches):
+                self._issue(self._issued)
+                self._issued += 1
+                # overlap: retire only the PREVIOUS batch — the one
+                # just issued stays in flight under the serving tick
+                if self._waited < self._issued - 1:
+                    self._wait(self._waited)
+                    self._waited += 1
+                return False
+            while self._waited < self._issued:
+                self._wait(self._waited)
+                self._waited += 1
+            self._flip()
+        self.flipped = True
+        self.stats["flips"] += 1
+        return True
+
+    def _issue(self, i: int) -> None:
+        row0, n = self._batches[i]
+        data = np.zeros((self.n_pe, n, self.row_bytes), np.uint8)
+        data[0] = self._rows[row0:row0 + n]
+        pairs = [(0, d) for d in range(self.n_pe)]
+        # drained per-transfer by _wait's signal_wait_until
+        self.q.put_signal_nbi(  # shmem: deferred-drain
+            self.handle, data, pairs, self.pad.handle, i + 1,
+            offset=row0, sig_offset=self.pad.word(i))
+
+    def _wait(self, i: int) -> None:
+        for pe in range(self.n_pe):
+            signal_wait_until(self.q, self.pad.handle, CMP_GE, i + 1,
+                              sig_offset=self.pad.word(i), pe=pe)
+
+    def _flip(self) -> None:
+        """CAS the generation pointer on every PE and drain the word —
+        the pre-op values prove each PE flipped exactly once, from the
+        old generation."""
+        old = self.generation - 1
+        seen = [atomic_cswap_nbi(self.q, self.gen, old, self.generation,
+                                 [(0, d)])
+                for d in range(self.n_pe)]
+        amo_wait(self.q, self.gen, offset=0)
+        for d, v in enumerate(seen):
+            got = int(np.asarray(v.value()).reshape(-1)[0])
+            if got != old:
+                raise RuntimeError(
+                    f"hot-swap flip on PE {d}: generation word was "
+                    f"{got}, expected {old} — concurrent swap?")
+
+    # ------------------------------------------------------------------
+    def result(self):
+        """The new parameter tree, reassembled from the STAGED bytes of
+        PE 0's heap (after checking every PE staged identical bytes and
+        flipped its generation word)."""
+        if not self.flipped:
+            raise RuntimeError("hot-swap result read before the flip")
+        staged = self.q.state[self.handle.name]
+        genw = self.q.state[self.gen.name]
+        for pe in range(self.n_pe):
+            if int(genw[pe, 0]) != self.generation:
+                raise RuntimeError(f"PE {pe} generation word is "
+                                   f"{int(genw[pe, 0])}, expected "
+                                   f"{self.generation}")
+            if pe and not np.array_equal(staged[pe], staged[0]):
+                raise RuntimeError(f"PE {pe} staged bytes diverge")
+        payload = staged[0].reshape(-1)[:self._nbytes].tobytes()
+        return _unpack(payload, self._specs, self._treedef)
+
+    def extra_global_drains(self) -> int:
+        """Fences + quiets attributed to the swap phase — the
+        ``swap_extra_quiets`` pin (contract: 0; the stream completes on
+        per-transfer signal waits and the flip on a per-word amo_wait)."""
+        ph = self.q.phase_stats("swap")
+        return int(ph["quiets"] + ph["fences"])

@@ -51,6 +51,7 @@ Data motion is pluggable through a :class:`Transport`:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import random
@@ -394,6 +395,10 @@ class CommQueue:
                        "coalesced": 0, "signal_puts": 0,
                        "signal_waits": 0, "signal_resets": 0,
                        "amos": 0, "amo_waits": 0}
+        # named counter windows (``phase``): accumulated stat deltas per
+        # phase name, e.g. the weight hot-swap attributing its traffic
+        self._phase_stats: dict[str, dict] = {}
+        self._phase: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     # issue side — returns immediately (local completion)
@@ -804,6 +809,38 @@ class CommQueue:
     def pending_ops(self) -> int:
         return len(self._puts) + len(self._gets) + len(self._reduces)
 
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        """Attribute this queue's counter deltas to a named phase while
+        the context is open.  Phases accumulate across entries, so a
+        caller that re-enters once per serving tick (the weight
+        hot-swap streamer) gets ONE running account of the traffic and
+        drains it issued — ``stats()["phases"][name]["quiets"]`` is the
+        authoritative "did this subsystem pay a global drain" counter
+        (the ``swap_extra_quiets == 0`` pin).  Nesting is rejected: a
+        delta can only be attributed once."""
+        if self._phase is not None:
+            raise RuntimeError(
+                f"CommQueue.phase({name!r}): phase "
+                f"{self._phase[0]!r} is still open — phases do not nest")
+        before = dict(self._stats)
+        self._phase = (name, before)
+        try:
+            yield self
+        finally:
+            self._phase = None
+            acc = self._phase_stats.setdefault(
+                name, {k: 0 for k in self._stats})
+            for k, v in self._stats.items():
+                acc[k] = acc.get(k, 0) + (v - before.get(k, 0))
+
+    def phase_stats(self, name: str) -> dict:
+        """The accumulated counter deltas of one named phase (all zeros
+        if the phase never ran)."""
+        base = {k: 0 for k in self._stats}
+        base.update(self._phase_stats.get(name, {}))
+        return base
+
     def stats(self) -> dict:
         """Counter snapshot.  On top of the raw counters, exposes the
         derived fields analysis tooling keys on: ``drains`` (fences +
@@ -812,6 +849,7 @@ class CommQueue:
         the live racy-window footprint)."""
         out = dict(self._stats)
         out["drains"] = out["fences"] + out["quiets"]
+        out["phases"] = {n: dict(d) for n, d in self._phase_stats.items()}
         by_dst: dict[int, int] = {}
         for p in self._puts:
             for d in p.dsts():

@@ -34,6 +34,22 @@ from repro.models import registry
 from repro.parallel.ctx import ParallelCtx
 
 
+def parse_slo(spec: str) -> tuple[float, float]:
+    """``--slo I+B`` class-mix spec -> (interactive_frac, batch_frac);
+    the remainder of the trace is best_effort."""
+    try:
+        i, b = spec.split("+")
+        ifrac, bfrac = float(i), float(b)
+    except ValueError:
+        raise SystemExit(
+            f"--slo wants I+B fractions (e.g. 0.5+0.25), got "
+            f"{spec!r}") from None
+    if ifrac < 0 or bfrac < 0 or ifrac + bfrac > 1.0 + 1e-9:
+        raise SystemExit(f"--slo {spec}: fractions must be >= 0 and sum "
+                         f"to <= 1")
+    return ifrac, bfrac
+
+
 def parse_disagg(spec: str) -> tuple[int, int]:
     """``--disagg P+D`` topology spec -> (n_prefill, n_decode)."""
     try:
@@ -53,7 +69,7 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
                  prefill_chunk: int = 8, tick_tokens: int = 0,
                  sample_seed: int = 0, seed: int = 0, spec_k: int = 0,
                  draft: str = "ngram", disagg: str = "",
-                 router: str = "host"):
+                 router: str = "host", slo=None):
     cfg = configs.get_smoke(arch)
     ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
                       backend=backend, param_dtype=jnp.float32,
@@ -67,7 +83,7 @@ def build_engine(arch: str, *, backend: str = "xla", page_tokens: int = 8,
         prefix_keep=prefix_keep, sample_seed=sample_seed,
         # scfg.draft only names parameterless proposers; a draft ARCH
         # becomes an explicit DraftModelProposer below
-        spec_k=spec_k, draft="ngram")
+        spec_k=spec_k, draft="ngram", slo=slo)
     if router not in ("host", "amo"):
         raise SystemExit(f"--router wants 'host' or 'amo', got {router!r}")
     if disagg:
@@ -153,9 +169,47 @@ def main():
                          "rings, claim-word mailbox slots, and a "
                          "symmetric fetch-add/CAS page pool — token "
                          "streams are bit-identical across both)")
+    ap.add_argument("--slo", default="",
+                    help="SLO traffic mix 'I+B' (e.g. 0.5+0.25): "
+                         "fractions of interactive and batch requests, "
+                         "remainder best_effort; turns on priority "
+                         "admission, deadline shedding, best-effort "
+                         "degradation and (with --tenant-rate) per-"
+                         "tenant fairness (empty = plain FCFS)")
+    ap.add_argument("--ttft", type=float, default=0.25,
+                    help="interactive TTFT deadline in seconds (batch "
+                         "gets 4x, best_effort 8x; 0 = no deadlines)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="tenant ids drawn per request for the "
+                         "fairness buckets")
+    ap.add_argument("--tenant-rate", type=float, default=0.0,
+                    help="per-tenant admission token-bucket refill "
+                         "(tokens/tick; 0 = fairness off)")
+    ap.add_argument("--hot-swap", action="store_true",
+                    help="stream a second weight generation (fresh "
+                         "init from seed+1000) into the live engine "
+                         "during the run and flip atomically mid-"
+                         "serve; swap accounting lands in metrics()"
+                         "['swap']")
     ap.add_argument("--trace", action="store_true",
                     help="print the per-request decode trace")
     args = ap.parse_args()
+
+    slo_cfg, slo_tkw = None, {}
+    if args.slo:
+        ifrac, bfrac = parse_slo(args.slo)
+        ttft = args.ttft if args.ttft > 0 else None
+        slo_cfg = serve.SLOConfig(
+            ttft_interactive=ttft,
+            ttft_batch=4 * ttft if ttft else None,
+            ttft_best_effort=8 * ttft if ttft else None,
+            tenant_rate=args.tenant_rate,
+            tenant_burst=2 * args.tenant_rate)
+        slo_tkw = dict(interactive_frac=ifrac, batch_frac=bfrac,
+                       deadline_interactive=slo_cfg.ttft_interactive,
+                       deadline_batch=slo_cfg.ttft_batch,
+                       deadline_best_effort=slo_cfg.ttft_best_effort,
+                       n_tenants=args.tenants)
 
     eng, cfg = build_engine(
         args.arch, backend=args.backend, page_tokens=args.page_tokens,
@@ -163,12 +217,18 @@ def main():
         attn_impl=args.attn_impl, prefill_chunk=args.prefill_chunk,
         tick_tokens=args.tick_tokens, sample_seed=args.sample_seed,
         seed=args.seed, spec_k=args.spec_k, draft=args.draft,
-        disagg=args.disagg, router=args.router)
+        disagg=args.disagg, router=args.router, slo=slo_cfg)
     tcfg = serve.TrafficConfig(n_requests=args.requests, rate=args.rate,
                                vocab=cfg.vocab, seed=args.seed,
                                temperature=args.temperature,
-                               top_k=args.top_k, top_p=args.top_p)
+                               top_k=args.top_k, top_p=args.top_p,
+                               **slo_tkw)
     reqs = serve.make_requests(tcfg)
+    if args.hot_swap:
+        ctx = getattr(eng, "ctx", None) or eng.engines[0].ctx
+        new_params = registry.build(cfg).init(
+            jax.random.PRNGKey(args.seed + 1000), cfg, ctx)
+        eng.begin_hot_swap(new_params)
     print(f"arch={cfg.name} backend={args.backend} "
           f"pages={args.n_pages}x{args.page_tokens} "
           f"batch={args.max_batch} chunk={args.prefill_chunk} "

@@ -37,6 +37,7 @@ from .sampling import (GREEDY, SamplingParams, batch_state,
                        sample_from_candidates, sample_tokens,
                        sample_window_tokens)
 from .scheduler import FCFSScheduler, Request, TickPlan
+from .slo import PRIORITIES, SLOConfig, SLOPolicy
 from .spec import (DraftModelProposer, FixedProposer, NgramProposer,
                    ReplayProposer, SpecProposer, make_proposer)
 from .traffic import TrafficConfig, make_requests
@@ -48,6 +49,7 @@ __all__ = [
     "make_decode_step", "make_prefill", "make_verify",
     "PagedKVCache", "PageMigration", "NULL_PAGE", "SymmetricPagePool",
     "FCFSScheduler", "Request", "TickPlan",
+    "SLOConfig", "SLOPolicy", "PRIORITIES",
     "TrafficConfig", "make_requests",
     "SamplingParams", "GREEDY", "batch_state",
     "sample_from_candidates", "sample_tokens", "sample_window_tokens",

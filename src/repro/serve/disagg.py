@@ -239,6 +239,12 @@ class DisaggEngine:
         self.ticks = 0
         self.handoff = {"handoff_tickets": 0, "handoff_pages": 0,
                         "handoff_deferred": 0}
+        # weight hot-swap: ONE streamer spans the cell space, so every
+        # cell flips to the new generation on the same topology tick
+        self._swap = None
+        self.swap_stats = {"generation": 0, "flips": 0, "swap_ticks": 0,
+                           "swap_batches": 0, "swap_bytes": 0,
+                           "swap_extra_quiets": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -252,8 +258,38 @@ class DisaggEngine:
         return (any(e.sched.has_work() for e in self.engines)
                 or any(e.handoff_ready for e in self.engines)
                 or any(self._inbox.values())
+                or self._swap is not None
                 or (self.router_mode == "amo"
                     and self.router.pending() > 0))
+
+    def begin_hot_swap(self, new_params, *, chunk_rows: int = 4,
+                       **kw) -> None:
+        """Zero-downtime weight swap across the whole topology: one
+        :class:`repro.ckpt.hotswap.WeightStreamer` over the CELL space
+        streams the new generation between topology ticks; on the flip
+        tick every cell's weights switch together."""
+        if self._swap is not None:
+            raise RuntimeError("a weight hot-swap is already in flight")
+        from repro.ckpt.hotswap import WeightStreamer
+        self.swap_stats["generation"] += 1
+        self._swap = WeightStreamer(
+            new_params, n_pe=len(self.cells),
+            generation=self.swap_stats["generation"],
+            chunk_rows=chunk_rows, **kw)
+
+    def _swap_step(self) -> None:
+        st = self._swap
+        if not st.step():
+            return
+        params = st.result()
+        for e in self.engines:           # same tick, every cell
+            e.exec.set_params(params)
+        self.swap_stats["flips"] += st.stats["flips"]
+        self.swap_stats["swap_ticks"] += st.stats["swap_ticks"]
+        self.swap_stats["swap_batches"] += st.stats["batches"]
+        self.swap_stats["swap_bytes"] += st.stats["bytes"]
+        self.swap_stats["swap_extra_quiets"] += st.extra_global_drains()
+        self._swap = None
 
     def submit(self, req: Request) -> None:
         if self.router_mode == "amo":
@@ -269,6 +305,8 @@ class DisaggEngine:
         ticket out (put-with-signal per page), decode cells drain their
         inbox on signal fire, adopt, acknowledge, then advance."""
         self.ticks += 1
+        if self._swap is not None:
+            self._swap_step()
         if self.router_mode == "amo":
             self.router.admit()
         for c in self.router.prefill:
@@ -461,6 +499,9 @@ class DisaggEngine:
         self.ticks = 0
         for k in self.handoff:
             self.handoff[k] = 0
+        for k in self.swap_stats:
+            if k != "generation":        # generations keep counting up
+                self.swap_stats[k] = 0
         for k in self.hq._stats:
             self.hq._stats[k] = 0
         if self.router_mode == "amo":
@@ -501,6 +542,10 @@ class DisaggEngine:
                              if sp.get("drafted") else 0.0)
         sp["tokens_per_tick"] = (sp["emitted"] / sp["verify_seqs"]
                                  if sp.get("verify_seqs") else 0.0)
+        from .engine import slo_summary
+        shed = [r for e in self.engines for r in e.shed]
+        pol = agg(e.slo.stats for e in self.engines
+                  if e.slo is not None) or None
         return {
             "requests": len(done),
             "tokens_out": int(toks),
@@ -513,6 +558,8 @@ class DisaggEngine:
             "sched": sched,
             "kv": kv,
             "spec": sp,
+            "slo": slo_summary(done, shed, pol),
+            "swap": dict(self.swap_stats),
             "handoff": self.stats(),
             "cells": [{"cell": c.cell, "role": c.role, "pes": list(c.pes),
                        "sched": dict(e.sched.stats),

@@ -63,6 +63,7 @@ from repro.parallel.ctx import ParallelCtx
 from . import sampling
 from .kv_cache import NULL_PAGE, PagedKVCache
 from .scheduler import FCFSScheduler, Request
+from .slo import PRIORITIES, SLOConfig, SLOPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +96,10 @@ class ServeConfig:
                                       # passed ("ngram" self-draft; a
                                       # model-backed proposer is built
                                       # by the caller, see serve.spec)
+    slo: Optional[SLOConfig] = None   # SLO policy (serve.slo): priority
+                                      # admission, deadline shedding,
+                                      # best-effort degradation, tenant
+                                      # fairness (None = plain FCFS)
 
     @property
     def table_slots(self) -> int:
@@ -349,6 +354,12 @@ class LocalExec:
                             jnp.asarray(start), jnp.asarray(n_tok),
                             jnp.asarray(bt), samp)
 
+    def set_params(self, params) -> None:
+        """Swap the served weights (weight hot-swap flip): the jitted
+        step functions take ``params`` as an explicit argument, so the
+        next tick's forwards run the new generation with no re-trace."""
+        self.params = params
+
     def migrate(self, pool, migrations):
         # whole-system view with one PE: state rows carry the PE axis
         state = {self.kv.handle.name: np.asarray(pool)[None]}
@@ -402,11 +413,12 @@ class ServeEngine:
                 head_dim=cfg.head_dim, n_pages=scfg.n_pages,
                 page_tokens=scfg.page_tokens, dtype=scfg.kv_dtype)
         self.kv = kv
+        self.slo = SLOPolicy(scfg.slo) if scfg.slo is not None else None
         self.sched = FCFSScheduler(kv, max_batch=scfg.max_batch,
                                    max_seq=scfg.max_seq, my_pe=my_pe,
                                    prefill_chunk=scfg.prefill_chunk,
                                    tick_tokens=scfg.tick_tokens,
-                                   spec_k=scfg.spec_k)
+                                   spec_k=scfg.spec_k, slo=self.slo)
         self.exec = exec_ or LocalExec(params, cfg, ctx, scfg, kv)
         self.proposer = proposer
         if scfg.spec_k > 0 and proposer is None:
@@ -416,6 +428,13 @@ class ServeEngine:
                            "verify_ticks": 0, "verify_seqs": 0}
         self.pool = self.exec.init_pool()
         self.finished: list = []
+        self.shed: list = []             # deadline-shedded, never served
+        # weight hot-swap (repro.ckpt.hotswap): the in-flight streamer
+        # and its lifetime accounting
+        self._swap = None
+        self.swap_stats = {"generation": 0, "flips": 0, "swap_ticks": 0,
+                           "swap_batches": 0, "swap_bytes": 0,
+                           "swap_extra_quiets": 0}
         self.ticks = 0
         # inter-token gaps of decoding sequences (the serving ITL/TPOT
         # metric): a gap spans the full tick(s) between two of a
@@ -436,12 +455,58 @@ class ServeEngine:
                 f"(raise ServeConfig.sample_candidates)")
         self.sched.submit(req)
 
+    def begin_hot_swap(self, new_params, *, chunk_rows: int = 4,
+                       n_pe: Optional[int] = None, **kw) -> None:
+        """Start streaming a new weight generation (zero-downtime swap,
+        ``repro.ckpt.hotswap``): subsequent ticks each advance the
+        stream by one put-with-signal batch, and the generation flips
+        atomically at a tick boundary once everything has landed —
+        serving never pauses and the swap queue never pays a global
+        drain."""
+        if self._swap is not None:
+            raise RuntimeError("a weight hot-swap is already in flight")
+        from repro.ckpt.hotswap import WeightStreamer
+        if n_pe is None:
+            n_pe = max(self.ctx.dp_size * self.ctx.tp_size, 1)
+        self.swap_stats["generation"] += 1
+        self._swap = WeightStreamer(
+            new_params, n_pe=n_pe,
+            generation=self.swap_stats["generation"],
+            chunk_rows=chunk_rows, **kw)
+
+    def swap_in_flight(self) -> bool:
+        return self._swap is not None
+
+    def _swap_step(self) -> None:
+        """The per-tick hot-swap hook: one streaming step; on the flip
+        tick the reassembled generation replaces the served weights
+        BEFORE this tick's forwards, so every PE (and every cell
+        sharing the streamer) switches on the same tick."""
+        st = self._swap
+        if not st.step():
+            return
+        self.exec.set_params(st.result())
+        self.swap_stats["flips"] += st.stats["flips"]
+        self.swap_stats["swap_ticks"] += st.stats["swap_ticks"]
+        self.swap_stats["swap_batches"] += st.stats["batches"]
+        self.swap_stats["swap_bytes"] += st.stats["bytes"]
+        self.swap_stats["swap_extra_quiets"] += st.extra_global_drains()
+        self._swap = None
+
     def tick(self, now: float = 0.0) -> None:
-        """One engine tick: schedule -> migrate (one quiet) -> chunked
-        prefill for every prefilling sequence's quota -> one decode
-        token for every decoding sequence -> retire finished."""
+        """One engine tick: hot-swap stream step (when one is in
+        flight) -> schedule -> migrate (one quiet) -> chunked prefill
+        for every prefilling sequence's quota -> one decode token for
+        every decoding sequence -> retire finished."""
         self.ticks += 1
-        plan = self.sched.tick()
+        if self._swap is not None:
+            self._swap_step()
+        plan = self.sched.tick(now)
+        for r in plan.shed:              # deadline drops: never served
+            self.shed.append(r)
+            self._last_tok.pop(r.rid, None)
+            if self.proposer is not None:
+                self.proposer.drop(r.rid)
         for r in plan.preempted:         # progress resets, gaps with it
             self._last_tok.pop(r.rid, None)
             if self.proposer is not None:
@@ -638,7 +703,10 @@ class ServeEngine:
                 self.submit(pending.pop(0))
             if not self.sched.has_work():
                 if not pending:
-                    return self.finished
+                    if self._swap is None:
+                        return self.finished
+                    self.tick(now)       # drain the in-flight hot swap
+                    continue
                 if clock == "wall":      # fast-forward idle gaps
                     skipped += pending[0].t_arrive - now
                     now = time.monotonic() - t0 + skipped
@@ -654,6 +722,7 @@ class ServeEngine:
         measured rows reflect engine/scheduler structure, not XLA
         compile time."""
         self.finished.clear()
+        self.shed.clear()
         self.ticks = 0
         self.itl.clear()
         self._last_tok.clear()
@@ -663,6 +732,11 @@ class ServeEngine:
             self.kv.stats[k] = 0
         for k in self.spec_stats:
             self.spec_stats[k] = 0
+        for k in self.swap_stats:
+            if k != "generation":        # generations keep counting up
+                self.swap_stats[k] = 0
+        if self.slo is not None:
+            self.slo.reset()
 
     # ------------------------------------------------------------------
     def metrics(self) -> dict:
@@ -686,6 +760,8 @@ class ServeEngine:
         # beating one-token-per-tick decode)
         sp["tokens_per_tick"] = (sp["emitted"] / sp["verify_seqs"]
                                  if sp["verify_seqs"] else 0.0)
+        slo = slo_summary(self.finished, self.shed,
+                          self.slo.stats if self.slo is not None else None)
         return {
             "requests": len(self.finished),
             "tokens_out": int(toks),
@@ -698,4 +774,28 @@ class ServeEngine:
             "sched": dict(self.sched.stats),
             "kv": dict(self.kv.stats),
             "spec": sp,
+            "slo": slo,
+            "swap": dict(self.swap_stats),
         }
+
+
+def slo_summary(finished, shed, policy_stats=None) -> dict:
+    """Per-class SLO attainment and shed counts over a served trace.
+
+    Attainment is TTFT against each request's own ``deadline``
+    (requests without one count as attained — vacuously in-SLO); shed
+    requests count against their class's shed bucket, never against
+    attainment (they were refused, not served late)."""
+    out: dict = {"attained": {}, "finished": {}, "shed": {}}
+    for p in PRIORITIES:
+        done = [r for r in finished if r.priority == p]
+        ok = [r for r in done
+              if r.deadline is None
+              or (r.t_first is not None
+                  and r.t_first - r.t_arrive <= r.deadline)]
+        out["finished"][p] = len(done)
+        out["attained"][p] = (len(ok) / len(done)) if done else 1.0
+        out["shed"][p] = sum(1 for r in shed if r.priority == p)
+    if policy_stats is not None:
+        out["policy"] = dict(policy_stats)
+    return out

@@ -56,6 +56,14 @@ class Request:
     max_new: int
     t_arrive: float = 0.0
     sampling: SamplingParams = GREEDY
+    # SLO attributes (serve.slo): class rank orders admission and
+    # (inversely) eviction; ``deadline`` is the relative TTFT budget
+    # (engine clock units) attainment is measured against — and the
+    # shed trigger for best-effort traffic; ``tenant`` keys the
+    # token-rate fairness bucket
+    priority: str = "interactive"
+    deadline: Optional[float] = None
+    tenant: int = 0
 
     # runtime (engine-owned)
     out: list = dataclasses.field(default_factory=list)
@@ -65,6 +73,7 @@ class Request:
     t_first: Optional[float] = None
     t_finish: Optional[float] = None
     preemptions: int = 0
+    shed: bool = False       # dropped by deadline shedding, never served
 
     @property
     def n_prompt(self) -> int:
@@ -101,6 +110,7 @@ class TickPlan:
     preempted: list = dataclasses.field(default_factory=list)
     migrations: list = dataclasses.field(default_factory=list)  # PageMigration
     prefill: list = dataclasses.field(default_factory=list)    # (req, n_tokens)
+    shed: list = dataclasses.field(default_factory=list)       # deadline drops
 
 
 class FCFSScheduler:
@@ -121,7 +131,7 @@ class FCFSScheduler:
 
     def __init__(self, kv: PagedKVCache, *, max_batch: int,
                  max_seq: int, my_pe: int = 0, prefill_chunk: int = 8,
-                 tick_tokens: int = 0, spec_k: int = 0):
+                 tick_tokens: int = 0, spec_k: int = 0, slo=None):
         self.kv = kv
         self.max_batch = int(max_batch)
         self.max_seq = int(max_seq)
@@ -133,15 +143,22 @@ class FCFSScheduler:
         # budget scales with it
         self.tick_tokens = int(tick_tokens) or (
             self.max_batch * (1 + self.spec_k) + self.prefill_chunk)
+        # SLO policy (serve.slo.SLOPolicy): None keeps plain FCFS —
+        # every decision below is bit-identical to the pre-SLO
+        # scheduler in that case
+        self.slo = slo
         self.waiting: deque = deque()
         self.running: list = []          # admission order (oldest first)
         self._decode_refund = 0          # unspent decode claims of
                                          # sequences evicted this tick
         self._admit_seq = itertools.count()
         self._admit_idx: dict = {}       # rid -> admission ticket
+        self._arrive_seq = itertools.count()
+        self._arrive_idx: dict = {}      # rid -> submission ticket
         self.stats = {"admitted": 0, "resumed": 0, "preempted": 0,
                       "finished": 0, "ticks": 0, "prefill_tokens": 0,
-                      "released": 0, "adopted": 0}
+                      "released": 0, "adopted": 0, "shed": 0,
+                      "rate_deferred": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -149,21 +166,29 @@ class FCFSScheduler:
             raise ValueError(
                 f"request {req.rid}: {req.n_prompt}+{req.max_new} tokens "
                 f"exceed max_seq {self.max_seq}")
+        self._arrive_idx.setdefault(req.rid, next(self._arrive_seq))
         self.waiting.append(req)
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
     # ------------------------------------------------------------------
-    def tick(self) -> TickPlan:
+    def tick(self, now: float = 0.0) -> TickPlan:
         """One scheduling round: budget the tick's tokens (decode
         first, then prefill chunks FCFS), grow running sequences
         (preempting by eviction when the pool is dry), then admit FCFS
         while slots, pages and budget last.  Prefix-cache hits admit as
         RESUMED sequences whose first pages arrive by migration instead
-        of recompute."""
+        of recompute.  With an SLO policy attached: expired best-effort
+        waiters shed first, admission runs in priority order, eviction
+        inverse-priority, and best-effort traffic degrades (chunk cap,
+        draft strip) while higher classes have unmet demand."""
         self.stats["ticks"] += 1
         plan = TickPlan()
+        if self.slo is not None:
+            self._shed_expired(now, plan)
+            self.slo.update_pressure(self.waiting, self.running, self.kv)
+            self.slo.tick_refill()
         quotas: dict = {}                # rid -> prompt tokens this tick
         budget = self.tick_tokens
         # decode claims first: one token per decoding sequence PLUS its
@@ -196,6 +221,8 @@ class FCFSScheduler:
         and budget are never reserved for tokens that cannot exist."""
         if self.spec_k == 0 or req.is_prefilling():
             return 0
+        if self.slo is not None and self.slo.strip_drafts(req):
+            return 0          # degraded: plain one-token decode
         return max(0, min(self.spec_k,
                           req.max_new - len(req.out) - 1))
 
@@ -204,7 +231,10 @@ class FCFSScheduler:
         """Assign ``req`` its chunk for this tick out of ``budget``.
         ``guarantee`` forces at least one token (the oldest prefilling
         sequence and fresh admissions always make progress)."""
-        q = min(self.prefill_chunk, max(budget, 0))
+        chunk = self.prefill_chunk
+        if self.slo is not None:
+            chunk = self.slo.chunk_cap(req, chunk)
+        q = min(chunk, max(budget, 0))
         if guarantee:
             q = max(q, 1)
         q = min(q, req.n_prompt - req.n_done)
@@ -236,7 +266,28 @@ class FCFSScheduler:
                     break
 
     def _youngest(self) -> Request:
+        """The eviction victim.  FCFS: the youngest admission.  SLO:
+        strictly inverse-priority — the lowest class goes first
+        (best_effort, then batch, then interactive), youngest within a
+        class — so interactive sequences evict LAST."""
+        if self.slo is not None:
+            return max(self.running,
+                       key=lambda r: self.slo.evict_key(
+                           r, self._admit_idx[r.rid]))
         return max(self.running, key=lambda r: self._admit_idx[r.rid])
+
+    def _shed_expired(self, now: float, plan: TickPlan) -> None:
+        """Deadline shedding, BEFORE any admission or degradation this
+        tick: waiting best-effort requests whose deadline passed are
+        dropped — they leave the system without ever holding pages."""
+        for req in [r for r in self.waiting
+                    if self.slo.should_shed(r, now)]:
+            self.waiting.remove(req)     # identity (eq=False)
+            req.shed = True
+            req.t_finish = now
+            plan.shed.append(req)
+            self.stats["shed"] += 1
+            self.slo.note_shed(req)
 
     def _preempt(self, req: Request, plan: TickPlan) -> None:
         if not req.is_prefilling():
@@ -250,14 +301,32 @@ class FCFSScheduler:
         plan.preempted.append(req)
         self.stats["preempted"] += 1
 
+    def _admission_order(self) -> list:
+        """Admission candidates.  FCFS: the waiting deque as-is.  SLO:
+        (class rank, arrival) — a preemption victim keeps its original
+        arrival ticket, so it stays ahead of later arrivals WITHIN its
+        class, and interactive arrivals jump the best-effort backlog."""
+        if self.slo is None:
+            return list(self.waiting)
+        return sorted(self.waiting,
+                      key=lambda r: self.slo.admit_key(
+                          r, self._arrive_idx.setdefault(
+                              r.rid, next(self._arrive_seq))))
+
     def _admit(self, plan: TickPlan, quotas: dict, budget: int) -> None:
         preempted_rids = {r.rid for r in plan.preempted}
-        while self.waiting and len(self.running) < self.max_batch:
-            req = self.waiting[0]
+        for req in self._admission_order():
+            if len(self.running) >= self.max_batch:
+                break
             if req.rid in preempted_rids:
                 # evicted THIS tick to let an older sequence breathe —
                 # re-admitting immediately would thrash prefill
                 break
+            if self.slo is not None and not self.slo.admit_charge(req):
+                # tenant over its token rate: ITS request defers, the
+                # line behind it does not (the fairness property)
+                self.stats["rate_deferred"] += 1
+                continue
             hit = self.kv.lookup_prefix(req.prompt)
             if hit is not None:
                 # remote owner: pages arrive by one-sided migration;
@@ -265,12 +334,16 @@ class FCFSScheduler:
                 # self-pairs — a 0-hop page copy into fresh pages, so
                 # the pinned originals stay in the index
                 if not self._admit_resumed(req, hit, plan):
+                    if self.slo is not None:
+                        self.slo.admit_refund(req)
                     break
             else:
                 # prompt + the first decode page, all or nothing
                 if not self.kv.alloc_seq(req.rid, req.n_prompt + 1):
+                    if self.slo is not None:
+                        self.slo.admit_refund(req)
                     break
-                self.waiting.popleft()
+                self.waiting.remove(req)     # identity (eq=False)
                 self._start(req)
                 plan.admitted.append(req)
                 self.stats["admitted"] += 1
@@ -291,7 +364,7 @@ class FCFSScheduler:
         plan.migrations.extend(
             PageMigration(owner_pe, self.my_pe, s, d)
             for s, d in zip(src_pages, landing))
-        self.waiting.popleft()
+        self.waiting.remove(req)             # identity (eq=False)
         self._start(req)
         # leave >= 1 prompt token to feed: re-feeding the boundary token
         # rewrites identical KV (idempotent) and yields the next logits

@@ -18,11 +18,37 @@ comparable.  (The old generator drew all arrival gaps in one
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
 from .sampling import SamplingParams
 from .scheduler import Request
+
+# stream-splitting constant for the SLO attribute draws: a separate
+# per-request RNG so enabling classes/tenants never shifts the classic
+# prompt/length draws
+_SLO_STREAM = 0x510
+
+
+def _slo_attrs(tcfg: "TrafficConfig", rid: int) -> tuple:
+    """(priority, deadline, tenant) for request ``rid`` — drawn from
+    the derived ``(seed ^ _SLO_STREAM, rid)`` stream, or the all-
+    interactive defaults when the config requests no SLO traffic."""
+    plain = (tcfg.interactive_frac >= 1.0 and tcfg.batch_frac <= 0.0
+             and tcfg.n_tenants <= 1)
+    if plain:
+        return "interactive", tcfg.deadline_interactive, 0
+    rng = _request_rng(tcfg.seed ^ _SLO_STREAM, rid)
+    u = rng.rand()
+    if u < tcfg.interactive_frac:
+        prio, dl = "interactive", tcfg.deadline_interactive
+    elif u < tcfg.interactive_frac + tcfg.batch_frac:
+        prio, dl = "batch", tcfg.deadline_batch
+    else:
+        prio, dl = "best_effort", tcfg.deadline_best_effort
+    tenant = int(rng.randint(0, max(tcfg.n_tenants, 1)))
+    return prio, dl, tenant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +71,19 @@ class TrafficConfig:
     top_k: int = 0
     top_p: float = 1.0
     greedy_frac: float = 0.0
+    # SLO traffic mix (serve.slo): class draw per request —
+    # ``interactive_frac`` then ``batch_frac``, remainder best_effort —
+    # relative TTFT deadlines per class (None = no SLO), and a tenant
+    # id drawn uniformly from ``n_tenants`` for the fairness buckets.
+    # Defaults (all interactive, no deadlines, one tenant) keep the
+    # classic traces BYTE-IDENTICAL: the SLO draws come from a separate
+    # derived RNG stream, so enabling them never shifts prompts.
+    interactive_frac: float = 1.0
+    batch_frac: float = 0.0
+    deadline_interactive: Optional[float] = None
+    deadline_batch: Optional[float] = None
+    deadline_best_effort: Optional[float] = None
+    n_tenants: int = 1
 
 
 def _request_rng(seed: int, rid: int) -> np.random.RandomState:
@@ -75,6 +114,9 @@ def make_requests(tcfg: TrafficConfig) -> list:
         sp = SamplingParams() if greedy else SamplingParams(
             temperature=tcfg.temperature, top_k=tcfg.top_k,
             top_p=tcfg.top_p)
+        prio, deadline, tenant = _slo_attrs(tcfg, i)
         reqs.append(Request(rid=i, prompt=prompt, max_new=int(olen),
-                            t_arrive=float(t), sampling=sp))
+                            t_arrive=float(t), sampling=sp,
+                            priority=prio, deadline=deadline,
+                            tenant=tenant))
     return reqs

@@ -143,6 +143,12 @@ class MeshExec:
                                   samp)
         return self._my_row(toks), pool
 
+    def set_params(self, params) -> None:
+        # weight hot-swap flip: the smap-wrapped step functions take
+        # params as an explicit argument, so the next tick's forwards
+        # run the new generation with no re-trace (same as LocalExec)
+        self.params = params
+
     def migrate(self, pool, migrations):
         migs = tuple(migrations)
         if migs not in self._migrate_cache:

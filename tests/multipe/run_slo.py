@@ -1,0 +1,124 @@
+"""SLO scheduling + weight hot-swap on a real 8-PE mesh — subprocess
+worker (mesh wiring shared with the serving worker).
+
+Three checks:
+
+  1. SLO TRAFFIC PARITY — a seeded mixed-class trace (interactive /
+     batch / best_effort, tick deadlines, two tenants) served under an
+     attached SLOPolicy produces IDENTICAL token streams AND identical
+     shed/attainment summaries across xla / posh / pallas: the policy
+     is host-side deterministic state, so priority admission, deadline
+     shedding and degradation cannot introduce backend divergence.
+
+  2. HOT-SWAP FLIP = COLD START — generation 2 streams into the live
+     mesh engine between serving ticks (put-with-signal batches over
+     the 8-PE staging heap) and flips via an atomic compare-and-swap on
+     the generation word; a trace served AFTER the flip is bit-
+     identical to a cold-started engine on the new weights, greedy and
+     sampled, on every backend.
+
+  3. ZERO EXTRA DRAINS — the swap queue retires its transfers with
+     per-word/per-transfer waits only: ``swap_extra_quiets == 0``
+     (quiets + fences inside the ``phase("swap")`` stat window), the
+     same pin the bench gate enforces on the hot_swap row pair.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+
+from repro import configs, serve
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx
+from run_serve import DP, TP, SAMPLED, build
+
+N_PE = DP * TP
+
+
+def _init_params(key):
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx1 = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                       param_dtype=jax.numpy.float32,
+                       compute_dtype=jax.numpy.float32)
+    return registry.build(cfg).init(jax.random.PRNGKey(key), cfg, ctx1)
+
+
+def _slo_scfg():
+    return serve.ServeConfig(page_tokens=4, n_pages=24, max_batch=3,
+                             max_seq=32, prefill_chunk=3,
+                             attn_impl="ref", slo=serve.SLOConfig())
+
+
+def _slo_reqs(vocab):
+    # mixed classes on the tick clock: everything arrives at t=0, the
+    # best-effort deadline (4 ticks) cannot survive the backlog
+    reqs = []
+    for i in range(8):
+        prio = ("interactive", "best_effort", "batch")[i % 3]
+        reqs.append(serve.Request(
+            rid=i, prompt=[(5 * i + j) % vocab for j in range(5)],
+            max_new=5, t_arrive=0.0, priority=prio,
+            deadline={"interactive": 200.0, "batch": 400.0,
+                      "best_effort": 4.0}[prio],
+            tenant=i % 2))
+    return reqs
+
+
+def check_slo_parity():
+    got = {}
+    for backend in ("xla", "posh", "pallas"):
+        eng, cfg = build(backend, scfg=_slo_scfg())
+        done = eng.run(_slo_reqs(cfg.vocab), clock="tick")
+        m = eng.metrics()["slo"]
+        got[backend] = ({r.rid: list(r.out) for r in done}, m)
+        print(f"  [{backend}] finished={m['finished']} shed={m['shed']} "
+              f"attained={m['attained']}")
+    assert got["xla"] == got["posh"] == got["pallas"], got
+    _, m = got["xla"]
+    assert m["shed"]["best_effort"] > 0, m
+    assert m["shed"]["interactive"] == 0, m
+    assert m["attained"]["interactive"] == 1.0, m
+    print("  SLO streams + shed/attainment identical across "
+          "xla/posh/pallas")
+
+
+def _swap_reqs(vocab, rids, sampling=None):
+    return [serve.Request(rid=r, prompt=[(7 * r + k) % vocab
+                                         for k in range(5)],
+                          max_new=5, sampling=sampling or serve.GREEDY)
+            for r in rids]
+
+
+def check_hot_swap_cold_start_identity():
+    new_params = _init_params(7)
+    for tag, sampling in (("greedy", None), ("sampled", SAMPLED)):
+        for backend in ("xla", "posh", "pallas"):
+            eng, cfg = build(backend)
+            eng.begin_hot_swap(new_params, n_pe=N_PE, chunk_rows=2)
+            eng.run(_swap_reqs(cfg.vocab, range(3), sampling),
+                    clock="tick")
+            assert eng.swap_stats["flips"] == 1, eng.swap_stats
+            assert eng.swap_stats["swap_extra_quiets"] == 0, \
+                eng.swap_stats
+            eng.run(_swap_reqs(cfg.vocab, range(10, 13), sampling),
+                    clock="tick")
+            post = {r.rid: list(r.out) for r in eng.finished
+                    if r.rid >= 10}
+            cold, _ = build(backend)
+            cold.exec.set_params(new_params)
+            cold.run(_swap_reqs(cfg.vocab, range(10, 13), sampling),
+                     clock="tick")
+            want = {r.rid: list(r.out) for r in cold.finished}
+            assert post == want, (backend, tag, post, want)
+        print(f"  {tag} post-flip streams == cold start on new "
+              f"weights across xla/posh/pallas")
+
+
+def main():
+    check_slo_parity()
+    check_hot_swap_cold_start_identity()
+    print("SLO_PASS")
+
+
+if __name__ == "__main__":
+    main()

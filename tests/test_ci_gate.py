@@ -451,3 +451,202 @@ def test_verify_sh_has_attn_bench_phase():
     assert "attn_microbench.py --smoke" in src
     assert "--attn-fresh BENCH_attn.json" in src
     assert "--attn-baseline" in src
+
+
+# ======================================================================
+# check_bench: the SLO / hot-swap / stale-case gates
+# ======================================================================
+SLO_ROW = dict(ROW, slo_attained_interactive=1.0, slo_attained_batch=1.0,
+               slo_attained_best_effort=0.5, shed_interactive=0,
+               shed_batch=0, shed_best_effort=0)
+
+
+def _slo_payload(**rows):
+    """A healthy saturation ramp: clean under light load, best-effort
+    shedding under overload, interactive protected on both."""
+    base = dict(sat_low=dict(SLO_ROW),
+                sat_overload=dict(SLO_ROW, shed_best_effort=2,
+                                  slo_attained_best_effort=0.3))
+    base.update(rows)
+    return _payload(**base)
+
+
+def test_slo_gate_passes_healthy_ramp():
+    """Both endpoints present, interactive attained everywhere, sheds
+    on best_effort only, overload actually reached; fixtures without
+    SLO fields are exempt."""
+    cb = _load_check_bench()
+    assert cb.slo_fails(_slo_payload()) == []
+    assert cb.slo_fails(_payload(smoke=dict(ROW))) == []
+
+
+def test_slo_gate_fails_interactive_attainment_below_bar():
+    cb = _load_check_bench()
+    broken = _slo_payload(sat_overload=dict(
+        SLO_ROW, shed_best_effort=2, slo_attained_interactive=0.9))
+    fails = cb.slo_fails(broken)
+    assert len(fails) == 1 and "slo_attained_interactive" in fails[0]
+    # exactly at the bar: allowed
+    edge = _slo_payload(sat_overload=dict(
+        SLO_ROW, shed_best_effort=2, slo_attained_interactive=0.99))
+    assert cb.slo_fails(edge) == []
+
+
+def test_slo_gate_fails_shed_on_protected_classes():
+    """Sheds may only ever land on best_effort — a single shed
+    interactive or batch request fails the gate."""
+    cb = _load_check_bench()
+    for cls in ("interactive", "batch"):
+        bad = _slo_payload(sat_overload=dict(
+            SLO_ROW, shed_best_effort=2, **{f"shed_{cls}": 1}))
+        fails = cb.slo_fails(bad)
+        assert len(fails) == 1 and f"shed_{cls}" in fails[0], fails
+
+
+def test_slo_gate_requires_endpoints_and_real_overload():
+    cb = _load_check_bench()
+    half = _payload(sat_low=dict(SLO_ROW, shed_best_effort=1))
+    fails = cb.slo_fails(half)
+    assert len(fails) == 1 and "sat_overload" in fails[0]
+    # a ramp where nothing ever sheds exercised no admission policy
+    lazy = _slo_payload(sat_overload=dict(SLO_ROW))
+    fails = cb.slo_fails(lazy)
+    assert len(fails) == 1 and "never reached overload" in fails[0]
+
+
+SWAP_OFF = dict(ROW, tokens_out=30, requests=6, hot_swap=0,
+                swap_flips=0, swap_bytes=0, swap_extra_quiets=0)
+SWAP_ON = dict(ROW, tokens_out=30, requests=6, hot_swap=1,
+               swap_flips=1, swap_bytes=312832, swap_extra_quiets=0)
+
+
+def test_hot_swap_gate_requires_pair_and_equal_tokens():
+    """Real payloads (rows carry ``hot_swap``) must keep the off/on
+    pair with byte-for-byte equal serve volume; fixtures without the
+    field are exempt."""
+    cb = _load_check_bench()
+    ok = _payload(hot_swap_off=dict(SWAP_OFF), hot_swap_on=dict(SWAP_ON))
+    assert cb.hot_swap_pair_fails(ok) == []
+    missing = _payload(hot_swap_off=dict(SWAP_OFF))
+    fails = cb.hot_swap_pair_fails(missing)
+    assert len(fails) == 1 and "hot_swap_on" in fails[0]
+    moved = _payload(hot_swap_off=dict(SWAP_OFF),
+                     hot_swap_on=dict(SWAP_ON, tokens_out=29))
+    fails = cb.hot_swap_pair_fails(moved)
+    assert len(fails) == 1 and "tokens_out" in fails[0]
+    assert cb.hot_swap_pair_fails(_payload(smoke=dict(ROW))) == []
+
+
+def test_hot_swap_gate_pins_flip_and_zero_extra_drains():
+    """The on row must show a real streamed flip that never fell back
+    to a global drain: no flip, no bytes, or any extra quiet each
+    fail."""
+    cb = _load_check_bench()
+    unflipped = _payload(hot_swap_off=dict(SWAP_OFF),
+                         hot_swap_on=dict(SWAP_ON, swap_flips=0))
+    fails = cb.hot_swap_pair_fails(unflipped)
+    assert len(fails) == 1 and "swap_flips" in fails[0]
+    empty = _payload(hot_swap_off=dict(SWAP_OFF),
+                     hot_swap_on=dict(SWAP_ON, swap_bytes=0))
+    fails = cb.hot_swap_pair_fails(empty)
+    assert len(fails) == 1 and "swap_bytes" in fails[0]
+    drained = _payload(hot_swap_off=dict(SWAP_OFF),
+                       hot_swap_on=dict(SWAP_ON, swap_extra_quiets=1))
+    fails = cb.hot_swap_pair_fails(drained)
+    assert len(fails) == 1 and "swap_extra_quiets" in fails[0]
+
+
+def test_stale_case_gate_catches_zombie_rows():
+    """A committed case the sweep no longer emits fails unless
+    allowlisted in RETIRED_CASES; payloads without meta.sweep_cases
+    (unit fixtures, old files) are exempt."""
+    cb = _load_check_bench()
+    base = _payload(smoke=dict(ROW), old_case=dict(ROW))
+    fresh = _payload(smoke=dict(ROW))
+    fresh["meta"]["sweep_cases"] = ["smoke"]
+    fails = cb.stale_case_fails(base, fresh)
+    assert len(fails) == 1 and "old_case" in fails[0]
+    # the allowlist: an explicitly retired case may keep its history
+    cb.RETIRED_CASES = frozenset({"old_case"})
+    assert cb.stale_case_fails(base, fresh) == []
+    # no roster in the fresh meta: gate stays silent
+    assert cb.stale_case_fails(base, _payload(smoke=dict(ROW))) == []
+
+
+def test_check_bench_slo_only_cli(tmp_path):
+    """--slo-only is verify.sh's dedicated slo-gate phase: it runs the
+    SLO/hot-swap/stale gates alone with its own PASS/FAIL tag."""
+    script = os.path.join(ROOT, "scripts", "check_bench.py")
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    payload = _slo_payload(hot_swap_off=dict(SWAP_OFF),
+                           hot_swap_on=dict(SWAP_ON))
+    base.write_text(json.dumps(payload))
+    fresh.write_text(json.dumps(payload))
+    args = [sys.executable, script, "--slo-only", "--fresh", str(fresh),
+            "--baseline", str(base)]
+    ok = subprocess.run(args, capture_output=True, text=True)
+    assert ok.returncode == 0 and "CHECK_BENCH_SLO_PASS" in ok.stdout, \
+        ok.stdout + ok.stderr
+    broken = _slo_payload(
+        sat_overload=dict(SLO_ROW, shed_best_effort=2,
+                          slo_attained_interactive=0.5),
+        hot_swap_off=dict(SWAP_OFF), hot_swap_on=dict(SWAP_ON))
+    fresh.write_text(json.dumps(broken))
+    bad = subprocess.run(args, capture_output=True, text=True)
+    assert bad.returncode == 1 and "CHECK_BENCH_SLO_FAIL" in bad.stdout
+
+
+def test_verify_sh_has_slo_gate_phase_with_exit_code_6():
+    """The SLO gate is its own verify phase with the distinct exit
+    code the log taxonomy documents, ordered before the regression
+    compare so a policy violation reads as exit 6, not 4."""
+    with open(os.path.join(ROOT, "scripts", "verify.sh")) as f:
+        src = f.read()
+    assert 'phase_begin "slo gate"' in src
+    assert "--slo-only" in src
+    slo_idx = src.index('phase_begin "slo gate"')
+    assert "fail 6" in src[slo_idx:src.index('phase_begin "check_bench"')]
+    assert slo_idx < src.index('phase_begin "check_bench"')
+
+
+def test_verify_sh_prints_phase_summary_on_every_exit():
+    """The per-phase (name, seconds, status) table prints from an EXIT
+    trap — so it lands on failures too — and fail() records the dying
+    phase as FAIL before exiting."""
+    with open(os.path.join(ROOT, "scripts", "verify.sh")) as f:
+        src = f.read()
+    assert "trap summary EXIT" in src
+    assert "phase summary" in src
+    fail_body = src[src.index("fail()"):src.index("summary()")]
+    assert "FAIL" in fail_body and "PHASE_ROWS" in fail_body
+
+
+def test_ci_workflow_has_nightly_and_problem_matcher():
+    """CI runs the full verify + full (non-smoke) sweeps on a cron
+    schedule with the bench trajectories uploaded, and every job
+    registers the problem matcher that annotates VERIFY_FAIL lines."""
+    with open(os.path.join(ROOT, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "schedule:" in ci and "cron:" in ci
+    assert "github.event_name == 'schedule'" in ci
+    assert "bench-trajectories" in ci
+    # the nightly sweeps run WITHOUT --smoke
+    nightly = ci[ci.index("nightly:"):]
+    assert "python benchmarks/serve_bench.py 2>&1" in nightly
+    assert "python benchmarks/attn_microbench.py 2>&1" in nightly
+    assert ci.count("::add-matcher::.github/problem-matcher.json") >= 3
+
+
+def test_problem_matcher_matches_verify_fail_lines():
+    import re
+    with open(os.path.join(ROOT, ".github", "problem-matcher.json")) as f:
+        pm = json.load(f)
+    pats = [p["regexp"] for m in pm["problemMatcher"]
+            for p in m["pattern"]]
+    assert any(re.search(p, "VERIFY_FAIL phase=slo gate")
+               for p in pats)
+    assert any(re.search(p, "CHECK_BENCH_SLO_FAIL (2 violations over "
+                            "4 slo/hot-swap rows):") for p in pats)
+    assert any(re.search(p, "CHECK_BENCH_FAIL (1 regressions over 9 "
+                            "compared cases):") for p in pats)

@@ -315,6 +315,34 @@ def test_drain_coalesces_contiguous_same_destination_puts():
                                [10.0, 11.0, 12.0, 13.0])
 
 
+def test_phase_attribution_accumulates_and_rejects_nesting():
+    """``CommQueue.phase(name)`` attributes counter deltas to a named
+    window: re-entries ACCUMULATE (the weight hot-swap streamer opens
+    its "swap" phase once per serving tick and reads one running
+    account), ops outside any phase stay unattributed, and nesting is
+    rejected — a delta may only be attributed once."""
+    q = CommQueue("pe", {"buf": np.zeros((N_PE, OBJ_LEN), np.float32)},
+                  transport=LocalTransport(N_PE))
+    with q.phase("swap"):
+        q.put_nbi(HANDLE, _payload(0, 1.0), [(0, 1)], offset=0)
+    q.put_nbi(HANDLE, _payload(0, 2.0), [(0, 1)], offset=1)  # outside
+    q.quiet()                                                # outside
+    with q.phase("swap"):                    # re-entry: accumulates
+        q.put_nbi(HANDLE, _payload(0, 3.0), [(0, 1)], offset=2)
+        q.quiet()
+    ph = q.phase_stats("swap")
+    assert ph["puts"] == 2 and ph["quiets"] == 1, ph
+    assert q.stats()["phases"]["swap"]["puts"] == 2
+    # the queue-wide counters still see everything
+    assert q.stats()["puts"] == 3 and q.stats()["quiets"] == 2
+    # a phase that never ran reads as all-zero deltas
+    assert not any(q.phase_stats("never").values())
+    with q.phase("outer"):
+        with pytest.raises(RuntimeError, match="do not nest"):
+            with q.phase("inner"):
+                pass  # pragma: no cover
+
+
 def test_drain_does_not_coalesce_across_pairs_or_gaps():
     """Different pair lists, non-contiguous offsets and different
     handles stay separate rounds — coalescing must never weaken the

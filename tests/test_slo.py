@@ -1,0 +1,396 @@
+"""serve.slo + ckpt.hotswap: priority admission, inverse-priority
+preemption, deadline shedding before interactive degradation,
+per-tenant token-rate fairness, and the zero-downtime weight hot-swap
+(post-flip streams bit-identical to a cold start on the new weights —
+greedy and sampled, speculation and disaggregation composing).
+
+The scheduler-level tests drive FCFSScheduler + SLOPolicy directly
+(like test_serve's scheduler block); the engine-level tests use the
+smoke model.  The real-mesh run is tests/multipe/run_slo.py."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro.core import SymmetricHeap
+from repro.models import registry
+from repro.parallel.ctx import ParallelCtx
+from repro.serve import (FCFSScheduler, PagedKVCache, Request,
+                         SLOConfig, SLOPolicy, ServeConfig, ServeEngine)
+from repro.serve.slo import rank
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def mk_sched(n_pages=8, page_tokens=4, max_batch=4, max_seq=32,
+             slo_cfg=None, **kw):
+    heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    kv = PagedKVCache(heap, n_layers=2, kv_heads=2, head_dim=4,
+                      n_pages=n_pages, page_tokens=page_tokens)
+    slo = SLOPolicy(slo_cfg or SLOConfig())
+    return FCFSScheduler(kv, max_batch=max_batch, max_seq=max_seq,
+                         slo=slo, **kw), kv, slo
+
+
+# ======================================================================
+# policy basics
+# ======================================================================
+def test_priority_rank_and_validation():
+    assert rank("interactive") < rank("batch") < rank("best_effort")
+    with pytest.raises(ValueError):
+        rank("urgent")
+    with pytest.raises(ValueError):
+        SLOConfig().ttft_target("urgent")
+
+
+def test_priority_admission_jumps_the_backlog():
+    """An interactive arrival admits ahead of an earlier best-effort
+    backlog (the anti-head-of-line property plain FCFS lacks)."""
+    s, kv, _ = mk_sched(n_pages=32, max_batch=2)
+    be = [Request(rid=i, prompt=[1, 2, 3], max_new=4,
+                  priority="best_effort") for i in (0, 1)]
+    hi = Request(rid=2, prompt=[4, 5, 6], max_new=4)
+    for r in be + [hi]:
+        s.submit(r)
+    plan = s.tick()
+    assert [r.rid for r in plan.admitted] == [2, 0]    # class, then arrival
+    assert s.waiting[0].rid == 1
+
+
+def test_preemption_is_inverse_priority_not_youngest():
+    """Pool dry -> the BEST-EFFORT sequence evicts even though it is
+    the OLDER admission; plain FCFS would have evicted the younger
+    interactive one."""
+    s, kv, _ = mk_sched(n_pages=6, page_tokens=2, max_batch=3,
+                        max_seq=16)
+    be = Request(rid=0, prompt=[1, 2, 3], max_new=6,
+                 priority="best_effort")
+    hi = Request(rid=1, prompt=[4, 5, 6], max_new=6)
+    s.submit(be)
+    s.tick()                                 # be admitted first (older)
+    s.submit(hi)
+    s.tick()
+    assert [r.rid for r in s.running] == [0, 1]
+    for r in (be, hi):
+        s.note_prefilled(r, 9)
+        s.advance(r, 9)                      # out: 2 tokens, next needs
+    plan = s.tick()                          # a 3rd page each; 1 free
+    assert [r.rid for r in plan.preempted] == [0]
+    assert [r.rid for r in s.running] == [1]
+    assert be.preemptions == 1 and be.out == []
+
+
+def test_deadline_shed_only_best_effort_and_before_admission():
+    """An expired best-effort waiter sheds (never holds pages); an
+    expired interactive waiter keeps its place — lateness there is an
+    attainment miss, not a drop."""
+    s, kv, slo = mk_sched(n_pages=32, max_batch=4)
+    be = Request(rid=0, prompt=[1, 2], max_new=2, priority="best_effort",
+                 deadline=1.0, t_arrive=0.0)
+    hi = Request(rid=1, prompt=[3, 4], max_new=2, deadline=1.0,
+                 t_arrive=0.0)
+    s.submit(be)
+    s.submit(hi)
+    plan = s.tick(now=5.0)
+    assert plan.shed == [be] and be.shed and be.t_finish == 5.0
+    assert s.stats["shed"] == 1 and slo.stats["shed"] == 1
+    assert [r.rid for r in plan.admitted] == [1]
+    assert "0" not in kv.tables and 0 not in kv.tables  # never paged
+
+
+def test_best_effort_degrades_under_pressure():
+    """While an interactive request waits (unmet higher-class demand),
+    a prefilling best-effort sequence's chunk shrinks to degrade_chunk
+    — and the pressure signal clears when the demand is met."""
+    s, kv, slo = mk_sched(n_pages=4, page_tokens=4, max_batch=2,
+                          max_seq=16, prefill_chunk=4)
+    be = Request(rid=0, prompt=list(range(10)), max_new=2,
+                 priority="best_effort")
+    s.submit(be)
+    plan = s.tick()                          # alone: no pressure
+    assert plan.prefill == [(be, 4)] and not slo.pressure
+    s.note_chunk(be, 4, 9)
+    hi = Request(rid=1, prompt=[1, 2, 3], max_new=2)
+    s.submit(hi)                             # pool is dry: hi must wait
+    plan = s.tick()
+    assert slo.pressure and plan.admitted == []
+    assert plan.prefill == [(be, 2)]         # degraded from 4
+    assert slo.stats["degraded_chunks"] == 1
+
+
+def test_pressure_strips_best_effort_drafts():
+    s, kv, slo = mk_sched(n_pages=32, max_batch=4, spec_k=2)
+    be = Request(rid=0, prompt=[1, 2], max_new=6,
+                 priority="best_effort")
+    s.submit(be)
+    s.tick()
+    s.note_prefilled(be, 9)
+    assert s.draft_allowance(be) == 2        # no pressure: full window
+    s.submit(Request(rid=1, prompt=list(range(20)), max_new=8))
+    slo.update_pressure(s.waiting, s.running, kv)
+    assert s.draft_allowance(be) == 0        # degraded to plain decode
+    assert slo.stats["degraded_drafts"] >= 1
+    hi = Request(rid=2, prompt=[5, 6], max_new=6)
+    s.submit(hi)
+    s.tick()
+    s.note_prefilled(hi, 9)
+    assert s.draft_allowance(hi) > 0         # only best_effort degrades
+
+
+def test_per_tenant_token_rate_fairness():
+    """A tenant over its token rate defers ITS next request; the line
+    behind it (another tenant) is not blocked."""
+    cfg = SLOConfig(tenant_rate=20.0, tenant_burst=20.0)
+    s, kv, slo = mk_sched(n_pages=32, max_batch=3, slo_cfg=cfg)
+    r0 = Request(rid=0, prompt=[1] * 4, max_new=8, tenant=0)   # cost 12
+    r1 = Request(rid=1, prompt=[2] * 4, max_new=8, tenant=0)
+    r2 = Request(rid=2, prompt=[3] * 4, max_new=8, tenant=1)
+    for r in (r0, r1, r2):
+        s.submit(r)
+    plan = s.tick()
+    assert [r.rid for r in plan.admitted] == [0, 2]    # r1 deferred only
+    assert s.stats["rate_deferred"] == 1
+    assert slo.stats["rate_deferred"] == 1
+    plan = s.tick()                          # bucket refilled: r1 admits
+    assert [r.rid for r in plan.admitted] == [1]
+
+
+def test_slo_off_is_plain_fcfs():
+    """slo=None keeps the pre-SLO scheduler: admission strictly FCFS
+    regardless of class labels."""
+    heap = SymmetricHeap(("data",), capacity_bytes=1 << 24)
+    kv = PagedKVCache(heap, n_layers=2, kv_heads=2, head_dim=4,
+                      n_pages=32, page_tokens=4)
+    s = FCFSScheduler(kv, max_batch=2, max_seq=32)
+    s.submit(Request(rid=0, prompt=[1, 2], max_new=2,
+                     priority="best_effort"))
+    s.submit(Request(rid=1, prompt=[3, 4], max_new=2))
+    plan = s.tick()
+    assert [r.rid for r in plan.admitted] == [0, 1]
+
+
+# ======================================================================
+# traffic: SLO draws ride a separate stream
+# ======================================================================
+def test_slo_traffic_never_shifts_classic_draws():
+    plain = serve.TrafficConfig(n_requests=12, seed=3)
+    mixed = serve.TrafficConfig(n_requests=12, seed=3,
+                                interactive_frac=0.4, batch_frac=0.3,
+                                deadline_interactive=5.0,
+                                deadline_best_effort=20.0, n_tenants=3)
+    a, b = serve.make_requests(plain), serve.make_requests(mixed)
+    for ra, rb in zip(a, b):
+        assert ra.prompt == rb.prompt
+        assert ra.t_arrive == rb.t_arrive and ra.max_new == rb.max_new
+    # the mix actually produced multiple classes and tenants
+    assert len({r.priority for r in b}) >= 2
+    assert len({r.tenant for r in b}) >= 2
+    assert all(r.priority == "interactive" and r.tenant == 0 for r in a)
+
+
+def test_slo_traffic_is_prefix_stable():
+    big = serve.TrafficConfig(n_requests=16, seed=1,
+                              interactive_frac=0.5, batch_frac=0.25,
+                              n_tenants=2)
+    small = serve.make_requests(
+        serve.TrafficConfig(n_requests=8, seed=1, interactive_frac=0.5,
+                            batch_frac=0.25, n_tenants=2))
+    for ra, rb in zip(small, serve.make_requests(big)):
+        assert (ra.priority, ra.deadline, ra.tenant) == \
+            (rb.priority, rb.deadline, rb.tenant)
+
+
+# ======================================================================
+# engine end-to-end under SLO traffic
+# ======================================================================
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.get_smoke("qwen3-8b")
+    ctx = ParallelCtx(dp_size=1, tp_size=1, sp=False, remat=False,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = registry.build(cfg).init(jax.random.PRNGKey(0), cfg, ctx)
+    return params, cfg, ctx
+
+
+def test_engine_sheds_best_effort_keeps_interactive(smoke_model):
+    """Overload on the tick clock: best-effort traffic sheds while
+    every interactive request keeps its TTFT deadline — the property
+    the bench saturation gate (scripts/check_bench.py) enforces."""
+    params, cfg, ctx = smoke_model
+    scfg = ServeConfig(page_tokens=4, n_pages=16, max_batch=2,
+                       max_seq=32, prefill_chunk=4, attn_impl="ref",
+                       slo=SLOConfig())
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    reqs = []
+    for i in range(10):
+        hi = i % 2 == 0
+        reqs.append(Request(
+            rid=i, prompt=[(3 * i + j) % cfg.vocab for j in range(6)],
+            max_new=6, t_arrive=0.0,
+            priority="interactive" if hi else "best_effort",
+            deadline=200.0 if hi else 4.0))
+    done = eng.run(reqs, clock="tick")
+    m = eng.metrics()
+    assert m["slo"]["shed"]["best_effort"] > 0
+    assert m["slo"]["shed"]["interactive"] == 0
+    assert m["slo"]["attained"]["interactive"] == 1.0
+    assert len(done) + len(eng.shed) == 10
+
+
+# ======================================================================
+# weight hot-swap
+# ======================================================================
+def _mk_reqs(rids, vocab, sampled=True):
+    sp = serve.SamplingParams(temperature=0.8, top_k=5, top_p=0.9)
+    out = []
+    for j, rid in enumerate(rids):
+        out.append(Request(
+            rid=rid, prompt=[(7 * rid + k) % vocab for k in range(5)],
+            max_new=6,
+            sampling=sp if (sampled and j % 2) else serve.GREEDY))
+    return out
+
+
+def test_hot_swap_flip_is_cold_start_bit_identical(smoke_model):
+    """The tentpole pin: stream generation 2 in DURING live serving,
+    then serve a second trace — its streams (greedy AND sampled) must
+    equal a cold-started engine on the new weights, and the swap queue
+    must have paid ZERO global drains."""
+    params, cfg, ctx = smoke_model
+    new_params = registry.build(cfg).init(jax.random.PRNGKey(7), cfg, ctx)
+    scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=3,
+                       max_seq=32, attn_impl="ref")
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    eng.begin_hot_swap(new_params, chunk_rows=2)
+    eng.run(_mk_reqs(range(3), cfg.vocab), clock="tick")
+    assert not eng.swap_in_flight()
+    assert eng.swap_stats["flips"] == 1
+    assert eng.swap_stats["generation"] == 1
+    assert eng.swap_stats["swap_extra_quiets"] == 0
+    assert eng.swap_stats["swap_bytes"] > 0
+    # post-flip serving on the SAME engine...
+    eng.run(_mk_reqs(range(10, 13), cfg.vocab), clock="tick")
+    post = {r.rid: list(r.out) for r in eng.finished if r.rid >= 10}
+    # ...vs a cold start on the new weights
+    cold = ServeEngine(new_params, cfg, ctx, scfg)
+    cold.run(_mk_reqs(range(10, 13), cfg.vocab), clock="tick")
+    assert post == {r.rid: list(r.out) for r in cold.finished}
+    # and the pre-flip trace really used the OLD weights
+    old = ServeEngine(params, cfg, ctx, scfg)
+    old.run(_mk_reqs(range(3), cfg.vocab), clock="tick")
+    pre = {r.rid: list(r.out) for r in eng.finished if r.rid < 3}
+    assert pre == {r.rid: list(r.out) for r in old.finished}
+
+
+def test_hot_swap_overlaps_serving_ticks(smoke_model):
+    """The stream really interleaves: with small batches the flip
+    lands strictly AFTER the first serving tick (no stop-the-world),
+    and double-starting a swap is refused."""
+    params, cfg, ctx = smoke_model
+    new_params = registry.build(cfg).init(jax.random.PRNGKey(8), cfg, ctx)
+    scfg = ServeConfig(page_tokens=4, n_pages=32, max_batch=2,
+                       max_seq=32, attn_impl="ref")
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    eng.begin_hot_swap(new_params, chunk_rows=1, row_bytes=1 << 12)
+    with pytest.raises(RuntimeError):
+        eng.begin_hot_swap(new_params)
+    eng.submit(Request(rid=0, prompt=[5, 17, 42], max_new=4))
+    eng.tick()
+    assert eng.swap_in_flight()              # still streaming after t1
+    while eng.sched.has_work() or eng.swap_in_flight():
+        eng.tick()
+    assert eng.swap_stats["flips"] == 1
+    assert eng.swap_stats["swap_ticks"] > 2  # spread over many ticks
+    # a second generation can follow the first
+    eng.begin_hot_swap(params, chunk_rows=64)
+    while eng.swap_in_flight():
+        eng.tick()
+    assert eng.swap_stats["generation"] == 2
+
+
+def test_hot_swap_composes_with_spec(smoke_model):
+    """Flip mid-run with speculation on: post-flip spec streams equal
+    a cold-start SPEC engine on the new weights (lossless twice over)."""
+    params, cfg, ctx = smoke_model
+    new_params = registry.build(cfg).init(jax.random.PRNGKey(9), cfg, ctx)
+    scfg = ServeConfig(page_tokens=4, n_pages=48, max_batch=3,
+                       max_seq=48, spec_k=2, attn_impl="ref")
+
+    def reqs():
+        return [Request(rid=i, prompt=[5, 17, 42] * 3, max_new=8)
+                for i in (0, 1)]
+
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    eng.begin_hot_swap(new_params, chunk_rows=4)
+    eng.run(reqs(), clock="tick")
+    assert eng.swap_stats["flips"] == 1
+    eng.run([Request(rid=5, prompt=[5, 17, 42] * 3, max_new=8)],
+            clock="tick")
+    post = {r.rid: list(r.out) for r in eng.finished if r.rid == 5}
+    cold = ServeEngine(new_params, cfg, ctx, scfg)
+    cold.run([Request(rid=5, prompt=[5, 17, 42] * 3, max_new=8)],
+             clock="tick")
+    assert post == {r.rid: list(r.out) for r in cold.finished}
+    assert cold.spec_stats["drafted"] > 0
+
+
+def test_hot_swap_composes_with_disagg(smoke_model):
+    """One streamer spans the cell space: every cell flips on the same
+    topology tick, handoff and swap queues both stay barrier-free, and
+    post-flip streams equal a cold colocated engine on new weights."""
+    params, cfg, ctx = smoke_model
+    new_params = registry.build(cfg).init(jax.random.PRNGKey(11), cfg,
+                                          ctx)
+    scfg = ServeConfig(page_tokens=4, n_pages=24, max_batch=3,
+                       max_seq=32, prefill_chunk=4, attn_impl="ref")
+    dis = serve.DisaggEngine(params, cfg, ctx, scfg, n_prefill=1,
+                             n_decode=1)
+    dis.begin_hot_swap(new_params, chunk_rows=2)
+    dis.run(_mk_reqs(range(3), cfg.vocab, sampled=False), clock="tick")
+    assert dis.swap_stats["flips"] == 1
+    assert dis.swap_stats["swap_extra_quiets"] == 0
+    assert dis.stats()["handoff_quiets"] == 0
+    dis.run(_mk_reqs(range(10, 12), cfg.vocab, sampled=False),
+            clock="tick")
+    post = {r.rid: list(r.out) for r in dis.finished if r.rid >= 10}
+    cold = ServeEngine(new_params, cfg, ctx, scfg)
+    cold.run(_mk_reqs(range(10, 12), cfg.vocab, sampled=False),
+             clock="tick")
+    assert post == {r.rid: list(r.out) for r in cold.finished}
+    assert "swap" in dis.metrics()
+
+
+def test_swap_metrics_reset_keeps_generation(smoke_model):
+    params, cfg, ctx = smoke_model
+    scfg = ServeConfig(page_tokens=4, n_pages=16, max_batch=2,
+                       max_seq=32, attn_impl="ref")
+    eng = ServeEngine(params, cfg, ctx, scfg)
+    eng.begin_hot_swap(params, chunk_rows=64)
+    while eng.swap_in_flight():
+        eng.tick()
+    eng.reset_metrics()
+    assert eng.swap_stats["flips"] == 0
+    assert eng.swap_stats["generation"] == 1     # monotone across resets
+    assert eng.metrics()["slo"]["attained"]["interactive"] == 1.0
+
+
+# ======================================================================
+# the 8-PE mesh suite (subprocess, like the other multipe workers)
+# ======================================================================
+def test_slo_mesh_8pe():
+    if os.environ.get("REPRO_MULTIPE_EXPLICIT"):
+        pytest.skip("multipe workers run explicitly (scripts/verify.sh)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "multipe", "run_slo.py")],
+        capture_output=True, text=True, env=env, timeout=2400)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SLO_PASS" in r.stdout
